@@ -1,0 +1,280 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO *text* artifacts.
+
+Build-time only (`make artifacts`). Emits into `artifacts/`:
+
+  * `<name>.hlo.txt`      — HLO text per jitted entry point. Text, never
+    `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit ids that
+    xla_extension 0.5.1 rejects; the text parser reassigns ids.
+  * `<model>_init.bin`    — initial flat parameters, little-endian f32.
+  * `manifest.json`       — input/output specs, model metadata (dim,
+    layer ranges for LARS, batch shapes) for the Rust runtime.
+  * `golden.json`         — oracle evaluations of the kernels and a
+    single-node training step; the Rust test-suite replays these against
+    its native implementations (one source of truth across layers).
+
+Usage: cd python && python -m compile.aot [--outdir ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import decentlam_update, partial_average
+from .kernels import ref
+
+# Padded neighborhood size baked into the update-kernel artifacts. Every
+# topology we ship at n=8 has degree+self <= 8; rows are padded with zero
+# weights (the kernel is exactly linear in w, so padding is a no-op).
+KPAD = 8
+
+MICRO_BATCH = 64       # per-node MLP micro-batch (large batch = accumulation)
+EVAL_BATCH = 256
+LM_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _spec(args):
+    return [
+        {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in args
+    ]
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.manifest = {"artifacts": {}, "models": {}, "kernels": {}}
+        os.makedirs(outdir, exist_ok=True)
+
+    def lower(self, name: str, fn, example_args, n_outputs: int):
+        """jit + lower fn at the example shapes, write HLO text."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _spec(example_args),
+            "n_outputs": n_outputs,
+        }
+        print(f"  lowered {name}: {len(text) / 1e6:.2f} MB")
+
+    def write_init(self, name: str, theta: np.ndarray):
+        path = os.path.join(self.outdir, f"{name}_init.bin")
+        theta.astype("<f4").tofile(path)
+
+    def finish(self):
+        with open(os.path.join(self.outdir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {self.outdir}/manifest.json")
+
+
+def shaped(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_update_kernels(em: Emitter, dim: int):
+    """The Layer-1 kernels as standalone artifacts at this model size."""
+    name = f"decentlam_update_{dim}"
+    em.lower(
+        name,
+        lambda z, w, x, m, hp: decentlam_update(z, w, x, m, hp),
+        (
+            shaped((KPAD, dim)),
+            shaped((KPAD,)),
+            shaped((dim,)),
+            shaped((dim,)),
+            shaped((2,)),
+        ),
+        n_outputs=2,
+    )
+    em.manifest["kernels"][name] = {"dim": dim, "kpad": KPAD, "kind": "decentlam"}
+    name = f"partial_average_{dim}"
+    em.lower(
+        name,
+        lambda z, w: partial_average(z, w),
+        (shaped((KPAD, dim)), shaped((KPAD,))),
+        n_outputs=1,
+    )
+    em.manifest["kernels"][name] = {"dim": dim, "kpad": KPAD, "kind": "mix"}
+
+
+def emit_mlp(em: Emitter, cfg: M.MlpConfig, seed: int):
+    spec = cfg.spec()
+    dim = spec.dim
+    theta0 = cfg.init(seed)
+    em.write_init(cfg.name, theta0)
+    em.lower(
+        f"{cfg.name}_grad",
+        lambda t, x, y: M.mlp_loss_and_grad(cfg, t, x, y),
+        (
+            shaped((dim,)),
+            shaped((MICRO_BATCH, cfg.input_dim)),
+            shaped((MICRO_BATCH,), jnp.int32),
+        ),
+        n_outputs=2,
+    )
+    em.lower(
+        f"{cfg.name}_logits",
+        lambda t, x: M.mlp_logits(cfg, t, x),
+        (shaped((dim,)), shaped((EVAL_BATCH, cfg.input_dim))),
+        n_outputs=1,
+    )
+    em.manifest["models"][cfg.name] = {
+        "kind": "mlp",
+        "dim": dim,
+        "input_dim": cfg.input_dim,
+        "hidden": list(cfg.hidden),
+        "num_classes": cfg.num_classes,
+        "micro_batch": MICRO_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "init": f"{cfg.name}_init.bin",
+        "layer_ranges": spec.layer_ranges(),
+    }
+
+
+def emit_transformer(em: Emitter, cfg: M.TransformerConfig, seed: int):
+    spec = cfg.spec()
+    dim = spec.dim
+    em.write_init(cfg.name, cfg.init(seed))
+    toks = shaped((LM_BATCH, cfg.seq_len), jnp.int32)
+    em.lower(
+        f"{cfg.name}_grad",
+        lambda t, x, y: M.transformer_loss_and_grad(cfg, t, x, y),
+        (shaped((dim,)), toks, toks),
+        n_outputs=2,
+    )
+    em.lower(
+        f"{cfg.name}_loss",
+        lambda t, x, y: (M.transformer_loss(cfg, t, x, y),),
+        (shaped((dim,)), toks, toks),
+        n_outputs=1,
+    )
+    em.manifest["models"][cfg.name] = {
+        "kind": "lm",
+        "dim": dim,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "micro_batch": LM_BATCH,
+        "init": f"{cfg.name}_init.bin",
+        "layer_ranges": spec.layer_ranges(),
+    }
+
+
+def emit_det(em: Emitter, cfg: M.DetConfig, seed: int):
+    spec = cfg.spec()
+    dim = spec.dim
+    em.write_init(cfg.name, cfg.init(seed))
+    em.lower(
+        f"{cfg.name}_grad",
+        lambda t, x, y, b: M.det_loss_and_grad(cfg, t, x, y, b),
+        (
+            shaped((dim,)),
+            shaped((MICRO_BATCH, cfg.input_dim)),
+            shaped((MICRO_BATCH,), jnp.int32),
+            shaped((MICRO_BATCH, cfg.box_dim)),
+        ),
+        n_outputs=2,
+    )
+    em.manifest["models"][cfg.name] = {
+        "kind": "det",
+        "dim": dim,
+        "input_dim": cfg.input_dim,
+        "num_classes": cfg.num_classes,
+        "box_dim": cfg.box_dim,
+        "micro_batch": MICRO_BATCH,
+        "init": f"{cfg.name}_init.bin",
+        "layer_ranges": spec.layer_ranges(),
+    }
+
+
+def emit_golden(em: Emitter):
+    """Oracle evaluations replayed by the Rust test-suite (see
+    rust/tests/golden.rs). Small shapes, deterministic inputs."""
+    rng = np.random.default_rng(7)
+    k, d = 3, 8
+    z = rng.normal(size=(k, d)).astype(np.float32)
+    w = np.array([0.5, 0.25, 0.25], np.float32)
+    x = rng.normal(size=d).astype(np.float32)
+    m = rng.normal(size=d).astype(np.float32)
+    gamma, beta = 0.05, 0.9
+    xn, mn = ref.decentlam_update_ref(
+        jnp.asarray(z), jnp.asarray(w), jnp.asarray(x), jnp.asarray(m), gamma, beta
+    )
+    mix = ref.partial_average_ref(jnp.asarray(z), jnp.asarray(w))
+    golden = {
+        "decentlam_update": {
+            "z": z.ravel().tolist(),
+            "k": k,
+            "d": d,
+            "w": w.tolist(),
+            "x": x.tolist(),
+            "m": m.tolist(),
+            "gamma": gamma,
+            "beta": beta,
+            "x_new": np.asarray(xn).tolist(),
+            "m_new": np.asarray(mn).tolist(),
+        },
+        "partial_average": {"mix": np.asarray(mix).tolist()},
+    }
+    with open(os.path.join(em.outdir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print("wrote golden.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored, use --outdir")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the default MLP + kernels (fast CI path)",
+    )
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out is not None:
+        outdir = os.path.dirname(args.out) or outdir
+
+    em = Emitter(outdir)
+    default_mlp = M.MLP_FAMILY["mlp-s"]
+    emit_mlp(em, default_mlp, seed=1)
+    emit_update_kernels(em, default_mlp.spec().dim)
+    emit_golden(em)
+    if not args.quick:
+        for name, cfg in M.MLP_FAMILY.items():
+            if name != default_mlp.name:
+                emit_mlp(em, cfg, seed=1)
+        lm = M.TransformerConfig()
+        emit_transformer(em, lm, seed=2)
+        emit_update_kernels(em, lm.spec().dim)
+        emit_det(em, M.DetConfig(), seed=3)
+    em.finish()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

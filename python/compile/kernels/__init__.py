@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels + the pure-jnp oracle (ref).
+
+All kernels run interpret=True so they lower to plain HLO that the CPU
+PJRT client can execute; see DESIGN.md §Hardware-Adaptation for the TPU
+schedule each block structure encodes.
+"""
+
+from .decentlam_update import decentlam_update
+from .fused_linear import fused_linear
+from .partial_average import partial_average
+from . import ref
+
+__all__ = ["decentlam_update", "fused_linear", "partial_average", "ref"]

@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: the DecentLaM fused update (paper eq. (17)).
+
+This is the per-iteration hot spot of the decentralized runtime: every
+node, every step, consumes the K half-step vectors received from its
+neighborhood and produces its next model + momentum. The unfused sequence
+(average -> corrected gradient -> momentum -> apply) makes three full
+passes over the D-sized parameter state; this kernel makes exactly one.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the flat
+parameter dimension D into VMEM-resident blocks; each grid step loads a
+(K, BLOCK_D) neighbor tile plus (BLOCK_D,) x/m tiles, reduces over K on
+the VPU, and writes both outputs — one HBM round trip per parameter.
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for AOT artifacts and
+its *structure* (block shapes, footprint) is what carries to real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default parameter-dimension tile. With K <= 8 neighbors this keeps the
+# working set (K+3) * BLOCK_D * 4B  ~=  11 * 8192 * 4B ~= 352 KiB, far under
+# the ~16 MiB VMEM budget, leaving room for double buffering.
+BLOCK_D = 8192
+
+
+def _kernel(z_ref, w_ref, x_ref, m_ref, hp_ref, x_out_ref, m_out_ref):
+    """One (K, BLOCK_D) tile of the fused update.
+
+    hp_ref holds (gamma, beta) so the artifact is hyper-parameter generic
+    (no re-lowering when the LR schedule moves).
+    """
+    gamma = hp_ref[0]
+    beta = hp_ref[1]
+    z = z_ref[...]  # (K, BLOCK_D)
+    w = w_ref[...]  # (K,)
+    x = x_ref[...]  # (BLOCK_D,)
+    m = m_ref[...]
+    # Weighted neighborhood reduction over K (VPU, K is tiny).
+    mix = jnp.einsum("k,kd->d", w.astype(z.dtype), z)
+    gt = (x - mix) / gamma
+    m_new = beta * m + gt
+    # x - gamma*m_new == mix - gamma*beta*m, written in the numerically
+    # fused form to reuse mix already in registers.
+    x_new = mix - gamma * beta * m
+    x_out_ref[...] = x_new
+    m_out_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def decentlam_update(z, w, x, m, hp, *, block_d: int = BLOCK_D):
+    """Fused DecentLaM update over flat parameters.
+
+    Args:
+      z:  (K, D) stacked half-steps from the neighborhood (self included).
+      w:  (K,) mixing weights (the node's row of W restricted to N_i).
+      x:  (D,) current model.
+      m:  (D,) current momentum.
+      hp: (2,) array [gamma, beta].
+      block_d: tile size along D (D must be divisible, pad upstream).
+
+    Returns:
+      (x_new, m_new), both (D,).
+    """
+    k, d = z.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        # Model dims are rarely tile multiples; pad the flat dimension with
+        # zeros (the update maps 0 -> 0 for x=m=z=0) and slice the result.
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+        x = jnp.pad(x, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        d += pad
+    grid = (d // bd,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, bd), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((d,), m.dtype),
+        ],
+        interpret=True,
+    )(z, w, x, m, hp)
+    if pad:
+        return out[0][: d - pad], out[1][: d - pad]
+    return out[0], out[1]

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: fused dense layer (matmul + bias) with a
+hand-written custom_vjp whose backward passes are also Pallas kernels.
+
+This is the MXU-bound kernel of the stack: the Layer-2 models
+(python/compile/model.py) route every dense layer through it, so the
+kernel lowers into the very HLO artifact the Rust runtime executes.
+
+TPU mapping: (B, I) x (I, O) tiles sized for the 128x128 MXU; bias add is
+fused into the same VMEM-resident output tile. On the CPU AOT path
+(interpret=True) this becomes plain HLO dot/add, so the artifact runs at
+native XLA speed while the block structure documents the TPU schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        x.dtype
+    ) + b
+
+
+def _dx_kernel(dy_ref, w_ref, o_ref):
+    dy = dy_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.dot(dy, w.T, preferred_element_type=jnp.float32).astype(dy.dtype)
+
+
+def _dw_kernel(x_ref, dy_ref, o_ref):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    o_ref[...] = jnp.dot(x.T, dy, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _call(kernel, out_shape, *args):
+    """Single-tile pallas_call: model layers here are small enough that one
+    VMEM tile holds each operand; larger layers would add a grid over
+    (B, O) with an inner K loop — the schedule is identical in kind."""
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, args[0].dtype),
+        interpret=True,
+    )(*args)
+
+
+@jax.custom_vjp
+def fused_linear(x, w, b):
+    """y = x @ w + b via the Pallas forward kernel.
+
+    x: (B, I), w: (I, O), b: (O,) -> (B, O).
+    """
+    return _call(_fwd_kernel, (x.shape[0], w.shape[1]), x, w, b)
+
+
+def _fwd(x, w, b):
+    return fused_linear(x, w, b), (x, w)
+
+
+def _bwd(res, dy):
+    x, w = res
+    dx = _call(_dx_kernel, x.shape, dy, w)
+    dw = _call(_dw_kernel, w.shape, x, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fwd, _bwd)

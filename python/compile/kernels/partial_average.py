@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: plain partial averaging (paper eq. (3)).
+
+The gossip primitive shared by DSGD / DmSGD / DA-DmSGD: a weighted
+reduction of the K neighborhood payloads. DecentLaM's fused kernel
+(decentlam_update.py) subsumes this; it is kept separate because the
+baseline optimizers apply it to different payloads (models, half-steps,
+momenta) and because ablating "fused vs unfused" (EXPERIMENTS.md §Perf)
+needs the unfused pass as its own artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 8192
+
+
+def _kernel(z_ref, w_ref, out_ref):
+    z = z_ref[...]
+    w = w_ref[...]
+    out_ref[...] = jnp.einsum("k,kd->d", w.astype(z.dtype), z)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def partial_average(z, w, *, block_d: int = BLOCK_D):
+    """mix = sum_k w[k] * z[k, :] over (K, D) payloads, tiled along D."""
+    k, d = z.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+        d += pad
+    out = pl.pallas_call(
+        _kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((k, bd), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), z.dtype),
+        interpret=True,
+    )(z, w)
+    return out[: d - pad] if pad else out

@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/) asserts
+allclose between kernel and oracle across hypothesis-generated shapes,
+dtypes and hyper-parameters; aot.py additionally serializes a few oracle
+evaluations as golden vectors that the Rust test-suite replays against its
+native implementations, tying all three layers to one source of truth.
+
+Math (paper eq. (17) and Algorithm 2), per node i with neighbor set N_i:
+
+    z_j    = x_j - gamma * grad_j          (the "half step", exchanged)
+    mix_i  = sum_{j in N_i} w_ij * z_j     (partial averaging)
+    gt_i   = (x_i - mix_i) / gamma         (bias-corrected gradient)
+    m_i'   = beta * m_i + gt_i             (momentum update)
+    x_i'   = x_i - gamma * m_i'            (model update)
+           = mix_i - gamma * beta * m_i    (fused form used by the kernel)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def partial_average_ref(z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Weighted neighborhood average: mix = sum_k w[k] * z[k, :].
+
+    z: (K, D) stacked neighbor payloads (self included), w: (K,) weights.
+    """
+    return jnp.einsum("k,kd->d", w.astype(z.dtype), z)
+
+
+def decentlam_update_ref(z, w, x, m, gamma, beta):
+    """DecentLaM fused update (eq. 17). Returns (x_new, m_new).
+
+    z: (K, D) neighbor half-steps; w: (K,); x, m: (D,); gamma, beta scalars.
+    """
+    mix = partial_average_ref(z, w)
+    gt = (x - mix) / gamma
+    m_new = beta * m + gt
+    x_new = x - gamma * m_new
+    return x_new, m_new
+
+
+def dmsgd_update_ref(z, w):
+    """DmSGD application step is a plain partial average of half-steps."""
+    return partial_average_ref(z, w)
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Dense layer oracle: y = x @ w + b. x: (B, I), w: (I, O), b: (O,)."""
+    return jnp.dot(x, w) + b
+
+
+def linear_grads_ref(x, w, dy):
+    """VJP oracle for the dense layer: (dx, dw, db)."""
+    dx = jnp.dot(dy, w.T)
+    dw = jnp.dot(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db

@@ -1,0 +1,327 @@
+"""Layer-2 JAX models, written over a single flat f32 parameter vector.
+
+Every model here exposes the same two jit-able entry points:
+
+    loss_and_grad(theta, batch...) -> (loss, grad)   # training artifact
+    logits(theta, x)               -> logits         # evaluation artifact
+
+`theta` is one flat f32[D] vector; layers are sliced + reshaped out of it
+inside the traced function. This keeps the Rust side trivial — one buffer
+per node — and makes the decentralized update kernels (which operate on
+flat vectors) compose with any model.
+
+Dense layers route through the Pallas `fused_linear` kernel (Layer 1), so
+the kernel lowers into the same HLO artifact the Rust runtime executes.
+
+Models:
+  * MLP classifier family (five capacities — the Table 4 "architectures").
+  * Character-level transformer LM (the end-to-end example workload).
+  * Multi-head "detection" model: shared trunk + classification head (CE)
+    + box head (smooth-L1), the Table 6 substitute task.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fused_linear
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter packing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shapes (in order) packed into the flat theta vector."""
+
+    shapes: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def sizes(self) -> List[int]:
+        return [int(np.prod(s)) for s in self.shapes]
+
+    @property
+    def dim(self) -> int:
+        return int(sum(self.sizes))
+
+    def unpack(self, theta: jnp.ndarray) -> List[jnp.ndarray]:
+        out, off = [], 0
+        for shape, size in zip(self.shapes, self.sizes):
+            out.append(theta[off : off + size].reshape(shape))
+            off += size
+        return out
+
+    def layer_ranges(self) -> List[Tuple[int, int]]:
+        """(start, end) offsets per tensor — consumed by Rust LARS, which
+        needs per-layer norms over the flat vector."""
+        ranges, off = [], 0
+        for size in self.sizes:
+            ranges.append((off, off + size))
+            off += size
+        return ranges
+
+
+def _he_init(rng: np.random.Generator, shape, fan_in) -> np.ndarray:
+    return rng.normal(0.0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier family
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    num_classes: int
+
+    def spec(self) -> ParamSpec:
+        dims = [self.input_dim, *self.hidden, self.num_classes]
+        shapes: List[Tuple[int, ...]] = []
+        for i, o in zip(dims[:-1], dims[1:]):
+            shapes.append((i, o))
+            shapes.append((o,))
+        return ParamSpec(tuple(shapes))
+
+    def init(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        dims = [self.input_dim, *self.hidden, self.num_classes]
+        parts = []
+        for i, o in zip(dims[:-1], dims[1:]):
+            parts.append(_he_init(rng, (i, o), i).ravel())
+            parts.append(np.zeros(o, np.float32))
+        return np.concatenate(parts)
+
+
+# The Table 4 "architecture" family (ResNet-18/34/50, MobileNet-v2,
+# EfficientNet stand-ins of increasing capacity — see DESIGN.md §2).
+MLP_FAMILY = {
+    "mlp-xs": MlpConfig("mlp-xs", 64, (64,), 10),
+    "mlp-s": MlpConfig("mlp-s", 64, (128, 64), 10),
+    "mlp-m": MlpConfig("mlp-m", 64, (256, 128), 10),
+    "mlp-l": MlpConfig("mlp-l", 64, (512, 256, 128), 10),
+    "mlp-xl": MlpConfig("mlp-xl", 64, (1024, 512, 256), 10),
+}
+
+
+def mlp_logits(cfg: MlpConfig, theta: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    params = cfg.spec().unpack(theta)
+    h = x
+    n_layers = len(params) // 2
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = fused_linear(h, w, b)
+        if li + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def mlp_loss(cfg: MlpConfig, theta, x, y) -> jnp.ndarray:
+    return softmax_xent(mlp_logits(cfg, theta, x), y)
+
+
+def mlp_loss_and_grad(cfg: MlpConfig, theta, x, y):
+    loss, grad = jax.value_and_grad(lambda t: mlp_loss(cfg, t, x, y))(theta)
+    return loss, grad
+
+
+# --------------------------------------------------------------------------
+# Character-level transformer LM (end-to-end example workload)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm-base"
+    vocab: int = 96
+    seq_len: int = 128
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 1024
+
+    def spec(self) -> ParamSpec:
+        d, f, v, t = self.d_model, self.d_ff, self.vocab, self.seq_len
+        shapes: List[Tuple[int, ...]] = [(v, d), (t, d)]  # tok emb, pos emb
+        for _ in range(self.n_layers):
+            shapes += [
+                (d,), (d,),          # ln1 scale, bias
+                (d, 3 * d), (3 * d,),  # qkv
+                (d, d), (d,),        # attn out
+                (d,), (d,),          # ln2 scale, bias
+                (d, f), (f,),        # ff in
+                (f, d), (d,),        # ff out
+            ]
+        shapes += [(d,), (d,), (d, v), (v,)]  # final ln, lm head
+        return ParamSpec(tuple(shapes))
+
+    def init(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        parts: List[np.ndarray] = []
+        for shape in self.spec().shapes:
+            if len(shape) == 1:
+                # LayerNorm scales start at 1, everything else at 0. The
+                # packer cannot tell them apart, so initialize scales via
+                # position: handled below by post-pass.
+                parts.append(np.zeros(shape, np.float32))
+            else:
+                fan_in = shape[0]
+                parts.append(
+                    rng.normal(0.0, 0.02 * np.sqrt(768 / fan_in), shape)
+                    .astype(np.float32)
+                    .ravel()
+                )
+        theta = np.concatenate([p.ravel() for p in parts])
+        # Second pass: set LN scale vectors to 1.0.
+        spec = self.spec()
+        ranges = spec.layer_ranges()
+        ln_scale_tensor_idx = []
+        # Per layer block of 12 tensors starting at index 2: ln1 scale at +0,
+        # ln2 scale at +6; final ln scale at -4.
+        for layer in range(self.n_layers):
+            base = 2 + 12 * layer
+            ln_scale_tensor_idx += [base, base + 6]
+        ln_scale_tensor_idx.append(len(spec.shapes) - 4)
+        for ti in ln_scale_tensor_idx:
+            s, e = ranges[ti]
+            theta[s:e] = 1.0
+        return theta
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, wqkv, bqkv, wo, bo, n_heads):
+    b, t, d = x.shape
+    qkv = fused_linear(x.reshape(b * t, d), wqkv, bqkv).reshape(b, t, 3 * d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+
+    def heads(u):
+        return u.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b * t, d)
+    return fused_linear(out, wo, bo).reshape(b, t, d)
+
+
+def transformer_logits(cfg: TransformerConfig, theta, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, V)."""
+    p = cfg.spec().unpack(theta)
+    idx = 0
+    tok_emb, pos_emb = p[0], p[1]
+    idx = 2
+    b, t = tokens.shape
+    h = tok_emb[tokens] + pos_emb[None, :t, :]
+    d = cfg.d_model
+    for _ in range(cfg.n_layers):
+        (ln1s, ln1b, wqkv, bqkv, wo, bo, ln2s, ln2b, w1, b1, w2, b2) = p[
+            idx : idx + 12
+        ]
+        idx += 12
+        h = h + _attention(_layer_norm(h, ln1s, ln1b), wqkv, bqkv, wo, bo, cfg.n_heads)
+        hn = _layer_norm(h, ln2s, ln2b)
+        ff = fused_linear(hn.reshape(b * t, d), w1, b1)
+        ff = jax.nn.gelu(ff)
+        ff = fused_linear(ff, w2, b2).reshape(b, t, d)
+        h = h + ff
+    lnfs, lnfb, whead, bhead = p[idx : idx + 4]
+    h = _layer_norm(h, lnfs, lnfb)
+    return fused_linear(h.reshape(b * t, d), whead, bhead).reshape(b, t, cfg.vocab)
+
+
+def transformer_loss(cfg: TransformerConfig, theta, tokens, targets):
+    logits = transformer_logits(cfg, theta, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_loss_and_grad(cfg: TransformerConfig, theta, tokens, targets):
+    loss, grad = jax.value_and_grad(
+        lambda t: transformer_loss(cfg, t, tokens, targets)
+    )(theta)
+    return loss, grad
+
+
+# --------------------------------------------------------------------------
+# Multi-head "detection" model (Table 6 substitute)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DetConfig:
+    name: str = "det-head"
+    input_dim: int = 64
+    trunk: Tuple[int, ...] = (128, 128)
+    num_classes: int = 10
+    box_dim: int = 4
+
+    def spec(self) -> ParamSpec:
+        shapes: List[Tuple[int, ...]] = []
+        dims = [self.input_dim, *self.trunk]
+        for i, o in zip(dims[:-1], dims[1:]):
+            shapes += [(i, o), (o,)]
+        last = dims[-1]
+        shapes += [(last, self.num_classes), (self.num_classes,)]  # cls head
+        shapes += [(last, self.box_dim), (self.box_dim,)]  # box head
+        return ParamSpec(tuple(shapes))
+
+    def init(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        parts = []
+        for shape in self.spec().shapes:
+            if len(shape) == 1:
+                parts.append(np.zeros(shape, np.float32))
+            else:
+                parts.append(_he_init(rng, shape, shape[0]).ravel())
+        return np.concatenate(parts)
+
+
+def det_forward(cfg: DetConfig, theta, x):
+    p = cfg.spec().unpack(theta)
+    h = x
+    n_trunk = len(cfg.trunk)
+    for li in range(n_trunk):
+        h = jax.nn.relu(fused_linear(h, p[2 * li], p[2 * li + 1]))
+    base = 2 * n_trunk
+    cls = fused_linear(h, p[base], p[base + 1])
+    box = fused_linear(h, p[base + 2], p[base + 3])
+    return cls, box
+
+
+def smooth_l1(pred, target):
+    d = jnp.abs(pred - target)
+    return jnp.mean(jnp.where(d < 1.0, 0.5 * d * d, d - 0.5))
+
+
+def det_loss(cfg: DetConfig, theta, x, y, boxes):
+    cls, box = det_forward(cfg, theta, x)
+    return softmax_xent(cls, y) + smooth_l1(box, boxes)
+
+
+def det_loss_and_grad(cfg: DetConfig, theta, x, y, boxes):
+    loss, grad = jax.value_and_grad(lambda t: det_loss(cfg, t, x, y, boxes))(theta)
+    return loss, grad

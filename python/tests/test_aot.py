@@ -1,0 +1,120 @@
+"""AOT pipeline tests: manifest integrity, artifact invariants, golden
+vectors. Runs the emitter into a temp dir (quick mode) so the test does
+not depend on `make artifacts` having run."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    em = aot.Emitter(str(d))
+    cfg = M.MLP_FAMILY["mlp-xs"]
+    aot.emit_mlp(em, cfg, seed=1)
+    aot.emit_update_kernels(em, cfg.spec().dim)
+    aot.emit_golden(em)
+    em.finish()
+    return str(d)
+
+
+def _manifest(outdir):
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_artifacts_listed_and_present(self, outdir):
+        man = _manifest(outdir)
+        assert man["artifacts"], "no artifacts emitted"
+        for name, art in man["artifacts"].items():
+            path = os.path.join(outdir, art["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 100, name
+
+    def test_hlo_text_is_text(self, outdir):
+        man = _manifest(outdir)
+        for art in man["artifacts"].values():
+            with open(os.path.join(outdir, art["file"])) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_grad_artifact_signature(self, outdir):
+        man = _manifest(outdir)
+        model = man["models"]["mlp-xs"]
+        art = man["artifacts"]["mlp-xs_grad"]
+        dim = model["dim"]
+        assert art["inputs"][0]["shape"] == [dim]
+        assert art["inputs"][1]["shape"] == [model["micro_batch"], model["input_dim"]]
+        assert art["inputs"][1]["dtype"] == "f32"
+        assert art["inputs"][2]["dtype"] == "i32"
+        assert art["n_outputs"] == 2
+
+    def test_init_bin_matches_dim(self, outdir):
+        man = _manifest(outdir)
+        model = man["models"]["mlp-xs"]
+        raw = np.fromfile(os.path.join(outdir, model["init"]), dtype="<f4")
+        assert raw.shape == (model["dim"],)
+        assert np.isfinite(raw).all()
+
+    def test_layer_ranges_partition(self, outdir):
+        man = _manifest(outdir)
+        model = man["models"]["mlp-xs"]
+        ranges = model["layer_ranges"]
+        assert ranges[0][0] == 0 and ranges[-1][1] == model["dim"]
+
+    def test_kernel_artifacts_padded_k(self, outdir):
+        man = _manifest(outdir)
+        for name, k in man["kernels"].items():
+            art = man["artifacts"][name]
+            assert art["inputs"][0]["shape"][0] == aot.KPAD
+            assert k["kpad"] == aot.KPAD
+
+
+class TestGolden:
+    def test_golden_consistent_with_oracle(self, outdir):
+        from compile.kernels import ref
+        import jax.numpy as jnp
+
+        with open(os.path.join(outdir, "golden.json")) as f:
+            g = json.load(f)["decentlam_update"]
+        z = jnp.asarray(np.array(g["z"], np.float32).reshape(g["k"], g["d"]))
+        xn, mn = ref.decentlam_update_ref(
+            z,
+            jnp.asarray(np.array(g["w"], np.float32)),
+            jnp.asarray(np.array(g["x"], np.float32)),
+            jnp.asarray(np.array(g["m"], np.float32)),
+            np.float32(g["gamma"]),
+            np.float32(g["beta"]),
+        )
+        np.testing.assert_allclose(np.asarray(xn), g["x_new"], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(mn), g["m_new"], rtol=1e-6)
+
+    def test_golden_weights_stochastic(self, outdir):
+        with open(os.path.join(outdir, "golden.json")) as f:
+            g = json.load(f)["decentlam_update"]
+        assert abs(sum(g["w"]) - 1.0) < 1e-6
+
+
+class TestCli:
+    def test_quick_cli_runs(self, tmp_path):
+        env = dict(os.environ)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--outdir", str(tmp_path), "--quick"],
+            cwd=root,
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        assert out.returncode == 0, out.stderr
+        assert os.path.exists(tmp_path / "manifest.json")

@@ -1,0 +1,182 @@
+"""Kernel-vs-oracle correctness: the CORE Layer-1 signal.
+
+hypothesis sweeps shapes, dtypes and hyper-parameters; every property
+asserts allclose between the Pallas kernel (interpret=True) and the
+pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decentlam_update, fused_linear, partial_average, ref
+
+F32 = np.float32
+
+
+def _arr(rng, shape, dtype=F32, scale=1.0):
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(dtype))
+
+
+def _weights(rng, k, dtype=F32):
+    """A valid mixing row: non-negative, sums to one (Assumption A.3)."""
+    w = rng.random(k).astype(np.float64) + 0.05
+    return jnp.asarray((w / w.sum()).astype(dtype))
+
+
+dims = st.sampled_from([1, 2, 4, 8, 16, 64, 256, 1024])
+degrees = st.integers(min_value=1, max_value=8)
+gammas = st.floats(min_value=1e-4, max_value=1.0)
+betas = st.floats(min_value=0.0, max_value=0.99)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestDecentLamUpdate:
+    @settings(max_examples=40, deadline=None)
+    @given(d=dims, k=degrees, gamma=gammas, beta=betas, seed=seeds)
+    def test_matches_oracle(self, d, k, gamma, beta, seed):
+        rng = np.random.default_rng(seed)
+        z, w = _arr(rng, (k, d)), _weights(rng, k)
+        x, m = _arr(rng, d), _arr(rng, d)
+        hp = jnp.asarray(np.array([gamma, beta], F32))
+        xn, mn = decentlam_update(z, w, x, m, hp, block_d=min(d, 256))
+        xr, mr = ref.decentlam_update_ref(z, w, x, m, F32(gamma), F32(beta))
+        np.testing.assert_allclose(xn, xr, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(mn, mr, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=dims, k=degrees, seed=seeds)
+    def test_fused_identity_beta0_selfweight1(self, d, k, seed):
+        """With w = e_self and beta=0, the update must reduce to plain SGD:
+        x' = z_self, m' = grad (invariant used by the Rust fast path)."""
+        rng = np.random.default_rng(seed)
+        gamma = F32(0.1)
+        x, m, g = _arr(rng, d), _arr(rng, d), _arr(rng, d)
+        z = jnp.zeros((k, d), F32).at[0].set(x - gamma * g)
+        w = jnp.zeros((k,), F32).at[0].set(1.0)
+        hp = jnp.asarray(np.array([gamma, 0.0], F32))
+        xn, mn = decentlam_update(z, w, x, m, hp, block_d=min(d, 256))
+        np.testing.assert_allclose(xn, x - gamma * g, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(mn, g, rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=dims, k=degrees, gamma=gammas, beta=betas, seed=seeds)
+    def test_zero_weight_padding_is_noop(self, d, k, gamma, beta, seed):
+        """Padding the neighborhood with zero-weight rows must not change
+        the result — the property the KPAD artifact relies on."""
+        rng = np.random.default_rng(seed)
+        z, w = _arr(rng, (k, d)), _weights(rng, k)
+        x, m = _arr(rng, d), _arr(rng, d)
+        hp = jnp.asarray(np.array([gamma, beta], F32))
+        zp = jnp.concatenate([z, _arr(rng, (2, d), scale=100.0)])
+        wp = jnp.concatenate([w, jnp.zeros(2, F32)])
+        a = decentlam_update(z, w, x, m, hp, block_d=min(d, 256))
+        b = decentlam_update(zp, wp, x, m, hp, block_d=min(d, 256))
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(a[1], b[1], rtol=1e-5, atol=1e-5)
+
+    def test_fixed_point(self):
+        """At consensus with zero gradient, the update is a no-op
+        (x' = x, m' = beta*m): the bias-freeness DecentLaM is built for."""
+        d, k = 32, 4
+        rng = np.random.default_rng(0)
+        x = _arr(rng, d)
+        z = jnp.tile(x[None, :], (k, 1))  # all neighbors at x, zero grad
+        w = _weights(rng, k)
+        m = jnp.zeros(d, F32)
+        hp = jnp.asarray(np.array([0.05, 0.9], F32))
+        xn, mn = decentlam_update(z, w, x, m, hp, block_d=32)
+        np.testing.assert_allclose(xn, x, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(mn, jnp.zeros(d), atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(3)
+        d, k = 64, 4
+        z = _arr(rng, (k, d)).astype(dtype)
+        w = _weights(rng, k).astype(dtype)
+        x, m = _arr(rng, d).astype(dtype), _arr(rng, d).astype(dtype)
+        hp = jnp.asarray(np.array([0.1, 0.9], F32)).astype(dtype)
+        xn, mn = decentlam_update(z, w, x, m, hp, block_d=64)
+        xr, mr = ref.decentlam_update_ref(z, w, x, m, dtype(0.1), dtype(0.9))
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(xn, F32), np.asarray(xr, F32), rtol=tol, atol=tol
+        )
+        np.testing.assert_allclose(
+            np.asarray(mn, F32), np.asarray(mr, F32), rtol=tol, atol=tol
+        )
+
+
+class TestPartialAverage:
+    @settings(max_examples=40, deadline=None)
+    @given(d=dims, k=degrees, seed=seeds)
+    def test_matches_oracle(self, d, k, seed):
+        rng = np.random.default_rng(seed)
+        z, w = _arr(rng, (k, d)), _weights(rng, k)
+        mix = partial_average(z, w, block_d=min(d, 256))
+        np.testing.assert_allclose(
+            mix, ref.partial_average_ref(z, w), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=dims, k=degrees, seed=seeds)
+    def test_consensus_preserved(self, d, k, seed):
+        """Averaging identical payloads with a stochastic row returns the
+        payload (W 1 = 1, Assumption A.3)."""
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, d)
+        z = jnp.tile(x[None, :], (k, 1))
+        mix = partial_average(z, _weights(rng, k), block_d=min(d, 256))
+        np.testing.assert_allclose(mix, x, rtol=1e-5, atol=1e-5)
+
+
+class TestFusedLinear:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 8, 32]),
+        i=st.sampled_from([1, 4, 16, 64]),
+        o=st.sampled_from([1, 4, 16, 64]),
+        seed=seeds,
+    )
+    def test_forward_matches_oracle(self, b, i, o, seed):
+        rng = np.random.default_rng(seed)
+        x, w, bias = _arr(rng, (b, i)), _arr(rng, (i, o)), _arr(rng, o)
+        np.testing.assert_allclose(
+            fused_linear(x, w, bias), ref.linear_ref(x, w, bias), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 8, 32]),
+        i=st.sampled_from([4, 16]),
+        o=st.sampled_from([4, 16]),
+        seed=seeds,
+    )
+    def test_custom_vjp_matches_autodiff(self, b, i, o, seed):
+        rng = np.random.default_rng(seed)
+        x, w, bias = _arr(rng, (b, i)), _arr(rng, (i, o)), _arr(rng, o)
+
+        def loss_k(a, ww, bb):
+            return jnp.sum(jnp.tanh(fused_linear(a, ww, bb)))
+
+        def loss_r(a, ww, bb):
+            return jnp.sum(jnp.tanh(ref.linear_ref(a, ww, bb)))
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, bias)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, bias)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+    def test_vjp_kernels_match_manual_oracle(self):
+        rng = np.random.default_rng(11)
+        x, w, bias = _arr(rng, (8, 16)), _arr(rng, (16, 4)), _arr(rng, 4)
+        dy = _arr(rng, (8, 4))
+        _, vjp = jax.vjp(fused_linear, x, w, bias)
+        dx, dw, db = vjp(dy)
+        rdx, rdw, rdb = ref.linear_grads_ref(x, w, dy)
+        np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dw, rdw, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(db, rdb, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,174 @@
+"""Layer-2 model tests: shapes, packing, gradients, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+F32 = np.float32
+
+
+class TestParamSpec:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        shapes=st.lists(
+            st.tuples(st.integers(1, 7), st.integers(1, 7)), min_size=1, max_size=5
+        )
+    )
+    def test_pack_unpack_roundtrip(self, shapes):
+        spec = M.ParamSpec(tuple(tuple(s) for s in shapes))
+        theta = jnp.arange(spec.dim, dtype=jnp.float32)
+        parts = spec.unpack(theta)
+        flat_again = jnp.concatenate([p.ravel() for p in parts])
+        np.testing.assert_array_equal(flat_again, theta)
+
+    def test_layer_ranges_partition_dim(self):
+        for cfg in M.MLP_FAMILY.values():
+            spec = cfg.spec()
+            ranges = spec.layer_ranges()
+            assert ranges[0][0] == 0
+            assert ranges[-1][1] == spec.dim
+            for (_, e0), (s1, _) in zip(ranges, ranges[1:]):
+                assert e0 == s1
+
+
+class TestMlp:
+    @pytest.mark.parametrize("name", sorted(M.MLP_FAMILY))
+    def test_init_dim_matches_spec(self, name):
+        cfg = M.MLP_FAMILY[name]
+        assert cfg.init(0).shape == (cfg.spec().dim,)
+
+    def test_logits_shape(self):
+        cfg = M.MLP_FAMILY["mlp-s"]
+        theta = jnp.asarray(cfg.init(1))
+        x = jnp.ones((5, cfg.input_dim), jnp.float32)
+        assert M.mlp_logits(cfg, theta, x).shape == (5, cfg.num_classes)
+
+    def test_initial_loss_near_log_c(self):
+        cfg = M.MLP_FAMILY["mlp-s"]
+        theta = jnp.asarray(cfg.init(1))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(128, cfg.input_dim)).astype(F32))
+        y = jnp.asarray(rng.integers(0, cfg.num_classes, 128).astype(np.int32))
+        loss = M.mlp_loss(cfg, theta, x, y)
+        assert abs(float(loss) - np.log(cfg.num_classes)) < 0.6
+
+    def test_grad_matches_finite_difference(self):
+        cfg = M.MlpConfig("tiny", 4, (5,), 3)
+        theta = jnp.asarray(cfg.init(0))
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 4)).astype(F32))
+        y = jnp.asarray(rng.integers(0, 3, 8).astype(np.int32))
+        _, grad = M.mlp_loss_and_grad(cfg, theta, x, y)
+        eps = 1e-3
+        idx = rng.integers(0, cfg.spec().dim, 10)
+        for i in idx:
+            e = jnp.zeros_like(theta).at[int(i)].set(eps)
+            fd = (M.mlp_loss(cfg, theta + e, x, y) - M.mlp_loss(cfg, theta - e, x, y)) / (
+                2 * eps
+            )
+            assert abs(float(fd) - float(grad[int(i)])) < 5e-3
+
+    def test_sgd_reduces_loss(self):
+        cfg = M.MLP_FAMILY["mlp-xs"]
+        theta = jnp.asarray(cfg.init(2))
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(64, cfg.input_dim)).astype(F32))
+        y = jnp.asarray((np.argmax(np.asarray(x)[:, :10], axis=1)).astype(np.int32))
+        l0, _ = M.mlp_loss_and_grad(cfg, theta, x, y)
+        step = jax.jit(
+            lambda t: t - 0.2 * M.mlp_loss_and_grad(cfg, t, x, y)[1]
+        )
+        for _ in range(30):
+            theta = step(theta)
+        l1, _ = M.mlp_loss_and_grad(cfg, theta, x, y)
+        assert float(l1) < 0.6 * float(l0)
+
+
+class TestTransformer:
+    CFG = M.TransformerConfig(
+        name="lm-tiny", vocab=32, seq_len=16, d_model=32, n_heads=2, n_layers=2, d_ff=64
+    )
+
+    def test_init_dim_matches_spec(self):
+        assert self.CFG.init(0).shape == (self.CFG.spec().dim,)
+
+    def test_ln_scales_initialized_to_one(self):
+        theta = self.CFG.init(0)
+        spec = self.CFG.spec()
+        ranges = spec.layer_ranges()
+        # ln1 scale of layer 0 is tensor index 2.
+        s, e = ranges[2]
+        np.testing.assert_array_equal(theta[s:e], np.ones(e - s, F32))
+
+    def test_logits_shape_and_initial_loss(self):
+        theta = jnp.asarray(self.CFG.init(1))
+        toks = jnp.asarray(
+            np.random.default_rng(0)
+            .integers(0, self.CFG.vocab, (3, self.CFG.seq_len))
+            .astype(np.int32)
+        )
+        logits = M.transformer_logits(self.CFG, theta, toks)
+        assert logits.shape == (3, self.CFG.seq_len, self.CFG.vocab)
+        loss = M.transformer_loss(self.CFG, theta, toks, toks)
+        assert abs(float(loss) - np.log(self.CFG.vocab)) < 0.5
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        theta = jnp.asarray(self.CFG.init(1))
+        rng = np.random.default_rng(4)
+        toks = rng.integers(0, self.CFG.vocab, (1, self.CFG.seq_len)).astype(np.int32)
+        l0 = M.transformer_logits(self.CFG, theta, jnp.asarray(toks))
+        toks2 = toks.copy()
+        toks2[0, -1] = (toks2[0, -1] + 1) % self.CFG.vocab
+        l1 = M.transformer_logits(self.CFG, theta, jnp.asarray(toks2))
+        np.testing.assert_allclose(l0[0, :-1], l1[0, :-1], rtol=1e-4, atol=1e-4)
+
+    def test_overfits_tiny_sequence(self):
+        theta = jnp.asarray(self.CFG.init(5))
+        toks = jnp.asarray(
+            (np.arange(16) % 4).reshape(1, 16).astype(np.int32)
+        )  # trivially predictable
+        tgt = jnp.asarray(np.roll(np.asarray(toks), -1, axis=1))
+        step = jax.jit(
+            lambda t: t - 0.5 * M.transformer_loss_and_grad(self.CFG, t, toks, tgt)[1]
+        )
+        l0 = float(M.transformer_loss(self.CFG, theta, toks, tgt))
+        for _ in range(60):
+            theta = step(theta)
+        l1 = float(M.transformer_loss(self.CFG, theta, toks, tgt))
+        assert l1 < 0.5 * l0
+
+
+class TestDet:
+    CFG = M.DetConfig()
+
+    def test_forward_shapes(self):
+        theta = jnp.asarray(self.CFG.init(0))
+        x = jnp.ones((7, self.CFG.input_dim), jnp.float32)
+        cls, box = M.det_forward(self.CFG, theta, x)
+        assert cls.shape == (7, self.CFG.num_classes)
+        assert box.shape == (7, self.CFG.box_dim)
+
+    def test_smooth_l1_regimes(self):
+        # quadratic inside |d|<1, linear outside
+        p = jnp.asarray(np.array([[0.5], [3.0]], F32))
+        t = jnp.zeros((2, 1), jnp.float32)
+        assert abs(float(M.smooth_l1(p[:1], t[:1])) - 0.125) < 1e-6
+        assert abs(float(M.smooth_l1(p[1:], t[1:])) - 2.5) < 1e-6
+
+    def test_grad_nonzero_both_heads(self):
+        theta = jnp.asarray(self.CFG.init(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(16, self.CFG.input_dim)).astype(F32))
+        y = jnp.asarray(rng.integers(0, self.CFG.num_classes, 16).astype(np.int32))
+        b = jnp.asarray(rng.normal(size=(16, self.CFG.box_dim)).astype(F32))
+        _, grad = M.det_loss_and_grad(self.CFG, theta, x, y, b)
+        ranges = self.CFG.spec().layer_ranges()
+        cls_w = grad[ranges[-4][0] : ranges[-4][1]]
+        box_w = grad[ranges[-2][0] : ranges[-2][1]]
+        assert float(jnp.linalg.norm(cls_w)) > 0
+        assert float(jnp.linalg.norm(box_w)) > 0

@@ -1,0 +1,135 @@
+//! Bench: end-to-end training-step time through the coordinator — the
+//! Tables 1/3/4 workload path (native engine, threaded gradient phase)
+//! and, when artifacts are present, the PJRT path (JAX MLP grad + the
+//! Pallas update-kernel artifact). EXPERIMENTS.md §Perf's headline rows.
+//!
+//! Run: `make artifacts && cargo bench --bench end_to_end_step`.
+
+use std::path::Path;
+
+use decentlam::coordinator::Trainer;
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::experiments::mlp_workload_named;
+use decentlam::grad::pjrt;
+use decentlam::runtime::{Manifest, Runtime, Tensor};
+use decentlam::util::bench::Bench;
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::rng::Pcg64;
+
+fn data(nodes: usize) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 512,
+        eval_samples: 64,
+        dirichlet_alpha: 0.3,
+        seed: 1,
+        ..Default::default()
+    })
+}
+
+fn cfg_for(optimizer: &str, nodes: usize, total_batch: usize, threads: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = nodes;
+    cfg.total_batch = total_batch;
+    cfg.micro_batch = 64;
+    cfg.lr = 0.01;
+    cfg.linear_scaling = false;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.steps = 1;
+    cfg.threads = threads;
+    cfg
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let nodes = 8;
+
+    // Native engine: threaded vs sequential gradient phase, small/large batch.
+    for &(batch, threads, label) in &[
+        (512usize, 1usize, "seq"),
+        (512, 0, "par"),
+        (4096, 0, "par"),
+    ] {
+        let wl = mlp_workload_named("mlp-s", data(nodes), 64, 1).unwrap();
+        let mut t = Trainer::new(cfg_for("decentlam", nodes, batch, threads), wl).unwrap();
+        let mut k = 0usize;
+        bench.case(
+            &format!("native mlp-s step n={nodes} batch={batch} grad={label}"),
+            || {
+                t.step(k);
+                k += 1;
+            },
+        );
+    }
+
+    // PJRT path (skipped without artifacts).
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(dir).unwrap();
+        let runtime = Runtime::start().unwrap();
+        let rt = runtime.handle();
+
+        // Single mlp-s grad artifact call.
+        rt.load_artifact(&manifest, "mlp-s_grad").unwrap();
+        let info = manifest.model("mlp-s").unwrap();
+        let theta = manifest.load_init(&info).unwrap();
+        let mut rng = Pcg64::seeded(2);
+        let mut xb = vec![0.0f32; info.micro_batch * info.input_dim];
+        rng.normal_fill(&mut xb, 1.0);
+        let yb: Vec<i32> = (0..info.micro_batch).map(|i| (i % 10) as i32).collect();
+        bench.case("pjrt mlp-s_grad exec (B=64)", || {
+            let out = rt
+                .exec(
+                    "mlp-s_grad",
+                    vec![
+                        Tensor::f32(theta.clone(), &[info.dim as i64]),
+                        Tensor::f32(xb.clone(), &[info.micro_batch as i64, info.input_dim as i64]),
+                        Tensor::i32(yb.clone(), &[info.micro_batch as i64]),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out.len(), 2);
+        });
+
+        // The Pallas decentlam_update kernel artifact at mlp-s size.
+        let kernel = manifest.update_kernel_for_dim(info.dim).unwrap();
+        rt.load_artifact(&manifest, &kernel).unwrap();
+        let d = info.dim;
+        let mut z = vec![0.0f32; 8 * d];
+        rng.normal_fill(&mut z, 1.0);
+        let w = vec![0.2f32, 0.2, 0.2, 0.2, 0.2, 0.0, 0.0, 0.0];
+        let x = vec![0.1f32; d];
+        let m = vec![0.0f32; d];
+        bench.case_bytes(
+            &format!("pjrt pallas decentlam_update d={d}"),
+            ((8 + 4) * d * 4) as f64,
+            || {
+                let out = rt
+                    .exec(
+                        &kernel,
+                        vec![
+                            Tensor::f32(z.clone(), &[8, d as i64]),
+                            Tensor::f32(w.clone(), &[8]),
+                            Tensor::f32(x.clone(), &[d as i64]),
+                            Tensor::f32(m.clone(), &[d as i64]),
+                            Tensor::f32(vec![0.05, 0.9], &[2]),
+                        ],
+                    )
+                    .unwrap();
+                assert_eq!(out.len(), 2);
+            },
+        );
+
+        // Full PJRT end-to-end decentralized step (4 nodes).
+        let wl = pjrt::mlp_workload(&rt, &manifest, "mlp-s", data(4)).unwrap();
+        let mut t = Trainer::new(cfg_for("decentlam", 4, 256, 0), wl).unwrap();
+        let mut k = 0usize;
+        bench.case("pjrt end-to-end decentlam step (n=4, batch=256)", || {
+            t.step(k);
+            k += 1;
+        });
+    } else {
+        println!("(artifacts missing: skipping PJRT benches — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: Fig. 6 — regenerates the paper's runtime-comparison figure
+//! (per-iteration compute/comm breakdown, 10 and 25 Gbps) and measures
+//! the REAL in-process partial-averaging throughput that the analytic
+//! model's compute side rests on.
+//!
+//! Run: `cargo bench --bench fig6_runtime`.
+
+use decentlam::experiments::fig6;
+use decentlam::optim::partial_average_all;
+use decentlam::topology::{metropolis_hastings, Kind, Topology};
+use decentlam::util::bench::{opaque, Bench};
+
+fn main() {
+    // 1. The paper figure itself (analytic model, DESIGN.md §2 substitution).
+    let (rows, table) = fig6::run(&fig6::Opts::default()).unwrap();
+    println!("{}", table.render());
+    let band: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.method == "decentlam")
+        .map(|r| r.speedup_vs_pmsgd)
+        .collect();
+    println!(
+        "decentralized speedup band: {:.2}x .. {:.2}x (paper: 1.2-1.9x)\n",
+        band.iter().cloned().fold(f64::INFINITY, f64::min),
+        band.iter().cloned().fold(0.0, f64::max)
+    );
+
+    // 2. Measured gossip throughput (the in-process exchange itself).
+    let mut bench = Bench::new();
+    let n = 8;
+    for kind in [Kind::Ring, Kind::SymExp, Kind::Full] {
+        let wm = metropolis_hastings(&Topology::build(kind, n));
+        for &d in &[17_226usize, 1_000_000] {
+            let src: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; d]).collect();
+            let mut dst = vec![vec![0.0f32; d]; n];
+            // bytes touched ~= (edges incl self) * d * 4 reads + n*d*4 writes
+            let touched: usize = (0..n).map(|i| wm.row(i).len() * d * 4).sum::<usize>() + n * d * 4;
+            bench.case_bytes(
+                &format!("partial_average_all {kind:?} n={n} d={d}"),
+                touched as f64,
+                || {
+                    partial_average_all(&wm, &src, &mut dst);
+                    opaque(&dst);
+                },
+            );
+        }
+    }
+}

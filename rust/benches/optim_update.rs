@@ -1,0 +1,63 @@
+//! Bench: optimizer update rules — ns/param and effective bandwidth of
+//! the Layer-3 hot path (the per-iteration exchange + update phase) for
+//! every algorithm, at the mlp-s size and at a 3.2M-param (lm-base-like)
+//! size. This is the bench behind EXPERIMENTS.md §Perf L3.
+//!
+//! Run: `cargo bench --bench optim_update` (DECENTLAM_BENCH_FAST=1 to shrink).
+
+use decentlam::optim::{self, decentlam::fused_apply, NodeState, RoundCtx, Scratch};
+use decentlam::topology::{metropolis_hastings, Kind, Topology};
+use decentlam::util::bench::{opaque, Bench};
+use decentlam::util::rng::Pcg64;
+
+fn main() {
+    let mut bench = Bench::new();
+    let n = 8;
+    let wm = metropolis_hastings(&Topology::build(Kind::SymExp, n));
+
+    for &d in &[17_226usize, 3_241_568] {
+        println!("--- n={n} sym-exp, D={d} ---");
+        let mut rng = Pcg64::seeded(1);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.normal_fill(&mut g, 1.0);
+                g
+            })
+            .collect();
+        // Fused single-node apply: the kernel-equivalent inner loop.
+        {
+            let mut x = vec![0.1f32; d];
+            let mut m = vec![0.0f32; d];
+            let mix = vec![0.05f32; d];
+            // read x, m, mix + write x, m = 5 f32 streams
+            bench.case_bytes(&format!("fused_apply d={d}"), (d * 4 * 5) as f64, || {
+                fused_apply(&mut x, &mut m, &mix, 0.05, 0.9);
+                opaque(&x);
+            });
+        }
+        for name in optim::ALL.iter().chain(["dsgd"].iter()) {
+            let mut o = optim::build(name, 12, 0.7).unwrap();
+            let mut states: Vec<NodeState> =
+                (0..n).map(|_| NodeState::new(vec![0.1f32; d], o.aux_count())).collect();
+            let mut scratch = Scratch::new(n, d);
+            let mut step = 0usize;
+            bench.case_items(&format!("{name} round (n={n}) d={d}"), (n * d) as f64, || {
+                let ctx = RoundCtx {
+                    wm: &wm,
+                    lr: 0.01,
+                    beta: 0.9,
+                    step,
+                    time_varying: false,
+                    layer_ranges: &[],
+                };
+                o.round(&mut states, &grads, &ctx, &mut scratch);
+                step += 1;
+            });
+        }
+    }
+    println!(
+        "\nnote: `ns/item` is ns per (node x parameter); the exchange+update \
+         phase should stay an order of magnitude below gradient compute."
+    );
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerates the bias results — Fig. 2, Fig. 3 (linreg
+//! convergence curves) and Table 2 (measured bias-scaling exponents) —
+//! at the paper's full App. G.2 settings, and times a full linreg
+//! optimizer round as the micro-benchmark.
+//!
+//! Run: `cargo bench --bench table_bias` (DECENTLAM_BENCH_FAST=1 shrinks
+//! the step counts).
+
+use decentlam::experiments::{fig2_3, table2};
+use decentlam::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("DECENTLAM_BENCH_FAST").is_ok();
+
+    // Fig. 2 (DSGD vs DmSGD) and Fig. 3 (+ DecentLaM).
+    let mut opts = fig2_3::Opts::default();
+    if fast {
+        opts.steps = 6000;
+    }
+    let (series, table) = fig2_3::run(&opts, true).unwrap();
+    println!("{}", table.render());
+    for s in &series {
+        let mid = s.rel_error[s.rel_error.len() / 2];
+        println!(
+            "  {}: error at T/2 = {:.3e}, final = {:.3e}",
+            s.method,
+            mid,
+            s.final_error()
+        );
+    }
+    println!();
+
+    // Table 2: measured exponents.
+    let mut t2 = table2::Opts::default();
+    if fast {
+        t2.steps = 8000;
+        t2.methods = vec!["dsgd".into(), "dmsgd".into(), "decentlam".into()];
+    }
+    let (_, table) = table2::run(&t2).unwrap();
+    println!("{}", table.render());
+
+    // Micro: one full-batch linreg DecentLaM step at App. G.2 scale.
+    use decentlam::coordinator::Trainer;
+    use decentlam::data::LinRegProblem;
+    use decentlam::grad::linreg;
+    use decentlam::util::config::{Config, LrSchedule};
+    let problem = LinRegProblem::generate(8, 50, 30, 1);
+    let mut cfg = Config::default();
+    cfg.optimizer = "decentlam".into();
+    cfg.topology = "mesh".into();
+    cfg.lr = 0.001;
+    cfg.linear_scaling = false;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.steps = 1;
+    cfg.threads = 1;
+    let mut trainer = Trainer::new(cfg, linreg::workload(problem)).unwrap();
+    let mut bench = Bench::new();
+    let mut k = 0usize;
+    bench.case("linreg decentlam full step (n=8, d=30)", || {
+        trainer.step(k);
+        k += 1;
+    });
+}

@@ -1,0 +1,9 @@
+//! Communication layer: the in-process exchange used by the trainer is
+//! plain shared-memory buffer passing (`optim::partial_average_all`);
+//! this module provides the *analytic cost model* that maps each
+//! optimizer's wire pattern onto cluster time (Fig. 6) — the substitute
+//! for the paper's 8×V100 NCCL testbed (DESIGN.md §2).
+
+pub mod cost;
+
+pub use cost::{CommCost, LinkSpec};

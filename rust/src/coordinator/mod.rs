@@ -1,0 +1,8 @@
+//! The Layer-3 coordinator: drives `n` nodes through synchronous
+//! decentralized training rounds (gradient phase → exchange → update),
+//! with gradient accumulation for large total batches, scheduled
+//! learning rates, periodic evaluation and consensus tracking.
+
+pub mod trainer;
+
+pub use trainer::{TrainReport, Trainer};

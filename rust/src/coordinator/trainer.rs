@@ -1,0 +1,315 @@
+//! The training loop.
+//!
+//! One `step`:
+//!   1. **Gradient phase** — every node computes its mean gradient over
+//!      `accum` micro-batches at its own model (threaded; PJRT engines
+//!      funnel into the runtime thread, native engines run truly in
+//!      parallel).
+//!   2. **Exchange + update phase** — the configured [`Optimizer`]
+//!      performs its communication (partial averaging / all-reduce) and
+//!      applies its update rule. The wire pattern is whatever the
+//!      optimizer declared; the Fig. 6 cost model charges it.
+//!   3. **Bookkeeping** — losses, learning-rate schedule, periodic eval
+//!      of the network-average model, consensus distance.
+//!
+//! Time-varying topologies (one-peer exp, bipartite random match)
+//! rebuild `W` each step from the shared seed.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::grad::Workload;
+use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
+use crate::topology::{metropolis_hastings, Kind, Topology, WeightMatrix};
+use crate::util::config::Config;
+use crate::util::math;
+
+/// Everything a finished run reports.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// Mean training loss per step (averaged over nodes).
+    pub losses: Vec<f64>,
+    /// (step, accuracy) evaluation points of the average model.
+    pub evals: Vec<(usize, f64)>,
+    /// (step, eval loss) if the evaluator provides one.
+    pub eval_losses: Vec<(usize, f64)>,
+    /// Final top-1 accuracy of the average model.
+    pub final_accuracy: f64,
+    /// Final consensus distance (1/n)Σ‖x_i − x̄‖².
+    pub final_consensus: f64,
+    /// Wall seconds in the gradient phase / update phase.
+    pub grad_seconds: f64,
+    pub update_seconds: f64,
+    pub steps: usize,
+}
+
+/// Multi-node trainer.
+pub struct Trainer {
+    pub cfg: Config,
+    pub workload: Workload,
+    pub kind: Kind,
+    pub wm: WeightMatrix,
+    topo: Topology,
+    pub states: Vec<NodeState>,
+    optimizer: Box<dyn Optimizer>,
+    scratch: Scratch,
+    grads: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    pub fn new(cfg: Config, workload: Workload) -> Result<Trainer> {
+        let kind = Kind::parse(&cfg.topology)?;
+        let n = cfg.nodes;
+        anyhow::ensure!(
+            workload.nodes.len() == n,
+            "workload has {} node shards, config wants {n}",
+            workload.nodes.len()
+        );
+        let topo = Topology::at_step(kind, n, cfg.seed, 0);
+        let mut wm = metropolis_hastings(&topo);
+        if cfg.positive_definite {
+            wm = wm.lazy();
+        }
+        let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
+        let d = workload.dim;
+        let states = (0..n)
+            .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
+            .collect();
+        Ok(Trainer {
+            cfg,
+            workload,
+            kind,
+            wm,
+            topo,
+            states,
+            optimizer,
+            scratch: Scratch::new(n, d),
+            grads: (0..n).map(|_| vec![0.0; d]).collect(),
+        })
+    }
+
+    /// The network-average model x̄.
+    pub fn average_model(&self) -> Vec<f32> {
+        let refs: Vec<&[f32]> = self.states.iter().map(|s| s.x.as_slice()).collect();
+        math::mean_of(&refs)
+    }
+
+    /// Consensus distance (1/n) Σ ‖x_i − x̄‖².
+    pub fn consensus_distance(&self) -> f64 {
+        let xbar = self.average_model();
+        self.states.iter().map(|s| math::dist2(&s.x, &xbar)).sum::<f64>()
+            / self.states.len() as f64
+    }
+
+    /// One training step; returns the mean training loss.
+    pub fn step(&mut self, k: usize) -> f64 {
+        let accum = self.cfg.accum_steps();
+        let lr = self.cfg.lr_at(k);
+        // --- gradient phase (threaded over nodes) ---
+        let loss = {
+            let threads = if self.cfg.threads == 0 {
+                self.cfg.nodes
+            } else {
+                self.cfg.threads.max(1)
+            };
+            let losses: Vec<f64> = if threads <= 1 {
+                self.states
+                    .iter()
+                    .zip(self.workload.nodes.iter_mut())
+                    .zip(self.grads.iter_mut())
+                    .map(|((st, node), g)| node.grad_accum(&st.x, accum, g))
+                    .collect()
+            } else {
+                let states = &self.states;
+                let mut out = vec![0.0f64; states.len()];
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for (((st, node), g), o) in states
+                        .iter()
+                        .zip(self.workload.nodes.iter_mut())
+                        .zip(self.grads.iter_mut())
+                        .zip(out.iter_mut())
+                    {
+                        handles.push(scope.spawn(move || {
+                            *o = node.grad_accum(&st.x, accum, g);
+                        }));
+                    }
+                    for h in handles {
+                        h.join().expect("gradient worker panicked");
+                    }
+                });
+                out
+            };
+            losses.iter().sum::<f64>() / losses.len() as f64
+        };
+        // --- exchange + update phase ---
+        if self.kind.time_varying() {
+            self.topo = Topology::at_step(self.kind, self.cfg.nodes, self.cfg.seed, k);
+            self.wm = metropolis_hastings(&self.topo);
+            if self.cfg.positive_definite {
+                self.wm = self.wm.lazy();
+            }
+        }
+        let ctx = RoundCtx {
+            wm: &self.wm,
+            lr,
+            beta: self.cfg.momentum as f32,
+            step: k,
+            time_varying: self.kind.time_varying(),
+            layer_ranges: &self.workload.layer_ranges,
+        };
+        self.optimizer.round(&mut self.states, &self.grads, &ctx, &mut self.scratch);
+        loss
+    }
+
+    /// Communication pattern of the configured optimizer (for the cost
+    /// model).
+    pub fn comm_pattern(&self) -> optim::CommPattern {
+        self.optimizer.comm_pattern()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Run the full schedule, reporting losses/evals.
+    pub fn run(&mut self) -> TrainReport {
+        let mut report = TrainReport { steps: self.cfg.steps, ..Default::default() };
+        let mut grad_s = 0.0;
+        let mut upd_s = 0.0;
+        for k in 0..self.cfg.steps {
+            let t0 = Instant::now();
+            let loss = self.step(k);
+            let dt = t0.elapsed().as_secs_f64();
+            // step() mixes both phases; attribute by re-measuring would
+            // double work. Track total and split via a dedicated probe in
+            // the benches; here we record total into grad_seconds.
+            grad_s += dt;
+            report.losses.push(loss);
+            if self.cfg.eval_every > 0 && (k + 1) % self.cfg.eval_every == 0 {
+                let t1 = Instant::now();
+                let xbar = self.average_model();
+                let acc = self.workload.eval.accuracy(&xbar);
+                if acc.is_finite() {
+                    report.evals.push((k + 1, acc));
+                }
+                if let Some(el) = self.workload.eval.loss(&xbar) {
+                    report.eval_losses.push((k + 1, el));
+                }
+                upd_s += t1.elapsed().as_secs_f64();
+            }
+        }
+        let xbar = self.average_model();
+        report.final_accuracy = self.workload.eval.accuracy(&xbar);
+        report.final_consensus = self.consensus_distance();
+        report.grad_seconds = grad_s;
+        report.update_seconds = upd_s;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{ClassificationData, SynthSpec};
+    use crate::data::LinRegProblem;
+    use crate::grad::{linreg, mlp};
+    use crate::util::config::LrSchedule;
+
+    fn small_cfg(optimizer: &str, steps: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.optimizer = optimizer.into();
+        cfg.nodes = 4;
+        cfg.steps = steps;
+        cfg.total_batch = 128;
+        cfg.micro_batch = 32;
+        cfg.lr = 0.05;
+        cfg.linear_scaling = false;
+        cfg.schedule = LrSchedule::Constant;
+        cfg.topology = "ring".into();
+        cfg
+    }
+
+    fn mlp_workload(nodes: usize) -> Workload {
+        let spec = SynthSpec {
+            nodes,
+            samples_per_node: 256,
+            eval_samples: 256,
+            dirichlet_alpha: 1.0,
+            ..Default::default()
+        };
+        let data = ClassificationData::generate(&spec);
+        mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 32, 1)
+    }
+
+    #[test]
+    fn decentlam_trains_mlp_above_chance() {
+        let cfg = small_cfg("decentlam", 120);
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let report = t.run();
+        assert!(report.losses[0] > report.losses.last().unwrap() * 1.5);
+        assert!(report.final_accuracy > 0.4, "acc={}", report.final_accuracy);
+    }
+
+    #[test]
+    fn all_optimizers_run_and_descend() {
+        for name in crate::optim::ALL {
+            let mut cfg = small_cfg(name, 40);
+            cfg.lr = 0.02;
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let report = t.run();
+            let first = report.losses[..5].iter().sum::<f64>() / 5.0;
+            let last = report.losses[report.losses.len() - 5..].iter().sum::<f64>() / 5.0;
+            assert!(
+                last < first,
+                "{name}: loss did not descend ({first} -> {last})"
+            );
+            assert!(report.losses.iter().all(|l| l.is_finite()), "{name} diverged");
+        }
+    }
+
+    #[test]
+    fn linreg_consensus_shrinks_under_training() {
+        let p = LinRegProblem::generate(4, 30, 10, 3);
+        let mut cfg = small_cfg("decentlam", 400);
+        cfg.lr = 0.005;
+        cfg.momentum = 0.8;
+        let mut t = Trainer::new(cfg, linreg::workload(p)).unwrap();
+        let report = t.run();
+        assert!(report.final_consensus < 1e-2, "consensus={}", report.final_consensus);
+        assert!(report.final_accuracy > -0.05, "rel err={}", -report.final_accuracy);
+    }
+
+    #[test]
+    fn time_varying_topology_trains() {
+        let mut cfg = small_cfg("decentlam", 60);
+        cfg.topology = "bipartite".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let report = t.run();
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        assert!(report.losses[0] > *report.losses.last().unwrap());
+    }
+
+    #[test]
+    fn threaded_and_sequential_grad_phase_agree() {
+        let mk = |threads: usize| {
+            let mut cfg = small_cfg("dmsgd", 10);
+            cfg.threads = threads;
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            t.run().losses
+        };
+        let seq = mk(1);
+        let par = mk(0);
+        for (a, b) in seq.iter().zip(&par) {
+            assert!((a - b).abs() < 1e-9, "threading changed results: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn node_count_mismatch_rejected() {
+        let mut cfg = small_cfg("dmsgd", 5);
+        cfg.nodes = 6;
+        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+    }
+}

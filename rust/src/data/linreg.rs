@@ -1,0 +1,222 @@
+//! Full-batch linear regression (paper App. G.2) — the workload behind
+//! Figs. 2–3 and the Table 2 bias-scaling verification.
+//!
+//!   f_i(x) = ½‖A_i x − b_i‖²,  A_i ∈ R^{50×30} ~ N(0,1),
+//!   b_i = A_i x° + s,  s ~ N(0, 0.01²)
+//!
+//! Exact gradients ∇f_i(x) = A_iᵀ(A_i x − b_i); the global solution x*
+//! solves (Σ A_iᵀA_i) x = Σ A_iᵀ b_i (computed by Gaussian elimination).
+
+use crate::util::rng::Pcg64;
+
+/// One decentralized least-squares instance.
+#[derive(Debug, Clone)]
+pub struct LinRegProblem {
+    pub n_nodes: usize,
+    pub rows: usize,
+    pub dim: usize,
+    /// Per node: A_i (rows x dim, row-major) and b_i.
+    pub a: Vec<Vec<f32>>,
+    pub b: Vec<Vec<f32>>,
+    /// Global least-squares solution x*.
+    pub x_star: Vec<f32>,
+}
+
+impl LinRegProblem {
+    /// Generate with the paper's defaults (n=8, 50×30, noise 0.01).
+    pub fn generate(n_nodes: usize, rows: usize, dim: usize, seed: u64) -> LinRegProblem {
+        let mut rng = Pcg64::new(seed, 0x11e6);
+        let mut x0 = vec![0.0f32; dim];
+        rng.normal_fill(&mut x0, 1.0);
+        let mut a = Vec::with_capacity(n_nodes);
+        let mut b = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let mut ai = vec![0.0f32; rows * dim];
+            rng.normal_fill(&mut ai, 1.0);
+            let mut bi = vec![0.0f32; rows];
+            for r in 0..rows {
+                let mut v = 0.0f32;
+                for c in 0..dim {
+                    v += ai[r * dim + c] * x0[c];
+                }
+                bi[r] = v + rng.normal() as f32 * 0.01;
+            }
+            a.push(ai);
+            b.push(bi);
+        }
+        let x_star = solve_normal_equations(&a, &b, n_nodes, rows, dim);
+        LinRegProblem { n_nodes, rows, dim, a, b, x_star }
+    }
+
+    /// Exact local gradient ∇f_i(x) = A_iᵀ(A_i x − b_i).
+    pub fn grad(&self, node: usize, x: &[f32], out: &mut [f32]) {
+        let (rows, dim) = (self.rows, self.dim);
+        let a = &self.a[node];
+        let b = &self.b[node];
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..rows {
+            let mut resid = -b[r];
+            let row = &a[r * dim..(r + 1) * dim];
+            for c in 0..dim {
+                resid += row[c] * x[c];
+            }
+            for c in 0..dim {
+                out[c] += row[c] * resid;
+            }
+        }
+    }
+
+    /// Local loss f_i(x).
+    pub fn loss(&self, node: usize, x: &[f32]) -> f64 {
+        let (rows, dim) = (self.rows, self.dim);
+        let mut total = 0.0f64;
+        for r in 0..rows {
+            let mut resid = -self.b[node][r] as f64;
+            for c in 0..dim {
+                resid += self.a[node][r * dim + c] as f64 * x[c] as f64;
+            }
+            total += 0.5 * resid * resid;
+        }
+        total
+    }
+
+    /// Relative limiting error (the paper's y-axis):
+    /// (1/n) Σ_i ‖x_i − x*‖² / ‖x*‖².
+    pub fn relative_error(&self, xs: &[Vec<f32>]) -> f64 {
+        let denom = crate::util::math::dot(&self.x_star, &self.x_star);
+        let num: f64 = xs
+            .iter()
+            .map(|x| crate::util::math::dist2(x, &self.x_star))
+            .sum::<f64>()
+            / xs.len() as f64;
+        num / denom
+    }
+
+    /// Data-inconsistency b² = (1/n)Σ‖∇f_i(x*)‖² (Proposition 2's knob).
+    pub fn b_squared(&self) -> f64 {
+        let mut g = vec![0.0f32; self.dim];
+        let mut total = 0.0;
+        for i in 0..self.n_nodes {
+            self.grad(i, &self.x_star, &mut g);
+            total += crate::util::math::dot(&g, &g);
+        }
+        total / self.n_nodes as f64
+    }
+}
+
+/// Solve (Σ AᵀA) x = Σ Aᵀ b by Gaussian elimination with partial pivoting.
+fn solve_normal_equations(
+    a: &[Vec<f32>],
+    b: &[Vec<f32>],
+    n_nodes: usize,
+    rows: usize,
+    dim: usize,
+) -> Vec<f32> {
+    let mut h = vec![0.0f64; dim * dim];
+    let mut rhs = vec![0.0f64; dim];
+    for i in 0..n_nodes {
+        for r in 0..rows {
+            let row = &a[i][r * dim..(r + 1) * dim];
+            for c1 in 0..dim {
+                rhs[c1] += row[c1] as f64 * b[i][r] as f64;
+                for c2 in 0..dim {
+                    h[c1 * dim + c2] += row[c1] as f64 * row[c2] as f64;
+                }
+            }
+        }
+    }
+    // Gaussian elimination.
+    for col in 0..dim {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..dim {
+            if h[r * dim + col].abs() > h[piv * dim + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..dim {
+                h.swap(col * dim + c, piv * dim + c);
+            }
+            rhs.swap(col, piv);
+        }
+        let diag = h[col * dim + col];
+        assert!(diag.abs() > 1e-12, "singular normal equations");
+        for r in 0..dim {
+            if r == col {
+                continue;
+            }
+            let f = h[r * dim + col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..dim {
+                h[r * dim + c] -= f * h[col * dim + c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    (0..dim).map(|c| (rhs[c] / h[c * dim + c]) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+
+    #[test]
+    fn solution_has_zero_global_gradient() {
+        let p = LinRegProblem::generate(4, 20, 8, 3);
+        let mut g = vec![0.0f32; 8];
+        let mut total = vec![0.0f32; 8];
+        for i in 0..4 {
+            p.grad(i, &p.x_star, &mut g);
+            math::axpy(&mut total, 1.0, &g);
+        }
+        assert!(math::norm2(&total) < 1e-2, "sum grad at x* = {}", math::norm2(&total));
+    }
+
+    #[test]
+    fn x_star_close_to_planted_solution() {
+        // Noise 0.01 -> recovered x* ~ planted x0.
+        let p = LinRegProblem::generate(8, 50, 30, 1);
+        // re-generate planted x0 with same stream to compare
+        let mut rng = Pcg64::new(1, 0x11e6);
+        let mut x0 = vec![0.0f32; 30];
+        rng.normal_fill(&mut x0, 1.0);
+        let rel = math::dist2(&p.x_star, &x0).sqrt() / math::norm2(&x0);
+        assert!(rel < 0.01, "rel={rel}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = LinRegProblem::generate(2, 10, 5, 7);
+        let mut rng = Pcg64::new(9, 1);
+        let mut x = vec![0.0f32; 5];
+        rng.normal_fill(&mut x, 1.0);
+        let mut g = vec![0.0f32; 5];
+        p.grad(0, &x, &mut g);
+        let eps = 1e-3f32;
+        for k in 0..5 {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let mut xm = x.clone();
+            xm[k] -= eps;
+            let fd = ((p.loss(0, &xp) - p.loss(0, &xm)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g[k]).abs() < 0.05 * (1.0 + fd.abs()), "k={k} fd={fd} g={}", g[k]);
+        }
+    }
+
+    #[test]
+    fn heterogeneity_positive() {
+        let p = LinRegProblem::generate(8, 50, 30, 1);
+        assert!(p.b_squared() > 0.0);
+    }
+
+    #[test]
+    fn relative_error_zero_at_solution() {
+        let p = LinRegProblem::generate(3, 20, 6, 5);
+        let xs = vec![p.x_star.clone(); 3];
+        assert!(p.relative_error(&xs) < 1e-12);
+    }
+}

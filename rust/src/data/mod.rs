@@ -1,0 +1,9 @@
+//! Synthetic workloads (the data substrate — DESIGN.md §2 documents the
+//! ImageNet/Cifar → synthetic substitution).
+
+pub mod corpus;
+pub mod linreg;
+pub mod synth;
+
+pub use linreg::LinRegProblem;
+pub use synth::{ClassificationData, NodeShard};

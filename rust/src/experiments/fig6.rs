@@ -1,0 +1,169 @@
+//! Figure 6: per-iteration runtime of PmSGD / DmSGD / DecentLaM for a
+//! ResNet-50-sized model at several batch sizes and two network
+//! bandwidths (10 and 25 Gbps), split into compute and communication.
+//!
+//! The testbed substitution (DESIGN.md §2): compute time uses the
+//! paper's V100 throughput (~250 images/s/GPU for ResNet-50 fwd+bwd);
+//! communication uses the α–β cost model in [`crate::comm::cost`]. The
+//! claim being reproduced is the *shape*: DmSGD and DecentLaM share the
+//! same (cheap) partial-averaging cost, PmSGD pays the all-reduce, and
+//! the gap widens as bandwidth drops — overall 1.2–1.9× speedup.
+
+use anyhow::Result;
+
+use crate::comm::{CommCost, LinkSpec};
+use crate::optim::CommPattern;
+use crate::topology::{Kind, Topology};
+use crate::util::table::{sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Servers (the paper's 8 nodes × 8 GPUs).
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Model parameters (ResNet-50: 25.5 M).
+    pub params: f64,
+    /// Per-GPU images/second for fwd+bwd (V100 ResNet-50 ≈ 250).
+    pub images_per_s_per_gpu: f64,
+    pub batches: Vec<usize>,
+    pub bandwidths_gbps: Vec<f64>,
+    pub topology: String,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 8,
+            gpus_per_node: 8,
+            params: 25.5e6,
+            images_per_s_per_gpu: 250.0,
+            batches: vec![2048, 8192, 16384, 32768],
+            bandwidths_gbps: vec![10.0, 25.0],
+            topology: "sym-exp".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub bandwidth_gbps: f64,
+    pub batch: usize,
+    pub method: String,
+    pub compute_ms: f64,
+    pub comm_ms: f64,
+    pub total_ms: f64,
+    pub speedup_vs_pmsgd: f64,
+}
+
+pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
+    let kind = Kind::parse(&opts.topology)?;
+    let topo = Topology::at_step(kind, opts.nodes, 1, 0);
+    let bytes = opts.params * 4.0; // fp32 payload per exchange
+    let mut rows = Vec::new();
+    for &bw in &opts.bandwidths_gbps {
+        let link = LinkSpec { bandwidth_gbps: bw, latency_us: 25.0 };
+        let cost = CommCost::new(link);
+        for &batch in &opts.batches {
+            let per_gpu = batch as f64 / (opts.nodes * opts.gpus_per_node) as f64;
+            let compute_s = per_gpu / opts.images_per_s_per_gpu;
+            let mut totals = std::collections::BTreeMap::new();
+            for (method, pattern) in [
+                ("pmsgd", CommPattern::AllReduce),
+                ("dmsgd", CommPattern::Neighbor { payloads: 1 }),
+                ("decentlam", CommPattern::Neighbor { payloads: 1 }),
+            ] {
+                let comm_s = cost.per_iter_comm_s(pattern, &topo, bytes);
+                let total_s = cost.per_iter_wall_s(compute_s, comm_s);
+                totals.insert(method.to_string(), (compute_s, comm_s, total_s));
+            }
+            let pmsgd_total = totals["pmsgd"].2;
+            for (method, (c, m, t)) in totals {
+                rows.push(Row {
+                    bandwidth_gbps: bw,
+                    batch,
+                    method,
+                    compute_ms: c * 1e3,
+                    comm_ms: m * 1e3,
+                    total_ms: t * 1e3,
+                    speedup_vs_pmsgd: pmsgd_total / t,
+                });
+            }
+        }
+    }
+    let mut table = Table::new(
+        "Fig. 6 — per-iteration runtime (ResNet-50-sized, 8×8 GPUs)",
+        &["bw (Gbps)", "batch", "method", "compute ms", "comm ms", "total ms", "speedup"],
+    );
+    for r in &rows {
+        table.row(vec![
+            format!("{}", r.bandwidth_gbps),
+            r.batch.to_string(),
+            r.method.clone(),
+            sig(r.compute_ms, 3),
+            sig(r.comm_ms, 3),
+            sig(r.total_ms, 3),
+            format!("{:.2}x", r.speedup_vs_pmsgd),
+        ]);
+    }
+    Ok((rows, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decentralized_speedup_in_paper_band() {
+        let (rows, _) = run(&Opts::default()).unwrap();
+        for r in rows.iter().filter(|r| r.method == "decentlam") {
+            assert!(
+                (1.0..2.5).contains(&r.speedup_vs_pmsgd),
+                "speedup {} out of band at batch {} bw {}",
+                r.speedup_vs_pmsgd,
+                r.batch,
+                r.bandwidth_gbps
+            );
+        }
+        // Gap widens as bandwidth drops (same batch).
+        let s10 = rows
+            .iter()
+            .find(|r| r.method == "decentlam" && r.bandwidth_gbps == 10.0 && r.batch == 2048)
+            .unwrap()
+            .speedup_vs_pmsgd;
+        let s25 = rows
+            .iter()
+            .find(|r| r.method == "decentlam" && r.bandwidth_gbps == 25.0 && r.batch == 2048)
+            .unwrap()
+            .speedup_vs_pmsgd;
+        assert!(s10 >= s25 * 0.99, "10Gbps speedup {s10} vs 25Gbps {s25}");
+    }
+
+    #[test]
+    fn dmsgd_and_decentlam_equal_runtime() {
+        // Same partial-averaging wire pattern -> identical modeled time.
+        let (rows, _) = run(&Opts::default()).unwrap();
+        for b in [2048usize, 32768] {
+            let t = |m: &str| {
+                rows.iter()
+                    .find(|r| r.method == m && r.batch == b && r.bandwidth_gbps == 25.0)
+                    .unwrap()
+                    .total_ms
+            };
+            assert!((t("dmsgd") - t("decentlam")).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn comm_fraction_shrinks_with_batch() {
+        // Larger batch = more compute per exchanged byte.
+        let (rows, _) = run(&Opts::default()).unwrap();
+        let frac = |b: usize| {
+            let r = rows
+                .iter()
+                .find(|r| r.method == "pmsgd" && r.batch == b && r.bandwidth_gbps == 25.0)
+                .unwrap();
+            r.comm_ms / r.total_ms
+        };
+        assert!(frac(32768) < frac(2048));
+    }
+}

@@ -1,0 +1,98 @@
+//! Experiment harness: one generator per paper table/figure
+//! (DESIGN.md §5). Every generator is a library function taking an
+//! options struct (so tests can shrink it) and returning [`crate::util::table::Table`]s
+//! in the same row/column layout the paper prints. The `decentlam`
+//! binary and `rust/benches/` wire them to the CLI.
+//!
+//! | paper result | module |
+//! |---|---|
+//! | Table 1 (Pm vs Dm, small/large batch)   | [`table1`] |
+//! | Figs. 2–3 (linreg bias curves)          | [`fig2_3`] |
+//! | Table 2 (bias order vs β, γ)            | [`table2`] |
+//! | Table 3 (9 methods × batch size)        | [`table3`] |
+//! | Table 4 (5 architectures × batch)       | [`table4`] |
+//! | Table 5 (topologies)                    | [`table5`] |
+//! | Fig. 5 (loss / acc curves)              | [`fig5`]   |
+//! | Fig. 6 (runtime breakdown)              | [`fig6`]   |
+//! | Table 6 (detection analog)              | [`table6`] |
+
+pub mod fig2_3;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::grad::{mlp, Workload};
+use crate::util::config::{Config, LrSchedule};
+
+/// Shared protocol: the paper-§7.1-style config for a given total batch
+/// (warmup + step decay for small batch, warmup + cosine for large).
+pub fn protocol_config(
+    optimizer: &str,
+    total_batch: usize,
+    steps: usize,
+    nodes: usize,
+) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = nodes;
+    cfg.steps = steps;
+    cfg.total_batch = total_batch;
+    cfg.micro_batch = 64;
+    cfg.lr = 0.05;
+    cfg.lr_ref_batch = 256;
+    cfg.linear_scaling = true;
+    let large = total_batch > 1024;
+    cfg.schedule = if large {
+        LrSchedule::WarmupCosine { warmup_steps: steps / 6, total_steps: steps }
+    } else {
+        LrSchedule::WarmupStep {
+            warmup_steps: (steps / 20).max(1),
+            milestones: vec![steps / 3, 2 * steps / 3],
+        }
+    };
+    cfg
+}
+
+/// Shared synthetic "ImageNet-like" heterogeneous dataset (DESIGN.md §2).
+pub fn synth_imagenet(nodes: usize, seed: u64) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 2048,
+        eval_samples: 2048,
+        // Strong heterogeneity: the regime where the paper's large-batch
+        // inconsistency-bias separation is visible (DESIGN.md §2).
+        dirichlet_alpha: 0.1,
+        margin: 2.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Milder "Cifar-like" dataset (less heterogeneity, easier task).
+pub fn synth_cifar(nodes: usize, seed: u64) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 1024,
+        eval_samples: 2048,
+        dirichlet_alpha: 1.0,
+        margin: 2.6,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Native-MLP workload of the named architecture over a dataset.
+pub fn mlp_workload_named(
+    arch: &str,
+    data: ClassificationData,
+    micro_batch: usize,
+    seed: u64,
+) -> anyhow::Result<Workload> {
+    Ok(mlp::workload(mlp::MlpArch::family(arch)?, data, micro_batch, seed))
+}

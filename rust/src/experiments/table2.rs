@@ -1,0 +1,172 @@
+//! Table 2: empirical verification of the inconsistency-bias orders.
+//!
+//! The paper's Table 2 is theoretical; we verify it empirically on the
+//! full-batch linear-regression workload by measuring each method's
+//! limiting bias while sweeping γ (expect slope 2 in log–log for all
+//! methods) and 1/(1−β) (expect slope ≈2 for DmSGD/AWC, ≈0 for
+//! DecentLaM/DSGD/D², matching O(γ²b²/(1−β)^p)).
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::data::LinRegProblem;
+use crate::grad::linreg;
+use crate::util::config::{Config, LrSchedule};
+use crate::util::math::linfit_slope;
+use crate::util::table::{sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub nodes: usize,
+    pub rows: usize,
+    pub dim: usize,
+    pub steps: usize,
+    pub topology: String,
+    pub seed: u64,
+    pub methods: Vec<String>,
+    pub betas: Vec<f64>,
+    pub gammas: Vec<f64>,
+    /// β used during the γ sweep / γ used during the β sweep.
+    pub base_beta: f64,
+    pub base_gamma: f64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 8,
+            rows: 50,
+            dim: 30,
+            steps: 25_000,
+            topology: "ring".into(),
+            seed: 1,
+            methods: ["dsgd", "dmsgd", "decentlam", "awc-dmsgd", "da-dmsgd", "d2-dmsgd"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            // The orders in Table 2 are asymptotic (γ → 0); stay in the
+            // small-γ regime or higher-order terms flatten the fit.
+            betas: vec![0.3, 0.5, 0.8, 0.9],
+            gammas: vec![0.00025, 0.0005, 0.001],
+            base_beta: 0.8,
+            base_gamma: 0.0005,
+        }
+    }
+}
+
+fn limiting_bias(
+    problem: &LinRegProblem,
+    opts: &Opts,
+    method: &str,
+    gamma: f64,
+    beta: f64,
+) -> Result<f64> {
+    let mut cfg = Config::default();
+    cfg.nodes = opts.nodes;
+    cfg.optimizer = method.into();
+    cfg.topology = opts.topology.clone();
+    cfg.lr = gamma;
+    cfg.linear_scaling = false;
+    cfg.momentum = beta;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.steps = opts.steps;
+    cfg.seed = opts.seed;
+    cfg.threads = 1;
+    let mut trainer = Trainer::new(cfg, linreg::workload(problem.clone()))?;
+    for k in 0..opts.steps {
+        trainer.step(k);
+    }
+    let xs: Vec<Vec<f32>> = trainer.states.iter().map(|s| s.x.clone()).collect();
+    Ok(problem.relative_error(&xs).max(1e-300))
+}
+
+/// Measured bias-scaling exponents per method.
+#[derive(Debug, Clone)]
+pub struct Exponents {
+    pub method: String,
+    /// Fitted d log(bias) / d log(gamma).
+    pub gamma_exp: f64,
+    /// Fitted d log(bias) / d log(1/(1−β)).
+    pub beta_exp: f64,
+    /// Largest bias observed across the sweeps; when this sits at the
+    /// f32 noise floor the exponents are meaningless (D² removes the
+    /// bias entirely, so there is nothing to fit).
+    pub max_bias: f64,
+}
+
+/// Below this, limiting bias is indistinguishable from f32 rounding.
+pub const NOISE_FLOOR: f64 = 1e-11;
+
+pub fn run(opts: &Opts) -> Result<(Vec<Exponents>, Table)> {
+    let problem = LinRegProblem::generate(opts.nodes, opts.rows, opts.dim, opts.seed);
+    let mut results = Vec::new();
+    for method in &opts.methods {
+        // γ sweep at fixed β.
+        let lx: Vec<f64> = opts.gammas.iter().map(|g| g.ln()).collect();
+        let ly: Vec<f64> = opts
+            .gammas
+            .iter()
+            .map(|&g| limiting_bias(&problem, opts, method, g, opts.base_beta).map(f64::ln))
+            .collect::<Result<_>>()?;
+        let gamma_exp = linfit_slope(&lx, &ly);
+        // β sweep at fixed γ (x-axis log 1/(1−β)).
+        let bx: Vec<f64> = opts.betas.iter().map(|b| (1.0 / (1.0 - b)).ln()).collect();
+        let by: Vec<f64> = opts
+            .betas
+            .iter()
+            .map(|&b| limiting_bias(&problem, opts, method, opts.base_gamma, b).map(f64::ln))
+            .collect::<Result<_>>()?;
+        let beta_exp = linfit_slope(&bx, &by);
+        let max_bias = ly
+            .iter()
+            .chain(&by)
+            .map(|l| l.exp())
+            .fold(0.0f64, f64::max);
+        results.push(Exponents { method: method.clone(), gamma_exp, beta_exp, max_bias });
+    }
+    let mut table = Table::new(
+        "Table 2 — measured inconsistency-bias exponents (bias ∝ γ^a · (1/(1−β))^b)",
+        &["method", "γ-exponent (theory 2)", "(1−β)-exponent", "theory (1−β)-exp"],
+    );
+    for e in &results {
+        let theory = match e.method.as_str() {
+            "dmsgd" | "awc-dmsgd" | "da-dmsgd" => "2",
+            "dsgd" | "decentlam" => "0",
+            "d2-dmsgd" => "0 (removes bias)",
+            _ => "?",
+        };
+        let (ge, be) = if e.max_bias < NOISE_FLOOR {
+            ("— (noise floor)".to_string(), "— (noise floor)".to_string())
+        } else {
+            (sig(e.gamma_exp, 3), sig(e.beta_exp, 3))
+        };
+        table.row(vec![e.method.clone(), ge, be, theory.into()]);
+    }
+    Ok((results, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dmsgd_beta_exponent_two_decentlam_zero() {
+        let opts = Opts {
+            rows: 20,
+            dim: 10,
+            steps: 20_000,
+            methods: vec!["dmsgd".into(), "decentlam".into()],
+            betas: vec![0.3, 0.8, 0.9],
+            gammas: vec![0.00025, 0.0005, 0.001],
+            ..Default::default()
+        };
+        let (res, _) = run(&opts).unwrap();
+        let get = |m: &str| res.iter().find(|e| e.method == m).unwrap();
+        let dm = get("dmsgd");
+        let dl = get("decentlam");
+        assert!(dm.beta_exp > 1.2, "DmSGD β-exponent ~2, got {}", dm.beta_exp);
+        assert!(dl.beta_exp.abs() < 0.6, "DecentLaM β-independent, got {}", dl.beta_exp);
+        assert!((dm.gamma_exp - 2.0).abs() < 0.7, "γ² scaling, got {}", dm.gamma_exp);
+        assert!((dl.gamma_exp - 2.0).abs() < 0.7, "γ² scaling, got {}", dl.gamma_exp);
+    }
+}

@@ -1,0 +1,105 @@
+//! Table 4: the optimizer comparison across the five-model architecture
+//! family (ResNet-18/34/50, MobileNet-v2, EfficientNet stand-ins of
+//! increasing capacity) × batch sizes.
+//!
+//! Expected shape: the optimizer ranking is consistent per architecture;
+//! at the largest batch either PmSGD+LARS or DecentLaM takes each
+//! column, with DecentLaM winning among decentralized methods.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::optim;
+use crate::util::table::{pct, Table};
+
+use super::{mlp_workload_named, protocol_config, synth_imagenet};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub nodes: usize,
+    pub steps: usize,
+    pub archs: Vec<String>,
+    pub batches: Vec<usize>,
+    pub methods: Vec<String>,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 8,
+            steps: 250,
+            archs: ["mlp-xs", "mlp-s", "mlp-m", "mlp-l", "mlp-xl"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            batches: vec![256, 2048],
+            methods: optim::ALL.iter().map(|s| s.to_string()).collect(),
+            seed: 1,
+        }
+    }
+}
+
+pub type Cell = (String, String, usize, f64); // (arch, method, batch, acc)
+
+pub fn run(opts: &Opts) -> Result<(Vec<Cell>, Table)> {
+    let mut cells: Vec<Cell> = Vec::new();
+    for arch in &opts.archs {
+        for method in &opts.methods {
+            for &batch in &opts.batches {
+                let data = synth_imagenet(opts.nodes, opts.seed);
+                let mut cfg = protocol_config(method, batch, opts.steps, opts.nodes);
+                cfg.seed = opts.seed;
+                let wl = mlp_workload_named(arch, data, cfg.micro_batch, opts.seed)?;
+                let mut t = Trainer::new(cfg, wl)?;
+                let report = t.run();
+                cells.push((arch.clone(), method.clone(), batch, report.final_accuracy));
+            }
+        }
+    }
+    let mut headers: Vec<String> = vec!["method".into()];
+    for arch in &opts.archs {
+        for &b in &opts.batches {
+            headers.push(format!("{arch}/{b}"));
+        }
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table =
+        Table::new("Table 4 — top-1 accuracy per architecture × batch", &hrefs);
+    for method in &opts.methods {
+        let mut row = vec![method.clone()];
+        for arch in &opts.archs {
+            for &b in &opts.batches {
+                let acc = cells
+                    .iter()
+                    .find(|(a, m, bb, _)| a == arch && m == method && *bb == b)
+                    .map(|c| c.3)
+                    .unwrap_or(f64::NAN);
+                row.push(pct(acc));
+            }
+        }
+        table.row(row);
+    }
+    Ok((cells, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrunk_table4_two_archs() {
+        let opts = Opts {
+            nodes: 4,
+            steps: 50,
+            archs: vec!["mlp-xs".into(), "mlp-s".into()],
+            batches: vec![256],
+            methods: vec!["decentlam".into(), "dmsgd".into()],
+            ..Default::default()
+        };
+        let (cells, table) = run(&opts).unwrap();
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.3 > 0.2), "{cells:?}");
+        assert!(table.render().contains("mlp-s/256"));
+    }
+}

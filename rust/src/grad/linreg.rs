@@ -1,0 +1,84 @@
+//! NodeGrad adapters over the exact linear-regression problem
+//! (full-batch, deterministic — the Figs. 2–3 / Table 2 workload).
+
+use std::sync::Arc;
+
+use crate::data::LinRegProblem;
+
+use super::{Evaluator, NodeGrad, Workload};
+
+/// Full-batch exact gradient for one node.
+pub struct LinRegNodeGrad {
+    problem: Arc<LinRegProblem>,
+    rank: usize,
+}
+
+impl NodeGrad for LinRegNodeGrad {
+    fn grad_accum(&mut self, x: &[f32], _accum: usize, out: &mut [f32]) -> f64 {
+        // Full batch: accumulation is a no-op (zero gradient noise — the
+        // extreme the paper uses to isolate inconsistency bias).
+        self.problem.grad(self.rank, x, out);
+        self.problem.loss(self.rank, x)
+    }
+}
+
+/// "Accuracy" = negative relative error to x*, so higher is better.
+pub struct LinRegEvaluator {
+    problem: Arc<LinRegProblem>,
+}
+
+impl Evaluator for LinRegEvaluator {
+    fn accuracy(&mut self, x: &[f32]) -> f64 {
+        let xs = vec![x.to_vec()];
+        -self.problem.relative_error(&xs)
+    }
+}
+
+/// Build the linear-regression workload (all nodes share the Arc'd
+/// problem; gradients are exact).
+pub fn workload(problem: LinRegProblem) -> Workload {
+    let problem = Arc::new(problem);
+    let dim = problem.dim;
+    let nodes: Vec<Box<dyn NodeGrad>> = (0..problem.n_nodes)
+        .map(|rank| {
+            Box::new(LinRegNodeGrad { problem: Arc::clone(&problem), rank })
+                as Box<dyn NodeGrad>
+        })
+        .collect();
+    Workload {
+        name: "linreg".into(),
+        dim,
+        layer_ranges: vec![(0, dim)],
+        init: vec![0.0; dim],
+        nodes,
+        eval: Box::new(LinRegEvaluator { problem }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes() {
+        let p = LinRegProblem::generate(4, 10, 6, 1);
+        let mut wl = workload(p);
+        assert_eq!(wl.dim, 6);
+        assert_eq!(wl.nodes.len(), 4);
+        let mut g = vec![0.0f32; 6];
+        let loss = wl.nodes[0].grad_accum(&vec![0.0; 6], 1, &mut g);
+        assert!(loss > 0.0);
+        assert!(crate::util::math::norm2(&g) > 0.0);
+    }
+
+    #[test]
+    fn evaluator_peaks_at_solution() {
+        let p = LinRegProblem::generate(4, 20, 6, 2);
+        let xstar = p.x_star.clone();
+        let mut wl = workload(p);
+        let at_solution = wl.eval.accuracy(&xstar);
+        let away = wl.eval.accuracy(&vec![0.0; 6]);
+        assert!(at_solution > away);
+        assert!(at_solution > -1e-12);
+    }
+}

@@ -1,0 +1,470 @@
+//! Native flat-parameter MLP gradient engine.
+//!
+//! Bit-for-bit the same parameterization as `python/compile/model.py`
+//! (`MlpConfig`): theta packs `[W1 (i×o row-major), b1, W2, b2, ...]`;
+//! hidden activations are ReLU, loss is mean softmax cross-entropy.
+//! Used as the fast path for the large table sweeps; its gradients are
+//! cross-checked against the PJRT artifact in `rust/tests/integration.rs`
+//! and against finite differences here.
+
+use crate::data::synth::{ClassificationData, NodeShard};
+use crate::util::rng::Pcg64;
+
+use super::{Evaluator, NodeGrad, Workload};
+
+/// Architecture description matching `MlpConfig` in model.py.
+#[derive(Debug, Clone)]
+pub struct MlpArch {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl MlpArch {
+    pub fn new(input_dim: usize, hidden: &[usize], num_classes: usize) -> MlpArch {
+        MlpArch { input_dim, hidden: hidden.to_vec(), num_classes }
+    }
+
+    /// The Table 4 model family (DESIGN.md §2).
+    pub fn family(name: &str) -> anyhow::Result<MlpArch> {
+        Ok(match name {
+            "mlp-xs" => MlpArch::new(64, &[64], 10),
+            "mlp-s" | "native-mlp" => MlpArch::new(64, &[128, 64], 10),
+            "mlp-m" => MlpArch::new(64, &[256, 128], 10),
+            "mlp-l" => MlpArch::new(64, &[512, 256, 128], 10),
+            "mlp-xl" => MlpArch::new(64, &[1024, 512, 256], 10),
+            "native-logreg" => MlpArch::new(64, &[], 10),
+            other => anyhow::bail!("unknown MLP architecture `{other}`"),
+        })
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.input_dim];
+        d.extend_from_slice(&self.hidden);
+        d.push(self.num_classes);
+        d
+    }
+
+    pub fn dim(&self) -> usize {
+        let d = self.dims();
+        d.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Flat offsets of every tensor (W then b per layer), matching
+    /// `ParamSpec::layer_ranges` in model.py.
+    pub fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        let d = self.dims();
+        let mut out = Vec::new();
+        let mut off = 0;
+        for w in d.windows(2) {
+            out.push((off, off + w[0] * w[1]));
+            off += w[0] * w[1];
+            out.push((off, off + w[1]));
+            off += w[1];
+        }
+        out
+    }
+
+    /// He-init, mirroring `MlpConfig.init` (different RNG, same law).
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0x1417);
+        let d = self.dims();
+        let mut theta = Vec::with_capacity(self.dim());
+        for w in d.windows(2) {
+            let (i, o) = (w[0], w[1]);
+            let sigma = (2.0 / i as f64).sqrt() as f32;
+            let mut wbuf = vec![0.0f32; i * o];
+            rng.normal_fill(&mut wbuf, sigma);
+            theta.extend_from_slice(&wbuf);
+            theta.extend(std::iter::repeat(0.0f32).take(o));
+        }
+        theta
+    }
+}
+
+/// Scratch for one forward/backward pass at a fixed micro-batch.
+struct Pass {
+    /// Activations per layer (incl. input copy), each B × dim.
+    acts: Vec<Vec<f32>>,
+    /// Pre-activations per layer.
+    zs: Vec<Vec<f32>>,
+    /// Gradient buffer w.r.t. current layer output.
+    delta: Vec<f32>,
+    delta_next: Vec<f32>,
+}
+
+/// Forward + backward over one micro-batch; accumulates grads into
+/// `gout` (+=) and returns the batch loss. Factored out so both the
+/// shard engine and tests use identical code.
+#[allow(clippy::too_many_arguments)]
+fn fwd_bwd(
+    arch: &MlpArch,
+    theta: &[f32],
+    xb: &[f32],
+    yb: &[i32],
+    pass: &mut Pass,
+    gout: &mut [f32],
+) -> f64 {
+    let dims = arch.dims();
+    let layers = dims.len() - 1;
+    let b = yb.len();
+    // ---- forward ----
+    pass.acts[0][..b * dims[0]].copy_from_slice(xb);
+    let mut off = 0usize;
+    let mut offsets = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let (i, o) = (dims[l], dims[l + 1]);
+        offsets.push(off);
+        let w = &theta[off..off + i * o];
+        let bias = &theta[off + i * o..off + i * o + o];
+        off += i * o + o;
+        let src = &pass.acts[l];
+        let z = &mut pass.zs[l];
+        // z = src @ W + b
+        for r in 0..b {
+            let zr = &mut z[r * o..(r + 1) * o];
+            zr.copy_from_slice(bias);
+            let xr = &src[r * i..(r + 1) * i];
+            for (k, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &w[k * o..(k + 1) * o];
+                    for (zv, &wv) in zr.iter_mut().zip(wrow) {
+                        *zv += xv * wv;
+                    }
+                }
+            }
+        }
+        let act = &mut pass.acts[l + 1];
+        if l + 1 < layers {
+            for (av, &zv) in act[..b * o].iter_mut().zip(&z[..b * o]) {
+                *av = zv.max(0.0);
+            }
+        } else {
+            act[..b * o].copy_from_slice(&z[..b * o]);
+        }
+    }
+    // ---- loss + dlogits ----
+    let c = dims[layers];
+    let logits = &pass.acts[layers];
+    let mut loss = 0.0f64;
+    let delta = &mut pass.delta;
+    for r in 0..b {
+        let row = &logits[r * c..(r + 1) * c];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += ((v - maxv) as f64).exp();
+        }
+        let y = yb[r] as usize;
+        loss += -((row[y] - maxv) as f64 - denom.ln());
+        let dr = &mut delta[r * c..(r + 1) * c];
+        for (k, dv) in dr.iter_mut().enumerate() {
+            let p = (((row[k] - maxv) as f64).exp() / denom) as f32;
+            *dv = (p - if k == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    loss /= b as f64;
+    // ---- backward ----
+    for l in (0..layers).rev() {
+        let (i, o) = (dims[l], dims[l + 1]);
+        let off = offsets[l];
+        let w = &theta[off..off + i * o];
+        let src = &pass.acts[l];
+        // dW += src^T delta ; db += sum delta
+        {
+            let gw = &mut gout[off..off + i * o];
+            for r in 0..b {
+                let dr = &pass.delta[r * o..(r + 1) * o];
+                let xr = &src[r * i..(r + 1) * i];
+                for (k, &xv) in xr.iter().enumerate() {
+                    if xv != 0.0 {
+                        let gwrow = &mut gw[k * o..(k + 1) * o];
+                        for (gv, &dv) in gwrow.iter_mut().zip(dr) {
+                            *gv += xv * dv;
+                        }
+                    }
+                }
+            }
+        }
+        {
+            let gb = &mut gout[off + i * o..off + i * o + o];
+            for r in 0..b {
+                let dr = &pass.delta[r * o..(r + 1) * o];
+                for (gv, &dv) in gb.iter_mut().zip(dr) {
+                    *gv += dv;
+                }
+            }
+        }
+        if l > 0 {
+            // delta_next = delta @ W^T, masked by relu'(z_{l-1})
+            let z_prev = &pass.zs[l - 1];
+            let dn = &mut pass.delta_next;
+            for r in 0..b {
+                let dr = &pass.delta[r * o..(r + 1) * o];
+                let dnr = &mut dn[r * i..(r + 1) * i];
+                for (k, dnv) in dnr.iter_mut().enumerate() {
+                    let wrow = &w[k * o..(k + 1) * o];
+                    let mut acc = 0.0f32;
+                    for (&dv, &wv) in dr.iter().zip(wrow) {
+                        acc += dv * wv;
+                    }
+                    *dnv = if z_prev[r * i + k] > 0.0 { acc } else { 0.0 };
+                }
+            }
+            std::mem::swap(&mut pass.delta, &mut pass.delta_next);
+        }
+    }
+    loss
+}
+
+fn new_pass(arch: &MlpArch, b: usize) -> Pass {
+    let dims = arch.dims();
+    let maxd = *dims.iter().max().unwrap();
+    Pass {
+        acts: dims.iter().map(|&d| vec![0.0f32; b * d]).collect(),
+        zs: dims[1..].iter().map(|&d| vec![0.0f32; b * d]).collect(),
+        delta: vec![0.0f32; b * maxd],
+        delta_next: vec![0.0f32; b * maxd],
+    }
+}
+
+/// Per-node engine: owns the node's shard + scratch buffers.
+pub struct MlpNodeGrad {
+    arch: MlpArch,
+    shard: NodeShard,
+    _micro_batch: usize,
+    pass: Pass,
+    bx: Vec<f32>,
+    by: Vec<i32>,
+}
+
+impl MlpNodeGrad {
+    pub fn new(arch: MlpArch, shard: NodeShard, micro_batch: usize) -> MlpNodeGrad {
+        let pass = new_pass(&arch, micro_batch);
+        let bx = vec![0.0f32; micro_batch * arch.input_dim];
+        let by = vec![0i32; micro_batch];
+        MlpNodeGrad { arch, shard, _micro_batch: micro_batch, pass, bx, by }
+    }
+}
+
+impl NodeGrad for MlpNodeGrad {
+    fn grad_accum(&mut self, x: &[f32], accum: usize, out: &mut [f32]) -> f64 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut loss = 0.0;
+        for _ in 0..accum {
+            self.shard.next_batch(&mut self.bx, &mut self.by);
+            loss += fwd_bwd(&self.arch, x, &self.bx, &self.by, &mut self.pass, out);
+        }
+        let inv = 1.0 / accum as f32;
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+        loss / accum as f64
+    }
+}
+
+/// Evaluator over the held-out split.
+pub struct MlpEvaluator {
+    arch: MlpArch,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    pass: Pass,
+    batch: usize,
+}
+
+impl MlpEvaluator {
+    pub fn new(arch: MlpArch, data: &ClassificationData) -> MlpEvaluator {
+        let batch = 256.min(data.eval_n.max(1));
+        let pass = new_pass(&arch, batch);
+        MlpEvaluator { arch, x: data.eval_x.clone(), y: data.eval_y.clone(), pass, batch }
+    }
+
+    fn logits_argmax(&mut self, theta: &[f32], xb: &[f32], b: usize) -> Vec<usize> {
+        // Forward only (reuse fwd_bwd machinery would also do backward; we
+        // inline a forward pass over `acts`).
+        let dims = self.arch.dims();
+        let layers = dims.len() - 1;
+        self.pass.acts[0][..b * dims[0]].copy_from_slice(xb);
+        let mut off = 0usize;
+        for l in 0..layers {
+            let (i, o) = (dims[l], dims[l + 1]);
+            let w = &theta[off..off + i * o];
+            let bias = &theta[off + i * o..off + i * o + o];
+            off += i * o + o;
+            let (a, rest) = self.pass.acts.split_at_mut(l + 1);
+            let src = &a[l];
+            let dst = &mut rest[0];
+            for r in 0..b {
+                let zr = &mut dst[r * o..(r + 1) * o];
+                zr.copy_from_slice(bias);
+                let xr = &src[r * i..(r + 1) * i];
+                for (k, &xv) in xr.iter().enumerate() {
+                    if xv != 0.0 {
+                        let wrow = &w[k * o..(k + 1) * o];
+                        for (zv, &wv) in zr.iter_mut().zip(wrow) {
+                            *zv += xv * wv;
+                        }
+                    }
+                }
+                if l + 1 < layers {
+                    for zv in zr.iter_mut() {
+                        *zv = zv.max(0.0);
+                    }
+                }
+            }
+        }
+        let c = dims[layers];
+        let logits = &self.pass.acts[layers];
+        (0..b)
+            .map(|r| {
+                let row = &logits[r * c..(r + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+}
+
+impl Evaluator for MlpEvaluator {
+    fn accuracy(&mut self, theta: &[f32]) -> f64 {
+        let d = self.arch.input_dim;
+        let n = self.y.len();
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done < n {
+            let b = self.batch.min(n - done);
+            let xb: Vec<f32> = self.x[done * d..(done + b) * d].to_vec();
+            let preds = self.logits_argmax(theta, &xb, b);
+            for (k, &p) in preds.iter().enumerate() {
+                if p == self.y[done + k] as usize {
+                    correct += 1;
+                }
+            }
+            done += b;
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Build a complete native-MLP workload from synthetic data.
+pub fn workload(
+    arch: MlpArch,
+    data: ClassificationData,
+    micro_batch: usize,
+    seed: u64,
+) -> Workload {
+    let dim = arch.dim();
+    let ranges = arch.layer_ranges();
+    let init = arch.init(seed);
+    let evaluator = MlpEvaluator::new(arch.clone(), &data);
+    let nodes: Vec<Box<dyn NodeGrad>> = data
+        .shards
+        .into_iter()
+        .map(|sh| Box::new(MlpNodeGrad::new(arch.clone(), sh, micro_batch)) as Box<dyn NodeGrad>)
+        .collect();
+    Workload {
+        name: "native-mlp".into(),
+        dim,
+        layer_ranges: ranges,
+        init,
+        nodes,
+        eval: Box::new(evaluator),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn dim_and_ranges_match_python_layout() {
+        // mlp-s: 64 -> 128 -> 64 -> 10 (same arithmetic as model.py smoke)
+        let arch = MlpArch::family("mlp-s").unwrap();
+        assert_eq!(arch.dim(), 17226);
+        let r = arch.layer_ranges();
+        assert_eq!(r[0], (0, 64 * 128));
+        assert_eq!(r.last().unwrap().1, 17226);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let arch = MlpArch::new(4, &[5], 3);
+        let theta = arch.init(3);
+        let xb: Vec<f32> = (0..8 * 4).map(|i| ((i * 37 % 11) as f32 - 5.0) / 5.0).collect();
+        let yb: Vec<i32> = (0..8).map(|i| (i % 3) as i32).collect();
+        let mut pass = new_pass(&arch, 8);
+        let mut g = vec![0.0f32; arch.dim()];
+        let loss0 = fwd_bwd(&arch, &theta, &xb, &yb, &mut pass, &mut g);
+        assert!(loss0 > 0.0);
+        let eps = 1e-3f32;
+        for k in [0usize, 7, 20, arch.dim() - 1, arch.dim() / 2] {
+            let mut tp = theta.clone();
+            tp[k] += eps;
+            let mut tm = theta.clone();
+            tm[k] -= eps;
+            let mut scratch = vec![0.0f32; arch.dim()];
+            let lp = fwd_bwd(&arch, &tp, &xb, &yb, &mut pass, &mut scratch);
+            scratch.iter_mut().for_each(|v| *v = 0.0);
+            let lm = fwd_bwd(&arch, &tm, &xb, &yb, &mut pass, &mut scratch);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[k]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "k={k}: fd={fd} analytic={}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_beats_chance() {
+        let spec = SynthSpec {
+            samples_per_node: 512,
+            eval_samples: 512,
+            nodes: 1,
+            dirichlet_alpha: 100.0,
+            ..Default::default()
+        };
+        let data = ClassificationData::generate(&spec);
+        let arch = MlpArch::family("mlp-xs").unwrap();
+        let mut wl = workload(arch, data, 64, 1);
+        let mut x = wl.init.clone();
+        let mut g = vec![0.0f32; wl.dim];
+        let l0 = wl.nodes[0].grad_accum(&x, 1, &mut g);
+        for _ in 0..150 {
+            wl.nodes[0].grad_accum(&x, 1, &mut g);
+            crate::util::math::axpy(&mut x, -0.1, &g);
+        }
+        let l1 = wl.nodes[0].grad_accum(&x, 1, &mut g);
+        assert!(l1 < 0.7 * l0, "loss {l0} -> {l1}");
+        let acc = wl.eval.accuracy(&x);
+        assert!(acc > 0.5, "accuracy {acc} should beat chance (0.1)");
+    }
+
+    #[test]
+    fn accum_averages_micro_batches() {
+        let spec = SynthSpec {
+            samples_per_node: 256,
+            eval_samples: 16,
+            nodes: 1,
+            ..Default::default()
+        };
+        let data = ClassificationData::generate(&spec);
+        let arch = MlpArch::family("mlp-xs").unwrap();
+        let mut wl = workload(arch, data, 32, 1);
+        let x = wl.init.clone();
+        let mut g1 = vec![0.0f32; wl.dim];
+        let mut g8 = vec![0.0f32; wl.dim];
+        wl.nodes[0].grad_accum(&x, 1, &mut g1);
+        wl.nodes[0].grad_accum(&x, 8, &mut g8);
+        // More accumulation = lower variance: ||g8|| should not exceed
+        // ||g1|| wildly; both nonzero.
+        let n1 = crate::util::math::norm2(&g1);
+        let n8 = crate::util::math::norm2(&g8);
+        assert!(n1 > 0.0 && n8 > 0.0);
+        assert!(n8 < 3.0 * n1);
+    }
+}

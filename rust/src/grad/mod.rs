@@ -1,0 +1,53 @@
+//! Gradient engines: where the loss/gradient of each workload comes from.
+//!
+//! Three families:
+//! * [`linreg`] — exact closed-form least-squares gradients (Figs. 2–3,
+//!   Table 2; deterministic, full batch).
+//! * [`mlp`] — a native Rust implementation of the same flat-parameter
+//!   MLP as `python/compile/model.py` (fast path for the big table
+//!   sweeps; verified against the PJRT artifacts in integration tests).
+//! * [`pjrt`] — the production path: gradients come from the AOT-lowered
+//!   JAX/Pallas HLO artifacts executed through the PJRT CPU client.
+//!
+//! A [`Workload`] bundles per-node gradient providers with an evaluator
+//! and the initial parameters; the coordinator is engine-agnostic.
+
+pub mod linreg;
+pub mod mlp;
+pub mod pjrt;
+
+/// Per-node gradient provider. `grad_accum` computes the mean gradient
+/// over `accum` micro-batches at `x` (the large-batch engine) and
+/// returns the mean loss.
+pub trait NodeGrad: Send {
+    fn grad_accum(&mut self, x: &[f32], accum: usize, out: &mut [f32]) -> f64;
+}
+
+/// Held-out evaluation on the current (average) model.
+pub trait Evaluator: Send {
+    /// Top-1 accuracy in [0,1] (or task metric).
+    fn accuracy(&mut self, x: &[f32]) -> f64;
+    /// Mean eval loss, if the engine supports it.
+    fn loss(&mut self, _x: &[f32]) -> Option<f64> {
+        None
+    }
+}
+
+/// A complete training workload for `nodes.len()` nodes.
+pub struct Workload {
+    pub name: String,
+    pub dim: usize,
+    pub layer_ranges: Vec<(usize, usize)>,
+    pub init: Vec<f32>,
+    pub nodes: Vec<Box<dyn NodeGrad>>,
+    pub eval: Box<dyn Evaluator>,
+}
+
+/// No-op evaluator for workloads without a metric (e.g. pure bias runs).
+pub struct NoEval;
+
+impl Evaluator for NoEval {
+    fn accuracy(&mut self, _x: &[f32]) -> f64 {
+        f64::NAN
+    }
+}

@@ -1,0 +1,269 @@
+//! PJRT-backed gradient engines: the production path where gradients
+//! come from the AOT-lowered JAX/Pallas artifacts (Layer 2 calling the
+//! Layer-1 `fused_linear` kernel) executed through the runtime thread.
+
+use anyhow::Result;
+
+use crate::data::corpus::{Corpus, CorpusShard};
+use crate::data::synth::{ClassificationData, NodeShard};
+use crate::runtime::{Manifest, ModelInfo, RuntimeHandle, Tensor};
+
+use super::{Evaluator, NodeGrad, Workload};
+
+/// MLP classifier node: gradients via `<model>_grad` artifact.
+pub struct PjrtMlpNodeGrad {
+    rt: RuntimeHandle,
+    artifact: String,
+    info: ModelInfo,
+    shard: NodeShard,
+    bx: Vec<f32>,
+    by: Vec<i32>,
+}
+
+impl NodeGrad for PjrtMlpNodeGrad {
+    fn grad_accum(&mut self, x: &[f32], accum: usize, out: &mut [f32]) -> f64 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let b = self.info.micro_batch;
+        let d = self.info.input_dim;
+        let mut loss = 0.0;
+        for _ in 0..accum {
+            self.shard.next_batch(&mut self.bx, &mut self.by);
+            let outputs = self
+                .rt
+                .exec(
+                    &self.artifact,
+                    vec![
+                        Tensor::f32(x.to_vec(), &[self.info.dim as i64]),
+                        Tensor::f32(self.bx.clone(), &[b as i64, d as i64]),
+                        Tensor::i32(self.by.clone(), &[b as i64]),
+                    ],
+                )
+                .expect("pjrt grad exec failed");
+            loss += outputs[0][0] as f64;
+            crate::util::math::axpy(out, 1.0, &outputs[1]);
+        }
+        let inv = 1.0 / accum as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        loss / accum as f64
+    }
+}
+
+/// Evaluator via the `<model>_logits` artifact.
+pub struct PjrtMlpEvaluator {
+    rt: RuntimeHandle,
+    artifact: String,
+    info: ModelInfo,
+    eval_x: Vec<f32>,
+    eval_y: Vec<i32>,
+}
+
+impl Evaluator for PjrtMlpEvaluator {
+    fn accuracy(&mut self, theta: &[f32]) -> f64 {
+        let b = self.info.eval_batch;
+        let d = self.info.input_dim;
+        let c = self.info.num_classes;
+        let n = self.eval_y.len();
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done < n {
+            // Static shapes: pad the tail batch with the first rows.
+            let mut xb = vec![0.0f32; b * d];
+            let take = b.min(n - done);
+            xb[..take * d].copy_from_slice(&self.eval_x[done * d..(done + take) * d]);
+            let out = self
+                .rt
+                .exec(
+                    &self.artifact,
+                    vec![
+                        Tensor::f32(theta.to_vec(), &[self.info.dim as i64]),
+                        Tensor::f32(xb, &[b as i64, d as i64]),
+                    ],
+                )
+                .expect("pjrt eval exec failed");
+            let logits = &out[0];
+            for r in 0..take {
+                let row = &logits[r * c..(r + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0;
+                if pred == self.eval_y[done + r] as usize {
+                    correct += 1;
+                }
+            }
+            done += take;
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Build a PJRT MLP workload: loads `<model>_grad` + `<model>_logits`,
+/// initial params from the manifest, shards from the synthetic dataset.
+pub fn mlp_workload(
+    rt: &RuntimeHandle,
+    manifest: &Manifest,
+    model: &str,
+    data: ClassificationData,
+) -> Result<Workload> {
+    let info = manifest.model(model)?;
+    let grad_art = format!("{model}_grad");
+    let logits_art = format!("{model}_logits");
+    rt.load_artifact(manifest, &grad_art)?;
+    rt.load_artifact(manifest, &logits_art)?;
+    let init = manifest.load_init(&info)?;
+    let b = info.micro_batch;
+    let d = info.input_dim;
+    let nodes: Vec<Box<dyn NodeGrad>> = data
+        .shards
+        .into_iter()
+        .map(|shard| {
+            Box::new(PjrtMlpNodeGrad {
+                rt: rt.clone(),
+                artifact: grad_art.clone(),
+                info: info.clone(),
+                shard,
+                bx: vec![0.0; b * d],
+                by: vec![0; b],
+            }) as Box<dyn NodeGrad>
+        })
+        .collect();
+    let eval = PjrtMlpEvaluator {
+        rt: rt.clone(),
+        artifact: logits_art,
+        info: info.clone(),
+        eval_x: data.eval_x,
+        eval_y: data.eval_y,
+    };
+    Ok(Workload {
+        name: model.to_string(),
+        dim: info.dim,
+        layer_ranges: info.layer_ranges.clone(),
+        init,
+        nodes,
+        eval: Box::new(eval),
+    })
+}
+
+/// Transformer-LM node: gradients via `lm-base_grad` over corpus windows.
+pub struct PjrtLmNodeGrad {
+    rt: RuntimeHandle,
+    artifact: String,
+    info: ModelInfo,
+    shard: CorpusShard,
+    xs: Vec<i32>,
+    ys: Vec<i32>,
+}
+
+impl NodeGrad for PjrtLmNodeGrad {
+    fn grad_accum(&mut self, x: &[f32], accum: usize, out: &mut [f32]) -> f64 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let (b, t) = (self.info.micro_batch, self.info.seq_len);
+        let mut loss = 0.0;
+        for _ in 0..accum {
+            self.shard.next_batch(b, t, &mut self.xs, &mut self.ys);
+            let outputs = self
+                .rt
+                .exec(
+                    &self.artifact,
+                    vec![
+                        Tensor::f32(x.to_vec(), &[self.info.dim as i64]),
+                        Tensor::i32(self.xs.clone(), &[b as i64, t as i64]),
+                        Tensor::i32(self.ys.clone(), &[b as i64, t as i64]),
+                    ],
+                )
+                .expect("pjrt lm grad exec failed");
+            loss += outputs[0][0] as f64;
+            crate::util::math::axpy(out, 1.0, &outputs[1]);
+        }
+        let inv = 1.0 / accum as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        loss / accum as f64
+    }
+}
+
+/// LM evaluator: mean held-out loss via `lm-base_loss` (accuracy = NaN).
+pub struct PjrtLmEvaluator {
+    rt: RuntimeHandle,
+    artifact: String,
+    info: ModelInfo,
+    shard: CorpusShard,
+    xs: Vec<i32>,
+    ys: Vec<i32>,
+    batches: usize,
+}
+
+impl Evaluator for PjrtLmEvaluator {
+    fn accuracy(&mut self, _x: &[f32]) -> f64 {
+        f64::NAN
+    }
+
+    fn loss(&mut self, theta: &[f32]) -> Option<f64> {
+        let (b, t) = (self.info.micro_batch, self.info.seq_len);
+        let mut total = 0.0;
+        for _ in 0..self.batches {
+            self.shard.next_batch(b, t, &mut self.xs, &mut self.ys);
+            let out = self
+                .rt
+                .exec(
+                    &self.artifact,
+                    vec![
+                        Tensor::f32(theta.to_vec(), &[self.info.dim as i64]),
+                        Tensor::i32(self.xs.clone(), &[b as i64, t as i64]),
+                        Tensor::i32(self.ys.clone(), &[b as i64, t as i64]),
+                    ],
+                )
+                .ok()?;
+            total += out[0][0] as f64;
+        }
+        Some(total / self.batches as f64)
+    }
+}
+
+/// Build the end-to-end LM pretraining workload over `nodes` corpus shards.
+pub fn lm_workload(
+    rt: &RuntimeHandle,
+    manifest: &Manifest,
+    model: &str,
+    corpus: &Corpus,
+    nodes: usize,
+) -> Result<Workload> {
+    let info = manifest.model(model)?;
+    let grad_art = format!("{model}_grad");
+    let loss_art = format!("{model}_loss");
+    rt.load_artifact(manifest, &grad_art)?;
+    rt.load_artifact(manifest, &loss_art)?;
+    let init = manifest.load_init(&info)?;
+    let (b, t) = (info.micro_batch, info.seq_len);
+    let node_grads: Vec<Box<dyn NodeGrad>> = (0..nodes)
+        .map(|rank| {
+            Box::new(PjrtLmNodeGrad {
+                rt: rt.clone(),
+                artifact: grad_art.clone(),
+                info: info.clone(),
+                shard: corpus.shard(rank, nodes + 1),
+                xs: vec![0; b * t],
+                ys: vec![0; b * t],
+            }) as Box<dyn NodeGrad>
+        })
+        .collect();
+    // Last shard held out for eval.
+    let eval = PjrtLmEvaluator {
+        rt: rt.clone(),
+        artifact: loss_art,
+        info: info.clone(),
+        shard: corpus.shard(nodes, nodes + 1),
+        xs: vec![0; b * t],
+        ys: vec![0; b * t],
+        batches: 4,
+    };
+    Ok(Workload {
+        name: model.to_string(),
+        dim: info.dim,
+        layer_ranges: info.layer_ranges.clone(),
+        init,
+        nodes: node_grads,
+        eval: Box::new(eval),
+    })
+}

@@ -1,0 +1,32 @@
+//! # DecentLaM — decentralized large-batch momentum training framework
+//!
+//! A Rust + JAX + Pallas reproduction of *DecentLaM: Decentralized
+//! Momentum SGD for Large-batch Deep Training* (Yuan et al., 2021).
+//!
+//! Architecture (see `DESIGN.md`):
+//! - **Layer 3 (this crate)** — the decentralized coordination runtime:
+//!   topologies + Metropolis–Hastings mixing weights ([`topology`]), the
+//!   ten optimizer update rules ([`optim`]), multi-node training driver
+//!   ([`coordinator`]), communication cost model ([`comm`]), gradient
+//!   engines ([`grad`]), synthetic workloads ([`data`]) and the paper's
+//!   experiment harness ([`experiments`]).
+//! - **Layer 2 / Layer 1 (python/, build time only)** — JAX models and
+//!   Pallas kernels, AOT-lowered to HLO-text artifacts that [`runtime`]
+//!   loads and executes through the PJRT CPU client (`xla` crate).
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `decentlam` binary (and every example) is self-contained.
+
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod optim;
+pub mod prop;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

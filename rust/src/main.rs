@@ -1,0 +1,291 @@
+//! `decentlam` — CLI launcher for the DecentLaM framework.
+//!
+//! Subcommands regenerate every table/figure of the paper (DESIGN.md §5)
+//! plus ablations and a generic training entry point:
+//!
+//! ```text
+//! decentlam table1|table2|table3|table4|table5|table6   # paper tables
+//! decentlam fig2|fig3|fig5|fig6                         # paper figures
+//! decentlam train [--optimizer X --batch B ...]         # one run
+//! decentlam ablate-pd | ablate-atc | ablate-rho         # design ablations
+//! decentlam topo [--nodes N]                            # topology report
+//! ```
+//!
+//! Common flags: `--quick` (shrunk protocol), `--csv FILE` (dump series),
+//! `--steps`, `--nodes`, plus every `Config` key (see `util::config`).
+
+use anyhow::Result;
+
+use decentlam::coordinator::Trainer;
+use decentlam::data::LinRegProblem;
+use decentlam::experiments as exp;
+use decentlam::grad::linreg;
+use decentlam::runtime::{Manifest, Runtime};
+use decentlam::topology::{metropolis_hastings, rho, spectral, Kind, Topology};
+use decentlam::util::cli::Args;
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::table::{sig, Table};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn write_csv(args: &Args, csv: &str) -> Result<()> {
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, csv)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let quick = args.get_bool("quick");
+    match cmd {
+        "fig2" | "fig3" => {
+            let mut opts = exp::fig2_3::Opts::default();
+            if quick {
+                opts.steps = 6000;
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            opts.beta = args.get_f64("beta", opts.beta)?;
+            opts.gamma = args.get_f64("lr", opts.gamma)?;
+            let (series, table) = exp::fig2_3::run(&opts, cmd == "fig3")?;
+            println!("{}", table.render());
+            write_csv(args, &exp::fig2_3::to_csv(&series))?;
+        }
+        "table1" => {
+            let mut opts = exp::table1::Opts::default();
+            if quick {
+                opts.steps = 100;
+                opts.large_batch = 1024;
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (_, table) = exp::table1::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "table2" => {
+            let mut opts = exp::table2::Opts::default();
+            if quick {
+                opts.steps = 8000;
+                opts.methods = vec!["dsgd".into(), "dmsgd".into(), "decentlam".into()];
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (_, table) = exp::table2::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "table3" => {
+            let mut opts = exp::table3::Opts::default();
+            if quick {
+                opts.steps = 120;
+                opts.batches = vec![256, 2048];
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (_, table) = exp::table3::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "table4" => {
+            let mut opts = exp::table4::Opts::default();
+            if quick {
+                opts.steps = 80;
+                opts.archs = vec!["mlp-xs".into(), "mlp-s".into(), "mlp-m".into()];
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (_, table) = exp::table4::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "table5" => {
+            let mut opts = exp::table5::Opts::default();
+            if quick {
+                opts.steps = 120;
+                opts.batches = vec![2048];
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (_, table) = exp::table5::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "table6" => {
+            let mut opts = exp::table6::Opts::default();
+            if quick {
+                opts.steps = 40;
+                opts.methods = vec!["pmsgd".into(), "dmsgd".into(), "decentlam".into()];
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let manifest =
+                Manifest::load(std::path::Path::new(args.get_str("artifacts", "artifacts")))?;
+            let runtime = Runtime::start()?;
+            let (_, table) = exp::table6::run(&runtime.handle(), &manifest, &opts)?;
+            println!("{}", table.render());
+        }
+        "fig5" => {
+            let mut opts = exp::fig5::Opts::default();
+            if quick {
+                opts.steps = 120;
+            }
+            opts.steps = args.get_usize("steps", opts.steps)?;
+            let (curves, table) = exp::fig5::run(&opts)?;
+            println!("{}", table.render());
+            write_csv(args, &exp::fig5::to_csv(&curves))?;
+        }
+        "fig6" => {
+            let mut opts = exp::fig6::Opts::default();
+            if let Some(bw) = args.get("bw-gbps") {
+                opts.bandwidths_gbps = vec![bw.parse()?];
+            }
+            let (_, table) = exp::fig6::run(&opts)?;
+            println!("{}", table.render());
+        }
+        "train" => train(args)?,
+        "topo" => topo_report(args)?,
+        "ablate-pd" => ablate_pd(args)?,
+        "ablate-atc" => ablate_atc(args)?,
+        "ablate-rho" => ablate_rho(args)?,
+        _ => {
+            println!(
+                "decentlam — decentralized large-batch momentum training\n\n\
+                 subcommands:\n  \
+                 table1..table6, fig2, fig3, fig5, fig6   regenerate paper results\n  \
+                 train        one training run (all Config flags apply)\n  \
+                 topo         topology / spectral report\n  \
+                 ablate-pd    positive-definite (lazy) W ablation\n  \
+                 ablate-atc   ATC vs AWC partial-averaging ablation\n  \
+                 ablate-rho   limiting bias vs topology rho\n\n\
+                 common flags: --quick, --steps N, --csv FILE, --nodes N,\n  \
+                 --optimizer X, --batch B, --beta B, --lr G, --topology T"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Generic single training run over the native MLP workload.
+fn train(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let data = exp::synth_imagenet(cfg.nodes, cfg.seed);
+    let wl = exp::mlp_workload_named(
+        if cfg.model.starts_with("native") { "mlp-s" } else { &cfg.model },
+        data,
+        cfg.micro_batch,
+        cfg.seed,
+    )?;
+    println!(
+        "train: optimizer={} topology={} nodes={} total_batch={} steps={}",
+        cfg.optimizer, cfg.topology, cfg.nodes, cfg.total_batch, cfg.steps
+    );
+    let eval_every = if cfg.eval_every == 0 { cfg.steps / 10 } else { cfg.eval_every };
+    let mut cfg = cfg;
+    cfg.eval_every = eval_every.max(1);
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    for (k, acc) in &report.evals {
+        println!("step {k:>6}  val acc {acc:.4}");
+    }
+    println!(
+        "final: loss={:.4} acc={:.4} consensus={:.3e} ({} steps, {:.1}s)",
+        report.losses.last().unwrap(),
+        report.final_accuracy,
+        report.final_consensus,
+        report.steps,
+        report.grad_seconds
+    );
+    Ok(())
+}
+
+/// Topology / spectral-gap report.
+fn topo_report(args: &Args) -> Result<()> {
+    let n = args.get_usize("nodes", 8)?;
+    let mut table = Table::new(
+        &format!("topology report (n={n}, Metropolis–Hastings weights)"),
+        &["topology", "max degree", "edges", "rho", "spectral gap", "mixing T(1e-3)"],
+    );
+    for name in ["ring", "mesh", "star", "sym-exp", "full", "erdos", "bipartite"] {
+        let kind = Kind::parse(name)?;
+        let t = Topology::at_step(kind, n, 1, 0);
+        let wm = metropolis_hastings(&t);
+        let r = rho(&wm);
+        table.row(vec![
+            name.into(),
+            t.max_degree().to_string(),
+            t.num_edges().to_string(),
+            sig(r, 4),
+            sig(1.0 - r, 4),
+            sig(spectral::mixing_time(&wm, 1e-3), 3),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn linreg_bias_run(optimizer: &str, topology: &str, pd: bool, steps: usize) -> Result<(f64, f64)> {
+    let problem = LinRegProblem::generate(8, 50, 30, 1);
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.topology = topology.into();
+    cfg.lr = 0.001;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.8;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.steps = steps;
+    cfg.positive_definite = pd;
+    cfg.threads = 1;
+    let mut t = Trainer::new(cfg, linreg::workload(problem.clone()))?;
+    for k in 0..steps {
+        t.step(k);
+    }
+    let xs: Vec<Vec<f32>> = t.states.iter().map(|s| s.x.clone()).collect();
+    Ok((rho(&t.wm), problem.relative_error(&xs)))
+}
+
+/// Theorem 1 restriction ablation: plain vs lazy (positive-definite) W.
+fn ablate_pd(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 8000)?;
+    let mut table = Table::new(
+        "ablation — positive-definite (lazy) W vs plain Metropolis",
+        &["W", "rho", "final rel. error (decentlam, ring linreg)"],
+    );
+    for pd in [false, true] {
+        let (r, err) = linreg_bias_run("decentlam", "ring", pd, steps)?;
+        table.row(vec![
+            if pd { "lazy (I+W)/2" } else { "metropolis" }.into(),
+            sig(r, 4),
+            sig(err, 3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(Theorem 1 assumes positive-definite W; plain W works in practice — paper §6.1)");
+    Ok(())
+}
+
+/// Remark 1 ablation: ATC (dmsgd) vs AWC (awc-dmsgd) limiting bias.
+fn ablate_atc(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 12000)?;
+    let mut table = Table::new(
+        "ablation — ATC vs AWC partial averaging (mesh linreg limiting bias)",
+        &["form", "optimizer", "rho", "final rel. error"],
+    );
+    for (form, opt) in [("ATC", "dmsgd"), ("AWC", "awc-dmsgd"), ("ATC+corr", "decentlam")] {
+        let (r, err) = linreg_bias_run(opt, "mesh", false, steps)?;
+        table.row(vec![form.into(), opt.into(), sig(r, 4), sig(err, 3)]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Limiting bias as a function of topology connectivity ρ.
+fn ablate_rho(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 12000)?;
+    let mut table = Table::new(
+        "ablation — DecentLaM limiting bias vs topology rho (theory: bias ∝ 1/(1−ρ)²)",
+        &["topology", "rho", "final rel. error"],
+    );
+    for name in ["full", "sym-exp", "mesh", "ring"] {
+        let (r, err) = linreg_bias_run("decentlam", name, false, steps)?;
+        table.row(vec![name.into(), sig(r, 4), sig(err, 3)]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! AWC-DmSGD (Balu et al. 2020) — adaptation-while-combination momentum
+//! SGD: the partial-averaging step is mixed *into* the local momentum
+//! update rather than applied after it (paper Remark 1 contrasts AWC
+//! with the ATC form used by DmSGD/DecentLaM):
+//!
+//!   m_i ← β m_i + g_i
+//!   x_i ← Σ_j w_ij x_j − γ m_i
+//!
+//! AWC tolerates smaller learning rates than ATC (Sayed 2014 §10.6),
+//! which is exactly why the paper's Table 2 shows its worse bias order.
+
+use crate::util::math;
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct AwcDmsgd;
+
+impl Optimizer for AwcDmsgd {
+    fn name(&self) -> &'static str {
+        "awc-dmsgd"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::Neighbor { payloads: 1 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        // Publish the raw model (combination input).
+        for (i, st) in states.iter().enumerate() {
+            scratch.publish[i].copy_from_slice(&st.x);
+        }
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        for ((st, mixed), g) in states.iter_mut().zip(&scratch.mixed).zip(grads) {
+            math::axpby(&mut st.m, 1.0, g, ctx.beta);
+            st.x.copy_from_slice(mixed);
+            math::axpy(&mut st.x, -ctx.lr, &st.m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+
+    #[test]
+    fn differs_from_atc_after_one_step_with_spread_models() {
+        let d = 2;
+        let (wm, states0, mut scratch) = setup(4, d); // x_i = i
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; d]).collect();
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut awc = states0.clone();
+        AwcDmsgd.round(&mut awc, &grads, &ctx, &mut scratch);
+        let mut atc = states0.clone();
+        super::super::dmsgd::Dmsgd.round(&mut atc, &grads, &ctx, &mut scratch);
+        // AWC: Wx - γm (gradient not averaged); ATC: W(x - γm).
+        let diff: f32 = awc
+            .iter()
+            .zip(&atc)
+            .map(|(a, b)| (a.x[0] - b.x[0]).abs())
+            .sum();
+        assert!(diff > 1e-4, "AWC must differ from ATC, diff={diff}");
+    }
+
+    #[test]
+    fn consensus_zero_grad_fixed_point() {
+        let (wm, _, mut scratch) = setup(4, 1);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![7.0], 0)).collect();
+        let grads = vec![vec![0.0f32]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        AwcDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        for st in &states {
+            assert!((st.x[0] - 7.0).abs() < 1e-6);
+        }
+    }
+}

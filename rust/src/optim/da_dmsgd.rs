@@ -1,0 +1,91 @@
+//! DA-DmSGD (Yu, Jin & Yang 2019) — doubly-averaged decentralized
+//! momentum SGD: an *additional* partial averaging over the momentum
+//! increases stability at the price of a second parameter-sized payload
+//! per iteration (paper §7: "it has double partial averages per
+//! iteration").
+//!
+//!   m_i ← Σ_j w_ij (β m_j + g_j)        (momentum gossip)
+//!   x_i ← Σ_j w_ij (x_j − γ m_i)        (model gossip)
+
+use crate::util::math;
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct DaDmsgd;
+
+impl Optimizer for DaDmsgd {
+    fn name(&self) -> &'static str {
+        "da-dmsgd"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::Neighbor { payloads: 2 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        // Publish half-momentum beta*m + g, gossip it.
+        for (i, st) in states.iter().enumerate() {
+            let p = &mut scratch.publish[i];
+            for ((pi, &mi), &gi) in p.iter_mut().zip(&st.m).zip(&grads[i]) {
+                *pi = ctx.beta * mi + gi;
+            }
+        }
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
+            st.m.copy_from_slice(mixed);
+        }
+        // Publish half-step with the averaged momentum, gossip it.
+        for (i, st) in states.iter().enumerate() {
+            let z = &mut scratch.publish[i];
+            z.copy_from_slice(&st.x);
+            math::axpy(z, -ctx.lr, &st.m);
+        }
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
+            st.x.copy_from_slice(mixed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+
+    #[test]
+    fn momentum_is_gossiped() {
+        let (wm, mut states, mut scratch) = setup(4, 1);
+        // Only node 0 has a gradient; after one round every node's
+        // neighborhood of 0 picks up momentum mass.
+        let mut grads = vec![vec![0.0f32]; 4];
+        grads[0][0] = 1.0;
+        let ctx = RoundCtx { wm: &wm, lr: 0.0, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        DaDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        // Node 1 and 3 are ring-neighbors of 0.
+        assert!(states[1].m[0] > 0.0);
+        assert!(states[3].m[0] > 0.0);
+        assert!(states[2].m[0].abs() < 1e-7, "two hops away stays zero");
+        // Momentum mean preserved by doubly-stochastic gossip: 1/4.
+        let mean: f32 = states.iter().map(|s| s.m[0]).sum::<f32>() / 4.0;
+        assert!((mean - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consensus_zero_grad_fixed_point() {
+        let (wm, _, mut scratch) = setup(4, 2);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![2.0, 3.0], 0)).collect();
+        let grads = vec![vec![0.0f32; 2]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        DaDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        for st in &states {
+            assert!((st.x[0] - 2.0).abs() < 1e-6 && (st.x[1] - 3.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! DecentLaM (paper Algorithm 2, eq. (17)) — THE contribution.
+//!
+//! Each node publishes the same half-step as DSGD (z_i = x_i − γ g_i; no
+//! extra traffic vs DmSGD), then forms the bias-corrected gradient
+//!
+//! ```text
+//! gt_i = (x_i − Σ_j w_ij z_j) / γ
+//! ```
+//!
+//! and runs vanilla heavy-ball on g̃: m ← βm + g̃, x ← x − γm. Because
+//! the momentum is built from the *corrected* gradient, the fixed point
+//! satisfies (I−W)x = −γW∇f(x) independent of β (Proposition 3): the
+//! momentum-amplified inconsistency bias of DmSGD vanishes.
+//!
+//! The apply step is exactly the fused Layer-1 Pallas kernel
+//! (`python/compile/kernels/decentlam_update.py`); this Rust routine is
+//! the native mirror, verified against the kernel's golden vectors in
+//! `rust/tests/golden.rs`.
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct DecentLam {
+    /// Cap on ‖g̃‖ as a multiple of ‖g_raw‖. The corrected gradient
+    /// contains the disagreement term (x − Σw z)/γ; on TIME-VARYING
+    /// topologies (bipartite random match, one-peer exp) the momentum
+    /// re-injects stale-direction disagreement that the static-W
+    /// analysis (paper §5, which assumes a fixed W = W^½·W^½) cancels —
+    /// left unchecked the echo loop diverges at β ≈ 0.9. Clipping the
+    /// correction at `clip`×‖g‖ bounds the loop gain; it never engages
+    /// in the static-topology regime (verified by the Fig. 2/3 bias
+    /// tests, which reproduce the paper's limiting bias exactly).
+    pub clip: f32,
+}
+
+impl Default for DecentLam {
+    fn default() -> Self {
+        DecentLam { clip: 4.0 }
+    }
+}
+
+/// Fused single-node apply (the kernel's contract):
+/// given mix = Σ w_ij z_j, update (x, m) in place.
+///
+///   m' = β m + (x − mix)/γ
+///   x' = mix − γ β m        (≡ x − γ m')
+#[inline]
+pub fn fused_apply(x: &mut [f32], m: &mut [f32], mix: &[f32], gamma: f32, beta: f32) {
+    let inv_gamma = 1.0 / gamma;
+    let gb = gamma * beta;
+    for ((xi, mi), &mixi) in x.iter_mut().zip(m.iter_mut()).zip(mix) {
+        let m_old = *mi;
+        *mi = beta * m_old + (*xi - mixi) * inv_gamma;
+        *xi = mixi - gb * m_old;
+    }
+}
+
+impl Optimizer for DecentLam {
+    fn name(&self) -> &'static str {
+        "decentlam"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        // Same wire traffic as DSGD/DmSGD: one parameter-sized payload.
+        CommPattern::Neighbor { payloads: 1 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        // Publish z_i = x_i - lr*g_i (identical payload to DSGD).
+        for (i, st) in states.iter().enumerate() {
+            let z = &mut scratch.publish[i];
+            for ((zi, &xi), &gi) in z.iter_mut().zip(&st.x).zip(&grads[i]) {
+                *zi = xi - ctx.lr * gi;
+            }
+        }
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        // Fused corrected-momentum apply (eq. 17), with the correction
+        // clipped at `clip`×‖g‖ (see field docs — time-varying graphs).
+        for ((st, mix), grad) in states.iter_mut().zip(&mut scratch.mixed).zip(grads) {
+            let g_norm = crate::util::math::norm2(grad) as f32;
+            let corr_norm = (crate::util::math::dist2(&st.x, mix).sqrt() / ctx.lr as f64) as f32;
+            let limit = self.clip * g_norm + 1e-12;
+            if ctx.time_varying && corr_norm > limit {
+                // mix_eff = x + (mix − x)·s keeps the update direction,
+                // bounds ‖g̃‖ = ‖x − mix_eff‖/γ at the limit.
+                let s = limit / corr_norm;
+                for (mi, &xi) in mix.iter_mut().zip(&st.x) {
+                    *mi = xi + (*mi - xi) * s;
+                }
+            }
+            fused_apply(&mut st.x, &mut st.m, mix, ctx.lr, ctx.beta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology};
+
+    #[test]
+    fn fused_apply_matches_unfused_algebra() {
+        let d = 16;
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let mut x = vec![0.0f32; d];
+        let mut m = vec![0.0f32; d];
+        let mut mix = vec![0.0f32; d];
+        rng.normal_fill(&mut x, 1.0);
+        rng.normal_fill(&mut m, 1.0);
+        rng.normal_fill(&mut mix, 1.0);
+        let (gamma, beta) = (0.05f32, 0.9f32);
+        // Unfused reference: gt = (x-mix)/gamma; m' = beta*m+gt; x' = x-gamma*m'.
+        let mut xe = x.clone();
+        let mut me = m.clone();
+        for i in 0..d {
+            let gt = (xe[i] - mix[i]) / gamma;
+            me[i] = beta * me[i] + gt;
+            xe[i] -= gamma * me[i];
+        }
+        fused_apply(&mut x, &mut m, &mix, gamma, beta);
+        for i in 0..d {
+            assert!((x[i] - xe[i]).abs() < 1e-4, "x[{i}]");
+            assert!((m[i] - me[i]).abs() < 1e-4, "m[{i}]");
+        }
+    }
+
+    #[test]
+    fn consensus_zero_grad_is_fixed_point() {
+        // All nodes at the same x with zero gradient: x unchanged, m decays.
+        let (wm, _, mut scratch) = setup(4, 2);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![1.5, -0.5], 0)).collect();
+        let grads = vec![vec![0.0f32; 2]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut o = DecentLam::default();
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        for st in &states {
+            assert!((st.x[0] - 1.5).abs() < 1e-6 && (st.x[1] + 0.5).abs() < 1e-6);
+            assert!(st.m.iter().all(|&v| v.abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn beta_zero_equals_dsgd() {
+        let d = 3;
+        let (wm, states0, mut scratch) = setup(4, d);
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![0.3 * (i as f32 - 1.0); d]).collect();
+        let ctx = RoundCtx { wm: &wm, lr: 0.2, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut a = states0.clone();
+        DecentLam::default().round(&mut a, &grads, &ctx, &mut scratch);
+        let mut b = states0.clone();
+        super::super::dsgd::Dsgd.round(&mut b, &grads, &ctx, &mut scratch);
+        for (sa, sb) in a.iter().zip(&b) {
+            for (va, vb) in sa.x.iter().zip(&sb.x) {
+                assert!((va - vb).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn reformulation_b2_holds() {
+        // App. B.2, eq. (36): x^{k+1} = W(x^k - γ g^k) + β(x^k - x^{k-1}).
+        let n = 4;
+        let d = 2;
+        let wm = metropolis_hastings(&Topology::build(Kind::Ring, n));
+        let mut rng = crate::util::rng::Pcg64::seeded(9);
+        let mut states: Vec<NodeState> = (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f32; d];
+                rng.normal_fill(&mut x, 1.0);
+                NodeState::new(x, 0)
+            })
+            .collect();
+        let mut scratch = Scratch::new(n, d);
+        let mut o = DecentLam::default();
+        let gamma = 0.1f32;
+        let beta = 0.8f32;
+        let grad_at = |xs: &[NodeState], step: usize| -> Vec<Vec<f32>> {
+            // A fixed deterministic "gradient" field g_i(x) = x + c_i + step noise-free.
+            xs.iter()
+                .enumerate()
+                .map(|(i, st)| {
+                    st.x.iter()
+                        .map(|&v| v + i as f32 * 0.5 + step as f32 * 0.0)
+                        .collect()
+                })
+                .collect()
+        };
+        let ctx = RoundCtx { wm: &wm, lr: gamma, beta, step: 0, time_varying: false, layer_ranges: &[] };
+
+        // Track x^{k-1}, x^k to verify the recursion at k >= 1.
+        let mut x_prev: Vec<Vec<f32>> = states.iter().map(|s| s.x.clone()).collect();
+        let g0 = grad_at(&states, 0);
+        o.round(&mut states, &g0, &ctx, &mut scratch);
+        let x_k: Vec<Vec<f32>> = states.iter().map(|s| s.x.clone()).collect();
+        let g1 = grad_at(&states, 1);
+        o.round(&mut states, &g1, &ctx, &mut scratch);
+
+        // Predicted: W(x_k - γ g1) + β (x_k - x_prev)
+        let half: Vec<Vec<f32>> = x_k
+            .iter()
+            .zip(&g1)
+            .map(|(x, g)| x.iter().zip(g).map(|(xi, gi)| xi - gamma * gi).collect())
+            .collect();
+        let mut mixed = vec![vec![0.0f32; d]; n];
+        partial_average_all(&wm, &half, &mut mixed);
+        for i in 0..n {
+            for jd in 0..d {
+                let pred = mixed[i][jd] + beta * (x_k[i][jd] - x_prev[i][jd]);
+                assert!(
+                    (states[i].x[jd] - pred).abs() < 1e-4,
+                    "node {i} dim {jd}: got {} want {pred}",
+                    states[i].x[jd]
+                );
+            }
+        }
+        x_prev = x_k;
+        let _ = x_prev;
+    }
+}

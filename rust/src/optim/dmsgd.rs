@@ -1,0 +1,84 @@
+//! DmSGD (paper Algorithm 1; Assran et al. 2019) — decentralized
+//! momentum SGD. Momentum update, local model update, then partial
+//! averaging of the half-step. Its momentum term amplifies the
+//! inconsistency bias by 1/(1−β)² (Proposition 2) — the defect
+//! DecentLaM removes.
+
+use crate::util::math;
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct Dmsgd;
+
+impl Optimizer for Dmsgd {
+    fn name(&self) -> &'static str {
+        "dmsgd"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::Neighbor { payloads: 1 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        for (i, st) in states.iter_mut().enumerate() {
+            // m = beta*m + g  (momentum update)
+            math::axpby(&mut st.m, 1.0, &grads[i], ctx.beta);
+            // z = x - lr*m  (local model update)
+            let z = &mut scratch.publish[i];
+            z.copy_from_slice(&st.x);
+            math::axpy(z, -ctx.lr, &st.m);
+        }
+        // x = sum_j w_ij z_j  (partial average)
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
+            st.x.copy_from_slice(mixed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates_geometrically() {
+        let (wm, mut states, mut scratch) = setup(4, 1);
+        for s in states.iter_mut() {
+            s.x[0] = 0.0;
+        }
+        let grads = vec![vec![1.0f32]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.0, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut o = Dmsgd;
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        assert!((states[0].m[0] - 1.0).abs() < 1e-6);
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        assert!((states[0].m[0] - 1.5).abs() < 1e-6);
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        assert!((states[0].m[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_zero_equals_dsgd() {
+        let d = 3;
+        let (wm, states0, mut scratch) = setup(4, d);
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32; d]).collect();
+        let ctx = RoundCtx { wm: &wm, lr: 0.2, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+
+        let mut a = states0.clone();
+        Dmsgd.round(&mut a, &grads, &ctx, &mut scratch);
+        let mut b = states0.clone();
+        super::super::dsgd::Dsgd.round(&mut b, &grads, &ctx, &mut scratch);
+        for (sa, sb) in a.iter().zip(&b) {
+            for (va, vb) in sa.x.iter().zip(&sb.x) {
+                assert!((va - vb).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! DSGD (Lian et al. 2017) — decentralized SGD, paper eqs. (4)–(5).
+//!
+//! ATC form: local half-step z_i = x_i − γ g_i, then partial averaging
+//! x_i ← Σ_j w_ij z_j. Momentum-free; its O(γ²b²/(1−ρ)²) inconsistency
+//! bias (App. C.1) is the floor DecentLaM is designed to match.
+
+use crate::util::math;
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct Dsgd;
+
+impl Optimizer for Dsgd {
+    fn name(&self) -> &'static str {
+        "dsgd"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::Neighbor { payloads: 1 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        // z_i = x_i - lr * g_i  (local update, eq. 4)
+        for (i, st) in states.iter().enumerate() {
+            let z = &mut scratch.publish[i];
+            z.copy_from_slice(&st.x);
+            math::axpy(z, -ctx.lr, &grads[i]);
+        }
+        // x_i = sum_j w_ij z_j  (partial averaging, eq. 5)
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
+            st.x.copy_from_slice(mixed);
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology, WeightMatrix};
+
+    pub(crate) fn setup(n: usize, d: usize) -> (WeightMatrix, Vec<NodeState>, Scratch) {
+        let wm = metropolis_hastings(&Topology::build(Kind::Ring, n));
+        let states = (0..n)
+            .map(|i| NodeState::new(vec![i as f32; d], 0))
+            .collect();
+        let scratch = Scratch::new(n, d);
+        (wm, states, scratch)
+    }
+
+    #[test]
+    fn zero_grad_is_pure_gossip() {
+        let (wm, mut states, mut scratch) = setup(4, 2);
+        let grads = vec![vec![0.0f32; 2]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let before_mean: f32 = states.iter().map(|s| s.x[0]).sum::<f32>() / 4.0;
+        Dsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        let after_mean: f32 = states.iter().map(|s| s.x[0]).sum::<f32>() / 4.0;
+        assert!((before_mean - after_mean).abs() < 1e-6);
+        // Consensus (spread) must shrink.
+        let spread =
+            states.iter().map(|s| (s.x[0] - after_mean).abs()).fold(0.0f32, f32::max);
+        assert!(spread < 1.5);
+    }
+
+    #[test]
+    fn fully_connected_reduces_to_parallel_sgd() {
+        let wm = metropolis_hastings(&Topology::build(Kind::Full, 4));
+        let d = 3;
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![1.0; d], 0)).collect();
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; d]).collect();
+        let ctx = RoundCtx { wm: &wm, lr: 0.5, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut scratch = Scratch::new(4, d);
+        Dsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        // mean grad = 1.5 -> every x = 1 - 0.5*1.5 = 0.25
+        for st in &states {
+            for &v in &st.x {
+                assert!((v - 0.25).abs() < 1e-6);
+            }
+        }
+    }
+}

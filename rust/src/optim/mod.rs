@@ -1,0 +1,230 @@
+//! The decentralized optimizer suite (paper §3, §5, §7 baselines).
+//!
+//! Each algorithm is a synchronous round over `n` nodes holding flat
+//! parameter vectors. A round receives this step's per-node gradients
+//! (already averaged over the node's accumulated micro-batches by the
+//! coordinator) and performs its communication + update. Communication
+//! is expressed exclusively through [`partial_average_all`] /
+//! [`global_average`] so that (a) the decentralized methods only ever
+//! read *neighbor* rows of `W`, and (b) the cost model can charge
+//! exactly the payloads declared by [`Optimizer::comm_pattern`].
+//!
+//! Implemented algorithms:
+//!
+//! | name        | reference                | file           |
+//! |-------------|--------------------------|----------------|
+//! | `dsgd`      | Lian et al. 2017         | `dsgd.rs`      |
+//! | `dmsgd`     | Assran et al. / Alg. 1   | `dmsgd.rs`     |
+//! | `decentlam` | **this paper, Alg. 2**   | `decentlam.rs` |
+//! | `pmsgd`     | Goyal et al. (DDP)       | `pmsgd.rs`     |
+//! | `pmsgd-lars`| You et al. (LARS)        | `pmsgd.rs`     |
+//! | `da-dmsgd`  | Yu, Jin, Yang 2019       | `da_dmsgd.rs`  |
+//! | `awc-dmsgd` | Balu et al. 2020         | `awc_dmsgd.rs` |
+//! | `slowmo`    | Wang et al. 2019         | `slowmo.rs`    |
+//! | `qg-dmsgd`  | Lin et al. 2021          | `qg_dmsgd.rs`  |
+//! | `d2-dmsgd`  | Tang et al. 2018 + mom.  | `d2_dmsgd.rs`  |
+
+pub mod awc_dmsgd;
+pub mod d2_dmsgd;
+pub mod da_dmsgd;
+pub mod decentlam;
+pub mod dmsgd;
+pub mod dsgd;
+pub mod pmsgd;
+pub mod qg_dmsgd;
+pub mod schedule;
+pub mod slowmo;
+
+use anyhow::bail;
+
+use crate::topology::WeightMatrix;
+use crate::util::math;
+
+/// Per-node optimizer state: model, momentum, and algorithm-specific
+/// auxiliary buffers (previous iterates, slow momentum, ...).
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    pub x: Vec<f32>,
+    pub m: Vec<f32>,
+    pub aux: Vec<Vec<f32>>,
+}
+
+impl NodeState {
+    pub fn new(x0: Vec<f32>, aux_count: usize) -> NodeState {
+        let d = x0.len();
+        NodeState {
+            x: x0,
+            m: vec![0.0; d],
+            aux: (0..aux_count).map(|_| vec![0.0; d]).collect(),
+        }
+    }
+}
+
+/// Everything a round needs besides node state.
+pub struct RoundCtx<'a> {
+    pub wm: &'a WeightMatrix,
+    /// Learning rate at this step (schedule already applied).
+    pub lr: f32,
+    /// Momentum coefficient β.
+    pub beta: f32,
+    /// Iteration index k.
+    pub step: usize,
+    /// Whether the mixing matrix changes between iterations (one-peer
+    /// exp, bipartite random match). DecentLaM's disagreement-clip guard
+    /// only engages in this regime (see `decentlam.rs`).
+    pub time_varying: bool,
+    /// Flat-vector layer boundaries (for LARS); empty = single group.
+    pub layer_ranges: &'a [(usize, usize)],
+}
+
+/// Reusable cross-round buffers, allocated once by the coordinator —
+/// the step loop is allocation-free (see EXPERIMENTS.md §Perf).
+pub struct Scratch {
+    /// Per-node publish buffer (what goes "on the wire").
+    pub publish: Vec<Vec<f32>>,
+    /// Per-node mixed result.
+    pub mixed: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new(n: usize, d: usize) -> Scratch {
+        Scratch {
+            publish: (0..n).map(|_| vec![0.0; d]).collect(),
+            mixed: (0..n).map(|_| vec![0.0; d]).collect(),
+        }
+    }
+}
+
+/// Communication pattern of one round, consumed by the Fig. 6 cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CommPattern {
+    /// `payloads` neighbor exchanges of the full parameter vector.
+    Neighbor { payloads: usize },
+    /// One global all-reduce of the parameter-sized vector.
+    AllReduce,
+    /// Neighbor exchange every step + an all-reduce every `period` steps.
+    NeighborPlusPeriodicAllReduce { payloads: usize, period: usize },
+}
+
+/// A decentralized optimizer: one synchronous round at a time.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// Number of auxiliary D-sized buffers each node needs.
+    fn aux_count(&self) -> usize {
+        0
+    }
+    fn comm_pattern(&self) -> CommPattern;
+    /// Execute one round: update every node's state in place given the
+    /// per-node gradients of this iteration.
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    );
+}
+
+/// mixed[i] = Σ_{j ∈ N(i)} w_ij · src[j] — the partial-averaging
+/// primitive (paper eq. (3)). Reads only the sparse neighbor row; terms
+/// are fused pairwise (`math::weighted_sum_into`) to halve destination
+/// traffic on this memory-bound loop.
+pub fn partial_average_all(wm: &WeightMatrix, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(8);
+    for i in 0..wm.n {
+        terms.clear();
+        terms.extend(wm.row(i).iter().map(|&(j, w)| (w, src[j].as_slice())));
+        math::weighted_sum_into(&mut dst[i], &terms);
+    }
+}
+
+/// Global average into every destination row (the All-Reduce primitive).
+pub fn global_average(src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    let n = src.len();
+    let d = src[0].len();
+    // Average once, then broadcast.
+    let mut mean = vec![0.0f32; d];
+    for row in src {
+        math::axpy(&mut mean, 1.0, row);
+    }
+    math::scale(&mut mean, 1.0 / n as f32);
+    for row in dst.iter_mut() {
+        row.copy_from_slice(&mean);
+    }
+}
+
+/// Construct an optimizer by config name.
+pub fn build(name: &str, slowmo_period: usize, slowmo_beta: f64) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "dsgd" => Box::new(dsgd::Dsgd),
+        "dmsgd" => Box::new(dmsgd::Dmsgd),
+        "decentlam" => Box::new(decentlam::DecentLam::default()),
+        "pmsgd" => Box::new(pmsgd::Pmsgd::plain()),
+        "pmsgd-lars" => Box::new(pmsgd::Pmsgd::lars()),
+        "da-dmsgd" => Box::new(da_dmsgd::DaDmsgd),
+        "awc-dmsgd" => Box::new(awc_dmsgd::AwcDmsgd),
+        "slowmo" => Box::new(slowmo::SlowMo::new(slowmo_period, slowmo_beta as f32)),
+        "qg-dmsgd" => Box::new(qg_dmsgd::QgDmsgd),
+        "d2-dmsgd" => Box::new(d2_dmsgd::D2Dmsgd),
+        other => bail!("unknown optimizer `{other}`"),
+    })
+}
+
+/// All optimizer names, in the paper's Table 3 row order.
+pub const ALL: [&str; 9] = [
+    "pmsgd",
+    "pmsgd-lars",
+    "dmsgd",
+    "da-dmsgd",
+    "awc-dmsgd",
+    "slowmo",
+    "qg-dmsgd",
+    "d2-dmsgd",
+    "decentlam",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology};
+
+    #[test]
+    fn partial_average_preserves_consensus() {
+        let wm = metropolis_hastings(&Topology::build(Kind::Ring, 4));
+        let src = vec![vec![2.0f32, -1.0]; 4];
+        let mut dst = vec![vec![0.0f32; 2]; 4];
+        partial_average_all(&wm, &src, &mut dst);
+        for row in &dst {
+            assert!((row[0] - 2.0).abs() < 1e-6 && (row[1] + 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn partial_average_preserves_mean() {
+        // W doubly stochastic => the network average is invariant.
+        let wm = metropolis_hastings(&Topology::build(Kind::SymExp, 8));
+        let src: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32, -(i as f32)]).collect();
+        let mut dst = vec![vec![0.0f32; 2]; 8];
+        partial_average_all(&wm, &src, &mut dst);
+        let mean_before: f32 = src.iter().map(|r| r[0]).sum::<f32>() / 8.0;
+        let mean_after: f32 = dst.iter().map(|r| r[0]).sum::<f32>() / 8.0;
+        assert!((mean_before - mean_after).abs() < 1e-5);
+    }
+
+    #[test]
+    fn global_average_exact() {
+        let src = vec![vec![1.0f32], vec![3.0f32]];
+        let mut dst = vec![vec![0.0f32]; 2];
+        global_average(&src, &mut dst);
+        assert_eq!(dst, vec![vec![2.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn factory_builds_all() {
+        for name in ALL {
+            let o = build(name, 12, 0.7).unwrap();
+            assert_eq!(o.name(), name);
+        }
+        assert!(build("adamw", 0, 0.0).is_err());
+    }
+}

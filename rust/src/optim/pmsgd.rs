@@ -1,0 +1,170 @@
+//! PmSGD — Parallel momentum SGD (the DDP/All-Reduce baseline) and its
+//! LARS variant (You et al. 2017), the paper's large-batch reference.
+//!
+//! All nodes all-reduce their gradients, then run identical heavy-ball
+//! steps; with LARS the update is rescaled per layer by the trust ratio
+//! η‖x_l‖ / (‖g_l‖ + wd·‖x_l‖). Weight decay is folded into LARS as in
+//! the original paper.
+
+use crate::util::math;
+
+use super::{CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct Pmsgd {
+    lars: bool,
+    /// LARS trust coefficient η.
+    pub trust: f32,
+    /// Weight decay used inside the trust ratio.
+    pub weight_decay: f32,
+}
+
+impl Pmsgd {
+    pub fn plain() -> Pmsgd {
+        Pmsgd { lars: false, trust: 0.0, weight_decay: 0.0 }
+    }
+
+    pub fn lars() -> Pmsgd {
+        Pmsgd { lars: true, trust: 0.02, weight_decay: 1e-4 }
+    }
+}
+
+impl Optimizer for Pmsgd {
+    fn name(&self) -> &'static str {
+        if self.lars {
+            "pmsgd-lars"
+        } else {
+            "pmsgd"
+        }
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::AllReduce
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        let n = states.len();
+        let d = states[0].x.len();
+        // All-reduce: global mean gradient (reuse mixed[0] as the buffer).
+        let gbar = &mut scratch.mixed[0];
+        gbar.iter_mut().for_each(|v| *v = 0.0);
+        for g in grads {
+            math::axpy(gbar, 1.0, g);
+        }
+        math::scale(gbar, 1.0 / n as f32);
+
+        // LARS layer scaling on the mean gradient.
+        let scaled = &mut scratch.publish[0];
+        scaled.copy_from_slice(gbar);
+        if self.lars {
+            let whole = [(0usize, d)];
+            let ranges: &[(usize, usize)] = if ctx.layer_ranges.is_empty() {
+                &whole
+            } else {
+                ctx.layer_ranges
+            };
+            // Trust ratio from node 0's params (all nodes are identical).
+            let x = &states[0].x;
+            for &(s, e) in ranges {
+                let wn = math::norm2(&x[s..e]) as f32;
+                let gn = math::norm2(&scaled[s..e]) as f32;
+                if wn > 0.0 && gn > 0.0 {
+                    let ratio = self.trust * wn / (gn + self.weight_decay * wn);
+                    for (v, &xv) in scaled[s..e].iter_mut().zip(&x[s..e]) {
+                        *v = ratio * (*v + self.weight_decay * xv);
+                    }
+                }
+            }
+        }
+
+        // Identical heavy-ball step on every node.
+        for st in states.iter_mut() {
+            math::axpby(&mut st.m, 1.0, scaled, ctx.beta);
+            math::axpy(&mut st.x, -ctx.lr, &st.m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::WeightMatrix;
+
+    fn ctx<'a>(wm: &'a WeightMatrix, ranges: &'a [(usize, usize)]) -> RoundCtx<'a> {
+        RoundCtx { wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: ranges }
+    }
+
+    #[test]
+    fn nodes_stay_identical() {
+        let wm = WeightMatrix::global_average(4);
+        let d = 6;
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![1.0; d], 0)).collect();
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.1; d]).collect();
+        let mut scratch = Scratch::new(4, d);
+        let mut o = Pmsgd::plain();
+        for _ in 0..3 {
+            o.round(&mut states, &grads, &ctx(&wm, &[]), &mut scratch);
+        }
+        for st in &states[1..] {
+            assert_eq!(st.x, states[0].x);
+        }
+        // x moved by -lr * (m1 + m2 + m3) with gbar = 0.15
+        assert!(states[0].x[0] < 1.0);
+    }
+
+    #[test]
+    fn plain_matches_hand_heavy_ball() {
+        let wm = WeightMatrix::global_average(2);
+        let mut states: Vec<NodeState> =
+            (0..2).map(|_| NodeState::new(vec![0.0], 0)).collect();
+        let grads = vec![vec![1.0f32], vec![3.0f32]]; // mean 2
+        let mut scratch = Scratch::new(2, 1);
+        let mut o = Pmsgd::plain();
+        let c = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        o.round(&mut states, &grads, &c, &mut scratch);
+        // m=2, x=-0.2
+        assert!((states[0].m[0] - 2.0).abs() < 1e-6);
+        assert!((states[0].x[0] + 0.2).abs() < 1e-6);
+        o.round(&mut states, &grads, &c, &mut scratch);
+        // m=3, x=-0.5
+        assert!((states[0].m[0] - 3.0).abs() < 1e-6);
+        assert!((states[0].x[0] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lars_normalizes_layer_scale() {
+        // Two layers with wildly different gradient scales: LARS equalizes
+        // the relative update magnitude.
+        let wm = WeightMatrix::global_average(2);
+        let d = 8;
+        static RANGES: [(usize, usize); 2] = [(0, 4), (4, 8)];
+        let mut states: Vec<NodeState> =
+            (0..2).map(|_| NodeState::new(vec![1.0; d], 0)).collect();
+        let mut g = vec![0.0f32; d];
+        for v in g[0..4].iter_mut() {
+            *v = 1000.0;
+        }
+        for v in g[4..8].iter_mut() {
+            *v = 0.001;
+        }
+        let grads = vec![g.clone(), g];
+        let mut scratch = Scratch::new(2, d);
+        let mut o = Pmsgd::lars();
+        let c = RoundCtx { wm: &wm, lr: 1.0, beta: 0.0, step: 0, time_varying: false, layer_ranges: &RANGES };
+        o.round(&mut states, &grads, &c, &mut scratch);
+        let d0 = (1.0 - states[0].x[0]).abs();
+        let d1 = (1.0 - states[0].x[4]).abs();
+        assert!(d0 > 0.0 && d1 > 0.0);
+        let ratio = d0 / d1;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "LARS should equalize layer update scale, ratio={ratio}"
+        );
+    }
+}

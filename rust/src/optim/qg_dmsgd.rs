@@ -1,0 +1,91 @@
+//! QG-DmSGD (Lin et al. 2021) — quasi-global momentum, heavy-ball
+//! variant (the paper's §7 baseline). Instead of momentum on the local
+//! stochastic gradient, each node maintains a momentum estimate of the
+//! *global* optimization direction, approximated by its own iterate
+//! displacement:
+//!
+//!   z_i   = x_i − γ (g_i + β m̂_i)             (local update w/ QG mom.)
+//!   x_i⁺  = Σ_j w_ij z_j                       (partial averaging)
+//!   m̂_i  ← β m̂_i + (1−β)(x_i − x_i⁺)/γ        (quasi-global momentum)
+//!
+//! Aux buffer [0] holds m̂ (we keep `NodeState::m` as its storage — no
+//! aux needed).
+
+use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct QgDmsgd;
+
+impl Optimizer for QgDmsgd {
+    fn name(&self) -> &'static str {
+        "qg-dmsgd"
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::Neighbor { payloads: 1 }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        for (i, st) in states.iter().enumerate() {
+            let z = &mut scratch.publish[i];
+            for (((zi, &xi), &gi), &mi) in
+                z.iter_mut().zip(&st.x).zip(&grads[i]).zip(&st.m)
+            {
+                *zi = xi - ctx.lr * (gi + ctx.beta * mi);
+            }
+        }
+        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        let inv_gamma = 1.0 / ctx.lr.max(1e-12);
+        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
+            for ((mi, xi), &newx) in st.m.iter_mut().zip(st.x.iter_mut()).zip(mixed) {
+                let disp = (*xi - newx) * inv_gamma;
+                *mi = ctx.beta * *mi + (1.0 - ctx.beta) * disp;
+                *xi = newx;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+
+    #[test]
+    fn consensus_zero_grad_is_fixed_point() {
+        let (wm, _, mut scratch) = setup(4, 1);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![3.0], 0)).collect();
+        let grads = vec![vec![0.0f32]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        QgDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
+        for st in &states {
+            assert!((st.x[0] - 3.0).abs() < 1e-6);
+            assert!(st.m[0].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_fixed_point_is_g_over_one_minus_beta() {
+        // With homogeneous gradient g at consensus: disp/γ = g + β m̂, so
+        // the fixed point solves m(1−β)² = (1−β)g, i.e. m* = g/(1−β) —
+        // the heavy-ball momentum magnitude, as QG intends.
+        let (wm, _, mut scratch) = setup(4, 1);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![0.0], 0)).collect();
+        let grads = vec![vec![2.0f32]; 4];
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let mut o = QgDmsgd;
+        for _ in 0..60 {
+            o.round(&mut states, &grads, &ctx, &mut scratch);
+        }
+        for st in &states {
+            assert!((st.m[0] - 4.0).abs() < 0.05, "m̂ ≈ g/(1−β), got {}", st.m[0]);
+        }
+    }
+}

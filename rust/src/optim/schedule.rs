@@ -1,0 +1,70 @@
+//! Gradient-accumulation helper for the large-batch engine.
+//!
+//! The paper varies TOTAL batch from 2K to 32K; we realize B_total as
+//! n nodes × accumulation × micro-batch with static-shape PJRT
+//! artifacts (DESIGN.md §2). This module owns that arithmetic plus the
+//! accumulator buffer so the grad engines stay allocation-free.
+
+use crate::util::math;
+
+/// Accumulates micro-batch gradients into a running mean.
+#[derive(Debug, Clone)]
+pub struct GradAccumulator {
+    sum: Vec<f32>,
+    count: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(d: usize) -> GradAccumulator {
+        GradAccumulator { sum: vec![0.0; d], count: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        self.count = 0;
+    }
+
+    pub fn add(&mut self, grad: &[f32]) {
+        math::axpy(&mut self.sum, 1.0, grad);
+        self.count += 1;
+    }
+
+    /// Mean gradient over the accumulated micro-batches, written into `out`.
+    pub fn mean_into(&self, out: &mut [f32]) {
+        assert!(self.count > 0, "no micro-batches accumulated");
+        let inv = 1.0 / self.count as f32;
+        for (o, &s) in out.iter_mut().zip(&self.sum) {
+            *o = s * inv;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_two() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0, 2.0]);
+        acc.add(&[3.0, 4.0]);
+        let mut out = vec![0.0; 2];
+        acc.mean_into(&mut out);
+        assert_eq!(out, vec![2.0, 3.0]);
+        assert_eq!(acc.count(), 2);
+        acc.reset();
+        assert_eq!(acc.count(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_mean_panics() {
+        let acc = GradAccumulator::new(1);
+        let mut out = vec![0.0];
+        acc.mean_into(&mut out);
+    }
+}

@@ -1,0 +1,114 @@
+//! SlowMo (Wang et al. 2019) — slow momentum over a decentralized base
+//! optimizer. Inner loop: plain DmSGD rounds. Every `period` steps the
+//! nodes exact-average (all-reduce) and take a *slow* heavy-ball step in
+//! the averaged iterate:
+//!
+//!   u ← β_slow · u + (anchor − x̄)/γ_eff
+//!   x ← anchor − α_slow · γ_eff · u ;  anchor ← x
+//!
+//! with γ_eff the base LR at the sync step and α_slow = 1 (the paper's
+//! default). Aux buffers: [0] slow momentum u, [1] anchor.
+
+use super::{dmsgd::Dmsgd, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+pub struct SlowMo {
+    base: Dmsgd,
+    period: usize,
+    slow_beta: f32,
+    alpha: f32,
+}
+
+impl SlowMo {
+    pub fn new(period: usize, slow_beta: f32) -> SlowMo {
+        SlowMo { base: Dmsgd, period: period.max(1), slow_beta, alpha: 1.0 }
+    }
+}
+
+impl Optimizer for SlowMo {
+    fn name(&self) -> &'static str {
+        "slowmo"
+    }
+
+    fn aux_count(&self) -> usize {
+        2 // [u, anchor]
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: self.period }
+    }
+
+    fn round(
+        &mut self,
+        states: &mut [NodeState],
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+        scratch: &mut Scratch,
+    ) {
+        let d = states[0].x.len();
+        if ctx.step == 0 {
+            for st in states.iter_mut() {
+                let x = st.x.clone();
+                st.aux[1].copy_from_slice(&x); // anchor = x_0
+            }
+        }
+        self.base.round(states, grads, ctx, scratch);
+
+        if (ctx.step + 1) % self.period == 0 {
+            // Exact average of models (the periodic synchronization).
+            let xs: Vec<Vec<f32>> = states.iter().map(|s| s.x.clone()).collect();
+            super::global_average(&xs, &mut scratch.mixed);
+            let xbar = scratch.mixed[0].clone();
+            let gamma = ctx.lr.max(1e-8);
+            for st in states.iter_mut() {
+                for k in 0..d {
+                    let u = self.slow_beta * st.aux[0][k] + (st.aux[1][k] - xbar[k]) / gamma;
+                    st.aux[0][k] = u;
+                    let xk = st.aux[1][k] - self.alpha * gamma * u;
+                    st.x[k] = xk;
+                    st.aux[1][k] = xk; // new anchor
+                }
+                // Reset the fast momentum at sync (per the SlowMo paper's
+                // base-optimizer buffer reset variant).
+                st.m.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dsgd::tests::setup;
+    use super::*;
+
+    #[test]
+    fn sync_step_brings_exact_consensus() {
+        let (wm, _, mut scratch) = setup(4, 2);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|i| NodeState::new(vec![i as f32; 2], 2)).collect();
+        let grads = vec![vec![0.0f32; 2]; 4];
+        let mut o = SlowMo::new(2, 0.5);
+        for step in 0..2 {
+            let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step, time_varying: false, layer_ranges: &[] };
+            o.round(&mut states, &grads, &ctx, &mut scratch);
+        }
+        // After the sync at step 1 (period 2), all nodes share x exactly.
+        for st in &states[1..] {
+            assert_eq!(st.x, states[0].x);
+        }
+    }
+
+    #[test]
+    fn slow_momentum_zero_when_already_consensus() {
+        let (wm, _, mut scratch) = setup(4, 1);
+        let mut states: Vec<NodeState> =
+            (0..4).map(|_| NodeState::new(vec![5.0], 2)).collect();
+        let grads = vec![vec![0.0f32]; 4];
+        let mut o = SlowMo::new(1, 0.5);
+        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        for st in &states {
+            assert!((st.x[0] - 5.0).abs() < 1e-6);
+            assert!(st.aux[0][0].abs() < 1e-6, "u stays zero at consensus");
+        }
+    }
+}

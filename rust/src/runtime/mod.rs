@@ -1,0 +1,285 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Layer-3 hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), while the
+//! coordinator wants engine handles it can move across node contexts.
+//! We therefore run ONE runtime thread that owns the client and every
+//! compiled executable; [`RuntimeHandle`] (cheaply cloneable, `Send`)
+//! submits execute requests over a channel and blocks on the reply.
+//! XLA's CPU backend multithreads each execution internally, so the
+//! single service thread does not serialize away parallelism.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥0.5
+//! serialized protos use 64-bit ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub raw: Value,
+}
+
+/// Metadata for one model in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String,
+    pub dim: usize,
+    pub micro_batch: usize,
+    pub init_file: String,
+    pub layer_ranges: Vec<(usize, usize)>,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub eval_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Ok(Manifest { dir: dir.to_path_buf(), raw: Value::parse(&text)? })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .raw
+            .get("artifacts")?
+            .get(name)
+            .map_err(|_| anyhow!("artifact `{name}` not in manifest"))?
+            .get("file")?
+            .as_str()?
+            .to_string();
+        Ok(self.dir.join(file))
+    }
+
+    pub fn model(&self, name: &str) -> Result<ModelInfo> {
+        let m = self
+            .raw
+            .get("models")?
+            .get(name)
+            .map_err(|_| anyhow!("model `{name}` not in manifest"))?;
+        let ranges = m
+            .get("layer_ranges")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let pair = p.as_arr()?;
+                Ok((pair[0].as_usize()?, pair[1].as_usize()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let get_us = |k: &str| -> usize { m.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as usize };
+        Ok(ModelInfo {
+            name: name.to_string(),
+            kind: m.get("kind")?.as_str()?.to_string(),
+            dim: m.get("dim")?.as_usize()?,
+            micro_batch: get_us("micro_batch"),
+            init_file: m.get("init")?.as_str()?.to_string(),
+            layer_ranges: ranges,
+            input_dim: get_us("input_dim"),
+            num_classes: get_us("num_classes"),
+            eval_batch: get_us("eval_batch"),
+            seq_len: get_us("seq_len"),
+            vocab: get_us("vocab"),
+        })
+    }
+
+    /// Load a model's initial flat parameters (little-endian f32 .bin).
+    pub fn load_init(&self, info: &ModelInfo) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(&info.init_file))?;
+        if bytes.len() != info.dim * 4 {
+            bail!(
+                "init file {} has {} bytes, expected {}",
+                info.init_file,
+                bytes.len(),
+                info.dim * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// The decentlam-update kernel artifact name for a given dim, if any.
+    pub fn update_kernel_for_dim(&self, dim: usize) -> Option<String> {
+        let name = format!("decentlam_update_{dim}");
+        self.raw.opt("kernels").and_then(|k| k.opt(&name)).map(|_| name)
+    }
+}
+
+/// One input tensor for an execute request.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[i64]) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Tensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[i64]) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Tensor::I32 { data, shape: shape.to_vec() }
+    }
+}
+
+enum Request {
+    /// Compile the artifact at `path` under key `name` (idempotent).
+    Load { name: String, path: PathBuf, reply: mpsc::Sender<Result<()>> },
+    /// Execute artifact `name`; reply with the flattened f32 outputs.
+    Exec { name: String, inputs: Vec<Tensor>, reply: mpsc::Sender<Result<Vec<Vec<f32>>>> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the service thread; dropping shuts the runtime down.
+pub struct Runtime {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Start the PJRT CPU service thread.
+    pub fn start() -> Result<Runtime> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || service_loop(rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(Runtime { handle: RuntimeHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Compile an HLO-text artifact under `name` (no-op if loaded).
+    pub fn load(&self, name: &str, path: &Path) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load { name: name.to_string(), path: path.to_path_buf(), reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Load every artifact a manifest model needs.
+    pub fn load_artifact(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        self.load(name, &manifest.artifact_path(name)?)
+    }
+
+    /// Execute a loaded artifact. Outputs come back as flat f32 vectors
+    /// in artifact output order.
+    pub fn exec(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+}
+
+fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    Ok(match t {
+        Tensor::F32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+        Tensor::I32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+    })
+}
+
+fn service_loop(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Load { name, path, reply } => {
+                let r = (|| -> Result<()> {
+                    if execs.contains_key(&name) {
+                        return Ok(());
+                    }
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+                    execs.insert(name.clone(), exe);
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Exec { name, inputs, reply } => {
+                let r = (|| -> Result<Vec<Vec<f32>>> {
+                    let exe = execs
+                        .get(&name)
+                        .ok_or_else(|| anyhow!("artifact `{name}` not loaded"))?;
+                    let lits = inputs
+                        .iter()
+                        .map(literal_of)
+                        .collect::<Result<Vec<_>>>()?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow!("executing {name}: {e}"))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("readback {name}: {e}"))?;
+                    // aot.py lowers with return_tuple=True: always a tuple.
+                    let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+                    parts
+                        .into_iter()
+                        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+                        .collect()
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}

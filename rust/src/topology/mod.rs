@@ -1,0 +1,322 @@
+//! Network topologies and mixing-weight matrices (paper §3, App. G.3).
+//!
+//! A [`Topology`] is the undirected neighbor structure; [`weights`] turns
+//! it into a symmetric doubly-stochastic mixing matrix `W` (Assumption
+//! A.3) via the Metropolis–Hastings rule; [`spectral`] computes
+//! ρ = max(|λ₂|, |λₙ|), the connectivity constant in every bound.
+//!
+//! Static topologies: ring, mesh (2-D torus grid), fully-connected, star,
+//! symmetric exponential. Time-varying: one-peer exponential and
+//! bipartite random match regenerate each iteration from a shared seed
+//! (all nodes must draw the same graph — paper App. G.3 keeps "the same
+//! random seed in all nodes to avoid deadlocks").
+
+pub mod spectral;
+pub mod weights;
+
+use crate::util::rng::Pcg64;
+
+pub use spectral::rho;
+pub use weights::{metropolis_hastings, WeightMatrix};
+
+/// Topology kinds (paper Table 5 + App. G.3 + one-peer exp of Assran et al.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ring,
+    Mesh,
+    Full,
+    Star,
+    SymExp,
+    OnePeerExp,
+    BipartiteRandomMatch,
+    ErdosRenyi,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> anyhow::Result<Kind> {
+        Ok(match s {
+            "ring" => Kind::Ring,
+            "mesh" | "grid" => Kind::Mesh,
+            "full" | "all" => Kind::Full,
+            "star" => Kind::Star,
+            "sym-exp" | "exp" => Kind::SymExp,
+            "one-peer-exp" => Kind::OnePeerExp,
+            "bipartite" | "random-match" => Kind::BipartiteRandomMatch,
+            "erdos" | "er" => Kind::ErdosRenyi,
+            other => anyhow::bail!("unknown topology `{other}`"),
+        })
+    }
+
+    /// Does the neighbor structure change per iteration?
+    pub fn time_varying(self) -> bool {
+        matches!(self, Kind::OnePeerExp | Kind::BipartiteRandomMatch)
+    }
+}
+
+/// An undirected graph over `n` nodes, stored as sorted adjacency lists
+/// (NOT including self — self-loops are implicit in the weight matrix).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n: usize,
+    pub kind: Kind,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Build a static topology (panics if `kind.time_varying()` — use
+    /// [`Topology::at_step`] for those).
+    pub fn build(kind: Kind, n: usize) -> Topology {
+        assert!(!kind.time_varying(), "use at_step for time-varying kinds");
+        Self::construct(kind, n, 0, 0)
+    }
+
+    /// Realize the (possibly time-varying) topology at iteration `step`
+    /// with the experiment seed.
+    pub fn at_step(kind: Kind, n: usize, seed: u64, step: usize) -> Topology {
+        Self::construct(kind, n, seed, step)
+    }
+
+    fn construct(kind: Kind, n: usize, seed: u64, step: usize) -> Topology {
+        assert!(n >= 1);
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let connect = |a: usize, b: usize, adj: &mut Vec<Vec<usize>>| {
+            if a != b && !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        };
+        match kind {
+            Kind::Ring => {
+                for i in 0..n {
+                    connect(i, (i + 1) % n, &mut adj);
+                }
+            }
+            Kind::Mesh => {
+                // 2-D torus grid, rows x cols as square as possible.
+                let rows = (1..=n).rev().find(|r| n % r == 0 && *r * *r <= n).unwrap_or(1);
+                let cols = n / rows;
+                let id = |r: usize, c: usize| r * cols + c;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        if cols > 1 {
+                            connect(id(r, c), id(r, (c + 1) % cols), &mut adj);
+                        }
+                        if rows > 1 {
+                            connect(id(r, c), id((r + 1) % rows, c), &mut adj);
+                        }
+                    }
+                }
+            }
+            Kind::Full => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        connect(i, j, &mut adj);
+                    }
+                }
+            }
+            Kind::Star => {
+                for i in 1..n {
+                    connect(0, i, &mut adj);
+                }
+            }
+            Kind::SymExp => {
+                // Symmetric exponential graph (App. G.3): each node links
+                // to nodes at hop distances 1, 2, 4, ... (powers of two).
+                let mut hop = 1usize;
+                while hop < n {
+                    for i in 0..n {
+                        connect(i, (i + hop) % n, &mut adj);
+                    }
+                    hop *= 2;
+                }
+            }
+            Kind::OnePeerExp => {
+                // One-peer exponential: at step k every node talks to the
+                // single peer at hop 2^(k mod log2 n).
+                let stages = (usize::BITS - (n - 1).leading_zeros()) as usize;
+                let hop = 1usize << (step % stages.max(1));
+                for i in 0..n {
+                    connect(i, (i + hop) % n, &mut adj);
+                }
+            }
+            Kind::BipartiteRandomMatch => {
+                // Random perfect matching per step (shared seed).
+                let mut rng = Pcg64::new(seed ^ 0xb19a, step as u64);
+                let perm = rng.permutation(n);
+                for pair in perm.chunks(2) {
+                    if pair.len() == 2 {
+                        connect(pair[0], pair[1], &mut adj);
+                    }
+                }
+            }
+            Kind::ErdosRenyi => {
+                // p = 2 ln(n)/n, resampled until connected.
+                let mut attempt = 0u64;
+                loop {
+                    for a in adj.iter_mut() {
+                        a.clear();
+                    }
+                    let mut rng = Pcg64::new(seed ^ 0xe2d0, step as u64 * 1000 + attempt);
+                    let p = (2.0 * (n.max(2) as f64).ln() / n as f64).min(1.0);
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            if rng.f64() < p {
+                                connect(i, j, &mut adj);
+                            }
+                        }
+                    }
+                    let t = Topology { n, kind, adj: adj.clone() };
+                    if t.is_connected() || n <= 1 {
+                        break;
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        Topology { n, kind, adj }
+    }
+
+    /// Neighbors of `i` (excluding `i` itself).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of node `i` (excluding self).
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// Total undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check (Assumption A.3 requires strong
+    /// connectivity; for time-varying graphs connectivity holds over a
+    /// window rather than per step).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Symmetry invariant: j ∈ N(i) ⇔ i ∈ N(j).
+    pub fn is_symmetric(&self) -> bool {
+        (0..self.n).all(|i| self.adj[i].iter().all(|&j| self.adj[j].contains(&i)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KINDS: [Kind; 6] = [
+        Kind::Ring,
+        Kind::Mesh,
+        Kind::Full,
+        Kind::Star,
+        Kind::SymExp,
+        Kind::ErdosRenyi,
+    ];
+
+    #[test]
+    fn static_topologies_connected_and_symmetric() {
+        for kind in KINDS {
+            for n in [2, 3, 4, 8, 16, 12] {
+                let t = Topology::at_step(kind, n, 7, 0);
+                assert!(t.is_connected(), "{kind:?} n={n} disconnected");
+                assert!(t.is_symmetric(), "{kind:?} n={n} asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_degrees() {
+        let t = Topology::build(Kind::Ring, 8);
+        assert!((0..8).all(|i| t.degree(i) == 2));
+        assert_eq!(t.num_edges(), 8);
+    }
+
+    #[test]
+    fn sym_exp_degree_log_n() {
+        let t = Topology::build(Kind::SymExp, 8);
+        // hops 1,2,4 -> neighbors {±1, ±2, 4} = 5 per node
+        assert!((0..8).all(|i| t.degree(i) == 5), "{:?}", t.adj);
+    }
+
+    #[test]
+    fn star_center_hub() {
+        let t = Topology::build(Kind::Star, 8);
+        assert_eq!(t.degree(0), 7);
+        assert!((1..8).all(|i| t.degree(i) == 1));
+    }
+
+    #[test]
+    fn mesh_is_torus_grid() {
+        let t = Topology::build(Kind::Mesh, 8); // 2x4 torus
+        assert!(t.is_connected());
+        for i in 0..8 {
+            assert!(t.degree(i) >= 2 && t.degree(i) <= 4);
+        }
+    }
+
+    #[test]
+    fn bipartite_match_is_perfect_matching() {
+        for step in 0..20 {
+            let t = Topology::at_step(Kind::BipartiteRandomMatch, 8, 3, step);
+            assert!((0..8).all(|i| t.degree(i) == 1), "step {step}");
+        }
+    }
+
+    #[test]
+    fn bipartite_match_varies_and_is_seed_deterministic() {
+        let a = Topology::at_step(Kind::BipartiteRandomMatch, 8, 3, 0);
+        let b = Topology::at_step(Kind::BipartiteRandomMatch, 8, 3, 1);
+        let a2 = Topology::at_step(Kind::BipartiteRandomMatch, 8, 3, 0);
+        assert_eq!(a.adj, a2.adj);
+        assert_ne!(a.adj, b.adj);
+    }
+
+    #[test]
+    fn one_peer_exp_cycles_through_hops() {
+        let t0 = Topology::at_step(Kind::OnePeerExp, 8, 0, 0);
+        let t1 = Topology::at_step(Kind::OnePeerExp, 8, 0, 1);
+        let t2 = Topology::at_step(Kind::OnePeerExp, 8, 0, 2);
+        assert!(t0.adj[0].contains(&1));
+        assert!(t1.adj[0].contains(&2));
+        assert!(t2.adj[0].contains(&4));
+        // union over one period is the symmetric exponential graph
+        let t3 = Topology::at_step(Kind::OnePeerExp, 8, 0, 3);
+        assert_eq!(t3.adj, t0.adj);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(Kind::parse("ring").unwrap(), Kind::Ring);
+        assert_eq!(Kind::parse("sym-exp").unwrap(), Kind::SymExp);
+        assert!(Kind::parse("moebius").is_err());
+        assert!(Kind::BipartiteRandomMatch.time_varying());
+        assert!(!Kind::Ring.time_varying());
+    }
+}

@@ -1,0 +1,88 @@
+//! Spectral analysis of mixing matrices: ρ = max(|λ₂|, |λₙ|) (paper
+//! App. A, eq. (28)) — the constant every convergence bound depends on.
+
+use super::weights::WeightMatrix;
+
+/// ρ(W) = ‖W − 11ᵀ/n‖₂ = max(|λ₂|, |λₙ|) for symmetric doubly-stochastic W.
+pub fn rho(w: &WeightMatrix) -> f64 {
+    let ev = w.eigenvalues();
+    let n = ev.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    // ev ascending: λn = ev[0], λ2 = ev[n-2] (λ1 = ev[n-1] = 1).
+    ev[0].abs().max(ev[n - 2].abs())
+}
+
+/// Spectral gap 1 − ρ.
+pub fn spectral_gap(w: &WeightMatrix) -> f64 {
+    1.0 - rho(w)
+}
+
+/// Iterations for gossip averaging to contract consensus error by `eps`
+/// (diagnostic: k ≈ ln(1/eps) / ln(1/ρ)).
+pub fn mixing_time(w: &WeightMatrix, eps: f64) -> f64 {
+    let r = rho(w);
+    if r <= 0.0 {
+        return 1.0;
+    }
+    (1.0 / eps).ln() / (1.0 / r).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology};
+
+    fn rho_of(kind: Kind, n: usize) -> f64 {
+        rho(&metropolis_hastings(&Topology::build(kind, n)))
+    }
+
+    #[test]
+    fn full_graph_mixes_instantly() {
+        // MH on the complete graph gives W = 11ᵀ/n exactly -> ρ = 0.
+        assert!(rho_of(Kind::Full, 8) < 1e-9);
+    }
+
+    #[test]
+    fn denser_graphs_mix_faster() {
+        let ring = rho_of(Kind::Ring, 16);
+        let mesh = rho_of(Kind::Mesh, 16);
+        let exp = rho_of(Kind::SymExp, 16);
+        let full = rho_of(Kind::Full, 16);
+        assert!(full < exp && exp < mesh && mesh < ring, "{full} {exp} {mesh} {ring}");
+        assert!(ring < 1.0);
+    }
+
+    #[test]
+    fn rho_grows_with_ring_size() {
+        assert!(rho_of(Kind::Ring, 32) > rho_of(Kind::Ring, 8));
+    }
+
+    #[test]
+    fn ring4_rho_matches_closed_form() {
+        // Ring n=4 MH: circulant with first row [1/3,1/3,0,1/3];
+        // eigenvalues 1, 1/3·(1+2cos(πk/2))... compute directly: 1, 1/3, -1/3, 1/3.
+        let r = rho_of(Kind::Ring, 4);
+        assert!((r - 1.0 / 3.0).abs() < 1e-9, "rho={r}");
+    }
+
+    #[test]
+    fn gossip_contracts_at_rho() {
+        // Empirically verify ‖(W − R)x‖ <= ρ‖x‖ on mean-zero vectors.
+        let w = metropolis_hastings(&Topology::build(Kind::Ring, 8));
+        let r = rho(&w);
+        let x: Vec<f64> = (0..8).map(|i| i as f64 - 3.5).collect();
+        let wx = w.dense.matvec(&x);
+        let mean: f64 = wx.iter().sum::<f64>() / 8.0;
+        let centered: f64 = wx.iter().map(|v| (v - mean).powi(2)).sum::<f64>().sqrt();
+        let x_norm: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(centered <= r * x_norm + 1e-9);
+    }
+
+    #[test]
+    fn mixing_time_monotone_in_eps() {
+        let w = metropolis_hastings(&Topology::build(Kind::Ring, 8));
+        assert!(mixing_time(&w, 1e-6) > mixing_time(&w, 1e-2));
+    }
+}

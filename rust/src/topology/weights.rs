@@ -1,0 +1,198 @@
+//! Mixing-weight matrices over a topology (paper eq. (2), Assumption A.3).
+//!
+//! The Metropolis–Hastings rule ([Sayed 2014, Table 14.1], the paper's
+//! choice in App. G.2/G.3) produces a symmetric doubly-stochastic `W`
+//! for any undirected graph:
+//!
+//!   w_ij = 1 / (1 + max(deg_i, deg_j))   for j ∈ N(i), j ≠ i
+//!   w_ii = 1 − Σ_{j≠i} w_ij
+//!
+//! `lazy` mixing W' = (I + W)/2 shifts the spectrum into (0, 1], giving
+//! the positive-definite matrix Theorem 1 assumes (ablation `--pd`).
+
+use crate::util::math::SymMatrix;
+
+use super::Topology;
+
+/// A dense symmetric mixing matrix plus per-node sparse views.
+#[derive(Debug, Clone)]
+pub struct WeightMatrix {
+    pub n: usize,
+    /// Dense row-major weights (n x n), kept in f64 for spectral math.
+    pub dense: SymMatrix,
+    /// Per node: (neighbor index including self, weight), sorted.
+    rows: Vec<Vec<(usize, f32)>>,
+}
+
+impl WeightMatrix {
+    fn from_dense(dense: SymMatrix) -> WeightMatrix {
+        let n = dense.n;
+        let rows = (0..n)
+            .map(|i| {
+                (0..n)
+                    .filter(|&j| dense.get(i, j) != 0.0)
+                    .map(|j| (j, dense.get(i, j) as f32))
+                    .collect()
+            })
+            .collect();
+        WeightMatrix { n, dense, rows }
+    }
+
+    /// Sparse row for node `i`: (j, w_ij) with w_ij > 0, includes self.
+    pub fn row(&self, i: usize) -> &[(usize, f32)] {
+        &self.rows[i]
+    }
+
+    /// Self weight w_ii.
+    pub fn self_weight(&self, i: usize) -> f32 {
+        self.dense.get(i, i) as f32
+    }
+
+    /// Max |row sum − 1| (doubly-stochastic check; symmetry makes column
+    /// sums equal row sums).
+    pub fn stochasticity_error(&self) -> f64 {
+        (0..self.n)
+            .map(|i| {
+                let s: f64 = (0..self.n).map(|j| self.dense.get(i, j)).sum();
+                (s - 1.0).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// All eigenvalues (ascending).
+    pub fn eigenvalues(&self) -> Vec<f64> {
+        self.dense.eigenvalues()
+    }
+
+    /// Is every eigenvalue positive (Theorem 1's restriction)?
+    pub fn is_positive_definite(&self) -> bool {
+        self.eigenvalues().iter().all(|&l| l > 1e-12)
+    }
+
+    /// Lazy (half-identity) version: (I + W)/2, positive-definite.
+    pub fn lazy(&self) -> WeightMatrix {
+        let mut d = SymMatrix::zeros(self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                let mut v = self.dense.get(i, j) / 2.0;
+                if i == j {
+                    v += 0.5;
+                }
+                if v != 0.0 {
+                    d.set(i, j, v);
+                }
+            }
+        }
+        WeightMatrix::from_dense(d)
+    }
+
+    /// Uniform global-average matrix (PmSGD's implicit W = 11ᵀ/n).
+    pub fn global_average(n: usize) -> WeightMatrix {
+        let mut d = SymMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, 1.0 / n as f64);
+            }
+        }
+        WeightMatrix::from_dense(d)
+    }
+}
+
+/// Metropolis–Hastings weights for a topology.
+pub fn metropolis_hastings(topo: &Topology) -> WeightMatrix {
+    let n = topo.n;
+    let mut d = SymMatrix::zeros(n);
+    for i in 0..n {
+        for &j in topo.neighbors(i) {
+            if j > i {
+                let w = 1.0 / (1.0 + topo.degree(i).max(topo.degree(j)) as f64);
+                d.set(i, j, w);
+            }
+        }
+    }
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| d.get(i, j)).sum();
+        d.set(i, i, 1.0 - off);
+    }
+    WeightMatrix::from_dense(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Kind;
+
+    fn all_kinds_n8() -> Vec<WeightMatrix> {
+        [Kind::Ring, Kind::Mesh, Kind::Full, Kind::Star, Kind::SymExp]
+            .iter()
+            .map(|&k| metropolis_hastings(&Topology::build(k, 8)))
+            .collect()
+    }
+
+    #[test]
+    fn doubly_stochastic_and_symmetric() {
+        for w in all_kinds_n8() {
+            assert!(w.stochasticity_error() < 1e-12);
+            assert!(w.dense.asymmetry() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn weights_nonnegative_with_positive_diagonal() {
+        for w in all_kinds_n8() {
+            for i in 0..w.n {
+                assert!(w.self_weight(i) > 0.0, "w_ii must be > 0");
+                for &(_, wij) in w.row(i) {
+                    assert!(wij >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_include_self_and_match_dense() {
+        let w = metropolis_hastings(&Topology::build(Kind::Ring, 6));
+        for i in 0..6 {
+            assert!(w.row(i).iter().any(|&(j, _)| j == i));
+            let s: f32 = w.row(i).iter().map(|&(_, v)| v).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top_eigenvalue_is_one() {
+        for w in all_kinds_n8() {
+            let ev = w.eigenvalues();
+            assert!((ev.last().unwrap() - 1.0).abs() < 1e-9);
+            assert!(ev[0] > -1.0 + 1e-9, "spectrum in (-1, 1]");
+        }
+    }
+
+    #[test]
+    fn lazy_is_positive_definite() {
+        let w = metropolis_hastings(&Topology::build(Kind::Ring, 8));
+        let lz = w.lazy();
+        assert!(lz.is_positive_definite());
+        assert!(lz.stochasticity_error() < 1e-12);
+        // Lazy matrix halves the gossip strength but keeps the fixed point.
+        assert!((lz.dense.get(0, 0) - (0.5 + w.dense.get(0, 0) / 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_average_matrix() {
+        let w = WeightMatrix::global_average(4);
+        assert!(w.stochasticity_error() < 1e-12);
+        assert_eq!(w.row(0).len(), 4);
+        let ev = w.eigenvalues();
+        // eigenvalues: 1 with multiplicity 1, 0 with multiplicity n-1
+        assert!((ev[3] - 1.0).abs() < 1e-9 && ev[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_mh_matches_hand_computation() {
+        // Ring n=4: every degree 2 -> off-diag 1/3, diag 1/3.
+        let w = metropolis_hastings(&Topology::build(Kind::Ring, 4));
+        assert!((w.dense.get(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((w.dense.get(0, 0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

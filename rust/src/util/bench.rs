@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (no `criterion` offline): warmup + timed
+//! iterations, robust statistics, throughput reporting. Used by every
+//! target in `rust/benches/` (all declared `harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional bytes processed per iteration (enables GB/s reporting).
+    pub bytes_per_iter: Option<f64>,
+    /// Optional "items" per iteration (params, requests, ...).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn gibps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b / self.mean_ns * 1e9 / (1024.0 * 1024.0 * 1024.0))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12}   median {:>12}   p10..p90 [{} .. {}]",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+        );
+        if let Some(g) = self.gibps() {
+            s.push_str(&format!("   {g:.2} GiB/s"));
+        }
+        if let Some(items) = self.items_per_iter {
+            let per = self.mean_ns / items;
+            s.push_str(&format!("   {per:.2} ns/item"));
+        }
+        s
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: calibrates iteration count to `target_time`, then
+/// collects `samples` batches and reports robust percentiles.
+pub struct Bench {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // CLI/env escape hatch for CI: DECENTLAM_BENCH_FAST=1 shrinks runs.
+        let fast = std::env::var("DECENTLAM_BENCH_FAST").is_ok();
+        Bench {
+            warmup: Duration::from_millis(if fast { 20 } else { 150 }),
+            target_time: Duration::from_millis(if fast { 60 } else { 400 }),
+            samples: if fast { 8 } else { 20 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.case_full(name, None, None, &mut f)
+    }
+
+    /// Time with a bytes-per-iteration annotation (GB/s reporting).
+    pub fn case_bytes<F: FnMut()>(&mut self, name: &str, bytes: f64, mut f: F) -> &Measurement {
+        self.case_full(name, Some(bytes), None, &mut f)
+    }
+
+    /// Time with an items-per-iteration annotation (ns/item reporting).
+    pub fn case_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &Measurement {
+        self.case_full(name, None, Some(items), &mut f)
+    }
+
+    fn case_full(
+        &mut self,
+        name: &str,
+        bytes: Option<f64>,
+        items: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // Warmup + calibration.
+        let start = Instant::now();
+        let mut calib_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let batch = ((self.target_time.as_secs_f64() / self.samples as f64) / per_iter)
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            sample_ns.push(ns);
+            total_iters += batch;
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| sample_ns[((sample_ns.len() - 1) as f64 * q).round() as usize];
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: pick(0.5),
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+            bytes_per_iter: bytes,
+            items_per_iter: items,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Re-export of `black_box` so bench targets only import this module.
+#[inline]
+pub fn opaque<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("DECENTLAM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let m = b.case("noop-ish", || {
+            acc = opaque(acc.wrapping_add(1));
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p10_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn gibps_annotation() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p10_ns: 1e9,
+            p90_ns: 1e9,
+            bytes_per_iter: Some((1024 * 1024 * 1024) as f64),
+            items_per_iter: None,
+        };
+        assert!((m.gibps().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (no `clap` offline): `--key value`,
+//! `--key=value` and bare positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: positionals + `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    // bare boolean flag
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.get_f64(key, default as f64)? as f32)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NOTE: a bare `--flag` followed by a non-flag token consumes it
+        // as the flag's value (documented greedy rule); bare booleans must
+        // come last or use `--flag=true`.
+        let a = parse("table3 run --nodes 8 --beta=0.9 --verbose");
+        assert_eq!(a.positional, vec!["table3", "run"]);
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 8);
+        assert_eq!(a.get_f64("beta", 0.0).unwrap(), 0.9);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_str("name", "d"), "d");
+        assert!(!a.get_bool("nope"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("--nodes eight");
+        assert!(a.get_usize("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn negative_values_via_equals() {
+        let a = parse("--offset=-3.5");
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -3.5);
+    }
+}

@@ -1,0 +1,320 @@
+//! Experiment configuration: typed struct + JSON file loading + CLI
+//! overrides (`--key value`). Every launcher entry point (`decentlam`
+//! binary, examples, benches) builds one of these.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::cli::Args;
+use super::json::Value;
+
+/// Learning-rate schedule, following the paper's §7.1 protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Constant learning rate (the theory sections / bias experiments).
+    Constant,
+    /// Linear warmup for `warmup_steps`, then ×0.1 decays at the given
+    /// step milestones (the small-batch protocol of Goyal et al.).
+    WarmupStep { warmup_steps: usize, milestones: Vec<usize> },
+    /// Linear warmup then cosine annealing to zero over `total_steps`
+    /// (the large-batch protocol of You et al.).
+    WarmupCosine { warmup_steps: usize, total_steps: usize },
+}
+
+impl LrSchedule {
+    /// Multiplier applied to the base LR at step `k`.
+    pub fn factor(&self, k: usize) -> f64 {
+        match self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::WarmupStep { warmup_steps, milestones } => {
+                if k < *warmup_steps {
+                    (k + 1) as f64 / *warmup_steps as f64
+                } else {
+                    let hits = milestones.iter().filter(|&&m| k >= m).count() as i32;
+                    0.1f64.powi(hits)
+                }
+            }
+            LrSchedule::WarmupCosine { warmup_steps, total_steps } => {
+                if k < *warmup_steps {
+                    (k + 1) as f64 / *warmup_steps as f64
+                } else {
+                    let t = (k - warmup_steps) as f64
+                        / (total_steps.saturating_sub(*warmup_steps)).max(1) as f64;
+                    0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos())
+                }
+            }
+        }
+    }
+}
+
+/// One experiment run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of computing nodes n.
+    pub nodes: usize,
+    /// Topology name: ring | mesh | full | star | sym-exp | one-peer-exp |
+    /// bipartite | erdos.
+    pub topology: String,
+    /// Optimizer: decentlam | dmsgd | dsgd | pmsgd | pmsgd-lars |
+    /// da-dmsgd | awc-dmsgd | slowmo | qg-dmsgd | d2-dmsgd.
+    pub optimizer: String,
+    /// Model name from the AOT manifest ("native-logreg"/"native-mlp" use
+    /// the in-crate gradient engines instead of PJRT).
+    pub model: String,
+    /// TOTAL batch per iteration, across all nodes. Realized as per-node
+    /// micro-batches × gradient accumulation (DESIGN.md §2).
+    pub total_batch: usize,
+    /// Micro-batch per node per gradient evaluation.
+    pub micro_batch: usize,
+    /// Training steps (outer iterations).
+    pub steps: usize,
+    /// Base learning rate, linearly scaled by total batch (paper §7.1)
+    /// when `linear_scaling` is set.
+    pub lr: f64,
+    pub linear_scaling: bool,
+    /// Reference batch for linear scaling (lr_effective = lr * B/B_ref).
+    pub lr_ref_batch: usize,
+    /// Cap on the linear-scaling factor (Goyal et al. note linear scaling
+    /// breaks past a point; our synthetic task destabilizes above ~8x).
+    pub max_lr_scale: f64,
+    pub momentum: f64,
+    pub schedule: LrSchedule,
+    /// Dirichlet concentration controlling inter-node heterogeneity
+    /// (small = heterogeneous; the paper's b² knob).
+    pub dirichlet_alpha: f64,
+    pub seed: u64,
+    /// Directory with AOT artifacts.
+    pub artifacts: String,
+    /// SlowMo sync period (steps) and slow-momentum coefficient.
+    pub slowmo_period: usize,
+    pub slowmo_beta: f64,
+    /// Use positive-definite (lazy) Metropolis weights (Thm. 1 ablation).
+    pub positive_definite: bool,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Number of worker threads for the gradient phase (0 = nodes).
+    pub threads: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            nodes: 8,
+            topology: "sym-exp".into(),
+            optimizer: "decentlam".into(),
+            model: "native-mlp".into(),
+            total_batch: 512,
+            micro_batch: 64,
+            steps: 300,
+            lr: 0.1,
+            linear_scaling: true,
+            lr_ref_batch: 256,
+            max_lr_scale: 8.0,
+            momentum: 0.9,
+            schedule: LrSchedule::WarmupStep { warmup_steps: 20, milestones: vec![150, 250] },
+            dirichlet_alpha: 0.3,
+            seed: 1,
+            artifacts: "artifacts".into(),
+            slowmo_period: 12,
+            slowmo_beta: 0.7,
+            positive_definite: false,
+            eval_every: 0,
+            threads: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Effective base LR after linear scaling.
+    pub fn scaled_lr(&self) -> f64 {
+        if self.linear_scaling {
+            let scale =
+                (self.total_batch as f64 / self.lr_ref_batch as f64).min(self.max_lr_scale);
+            self.lr * scale
+        } else {
+            self.lr
+        }
+    }
+
+    /// LR at step k.
+    pub fn lr_at(&self, k: usize) -> f32 {
+        (self.scaled_lr() * self.schedule.factor(k)) as f32
+    }
+
+    /// Gradient-accumulation micro-steps per node per iteration.
+    pub fn accum_steps(&self) -> usize {
+        let per_node = (self.total_batch + self.nodes - 1) / self.nodes;
+        ((per_node + self.micro_batch - 1) / self.micro_batch).max(1)
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        for (k, v) in &args.flags {
+            self.apply_kv(k, v)
+                .with_context(|| format!("applying --{k} {v}"))?;
+        }
+        Ok(())
+    }
+
+    /// Set one field by name.
+    pub fn apply_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "nodes" => self.nodes = v.parse()?,
+            "topology" => self.topology = v.into(),
+            "optimizer" | "opt" => self.optimizer = v.into(),
+            "model" => self.model = v.into(),
+            "total-batch" | "batch" => self.total_batch = v.parse()?,
+            "micro-batch" => self.micro_batch = v.parse()?,
+            "steps" => self.steps = v.parse()?,
+            "lr" => self.lr = v.parse()?,
+            "linear-scaling" => self.linear_scaling = v.parse()?,
+            "lr-ref-batch" => self.lr_ref_batch = v.parse()?,
+            "max-lr-scale" => self.max_lr_scale = v.parse()?,
+            "momentum" | "beta" => self.momentum = v.parse()?,
+            "schedule" => {
+                self.schedule = match v {
+                    "constant" => LrSchedule::Constant,
+                    "warmup-step" => LrSchedule::WarmupStep {
+                        warmup_steps: self.steps / 20,
+                        milestones: vec![self.steps / 3, 2 * self.steps / 3],
+                    },
+                    "warmup-cosine" => LrSchedule::WarmupCosine {
+                        warmup_steps: self.steps / 6,
+                        total_steps: self.steps,
+                    },
+                    other => bail!("unknown schedule `{other}`"),
+                }
+            }
+            "alpha" | "dirichlet-alpha" => self.dirichlet_alpha = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "artifacts" => self.artifacts = v.into(),
+            "slowmo-period" => self.slowmo_period = v.parse()?,
+            "slowmo-beta" => self.slowmo_beta = v.parse()?,
+            "positive-definite" | "pd" => self.positive_definite = v.parse()?,
+            "eval-every" => self.eval_every = v.parse()?,
+            "threads" => self.threads = v.parse()?,
+            "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON config file, then CLI args on top.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text)?;
+        let mut cfg = Config::default();
+        for (k, val) in v.as_obj()? {
+            let s = match val {
+                Value::Str(s) => s.clone(),
+                Value::Num(x) => {
+                    if x.fract() == 0.0 {
+                        format!("{}", *x as i64)
+                    } else {
+                        format!("{x}")
+                    }
+                }
+                Value::Bool(b) => format!("{b}"),
+                _ => bail!("config key `{k}` must be scalar"),
+            };
+            cfg.apply_kv(k, &s)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Build from CLI (optionally `--config file.json` first).
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let mut cfg = match args.get("config") {
+            Some(p) => Config::load(Path::new(p))?,
+            None => Config::default(),
+        };
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.nodes, 8);
+        assert!(c.accum_steps() >= 1);
+    }
+
+    #[test]
+    fn linear_scaling_math() {
+        let mut c = Config::default();
+        c.lr = 0.1;
+        c.lr_ref_batch = 256;
+        c.total_batch = 1024;
+        assert!((c.scaled_lr() - 0.4).abs() < 1e-12);
+        c.linear_scaling = false;
+        assert!((c.scaled_lr() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_steps_covers_total_batch() {
+        let mut c = Config::default();
+        c.nodes = 8;
+        c.micro_batch = 64;
+        for tb in [64, 512, 513, 4096] {
+            c.total_batch = tb;
+            let per_node_capacity = c.accum_steps() * c.micro_batch * c.nodes;
+            assert!(per_node_capacity >= tb, "tb={tb}");
+        }
+    }
+
+    #[test]
+    fn warmup_step_schedule() {
+        let s = LrSchedule::WarmupStep { warmup_steps: 10, milestones: vec![100, 200] };
+        assert!(s.factor(0) < s.factor(5));
+        assert!((s.factor(9) - 1.0).abs() < 1e-12);
+        assert!((s.factor(50) - 1.0).abs() < 1e-12);
+        assert!((s.factor(150) - 0.1).abs() < 1e-12);
+        assert!((s.factor(250) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_cosine_schedule() {
+        let s = LrSchedule::WarmupCosine { warmup_steps: 10, total_steps: 110 };
+        assert!((s.factor(9) - 1.0).abs() < 1e-12);
+        assert!(s.factor(60) < 1.0 && s.factor(60) > 0.0);
+        assert!(s.factor(109) < 0.01);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["--nodes", "4", "--beta", "0.95", "--topology", "ring"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.momentum, 0.95);
+        assert_eq!(cfg.topology, "ring");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.apply_kv("warp-drive", "on").is_err());
+    }
+
+    #[test]
+    fn json_config_file() {
+        let dir = std::env::temp_dir().join("decentlam_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"nodes": 16, "optimizer": "dmsgd", "lr": 0.05}"#).unwrap();
+        let cfg = Config::load(&p).unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert_eq!(cfg.optimizer, "dmsgd");
+        assert!((cfg.lr - 0.05).abs() < 1e-12);
+    }
+}

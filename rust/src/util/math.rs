@@ -1,0 +1,301 @@
+//! Flat-vector and small dense-matrix math.
+//!
+//! The decentralized update rules operate on flat `f32` parameter
+//! vectors (mirroring the Layer-2 flat-theta convention); the topology
+//! analysis needs a symmetric eigensolver for the mixing matrix `W`
+//! (n x n with n = node count, so a classic cyclic Jacobi is plenty).
+
+/// y += a * x  (the hot op of every optimizer update).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * x + b * y.
+#[inline]
+pub fn axpby(y: &mut [f32], a: f32, x: &[f32], b: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Dot product (f64 accumulator for stability over millions of params).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared distance between two vectors.
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// out = Σ_t w_t · x_t, fusing terms pairwise so the destination is
+/// traversed ~(1 + k/2) times instead of (k+1) — the gossip hot path
+/// (`optim::partial_average_all`) is memory-bound and this halves its
+/// traffic for typical degrees (EXPERIMENTS.md §Perf).
+pub fn weighted_sum_into(out: &mut [f32], terms: &[(f32, &[f32])]) {
+    let d = out.len();
+    match terms {
+        [] => out.iter_mut().for_each(|v| *v = 0.0),
+        [(w0, x0), rest @ ..] => {
+            debug_assert_eq!(x0.len(), d);
+            for (o, &x) in out.iter_mut().zip(*x0) {
+                *o = w0 * x;
+            }
+            let mut it = rest.chunks_exact(2);
+            for pair in &mut it {
+                let (wa, xa) = pair[0];
+                let (wb, xb) = pair[1];
+                debug_assert_eq!(xa.len(), d);
+                debug_assert_eq!(xb.len(), d);
+                for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                    *o += wa * a + wb * b;
+                }
+            }
+            if let [(w, x)] = it.remainder() {
+                axpy(out, *w, x);
+            }
+        }
+    }
+}
+
+/// Elementwise mean of many equal-length vectors.
+pub fn mean_of(vectors: &[&[f32]]) -> Vec<f32> {
+    let n = vectors.len();
+    assert!(n > 0);
+    let d = vectors[0].len();
+    let mut out = vec![0.0f32; d];
+    for v in vectors {
+        axpy(&mut out, 1.0, v);
+    }
+    scale(&mut out, 1.0 / n as f32);
+    out
+}
+
+/// Dense row-major symmetric matrix of f64 (sized by node count).
+#[derive(Clone, Debug)]
+pub struct SymMatrix {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SymMatrix {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, a: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+        self.a[j * self.n + i] = v;
+    }
+
+    /// Max absolute asymmetry (diagnostic).
+    pub fn asymmetry(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                m = m.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        m
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = &self.a[i * n..(i + 1) * n];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    /// All eigenvalues via cyclic Jacobi (symmetric input), ascending.
+    pub fn eigenvalues(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut a = self.a.clone();
+        let idx = |i: usize, j: usize| i * n + j;
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[idx(i, j)] * a[idx(i, j)];
+                }
+            }
+            if off < 1e-24 {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a[idx(p, q)];
+                    if apq.abs() < 1e-18 {
+                        continue;
+                    }
+                    let app = a[idx(p, p)];
+                    let aqq = a[idx(q, q)];
+                    let theta = (aqq - app) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[idx(k, p)];
+                        let akq = a[idx(k, q)];
+                        a[idx(k, p)] = c * akp - s * akq;
+                        a[idx(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[idx(p, k)];
+                        let aqk = a[idx(q, k)];
+                        a[idx(p, k)] = c * apk - s * aqk;
+                        a[idx(q, k)] = s * apk + c * aqk;
+                    }
+                }
+            }
+        }
+        let mut ev: Vec<f64> = (0..n).map(|i| a[idx(i, i)]).collect();
+        ev.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        ev
+    }
+}
+
+/// Least-squares slope of y over x (used by Table 2 to fit the empirical
+/// bias-scaling exponents in log–log space).
+pub fn linfit_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_axpby_scale() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        axpby(&mut y, 1.0, &[1.0, 0.0, 0.0], 0.5);
+        assert_eq!(y, vec![2.5, 2.0, 2.5]);
+        scale(&mut y, 2.0);
+        assert_eq!(y, vec![5.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn norms_and_distances() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dist2(&[1.0, 1.0], &[0.0, 0.0]) - 2.0).abs() < 1e-12);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_sum_matches_axpy_reference() {
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        for k in 0..7 {
+            let d = 37;
+            let xs: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = vec![0.0f32; d];
+                    rng.normal_fill(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let ws: Vec<f32> = (0..k).map(|_| rng.f32() - 0.3).collect();
+            let terms: Vec<(f32, &[f32])> =
+                ws.iter().cloned().zip(xs.iter().map(|v| v.as_slice())).collect();
+            let mut got = vec![7.0f32; d]; // junk: must be overwritten
+            weighted_sum_into(&mut got, &terms);
+            let mut want = vec![0.0f32; d];
+            for (w, x) in &terms {
+                axpy(&mut want, *w, x);
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![2.0f32, 4.0];
+        assert_eq!(mean_of(&[&a, &b]), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn jacobi_on_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3.
+        let mut m = SymMatrix::zeros(2);
+        m.set(0, 0, 2.0);
+        m.set(1, 1, 2.0);
+        m.set(0, 1, 1.0);
+        let ev = m.eigenvalues();
+        assert!((ev[0] - 1.0).abs() < 1e-10);
+        assert!((ev[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        let n = 8;
+        let mut m = SymMatrix::zeros(n);
+        let mut seed = 1u64;
+        for i in 0..n {
+            for j in i..n {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v = ((seed >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+                m.set(i, j, v);
+            }
+        }
+        let trace: f64 = (0..n).map(|i| m.get(i, i)).sum();
+        let ev_sum: f64 = m.eigenvalues().iter().sum();
+        assert!((trace - ev_sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn slope_of_exact_line() {
+        let x = vec![0.0, 1.0, 2.0, 3.0];
+        let y = vec![1.0, 3.0, 5.0, 7.0];
+        assert!((linfit_slope(&x, &y) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-tree (the offline registry has no `rand`,
+//! `serde`, `clap`, or `criterion` — see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod table;

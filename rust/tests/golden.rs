@@ -1,0 +1,99 @@
+//! Golden-vector cross-layer tests: replay the oracle evaluations that
+//! `python/compile/aot.py` serialized into `artifacts/golden.json`
+//! against the native Rust implementations — one source of truth across
+//! Pallas kernel (L1), jnp oracle (L2) and Rust fast path (L3).
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::Path;
+
+use decentlam::optim::decentlam::fused_apply;
+use decentlam::util::json::Value;
+
+fn load_golden() -> Option<Value> {
+    let path = Path::new("artifacts/golden.json");
+    if !path.exists() {
+        eprintln!("skipping golden tests: artifacts/golden.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Value::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+#[test]
+fn native_fused_apply_matches_pallas_oracle() {
+    let Some(g) = load_golden() else { return };
+    let u = g.get("decentlam_update").unwrap();
+    let k = u.get("k").unwrap().as_usize().unwrap();
+    let d = u.get("d").unwrap().as_usize().unwrap();
+    let z = u.get("z").unwrap().as_f32_vec().unwrap();
+    let w = u.get("w").unwrap().as_f32_vec().unwrap();
+    let mut x = u.get("x").unwrap().as_f32_vec().unwrap();
+    let mut m = u.get("m").unwrap().as_f32_vec().unwrap();
+    let gamma = u.get("gamma").unwrap().as_f64().unwrap() as f32;
+    let beta = u.get("beta").unwrap().as_f64().unwrap() as f32;
+    let x_want = u.get("x_new").unwrap().as_f32_vec().unwrap();
+    let m_want = u.get("m_new").unwrap().as_f32_vec().unwrap();
+
+    // mix = w^T z (the partial-averaging step the kernel fuses).
+    let mut mix = vec![0.0f32; d];
+    for kk in 0..k {
+        for j in 0..d {
+            mix[j] += w[kk] * z[kk * d + j];
+        }
+    }
+    fused_apply(&mut x, &mut m, &mix, gamma, beta);
+    for j in 0..d {
+        assert!(
+            (x[j] - x_want[j]).abs() < 1e-4,
+            "x[{j}]: rust {} vs oracle {}",
+            x[j],
+            x_want[j]
+        );
+        assert!(
+            (m[j] - m_want[j]).abs() < 1e-3,
+            "m[{j}]: rust {} vs oracle {}",
+            m[j],
+            m_want[j]
+        );
+    }
+}
+
+#[test]
+fn native_partial_average_matches_oracle() {
+    let Some(g) = load_golden() else { return };
+    let u = g.get("decentlam_update").unwrap();
+    let k = u.get("k").unwrap().as_usize().unwrap();
+    let d = u.get("d").unwrap().as_usize().unwrap();
+    let z = u.get("z").unwrap().as_f32_vec().unwrap();
+    let w = u.get("w").unwrap().as_f32_vec().unwrap();
+    let want = g
+        .get("partial_average")
+        .unwrap()
+        .get("mix")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap();
+    let mut mix = vec![0.0f32; d];
+    for kk in 0..k {
+        for j in 0..d {
+            mix[j] += w[kk] * z[kk * d + j];
+        }
+    }
+    for j in 0..d {
+        assert!((mix[j] - want[j]).abs() < 1e-5, "mix[{j}]");
+    }
+}
+
+#[test]
+fn golden_weights_are_stochastic() {
+    let Some(g) = load_golden() else { return };
+    let w = g
+        .get("decentlam_update")
+        .unwrap()
+        .get("w")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap();
+    let s: f32 = w.iter().sum();
+    assert!((s - 1.0).abs() < 1e-5);
+}

@@ -1,0 +1,244 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! mixing, batching, state management) using the in-tree `prop` harness
+//! (proptest substitute — see DESIGN.md §2).
+
+use decentlam::optim::{self, partial_average_all, NodeState, RoundCtx, Scratch};
+use decentlam::prop::{check, gens};
+use decentlam::topology::{metropolis_hastings, rho, Kind, Topology};
+use decentlam::util::math;
+use decentlam::util::rng::Pcg64;
+
+const STATIC_KINDS: [Kind; 5] =
+    [Kind::Ring, Kind::Mesh, Kind::Full, Kind::Star, Kind::SymExp];
+
+fn random_kind(rng: &mut Pcg64) -> Kind {
+    STATIC_KINDS[rng.below(STATIC_KINDS.len())]
+}
+
+#[test]
+fn prop_metropolis_weights_doubly_stochastic_any_graph() {
+    check(
+        "MH weights are symmetric doubly stochastic on any topology",
+        60,
+        |rng| (random_kind(rng), gens::nodes(rng)),
+        |&(kind, n)| {
+            let wm = metropolis_hastings(&Topology::at_step(kind, n, 7, 0));
+            if wm.stochasticity_error() > 1e-9 {
+                return Err(format!("row sums off by {}", wm.stochasticity_error()));
+            }
+            if wm.dense.asymmetry() > 1e-12 {
+                return Err("asymmetric".into());
+            }
+            for i in 0..n {
+                if wm.self_weight(i) <= 0.0 {
+                    return Err(format!("w_{i}{i} <= 0"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rho_strictly_below_one_on_connected_graphs() {
+    check(
+        "rho(W) in [0, 1) for connected topologies",
+        40,
+        |rng| (random_kind(rng), 2 + rng.below(13)),
+        |&(kind, n)| {
+            let wm = metropolis_hastings(&Topology::at_step(kind, n, 3, 0));
+            let r = rho(&wm);
+            if !(0.0..1.0 - 1e-9).contains(&r) {
+                return Err(format!("rho = {r}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partial_averaging_preserves_mean_and_contracts_spread() {
+    check(
+        "gossip preserves the network mean and never widens the spread",
+        40,
+        |rng| {
+            let kind = random_kind(rng);
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(32);
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (kind, src)
+        },
+        |(kind, src)| {
+            let n = src.len();
+            let d = src[0].len();
+            let wm = metropolis_hastings(&Topology::at_step(*kind, n, 1, 0));
+            let mut dst = vec![vec![0.0f32; d]; n];
+            partial_average_all(&wm, src, &mut dst);
+            for j in 0..d {
+                let before: f64 = src.iter().map(|r| r[j] as f64).sum();
+                let after: f64 = dst.iter().map(|r| r[j] as f64).sum();
+                if (before - after).abs() > 1e-3 * (1.0 + before.abs()) {
+                    return Err(format!("mean moved: {before} -> {after}"));
+                }
+            }
+            // Spread (max deviation from mean) must not grow.
+            let spread = |rows: &[Vec<f32>]| -> f64 {
+                let mut worst = 0.0f64;
+                for j in 0..d {
+                    let mean: f64 =
+                        rows.iter().map(|r| r[j] as f64).sum::<f64>() / n as f64;
+                    for r in rows {
+                        worst = worst.max((r[j] as f64 - mean).abs());
+                    }
+                }
+                worst
+            };
+            if spread(&dst) > spread(src) + 1e-6 {
+                return Err("spread grew under gossip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_optimizer_preserves_consensus_fixed_point() {
+    // At consensus with zero gradients, NO optimizer may move the model
+    // (state-management invariant of the coordinator).
+    check(
+        "consensus + zero grad is a fixed point for every optimizer",
+        30,
+        |rng| {
+            let kind = random_kind(rng);
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(16);
+            let x = gens::normal_vec(rng, d);
+            let idx = rng.below(optim::ALL.len());
+            (kind, n, x, idx)
+        },
+        |(kind, n, x, idx)| {
+            let name = optim::ALL[*idx];
+            let mut o = optim::build(name, 4, 0.7).unwrap();
+            let wm = metropolis_hastings(&Topology::at_step(*kind, *n, 1, 0));
+            let d = x.len();
+            let mut states: Vec<NodeState> =
+                (0..*n).map(|_| NodeState::new(x.clone(), o.aux_count())).collect();
+            let grads = vec![vec![0.0f32; d]; *n];
+            let mut scratch = Scratch::new(*n, d);
+            for step in 0..5 {
+                let ctx = RoundCtx {
+                    wm: &wm,
+                    lr: 0.1,
+                    beta: 0.9,
+                    step,
+                    time_varying: false,
+                    layer_ranges: &[],
+                };
+                o.round(&mut states, &grads, &ctx, &mut scratch);
+            }
+            for (i, st) in states.iter().enumerate() {
+                let drift = math::dist2(&st.x, x).sqrt();
+                if drift > 1e-4 {
+                    return Err(format!("{name}: node {i} drifted {drift}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decentralized_rounds_preserve_network_mean_modulo_gradient() {
+    // For doubly-stochastic mixing, one round moves the network average
+    // exactly by -lr * (mean momentumized gradient) for DSGD (beta=0).
+    check(
+        "DSGD round moves the mean by -lr * mean gradient",
+        30,
+        |rng| {
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(8);
+            let xs: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            let gs: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (n, xs, gs)
+        },
+        |(n, xs, gs)| {
+            let d = xs[0].len();
+            let wm = metropolis_hastings(&Topology::at_step(Kind::Ring, *n, 1, 0));
+            let mut o = optim::build("dsgd", 1, 0.0).unwrap();
+            let mut states: Vec<NodeState> =
+                xs.iter().map(|x| NodeState::new(x.clone(), 0)).collect();
+            let mut scratch = Scratch::new(*n, d);
+            let lr = 0.05f32;
+            let ctx = RoundCtx { wm: &wm, lr, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+            o.round(&mut states, gs, &ctx, &mut scratch);
+            for j in 0..d {
+                let mean_before: f64 =
+                    xs.iter().map(|r| r[j] as f64).sum::<f64>() / *n as f64;
+                let mean_grad: f64 =
+                    gs.iter().map(|r| r[j] as f64).sum::<f64>() / *n as f64;
+                let mean_after: f64 =
+                    states.iter().map(|s| s.x[j] as f64).sum::<f64>() / *n as f64;
+                let want = mean_before - lr as f64 * mean_grad;
+                if (mean_after - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                    return Err(format!("dim {j}: {mean_after} vs {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accumulator_mean_equals_manual_mean() {
+    use decentlam::optim::schedule::GradAccumulator;
+    check(
+        "gradient accumulator computes the exact mean",
+        40,
+        |rng| {
+            let d = 1 + rng.below(32);
+            let k = 1 + rng.below(10);
+            let grads: Vec<Vec<f32>> = (0..k).map(|_| gens::normal_vec(rng, d)).collect();
+            grads
+        },
+        |grads| {
+            let d = grads[0].len();
+            let mut acc = GradAccumulator::new(d);
+            for g in grads {
+                acc.add(g);
+            }
+            let mut got = vec![0.0f32; d];
+            acc.mean_into(&mut got);
+            for j in 0..d {
+                let want: f32 =
+                    grads.iter().map(|g| g[j]).sum::<f32>() / grads.len() as f32;
+                if (got[j] - want).abs() > 1e-5 {
+                    return Err(format!("dim {j}: {} vs {want}", got[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_time_varying_topologies_deterministic_across_nodes() {
+    // All nodes must realize the SAME graph at a step (deadlock freedom).
+    check(
+        "bipartite matching identical for identical (seed, step)",
+        40,
+        |rng| (4 + 2 * rng.below(7), rng.next_u64(), rng.below(1000)),
+        |&(n, seed, step)| {
+            let a = Topology::at_step(Kind::BipartiteRandomMatch, n, seed, step);
+            let b = Topology::at_step(Kind::BipartiteRandomMatch, n, seed, step);
+            for i in 0..n {
+                if a.neighbors(i) != b.neighbors(i) {
+                    return Err(format!("node {i} saw different graphs"));
+                }
+                if a.degree(i) != 1 {
+                    return Err(format!("node {i} degree {} != 1", a.degree(i)));
+                }
+            }
+            Ok(())
+        },
+    );
+}
