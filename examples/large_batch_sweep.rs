@@ -7,7 +7,7 @@
 //! cargo run --release --example large_batch_sweep -- --steps 250
 //! ```
 
-use decentlam::comm::{CommCost, LinkSpec};
+use decentlam::comm::{CommCost, CommStats, LinkSpec};
 use decentlam::coordinator::Trainer;
 use decentlam::experiments::{mlp_workload_named, protocol_config, synth_imagenet};
 use decentlam::topology::{Kind, Topology};
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let methods = ["pmsgd", "dmsgd", "decentlam"];
 
     let cost = CommCost::new(LinkSpec::tcp_10gbps());
-    let topo = Topology::build(Kind::SymExp, nodes);
+    let stats = CommStats::of_topology(&Topology::build(Kind::SymExp, nodes));
     let bytes = 25.5e6 * 4.0; // model the comm of a ResNet-50-sized run
 
     let mut table = Table::new(
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             let wl = mlp_workload_named("mlp-s", data, cfg.micro_batch, 1)?;
             let mut t = Trainer::new(cfg, wl)?;
             let report = t.run();
-            let comm_s = cost.per_iter_comm_s(t.comm_pattern(), &topo, bytes);
+            let comm_s = cost.per_iter_comm_s(t.comm_pattern(), &stats, bytes);
             let per_gpu = batch as f64 / (nodes * 8) as f64;
             let compute_s = per_gpu / 250.0;
             let wall_s = cost.per_iter_wall_s(compute_s, comm_s);
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         "shape check: DmSGD acc drops fastest with batch; DecentLaM holds; \
          PmSGD pays ~{}x the comm of partial averaging.",
         sig(
-            cost.allreduce_s(nodes, bytes) / cost.neighbor_exchange_s(&topo, bytes),
+            cost.allreduce_s(nodes, bytes) / cost.neighbor_exchange_s(&stats, bytes),
             2
         )
     );

@@ -1,20 +1,17 @@
 //! Bench: end-to-end training-step time through the coordinator — the
 //! Tables 1/3/4 workload path (native engine, threaded gradient phase)
-//! and, when artifacts are present, the PJRT path (JAX MLP grad + the
-//! Pallas update-kernel artifact). EXPERIMENTS.md §Perf's headline rows.
+//! and, when built with `--features pjrt` and artifacts are present,
+//! the PJRT path (JAX MLP grad + the Pallas update-kernel artifact).
+//! EXPERIMENTS.md §Perf's headline rows.
 //!
-//! Run: `make artifacts && cargo bench --bench end_to_end_step`.
-
-use std::path::Path;
+//! Run: `cargo bench --bench end_to_end_step`
+//! (PJRT rows: `make artifacts && cargo bench --features pjrt --bench end_to_end_step`).
 
 use decentlam::coordinator::Trainer;
 use decentlam::data::synth::{ClassificationData, SynthSpec};
 use decentlam::experiments::mlp_workload_named;
-use decentlam::grad::pjrt;
-use decentlam::runtime::{Manifest, Runtime, Tensor};
 use decentlam::util::bench::Bench;
 use decentlam::util::config::{Config, LrSchedule};
-use decentlam::util::rng::Pcg64;
 
 fn data(nodes: usize) -> ClassificationData {
     ClassificationData::generate(&SynthSpec {
@@ -63,9 +60,30 @@ fn main() {
         );
     }
 
-    // PJRT path (skipped without artifacts).
-    let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    #[cfg(feature = "pjrt")]
+    pjrt_benches::run(&mut bench);
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt feature disabled: native rows only — rebuild with --features pjrt)");
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_benches {
+    use std::path::Path;
+
+    use decentlam::coordinator::Trainer;
+    use decentlam::grad::pjrt;
+    use decentlam::runtime::{Manifest, Runtime, Tensor};
+    use decentlam::util::bench::Bench;
+    use decentlam::util::rng::Pcg64;
+
+    use super::{cfg_for, data};
+
+    pub fn run(bench: &mut Bench) {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            println!("(artifacts missing: skipping PJRT benches — run `make artifacts`)");
+            return;
+        }
         let manifest = Manifest::load(dir).unwrap();
         let runtime = Runtime::start().unwrap();
         let rt = runtime.handle();
@@ -129,7 +147,5 @@ fn main() {
             t.step(k);
             k += 1;
         });
-    } else {
-        println!("(artifacts missing: skipping PJRT benches — run `make artifacts`)");
     }
 }

@@ -43,14 +43,7 @@ fn main() {
             let mut scratch = Scratch::new(n, d);
             let mut step = 0usize;
             bench.case_items(&format!("{name} round (n={n}) d={d}"), (n * d) as f64, || {
-                let ctx = RoundCtx {
-                    wm: &wm,
-                    lr: 0.01,
-                    beta: 0.9,
-                    step,
-                    time_varying: false,
-                    layer_ranges: &[],
-                };
+                let ctx = RoundCtx::new(&wm, 0.01, 0.9, step, false);
                 o.round(&mut states, &grads, &ctx, &mut scratch);
                 step += 1;
             });

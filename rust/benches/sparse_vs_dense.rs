@@ -1,0 +1,132 @@
+//! Bench: the sparse neighbor-list comm engine vs the dense-matrix
+//! path, at the node counts where decentralized methods are supposed to
+//! shine (ring n = 64 … 1024).
+//!
+//! Three comparisons per size:
+//!   1. **exchange** — one full partial-averaging round: CSR neighbor
+//!      rows vs a dense n×n matrix–vector walk (the O(n²·d) path the
+//!      engine replaces).
+//!   2. **rebuild** — per-step weight reconstruction for time-varying
+//!      topologies: O(edges) neighbor-list rebuild vs the O(n²)
+//!      dense-matrix build.
+//!   3. **parallel exchange** — the sparse round fanned out over the
+//!      node executor.
+//!
+//! The run asserts (not just prints) that sparse beats dense on the
+//! ring at n ≥ 256, so `cargo bench --bench sparse_vs_dense` doubles as
+//! a perf regression check.
+//!
+//! Run: `cargo bench --bench sparse_vs_dense` (DECENTLAM_BENCH_FAST=1 shrinks).
+
+use decentlam::comm::CommEngine;
+use decentlam::coordinator::NodeExecutor;
+use decentlam::optim::{partial_average_all, partial_average_all_par};
+use decentlam::topology::{metropolis_hastings, Kind, SparseWeights, Topology};
+use decentlam::util::bench::{opaque, Bench};
+
+/// The dense path: mixed[i] = Σ_j W[i][j] · src[j] walking every column
+/// of the dense matrix — what an engine without neighbor lists must do.
+fn dense_mix_all(dense: &decentlam::util::math::SymMatrix, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    let n = dense.n;
+    for i in 0..n {
+        let row = &mut dst[i];
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..n {
+            let w = dense.get(i, j) as f32;
+            if w != 0.0 {
+                for (o, &s) in row.iter_mut().zip(&src[j]) {
+                    *o += w * s;
+                }
+            }
+        }
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let d = 1024; // parameter dimension per node
+    let fast = std::env::var("DECENTLAM_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast { &[64, 256] } else { &[64, 256, 512, 1024] };
+
+    for &n in sizes {
+        let topo = Topology::build(Kind::Ring, n);
+        let wm = metropolis_hastings(&topo);
+        let sw = SparseWeights::metropolis_hastings(&topo);
+        let (edges, nnz) = (sw.num_edges(), sw.nnz());
+        println!("--- ring n={n}, d={d}: {edges} edges, {nnz} stored weights ---");
+        let src: Vec<Vec<f32>> = (0..n).map(|i| vec![(i % 17) as f32 * 0.1; d]).collect();
+        let mut dst = vec![vec![0.0f32; d]; n];
+
+        let dense = bench
+            .case_items(&format!("dense exchange n={n}"), (n * d) as f64, || {
+                dense_mix_all(&wm.dense, &src, &mut dst);
+                opaque(&dst);
+            })
+            .mean_ns;
+        let sparse = bench
+            .case_items(&format!("sparse exchange n={n}"), (n * d) as f64, || {
+                partial_average_all(&sw, &src, &mut dst);
+                opaque(&dst);
+            })
+            .mean_ns;
+        let exec = NodeExecutor::new(0);
+        let sparse_par = bench
+            .case_items(
+                &format!("sparse exchange n={n} ({}T)", exec.threads()),
+                (n * d) as f64,
+                || {
+                    partial_average_all_par(&sw, &src, &mut dst, exec);
+                    opaque(&dst);
+                },
+            )
+            .mean_ns;
+
+        // Per-step rebuild (the time-varying-topology path).
+        let rebuild_dense = bench
+            .case(&format!("dense W rebuild n={n}"), || {
+                opaque(metropolis_hastings(&topo));
+            })
+            .mean_ns;
+        let mut scratch_sw = SparseWeights::default();
+        let rebuild_sparse = bench
+            .case(&format!("sparse W rebuild n={n}"), || {
+                scratch_sw.rebuild_metropolis(&topo);
+                opaque(scratch_sw.nnz());
+            })
+            .mean_ns;
+
+        println!(
+            "  speedup: exchange {:.1}x (parallel {:.1}x), rebuild {:.1}x\n",
+            dense / sparse,
+            dense / sparse_par,
+            rebuild_dense / rebuild_sparse,
+        );
+        if n >= 256 {
+            assert!(
+                sparse < dense,
+                "sparse exchange must beat the dense path at n={n}: {sparse} !< {dense}"
+            );
+            assert!(
+                rebuild_sparse < rebuild_dense,
+                "sparse rebuild must beat the dense build at n={n}"
+            );
+        }
+    }
+
+    // Correctness spot-check at the largest size: both paths agree.
+    let n = *sizes.last().unwrap();
+    let topo = Topology::build(Kind::Ring, n);
+    let wm = metropolis_hastings(&topo);
+    let sw = SparseWeights::metropolis_hastings(&topo);
+    let src: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; 4]).collect();
+    let mut a = vec![vec![0.0f32; 4]; n];
+    let mut b = vec![vec![0.0f32; 4]; n];
+    dense_mix_all(&wm.dense, &src, &mut a);
+    partial_average_all(&sw, &src, &mut b);
+    for i in 0..n {
+        for k in 0..4 {
+            assert!((a[i][k] - b[i][k]).abs() < 1e-3, "mismatch at [{i}][{k}]");
+        }
+    }
+    println!("sparse/dense agreement verified at n={n}");
+}

@@ -18,10 +18,18 @@
 //!   the paper's measured 1.2–1.9× band (Fig. 6); BlueFog does not
 //!   publish the per-flow serialization of its neighbor_allreduce.
 //!
+//! Everything is charged from a [`CommStats`] summary — node count,
+//! **actual undirected edge count**, max degree — taken from the
+//! realized topology or comm engine, never from an n×n matrix walk; the
+//! wire-byte accounting ([`wire_bytes_per_iter`]) is exact in the edge
+//! count, so a ring at n=512 charges 2·512 payloads per exchange, not
+//! 512².
+//!
 //! With computation–communication overlap (WFBP, paper Fig. 4), the
 //! per-iteration wall time is compute + the communication tail that the
 //! backprop pipeline cannot hide, modeled with an `overlap` fraction.
 
+use crate::comm::engine::CommEngine;
 use crate::optim::CommPattern;
 use crate::topology::Topology;
 
@@ -58,7 +66,47 @@ pub const EFF_ALLREDUCE: f64 = 0.55;
 /// Marginal NIC serialization per extra concurrent neighbor stream.
 pub const NEIGHBOR_SERIAL: f64 = 0.10;
 
-/// Cost model over a topology + link spec.
+/// Graph summary the cost model charges from: node count, realized
+/// undirected edge count, and the bottleneck degree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommStats {
+    pub n: usize,
+    pub edges: usize,
+    pub max_degree: usize,
+}
+
+impl CommStats {
+    /// Stats of a realized topology (adjacency-list walk, O(n)).
+    pub fn of_topology(topo: &Topology) -> CommStats {
+        CommStats { n: topo.n, edges: topo.num_edges(), max_degree: topo.max_degree() }
+    }
+
+    /// Stats of a comm engine's neighbor lists.
+    pub fn of_engine(engine: &dyn CommEngine) -> CommStats {
+        CommStats {
+            n: engine.n(),
+            edges: engine.num_edges(),
+            max_degree: engine.max_degree(),
+        }
+    }
+}
+
+/// Total bytes put on the wire in one iteration of `pattern` with a
+/// parameter payload of `bytes` — exact in the edge count (each
+/// undirected edge carries the payload once per direction).
+pub fn wire_bytes_per_iter(pattern: CommPattern, stats: &CommStats, bytes: f64) -> f64 {
+    let neighbor = 2.0 * stats.edges as f64 * bytes;
+    let allreduce = if stats.n <= 1 { 0.0 } else { 2.0 * (stats.n as f64 - 1.0) * bytes };
+    match pattern {
+        CommPattern::Neighbor { payloads } => payloads as f64 * neighbor,
+        CommPattern::AllReduce => allreduce,
+        CommPattern::NeighborPlusPeriodicAllReduce { payloads, period } => {
+            payloads as f64 * neighbor + allreduce / period.max(1) as f64
+        }
+    }
+}
+
+/// Cost model over a graph summary + link spec.
 #[derive(Debug, Clone)]
 pub struct CommCost {
     pub link: LinkSpec,
@@ -78,29 +126,28 @@ impl CommCost {
         }
         let steps = 2 * (n - 1);
         steps as f64 * self.link.latency_s()
-            + 2.0 * (n as f64 - 1.0) / n as f64 * self.link.transfer_s(bytes)
-                / EFF_ALLREDUCE
+            + 2.0 * (n as f64 - 1.0) / n as f64 * self.link.transfer_s(bytes) / EFF_ALLREDUCE
     }
 
-    /// Seconds for one neighbor exchange of `bytes` payload on `topo`
-    /// (single stage; concurrent full-duplex streams to the neighbors).
-    pub fn neighbor_exchange_s(&self, topo: &Topology, bytes: f64) -> f64 {
-        let deg = topo.max_degree().max(1) as f64;
-        self.link.latency_s()
-            + (1.0 + NEIGHBOR_SERIAL * (deg - 1.0)) * self.link.transfer_s(bytes)
+    /// Seconds for one neighbor exchange of `bytes` payload on a graph
+    /// with the given stats (single stage; concurrent full-duplex
+    /// streams to the neighbors, bottlenecked by the max-degree node).
+    pub fn neighbor_exchange_s(&self, stats: &CommStats, bytes: f64) -> f64 {
+        let deg = stats.max_degree.max(1) as f64;
+        self.link.latency_s() + (1.0 + NEIGHBOR_SERIAL * (deg - 1.0)) * self.link.transfer_s(bytes)
     }
 
     /// Average per-iteration communication seconds for an optimizer's
     /// declared pattern.
-    pub fn per_iter_comm_s(&self, pattern: CommPattern, topo: &Topology, bytes: f64) -> f64 {
+    pub fn per_iter_comm_s(&self, pattern: CommPattern, stats: &CommStats, bytes: f64) -> f64 {
         match pattern {
             CommPattern::Neighbor { payloads } => {
-                payloads as f64 * self.neighbor_exchange_s(topo, bytes)
+                payloads as f64 * self.neighbor_exchange_s(stats, bytes)
             }
-            CommPattern::AllReduce => self.allreduce_s(topo.n, bytes),
+            CommPattern::AllReduce => self.allreduce_s(stats.n, bytes),
             CommPattern::NeighborPlusPeriodicAllReduce { payloads, period } => {
-                payloads as f64 * self.neighbor_exchange_s(topo, bytes)
-                    + self.allreduce_s(topo.n, bytes) / period.max(1) as f64
+                payloads as f64 * self.neighbor_exchange_s(stats, bytes)
+                    + self.allreduce_s(stats.n, bytes) / period.max(1) as f64
             }
         }
     }
@@ -116,10 +163,10 @@ impl CommCost {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::Kind;
+    use crate::topology::{Kind, SparseWeights};
 
-    fn topo(kind: Kind) -> Topology {
-        Topology::build(kind, 8)
+    fn stats(kind: Kind) -> CommStats {
+        CommStats::of_topology(&Topology::build(kind, 8))
     }
 
     #[test]
@@ -139,7 +186,7 @@ mod tests {
             let c = CommCost::new(link);
             let ar = c.allreduce_s(8, bytes);
             for kind in [Kind::Ring, Kind::SymExp] {
-                let ne = c.neighbor_exchange_s(&topo(kind), bytes);
+                let ne = c.neighbor_exchange_s(&stats(kind), bytes);
                 assert!(ne < ar, "{kind:?}: {ne} !< {ar}");
             }
         }
@@ -150,7 +197,7 @@ mod tests {
         let bytes = 25.5e6 * 4.0;
         let gap = |l: LinkSpec| {
             let c = CommCost::new(l);
-            c.allreduce_s(8, bytes) / c.neighbor_exchange_s(&topo(Kind::Ring), bytes)
+            c.allreduce_s(8, bytes) / c.neighbor_exchange_s(&stats(Kind::Ring), bytes)
         };
         assert!(gap(LinkSpec::tcp_10gbps()) >= gap(LinkSpec::tcp_25gbps()) * 0.99);
     }
@@ -158,16 +205,16 @@ mod tests {
     #[test]
     fn comm_pattern_costs_ordered() {
         let c = CommCost::new(LinkSpec::tcp_25gbps());
-        let t = topo(Kind::Ring);
+        let s = stats(Kind::Ring);
         let bytes = 1e8;
-        let one = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 1 }, &t, bytes);
-        let two = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 2 }, &t, bytes);
-        let ar = c.per_iter_comm_s(CommPattern::AllReduce, &t, bytes);
+        let one = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 1 }, &s, bytes);
+        let two = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 2 }, &s, bytes);
+        let ar = c.per_iter_comm_s(CommPattern::AllReduce, &s, bytes);
         assert!((two / one - 2.0).abs() < 1e-9);
         assert!(ar > one);
         let slowmo = c.per_iter_comm_s(
             CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: 12 },
-            &t,
+            &s,
             bytes,
         );
         assert!(slowmo > one && slowmo < one + ar);
@@ -182,5 +229,35 @@ mod tests {
         // comm dominates: at most `compute` can hide
         let w2 = c.per_iter_wall_s(0.1, 1.0);
         assert!(w2 >= 1.0 - 1e-9 && w2 <= 1.1 + 1e-9);
+    }
+
+    #[test]
+    fn stats_agree_between_topology_and_engine() {
+        for kind in [Kind::Ring, Kind::Mesh, Kind::Star, Kind::SymExp] {
+            let topo = Topology::build(kind, 12);
+            let sw = SparseWeights::metropolis_hastings(&topo);
+            assert_eq!(CommStats::of_topology(&topo), CommStats::of_engine(&sw), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_charged_from_edge_counts() {
+        let bytes = 1e6;
+        // Ring n=512: exactly 2 * 512 payloads per exchange — linear in
+        // n, nowhere near the n² a dense-matrix walk would charge.
+        let ring = CommStats::of_topology(&Topology::build(Kind::Ring, 512));
+        let nb = wire_bytes_per_iter(CommPattern::Neighbor { payloads: 1 }, &ring, bytes);
+        assert!((nb - 2.0 * 512.0 * bytes).abs() < 1e-3);
+        assert!(nb < 512.0 * 511.0 * bytes / 4.0);
+        // All-reduce moves 2(n-1) payload-equivalents in total.
+        let ar = wire_bytes_per_iter(CommPattern::AllReduce, &ring, bytes);
+        assert!((ar - 2.0 * 511.0 * bytes).abs() < 1e-3);
+        // SlowMo amortizes the all-reduce over its period.
+        let sm = wire_bytes_per_iter(
+            CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: 8 },
+            &ring,
+            bytes,
+        );
+        assert!((sm - (nb + ar / 8.0)).abs() < 1e-3);
     }
 }

@@ -1,0 +1,130 @@
+//! The communication engine abstraction (DESIGN.md §3).
+//!
+//! Every decentralized optimizer expresses its wire traffic through one
+//! primitive — "mix my published vector with my neighbors' under the
+//! row weights of W" — so the *storage* of W is an implementation
+//! detail behind this trait. Two engines ship:
+//!
+//! * [`crate::topology::sparse::SparseWeights`] — CSR-style per-node
+//!   neighbor lists, O(edges) memory and per-step rebuild cost. The
+//!   trainer's default.
+//! * [`crate::topology::WeightMatrix`] — the dense n×n matrix, kept for
+//!   spectral analysis (eigenvalues need the full matrix) and as the
+//!   reference implementation the sparse engine is property-tested
+//!   against.
+//!
+//! Rows always include the self entry `(i, w_ii)`, sorted by neighbor
+//! index, so one weighted sum over the row is the whole exchange.
+
+use crate::util::math;
+
+/// Neighbor-list view of a mixing matrix row: `(j, w_ij)`, self entry
+/// included. Metropolis–Hastings rows always carry a strictly positive
+/// self weight (w_ii = 1 − Σ 1/(1+max deg) ≥ 1/(1+deg_i) > 0 — the
+/// property suite asserts it); a `self_weight` of exactly 0.0 from the
+/// default impl therefore means the entry is *missing*, not a valid
+/// weight.
+pub type RowEntry = (u32, f32);
+
+/// A mixing-weight provider the optimizers communicate through.
+pub trait CommEngine: Sync {
+    /// Number of nodes.
+    fn n(&self) -> usize;
+
+    /// Sparse row of node `i`: `(neighbor incl. self, weight)`, sorted
+    /// by neighbor index.
+    fn row(&self, i: usize) -> &[RowEntry];
+
+    /// Self-mixing weight w_ii.
+    fn self_weight(&self, i: usize) -> f32 {
+        self.row(i)
+            .iter()
+            .find(|&&(j, _)| j as usize == i)
+            .map(|&(_, w)| w)
+            .unwrap_or(0.0)
+    }
+
+    /// Undirected edge count (self loops excluded) — what the cost
+    /// model charges payloads from.
+    fn num_edges(&self) -> usize {
+        let total: usize = (0..self.n()).map(|i| self.row(i).len()).sum();
+        (total - self.n()) / 2
+    }
+
+    /// Max neighbor count of any node (self excluded).
+    fn max_degree(&self) -> usize {
+        (0..self.n()).map(|i| self.row(i).len() - 1).max().unwrap_or(0)
+    }
+
+    /// out = Σ_{j ∈ N(i) ∪ {i}} w_ij · src[j] — one node's exchange.
+    /// Allocation-free (the step loop's hot path): terms are fused
+    /// pairwise straight off the row slice, mirroring
+    /// `math::weighted_sum_into`'s destination-traffic halving.
+    fn mix_node(&self, i: usize, src: &[Vec<f32>], out: &mut [f32]) {
+        match self.row(i) {
+            [] => out.iter_mut().for_each(|v| *v = 0.0),
+            [(j0, w0), rest @ ..] => {
+                for (o, &x) in out.iter_mut().zip(&src[*j0 as usize]) {
+                    *o = w0 * x;
+                }
+                let mut pairs = rest.chunks_exact(2);
+                for pair in &mut pairs {
+                    let (ja, wa) = pair[0];
+                    let (jb, wb) = pair[1];
+                    let xa = &src[ja as usize];
+                    let xb = &src[jb as usize];
+                    for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                        *o += wa * a + wb * b;
+                    }
+                }
+                if let [(j, w)] = pairs.remainder() {
+                    math::axpy(out, *w, &src[*j as usize]);
+                }
+            }
+        }
+    }
+
+    /// Max |row sum − 1| over all nodes (stochasticity diagnostic).
+    fn row_sum_error(&self) -> f64 {
+        (0..self.n())
+            .map(|i| {
+                let s: f64 = self.row(i).iter().map(|&(_, w)| w as f64).sum();
+                (s - 1.0).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology};
+
+    #[test]
+    fn engine_views_of_dense_matrix() {
+        let topo = Topology::build(Kind::Ring, 6);
+        let wm = metropolis_hastings(&topo);
+        let e: &dyn CommEngine = &wm;
+        assert_eq!(e.n(), 6);
+        assert_eq!(e.num_edges(), 6);
+        assert_eq!(e.max_degree(), 2);
+        assert!(e.row_sum_error() < 1e-6);
+        assert!((e.self_weight(0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mix_node_matches_manual_weighted_sum() {
+        let topo = Topology::build(Kind::Star, 5);
+        let wm = metropolis_hastings(&topo);
+        let src: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, -(i as f32)]).collect();
+        let mut out = vec![0.0f32; 2];
+        wm.mix_node(0, &src, &mut out);
+        let mut want = [0.0f32; 2];
+        for &(j, w) in wm.row(0) {
+            for k in 0..2 {
+                want[k] += w * src[j as usize][k];
+            }
+        }
+        assert!((out[0] - want[0]).abs() < 1e-6 && (out[1] - want[1]).abs() < 1e-6);
+    }
+}

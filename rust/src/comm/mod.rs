@@ -1,9 +1,13 @@
-//! Communication layer: the in-process exchange used by the trainer is
-//! plain shared-memory buffer passing (`optim::partial_average_all`);
-//! this module provides the *analytic cost model* that maps each
-//! optimizer's wire pattern onto cluster time (Fig. 6) — the substitute
-//! for the paper's 8×V100 NCCL testbed (DESIGN.md §2).
+//! Communication layer: the [`engine::CommEngine`] trait every
+//! optimizer exchanges through (sparse neighbor lists in production,
+//! dense matrix as the property-tested reference), plus the *analytic
+//! cost model* ([`cost`]) that maps each optimizer's wire pattern onto
+//! cluster time (Fig. 6) — the substitute for the paper's 8×V100 NCCL
+//! testbed (DESIGN.md §2). Payloads are charged from realized edge
+//! counts ([`cost::CommStats`]), never from an n×n matrix walk.
 
 pub mod cost;
+pub mod engine;
 
-pub use cost::{CommCost, LinkSpec};
+pub use cost::{wire_bytes_per_iter, CommCost, CommStats, LinkSpec};
+pub use engine::CommEngine;

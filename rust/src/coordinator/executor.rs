@@ -1,0 +1,208 @@
+//! Parallel node executor: chunked scoped-thread fan-out over nodes for
+//! the gradient, exchange and update phases (DESIGN.md §4).
+//!
+//! Each helper partitions one (or several, zipped) `&mut` slices into
+//! contiguous blocks — at most one block per worker — and runs the
+//! closure on every element inside `std::thread::scope`. Per-node work
+//! is independent and the arithmetic is identical to the sequential
+//! order (no cross-thread reductions), so results are bitwise equal to
+//! a serial run; the trainer's `threads == 1` path and the tests rely
+//! on that.
+//!
+//! The executor is a trivially-copyable handle (just a thread count):
+//! threads are spawned per phase, which measures well up to n ≈ 1024
+//! nodes given each phase does O(d) work per node — a persistent pool
+//! is an upgrade documented in DESIGN.md §Open.
+
+/// Thread-count policy for fan-out over nodes.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeExecutor {
+    threads: usize,
+}
+
+impl NodeExecutor {
+    /// Sequential executor (the default in unit tests).
+    pub fn serial() -> NodeExecutor {
+        NodeExecutor { threads: 1 }
+    }
+
+    /// `threads == 0` means one worker per available hardware thread.
+    pub fn new(threads: usize) -> NodeExecutor {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        NodeExecutor { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Block size so that `n` items spread over at most `threads` blocks.
+    fn chunk_for(&self, n: usize) -> usize {
+        let workers = self.threads.min(n).max(1);
+        (n + workers - 1) / workers
+    }
+
+    /// Run `f(i, &mut items[i])` for every index, fanned out over
+    /// contiguous blocks.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let chunk = self.chunk_for(n);
+        if chunk >= n {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            for (b, block) in items.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (k, item) in block.iter_mut().enumerate() {
+                        f(b * chunk + k, item);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run `f(i, &mut a[i], &mut b[i])` for every index (equal-length
+    /// slices, e.g. node states zipped with their publish buffers).
+    pub fn for_each_pair_mut<A, B, F>(&self, a: &mut [A], b: &mut [B], f: F)
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut A, &mut B) + Sync,
+    {
+        let n = a.len();
+        assert_eq!(n, b.len(), "zipped slices must have equal length");
+        if n == 0 {
+            return;
+        }
+        let chunk = self.chunk_for(n);
+        if chunk >= n {
+            for (i, (ai, bi)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                f(i, ai, bi);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            for (blk, (ba, bb)) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)).enumerate() {
+                scope.spawn(move || {
+                    for (k, (ai, bi)) in ba.iter_mut().zip(bb.iter_mut()).enumerate() {
+                        f(blk * chunk + k, ai, bi);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Three-way zipped variant (gradient phase: engines, gradient
+    /// buffers, per-node losses).
+    pub fn for_each_triple_mut<A, B, C, F>(&self, a: &mut [A], b: &mut [B], c: &mut [C], f: F)
+    where
+        A: Send,
+        B: Send,
+        C: Send,
+        F: Fn(usize, &mut A, &mut B, &mut C) + Sync,
+    {
+        let n = a.len();
+        assert_eq!(n, b.len(), "zipped slices must have equal length");
+        assert_eq!(n, c.len(), "zipped slices must have equal length");
+        if n == 0 {
+            return;
+        }
+        let chunk = self.chunk_for(n);
+        if chunk >= n {
+            for i in 0..n {
+                f(i, &mut a[i], &mut b[i], &mut c[i]);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            for (blk, ((ba, bb), bc)) in a
+                .chunks_mut(chunk)
+                .zip(b.chunks_mut(chunk))
+                .zip(c.chunks_mut(chunk))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    for (k, ((ai, bi), ci)) in
+                        ba.iter_mut().zip(bb.iter_mut()).zip(bc.iter_mut()).enumerate()
+                    {
+                        f(blk * chunk + k, ai, bi, ci);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_cover_every_item_exactly_once() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            for n in [0usize, 1, 2, 7, 64, 101] {
+                let exec = NodeExecutor::new(threads);
+                let mut hits = vec![0u32; n];
+                exec.for_each_mut(&mut hits, |i, h| {
+                    *h += 1 + i as u32;
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(*h, 1 + i as u32, "threads={threads} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_and_triple_stay_aligned() {
+        let exec = NodeExecutor::new(4);
+        let n = 37;
+        let mut a: Vec<usize> = (0..n).collect();
+        let mut b = vec![0usize; n];
+        exec.for_each_pair_mut(&mut a, &mut b, |i, ai, bi| {
+            *bi = *ai * 2 + i;
+        });
+        assert!(b.iter().enumerate().all(|(i, &v)| v == i * 3));
+
+        let mut c = vec![0usize; n];
+        exec.for_each_triple_mut(&mut a, &mut b, &mut c, |i, ai, bi, ci| {
+            *ci = *ai + *bi + i;
+        });
+        assert!(c.iter().enumerate().all(|(i, &v)| v == i * 5));
+    }
+
+    #[test]
+    fn parallel_matches_serial_output() {
+        let mut serial: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut par = serial.clone();
+        let work = |_i: usize, v: &mut f32| {
+            *v = (*v).sqrt() * 3.0 + 1.0;
+        };
+        NodeExecutor::serial().for_each_mut(&mut serial, work);
+        NodeExecutor::new(7).for_each_mut(&mut par, work);
+        assert_eq!(serial, par, "parallel execution must be bitwise identical");
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_hardware() {
+        assert!(NodeExecutor::new(0).threads() >= 1);
+        assert_eq!(NodeExecutor::serial().threads(), 1);
+    }
+}

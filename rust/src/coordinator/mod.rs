@@ -1,8 +1,12 @@
 //! The Layer-3 coordinator: drives `n` nodes through synchronous
 //! decentralized training rounds (gradient phase → exchange → update),
 //! with gradient accumulation for large total batches, scheduled
-//! learning rates, periodic evaluation and consensus tracking.
+//! learning rates, periodic evaluation and consensus tracking. All
+//! three phases fan out over nodes through the [`executor`]'s chunked
+//! scoped threads.
 
+pub mod executor;
 pub mod trainer;
 
+pub use executor::NodeExecutor;
 pub use trainer::{TrainReport, Trainer};

@@ -2,18 +2,22 @@
 //!
 //! One `step`:
 //!   1. **Gradient phase** — every node computes its mean gradient over
-//!      `accum` micro-batches at its own model (threaded; PJRT engines
-//!      funnel into the runtime thread, native engines run truly in
-//!      parallel).
+//!      `accum` micro-batches at its own model, fanned out over the
+//!      [`NodeExecutor`] (PJRT engines funnel into the runtime thread,
+//!      native engines run truly in parallel).
 //!   2. **Exchange + update phase** — the configured [`Optimizer`]
 //!      performs its communication (partial averaging / all-reduce) and
-//!      applies its update rule. The wire pattern is whatever the
-//!      optimizer declared; the Fig. 6 cost model charges it.
+//!      applies its update rule, also chunked over nodes by the
+//!      executor. The wire pattern is whatever the optimizer declared;
+//!      the Fig. 6 cost model charges it from realized edge counts.
 //!   3. **Bookkeeping** — losses, learning-rate schedule, periodic eval
 //!      of the network-average model, consensus distance.
 //!
-//! Time-varying topologies (one-peer exp, bipartite random match)
-//! rebuild `W` each step from the shared seed.
+//! Mixing weights live in a [`SparseWeights`] neighbor-list engine —
+//! O(edges) memory and rebuild cost, so ring/grid/exp-graph runs scale
+//! to n=512–1024. Time-varying topologies (one-peer exp, bipartite
+//! random match) rebuild only the neighbor lists each step from the
+//! shared seed, never an n×n matrix.
 
 use std::time::Instant;
 
@@ -21,9 +25,11 @@ use anyhow::Result;
 
 use crate::grad::Workload;
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
-use crate::topology::{metropolis_hastings, Kind, Topology, WeightMatrix};
+use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
 use crate::util::math;
+
+use super::executor::NodeExecutor;
 
 /// Everything a finished run reports.
 #[derive(Debug, Clone, Default)]
@@ -49,13 +55,26 @@ pub struct Trainer {
     pub cfg: Config,
     pub workload: Workload,
     pub kind: Kind,
-    pub wm: WeightMatrix,
+    /// Sparse neighbor-list comm engine (the mixing weights).
+    pub comm: SparseWeights,
     topo: Topology,
     pub states: Vec<NodeState>,
     optimizer: Box<dyn Optimizer>,
     scratch: Scratch,
     grads: Vec<Vec<f32>>,
+    losses: Vec<f64>,
+    /// Executor for the gradient phase (compute-heavy per node).
+    exec: NodeExecutor,
+    /// Executor for the exchange/update phases: serial when n·d is too
+    /// small to amortize thread spawns (results are identical either
+    /// way — the executor never reorders arithmetic).
+    update_exec: NodeExecutor,
 }
+
+/// Below this many touched f32s per phase (n·d), the exchange/update
+/// loops run serially — a scoped-thread spawn costs more than copying
+/// a few thousand floats.
+const PARALLEL_UPDATE_MIN_ITEMS: usize = 1 << 17;
 
 impl Trainer {
     pub fn new(cfg: Config, workload: Workload) -> Result<Trainer> {
@@ -67,25 +86,34 @@ impl Trainer {
             workload.nodes.len()
         );
         let topo = Topology::at_step(kind, n, cfg.seed, 0);
-        let mut wm = metropolis_hastings(&topo);
+        let mut comm = SparseWeights::metropolis_hastings(&topo);
         if cfg.positive_definite {
-            wm = wm.lazy();
+            comm.make_lazy();
         }
         let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
         let d = workload.dim;
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
             .collect();
+        let exec = NodeExecutor::new(cfg.threads);
+        let update_exec = if n * d >= PARALLEL_UPDATE_MIN_ITEMS {
+            exec
+        } else {
+            NodeExecutor::serial()
+        };
         Ok(Trainer {
             cfg,
             workload,
             kind,
-            wm,
+            comm,
             topo,
             states,
             optimizer,
             scratch: Scratch::new(n, d),
             grads: (0..n).map(|_| vec![0.0; d]).collect(),
+            losses: vec![0.0; n],
+            exec,
+            update_exec,
         })
     }
 
@@ -102,57 +130,46 @@ impl Trainer {
             / self.states.len() as f64
     }
 
+    /// Dense mixing matrix of the current topology realization — for
+    /// spectral analysis only (O(n²) memory); the training path never
+    /// materializes it.
+    pub fn mixing_matrix(&self) -> WeightMatrix {
+        let wm = metropolis_hastings(&self.topo);
+        if self.cfg.positive_definite {
+            wm.lazy()
+        } else {
+            wm
+        }
+    }
+
     /// One training step; returns the mean training loss.
     pub fn step(&mut self, k: usize) -> f64 {
         let accum = self.cfg.accum_steps();
         let lr = self.cfg.lr_at(k);
-        // --- gradient phase (threaded over nodes) ---
+        // --- gradient phase (executor-chunked over nodes) ---
         let loss = {
-            let threads = if self.cfg.threads == 0 {
-                self.cfg.nodes
-            } else {
-                self.cfg.threads.max(1)
-            };
-            let losses: Vec<f64> = if threads <= 1 {
-                self.states
-                    .iter()
-                    .zip(self.workload.nodes.iter_mut())
-                    .zip(self.grads.iter_mut())
-                    .map(|((st, node), g)| node.grad_accum(&st.x, accum, g))
-                    .collect()
-            } else {
-                let states = &self.states;
-                let mut out = vec![0.0f64; states.len()];
-                std::thread::scope(|scope| {
-                    let mut handles = Vec::new();
-                    for (((st, node), g), o) in states
-                        .iter()
-                        .zip(self.workload.nodes.iter_mut())
-                        .zip(self.grads.iter_mut())
-                        .zip(out.iter_mut())
-                    {
-                        handles.push(scope.spawn(move || {
-                            *o = node.grad_accum(&st.x, accum, g);
-                        }));
-                    }
-                    for h in handles {
-                        h.join().expect("gradient worker panicked");
-                    }
-                });
-                out
-            };
-            losses.iter().sum::<f64>() / losses.len() as f64
+            let states = &self.states;
+            self.exec.for_each_triple_mut(
+                &mut self.workload.nodes,
+                &mut self.grads,
+                &mut self.losses,
+                |i, node, g, loss| {
+                    *loss = node.grad_accum(&states[i].x, accum, g);
+                },
+            );
+            self.losses.iter().sum::<f64>() / self.losses.len() as f64
         };
         // --- exchange + update phase ---
         if self.kind.time_varying() {
             self.topo = Topology::at_step(self.kind, self.cfg.nodes, self.cfg.seed, k);
-            self.wm = metropolis_hastings(&self.topo);
+            self.comm.rebuild_metropolis(&self.topo);
             if self.cfg.positive_definite {
-                self.wm = self.wm.lazy();
+                self.comm.make_lazy();
             }
         }
         let ctx = RoundCtx {
-            wm: &self.wm,
+            comm: &self.comm,
+            exec: self.update_exec,
             lr,
             beta: self.cfg.momentum as f32,
             step: k,
@@ -212,6 +229,7 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::engine::CommEngine;
     use crate::data::synth::{ClassificationData, SynthSpec};
     use crate::data::LinRegProblem;
     use crate::grad::{linreg, mlp};
@@ -292,7 +310,32 @@ mod tests {
     }
 
     #[test]
-    fn threaded_and_sequential_grad_phase_agree() {
+    fn time_varying_topology_rebuilds_neighbor_lists() {
+        let mut cfg = small_cfg("dsgd", 3);
+        cfg.topology = "bipartite".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let mut partners = Vec::new();
+        for k in 0..3 {
+            t.step(k);
+            // Sparse engine must mirror the step-k realization exactly.
+            let topo = t.topology();
+            for i in 0..4 {
+                assert_eq!(
+                    t.comm.row(i).len(),
+                    topo.neighbors(i).len() + 1,
+                    "step {k} node {i}"
+                );
+            }
+            partners.push(topo.neighbors(0).to_vec());
+        }
+        assert!(
+            partners.iter().any(|p| p != &partners[0]),
+            "bipartite match never changed partner"
+        );
+    }
+
+    #[test]
+    fn threaded_and_sequential_phases_agree() {
         let mk = |threads: usize| {
             let mut cfg = small_cfg("dmsgd", 10);
             cfg.threads = threads;
@@ -311,5 +354,22 @@ mod tests {
         let mut cfg = small_cfg("dmsgd", 5);
         cfg.nodes = 6;
         assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+    }
+
+    #[test]
+    fn large_ring_trains_without_dense_matrix() {
+        // n=128 on a ring: the dense engine would rebuild/walk 16K-entry
+        // matrices; the sparse engine holds 3n entries. A couple of
+        // linreg steps must run quickly and keep the mean dynamics.
+        let p = LinRegProblem::generate(128, 4, 6, 9);
+        let mut cfg = small_cfg("dsgd", 3);
+        cfg.nodes = 128;
+        cfg.lr = 0.01;
+        let mut t = Trainer::new(cfg, linreg::workload(p)).unwrap();
+        assert_eq!(t.comm.nnz(), 3 * 128);
+        for k in 0..3 {
+            let loss = t.step(k);
+            assert!(loss.is_finite());
+        }
     }
 }

@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::comm::{CommCost, LinkSpec};
+use crate::comm::{CommCost, CommStats, LinkSpec};
 use crate::optim::CommPattern;
 use crate::topology::{Kind, Topology};
 use crate::util::table::{sig, Table};
@@ -58,6 +58,7 @@ pub struct Row {
 pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
     let kind = Kind::parse(&opts.topology)?;
     let topo = Topology::at_step(kind, opts.nodes, 1, 0);
+    let stats = CommStats::of_topology(&topo);
     let bytes = opts.params * 4.0; // fp32 payload per exchange
     let mut rows = Vec::new();
     for &bw in &opts.bandwidths_gbps {
@@ -72,7 +73,7 @@ pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
                 ("dmsgd", CommPattern::Neighbor { payloads: 1 }),
                 ("decentlam", CommPattern::Neighbor { payloads: 1 }),
             ] {
-                let comm_s = cost.per_iter_comm_s(pattern, &topo, bytes);
+                let comm_s = cost.per_iter_comm_s(pattern, &stats, bytes);
                 let total_s = cost.per_iter_wall_s(compute_s, comm_s);
                 totals.insert(method.to_string(), (compute_s, comm_s, total_s));
             }

@@ -24,6 +24,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 pub mod table5;
+#[cfg(feature = "pjrt")]
 pub mod table6;
 
 use crate::data::synth::{ClassificationData, SynthSpec};

@@ -6,14 +6,16 @@
 //! * [`mlp`] — a native Rust implementation of the same flat-parameter
 //!   MLP as `python/compile/model.py` (fast path for the big table
 //!   sweeps; verified against the PJRT artifacts in integration tests).
-//! * [`pjrt`] — the production path: gradients come from the AOT-lowered
-//!   JAX/Pallas HLO artifacts executed through the PJRT CPU client.
+//! * `pjrt` (feature-gated) — the production path: gradients come from
+//!   the AOT-lowered JAX/Pallas HLO artifacts executed through the
+//!   PJRT CPU client.
 //!
 //! A [`Workload`] bundles per-node gradient providers with an evaluator
 //! and the initial parameters; the coordinator is engine-agnostic.
 
 pub mod linreg;
 pub mod mlp;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 /// Per-node gradient provider. `grad_accum` computes the mean gradient

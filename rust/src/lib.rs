@@ -11,8 +11,10 @@
 //!   engines ([`grad`]), synthetic workloads ([`data`]) and the paper's
 //!   experiment harness ([`experiments`]).
 //! - **Layer 2 / Layer 1 (python/, build time only)** — JAX models and
-//!   Pallas kernels, AOT-lowered to HLO-text artifacts that [`runtime`]
+//!   Pallas kernels, AOT-lowered to HLO-text artifacts that `runtime`
 //!   loads and executes through the PJRT CPU client (`xla` crate).
+//!   Everything touching PJRT is behind the `pjrt` cargo feature; the
+//!   default build is pure Rust with zero external artifacts.
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! `decentlam` binary (and every example) is self-contained.
@@ -24,6 +26,7 @@ pub mod experiments;
 pub mod grad;
 pub mod optim;
 pub mod prop;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod topology;
 pub mod util;

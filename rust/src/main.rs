@@ -20,6 +20,7 @@ use decentlam::coordinator::Trainer;
 use decentlam::data::LinRegProblem;
 use decentlam::experiments as exp;
 use decentlam::grad::linreg;
+#[cfg(feature = "pjrt")]
 use decentlam::runtime::{Manifest, Runtime};
 use decentlam::topology::{metropolis_hastings, rho, spectral, Kind, Topology};
 use decentlam::util::cli::Args;
@@ -108,6 +109,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let (_, table) = exp::table5::run(&opts)?;
             println!("{}", table.render());
         }
+        #[cfg(feature = "pjrt")]
         "table6" => {
             let mut opts = exp::table6::Opts::default();
             if quick {
@@ -120,6 +122,13 @@ fn dispatch(args: &Args) -> Result<()> {
             let runtime = Runtime::start()?;
             let (_, table) = exp::table6::run(&runtime.handle(), &manifest, &opts)?;
             println!("{}", table.render());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "table6" => {
+            anyhow::bail!(
+                "table6 runs on the PJRT detection artifact — rebuild with \
+                 `--features pjrt` (requires the xla crate + `make artifacts`)"
+            );
         }
         "fig5" => {
             let mut opts = exp::fig5::Opts::default();
@@ -237,7 +246,7 @@ fn linreg_bias_run(optimizer: &str, topology: &str, pd: bool, steps: usize) -> R
         t.step(k);
     }
     let xs: Vec<Vec<f32>> = t.states.iter().map(|s| s.x.clone()).collect();
-    Ok((rho(&t.wm), problem.relative_error(&xs)))
+    Ok((rho(&t.mixing_matrix()), problem.relative_error(&xs)))
 }
 
 /// Theorem 1 restriction ablation: plain vs lazy (positive-definite) W.

@@ -11,7 +11,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct AwcDmsgd;
 
@@ -32,15 +32,17 @@ impl Optimizer for AwcDmsgd {
         scratch: &mut Scratch,
     ) {
         // Publish the raw model (combination input).
-        for (i, st) in states.iter().enumerate() {
-            scratch.publish[i].copy_from_slice(&st.x);
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for ((st, mixed), g) in states.iter_mut().zip(&scratch.mixed).zip(grads) {
-            math::axpby(&mut st.m, 1.0, g, ctx.beta);
-            st.x.copy_from_slice(mixed);
+        let states_ro: &[NodeState] = states;
+        ctx.exec.for_each_mut(&mut scratch.publish, |i, p| {
+            p.copy_from_slice(&states_ro[i].x);
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            math::axpby(&mut st.m, 1.0, &grads[i], ctx.beta);
+            st.x.copy_from_slice(&mixed[i]);
             math::axpy(&mut st.x, -ctx.lr, &st.m);
-        }
+        });
     }
 }
 
@@ -54,7 +56,7 @@ mod tests {
         let d = 2;
         let (wm, states0, mut scratch) = setup(4, d); // x_i = i
         let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; d]).collect();
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.5, 0, false);
         let mut awc = states0.clone();
         AwcDmsgd.round(&mut awc, &grads, &ctx, &mut scratch);
         let mut atc = states0.clone();
@@ -74,7 +76,7 @@ mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![7.0], 0)).collect();
         let grads = vec![vec![0.0f32]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         AwcDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
         for st in &states {
             assert!((st.x[0] - 7.0).abs() < 1e-6);

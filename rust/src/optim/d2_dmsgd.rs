@@ -15,7 +15,7 @@
 //!
 //! Aux buffers: [0] x^{k−1}, [1] the previous update vector γ^{k−1}·m^{k−1}.
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct D2Dmsgd;
 
@@ -40,8 +40,7 @@ impl Optimizer for D2Dmsgd {
         scratch: &mut Scratch,
     ) {
         let first = ctx.step == 0;
-        for (i, st) in states.iter_mut().enumerate() {
-            let p = &mut scratch.publish[i];
+        ctx.exec.for_each_pair_mut(states, &mut scratch.publish, |i, st, p| {
             // momentum update: m = beta*m + g
             for (mi, &gi) in st.m.iter_mut().zip(&grads[i]) {
                 *mi = ctx.beta * *mi + gi;
@@ -54,22 +53,20 @@ impl Optimizer for D2Dmsgd {
             } else {
                 // D² combination: 2x − x_prev − γ^k m^k + (γ^{k−1} m^{k−1}).
                 for k in 0..st.x.len() {
-                    p[k] = 2.0 * st.x[k] - st.aux[0][k] - ctx.lr * st.m[k]
-                        + st.aux[1][k];
+                    p[k] = 2.0 * st.x[k] - st.aux[0][k] - ctx.lr * st.m[k] + st.aux[1][k];
                 }
             }
-        }
-        // Record previous iterate and previous update vector, then mix.
-        for st in states.iter_mut() {
+            // Record previous iterate and previous update vector.
             for k in 0..st.x.len() {
                 st.aux[0][k] = st.x[k];
                 st.aux[1][k] = ctx.lr * st.m[k];
             }
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            st.x.copy_from_slice(mixed);
-        }
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            st.x.copy_from_slice(&mixed[i]);
+        });
     }
 }
 
@@ -86,7 +83,7 @@ mod tests {
             (0..4).map(|i| NodeState::new(vec![i as f32; d], aux)).collect()
         };
         let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32; d]).collect();
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         let mut a = mk(2);
         D2Dmsgd.round(&mut a, &grads, &ctx, &mut scratch);
         let mut b = mk(0);
@@ -111,8 +108,7 @@ mod tests {
         for step in 0..4000 {
             let grads: Vec<Vec<f32>> =
                 states.iter().zip(&c).map(|(s, ci)| vec![s.x[0] - ci]).collect();
-            let ctx =
-                RoundCtx { wm: &wm, lr: 0.05, beta: 0.8, step, time_varying: false, layer_ranges: &[] };
+            let ctx = RoundCtx::new(&wm, 0.05, 0.8, step, false);
             o.round(&mut states, &grads, &ctx, &mut scratch);
         }
         for st in &states {

@@ -9,7 +9,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct DaDmsgd;
 
@@ -30,26 +30,25 @@ impl Optimizer for DaDmsgd {
         scratch: &mut Scratch,
     ) {
         // Publish half-momentum beta*m + g, gossip it.
-        for (i, st) in states.iter().enumerate() {
-            let p = &mut scratch.publish[i];
-            for ((pi, &mi), &gi) in p.iter_mut().zip(&st.m).zip(&grads[i]) {
+        let states_ro: &[NodeState] = states;
+        ctx.exec.for_each_mut(&mut scratch.publish, |i, p| {
+            for ((pi, &mi), &gi) in p.iter_mut().zip(&states_ro[i].m).zip(&grads[i]) {
                 *pi = ctx.beta * mi + gi;
             }
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            st.m.copy_from_slice(mixed);
-        }
-        // Publish half-step with the averaged momentum, gossip it.
-        for (i, st) in states.iter().enumerate() {
-            let z = &mut scratch.publish[i];
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        // Install the averaged momentum, publish the half-step with it.
+        let mixed_ro: &[Vec<f32>] = &scratch.mixed;
+        ctx.exec.for_each_pair_mut(states, &mut scratch.publish, |i, st, z| {
+            st.m.copy_from_slice(&mixed_ro[i]);
             z.copy_from_slice(&st.x);
             math::axpy(z, -ctx.lr, &st.m);
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            st.x.copy_from_slice(mixed);
-        }
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            st.x.copy_from_slice(&mixed[i]);
+        });
     }
 }
 
@@ -65,7 +64,7 @@ mod tests {
         // neighborhood of 0 picks up momentum mass.
         let mut grads = vec![vec![0.0f32]; 4];
         grads[0][0] = 1.0;
-        let ctx = RoundCtx { wm: &wm, lr: 0.0, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.0, 0.9, 0, false);
         DaDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
         // Node 1 and 3 are ring-neighbors of 0.
         assert!(states[1].m[0] > 0.0);
@@ -82,7 +81,7 @@ mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![2.0, 3.0], 0)).collect();
         let grads = vec![vec![0.0f32; 2]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         DaDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
         for st in &states {
             assert!((st.x[0] - 2.0).abs() < 1e-6 && (st.x[1] - 3.0).abs() < 1e-6);

@@ -17,7 +17,7 @@
 //! the native mirror, verified against the kernel's golden vectors in
 //! `rust/tests/golden.rs`.
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct DecentLam {
     /// Cap on ‖g̃‖ as a multiple of ‖g_raw‖. The corrected gradient
@@ -72,19 +72,20 @@ impl Optimizer for DecentLam {
         scratch: &mut Scratch,
     ) {
         // Publish z_i = x_i - lr*g_i (identical payload to DSGD).
-        for (i, st) in states.iter().enumerate() {
-            let z = &mut scratch.publish[i];
-            for ((zi, &xi), &gi) in z.iter_mut().zip(&st.x).zip(&grads[i]) {
+        let states_ro: &[NodeState] = states;
+        ctx.exec.for_each_mut(&mut scratch.publish, |i, z| {
+            for ((zi, &xi), &gi) in z.iter_mut().zip(&states_ro[i].x).zip(&grads[i]) {
                 *zi = xi - ctx.lr * gi;
             }
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
         // Fused corrected-momentum apply (eq. 17), with the correction
         // clipped at `clip`×‖g‖ (see field docs — time-varying graphs).
-        for ((st, mix), grad) in states.iter_mut().zip(&mut scratch.mixed).zip(grads) {
-            let g_norm = crate::util::math::norm2(grad) as f32;
+        let clip = self.clip;
+        ctx.exec.for_each_pair_mut(states, &mut scratch.mixed, |i, st, mix| {
+            let g_norm = crate::util::math::norm2(&grads[i]) as f32;
             let corr_norm = (crate::util::math::dist2(&st.x, mix).sqrt() / ctx.lr as f64) as f32;
-            let limit = self.clip * g_norm + 1e-12;
+            let limit = clip * g_norm + 1e-12;
             if ctx.time_varying && corr_norm > limit {
                 // mix_eff = x + (mix − x)·s keeps the update direction,
                 // bounds ‖g̃‖ = ‖x − mix_eff‖/γ at the limit.
@@ -94,13 +95,14 @@ impl Optimizer for DecentLam {
                 }
             }
             fused_apply(&mut st.x, &mut st.m, mix, ctx.lr, ctx.beta);
-        }
+        });
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::dsgd::tests::setup;
+    use super::super::partial_average_all;
     use super::*;
     use crate::topology::{metropolis_hastings, Kind, Topology};
 
@@ -137,7 +139,7 @@ mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![1.5, -0.5], 0)).collect();
         let grads = vec![vec![0.0f32; 2]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         let mut o = DecentLam::default();
         o.round(&mut states, &grads, &ctx, &mut scratch);
         for st in &states {
@@ -151,7 +153,7 @@ mod tests {
         let d = 3;
         let (wm, states0, mut scratch) = setup(4, d);
         let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![0.3 * (i as f32 - 1.0); d]).collect();
-        let ctx = RoundCtx { wm: &wm, lr: 0.2, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.2, 0.0, 0, false);
         let mut a = states0.clone();
         DecentLam::default().round(&mut a, &grads, &ctx, &mut scratch);
         let mut b = states0.clone();
@@ -192,7 +194,7 @@ mod tests {
                 })
                 .collect()
         };
-        let ctx = RoundCtx { wm: &wm, lr: gamma, beta, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, gamma, beta, 0, false);
 
         // Track x^{k-1}, x^k to verify the recursion at k >= 1.
         let mut x_prev: Vec<Vec<f32>> = states.iter().map(|s| s.x.clone()).collect();

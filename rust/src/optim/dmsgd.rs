@@ -6,7 +6,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct Dmsgd;
 
@@ -26,19 +26,19 @@ impl Optimizer for Dmsgd {
         ctx: &RoundCtx,
         scratch: &mut Scratch,
     ) {
-        for (i, st) in states.iter_mut().enumerate() {
+        ctx.exec.for_each_pair_mut(states, &mut scratch.publish, |i, st, z| {
             // m = beta*m + g  (momentum update)
             math::axpby(&mut st.m, 1.0, &grads[i], ctx.beta);
             // z = x - lr*m  (local model update)
-            let z = &mut scratch.publish[i];
             z.copy_from_slice(&st.x);
             math::axpy(z, -ctx.lr, &st.m);
-        }
+        });
         // x = sum_j w_ij z_j  (partial average)
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            st.x.copy_from_slice(mixed);
-        }
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            st.x.copy_from_slice(&mixed[i]);
+        });
     }
 }
 
@@ -54,7 +54,7 @@ mod tests {
             s.x[0] = 0.0;
         }
         let grads = vec![vec![1.0f32]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.0, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.0, 0.5, 0, false);
         let mut o = Dmsgd;
         o.round(&mut states, &grads, &ctx, &mut scratch);
         assert!((states[0].m[0] - 1.0).abs() < 1e-6);
@@ -69,7 +69,7 @@ mod tests {
         let d = 3;
         let (wm, states0, mut scratch) = setup(4, d);
         let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32; d]).collect();
-        let ctx = RoundCtx { wm: &wm, lr: 0.2, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.2, 0.0, 0, false);
 
         let mut a = states0.clone();
         Dmsgd.round(&mut a, &grads, &ctx, &mut scratch);

@@ -6,7 +6,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct Dsgd;
 
@@ -27,16 +27,17 @@ impl Optimizer for Dsgd {
         scratch: &mut Scratch,
     ) {
         // z_i = x_i - lr * g_i  (local update, eq. 4)
-        for (i, st) in states.iter().enumerate() {
-            let z = &mut scratch.publish[i];
-            z.copy_from_slice(&st.x);
+        let states_ro: &[NodeState] = states;
+        ctx.exec.for_each_mut(&mut scratch.publish, |i, z| {
+            z.copy_from_slice(&states_ro[i].x);
             math::axpy(z, -ctx.lr, &grads[i]);
-        }
+        });
         // x_i = sum_j w_ij z_j  (partial averaging, eq. 5)
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            st.x.copy_from_slice(mixed);
-        }
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            st.x.copy_from_slice(&mixed[i]);
+        });
     }
 }
 
@@ -58,7 +59,7 @@ pub(crate) mod tests {
     fn zero_grad_is_pure_gossip() {
         let (wm, mut states, mut scratch) = setup(4, 2);
         let grads = vec![vec![0.0f32; 2]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         let before_mean: f32 = states.iter().map(|s| s.x[0]).sum::<f32>() / 4.0;
         Dsgd.round(&mut states, &grads, &ctx, &mut scratch);
         let after_mean: f32 = states.iter().map(|s| s.x[0]).sum::<f32>() / 4.0;
@@ -76,7 +77,7 @@ pub(crate) mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![1.0; d], 0)).collect();
         let grads: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; d]).collect();
-        let ctx = RoundCtx { wm: &wm, lr: 0.5, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.5, 0.0, 0, false);
         let mut scratch = Scratch::new(4, d);
         Dsgd.round(&mut states, &grads, &ctx, &mut scratch);
         // mean grad = 1.5 -> every x = 1 - 0.5*1.5 = 0.25

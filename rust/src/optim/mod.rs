@@ -5,9 +5,14 @@
 //! (already averaged over the node's accumulated micro-batches by the
 //! coordinator) and performs its communication + update. Communication
 //! is expressed exclusively through [`partial_average_all`] /
-//! [`global_average`] so that (a) the decentralized methods only ever
-//! read *neighbor* rows of `W`, and (b) the cost model can charge
-//! exactly the payloads declared by [`Optimizer::comm_pattern`].
+//! [`global_average`] over an abstract [`CommEngine`] (sparse neighbor
+//! lists in production — see `topology::sparse`) so that (a) the
+//! decentralized methods only ever read *neighbor* rows of `W`, never a
+//! dense matrix, and (b) the cost model can charge exactly the payloads
+//! declared by [`Optimizer::comm_pattern`] from realized edge counts.
+//! Per-node work inside a round fans out through the
+//! [`RoundCtx::exec`] node executor; every loop body is independent
+//! per node, so parallel and serial execution are bitwise identical.
 //!
 //! Implemented algorithms:
 //!
@@ -37,7 +42,8 @@ pub mod slowmo;
 
 use anyhow::bail;
 
-use crate::topology::WeightMatrix;
+use crate::comm::engine::CommEngine;
+use crate::coordinator::executor::NodeExecutor;
 use crate::util::math;
 
 /// Per-node optimizer state: model, momentum, and algorithm-specific
@@ -62,7 +68,10 @@ impl NodeState {
 
 /// Everything a round needs besides node state.
 pub struct RoundCtx<'a> {
-    pub wm: &'a WeightMatrix,
+    /// Mixing weights, exposed as sparse neighbor rows.
+    pub comm: &'a dyn CommEngine,
+    /// Node executor the round fans per-node work out through.
+    pub exec: NodeExecutor,
     /// Learning rate at this step (schedule already applied).
     pub lr: f32,
     /// Momentum coefficient β.
@@ -75,6 +84,28 @@ pub struct RoundCtx<'a> {
     pub time_varying: bool,
     /// Flat-vector layer boundaries (for LARS); empty = single group.
     pub layer_ranges: &'a [(usize, usize)],
+}
+
+impl<'a> RoundCtx<'a> {
+    /// Serial-executor context with no layer ranges (the common test
+    /// shape; the trainer builds the full struct itself).
+    pub fn new(
+        comm: &'a dyn CommEngine,
+        lr: f32,
+        beta: f32,
+        step: usize,
+        time_varying: bool,
+    ) -> RoundCtx<'a> {
+        RoundCtx {
+            comm,
+            exec: NodeExecutor::serial(),
+            lr,
+            beta,
+            step,
+            time_varying,
+            layer_ranges: &[],
+        }
+    }
 }
 
 /// Reusable cross-round buffers, allocated once by the coordinator —
@@ -126,16 +157,26 @@ pub trait Optimizer: Send {
 }
 
 /// mixed[i] = Σ_{j ∈ N(i)} w_ij · src[j] — the partial-averaging
-/// primitive (paper eq. (3)). Reads only the sparse neighbor row; terms
-/// are fused pairwise (`math::weighted_sum_into`) to halve destination
-/// traffic on this memory-bound loop.
-pub fn partial_average_all(wm: &WeightMatrix, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
-    let mut terms: Vec<(f32, &[f32])> = Vec::with_capacity(8);
-    for i in 0..wm.n {
-        terms.clear();
-        terms.extend(wm.row(i).iter().map(|&(j, w)| (w, src[j].as_slice())));
-        math::weighted_sum_into(&mut dst[i], &terms);
+/// primitive (paper eq. (3)). Reads only the sparse neighbor row of
+/// whatever engine backs `comm`; terms are fused pairwise
+/// (`math::weighted_sum_into`) to halve destination traffic on this
+/// memory-bound loop.
+pub fn partial_average_all(comm: &dyn CommEngine, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    for (i, row) in dst.iter_mut().enumerate() {
+        comm.mix_node(i, src, row);
     }
+}
+
+/// [`partial_average_all`] fanned out over the node executor —
+/// destination rows are independent, so the arithmetic (and result) is
+/// identical to the serial version.
+pub fn partial_average_all_par(
+    comm: &dyn CommEngine,
+    src: &[Vec<f32>],
+    dst: &mut [Vec<f32>],
+    exec: NodeExecutor,
+) {
+    exec.for_each_mut(dst, |i, row| comm.mix_node(i, src, row));
 }
 
 /// Global average into every destination row (the All-Reduce primitive).
@@ -154,7 +195,11 @@ pub fn global_average(src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
 }
 
 /// Construct an optimizer by config name.
-pub fn build(name: &str, slowmo_period: usize, slowmo_beta: f64) -> anyhow::Result<Box<dyn Optimizer>> {
+pub fn build(
+    name: &str,
+    slowmo_period: usize,
+    slowmo_beta: f64,
+) -> anyhow::Result<Box<dyn Optimizer>> {
     Ok(match name {
         "dsgd" => Box::new(dsgd::Dsgd),
         "dmsgd" => Box::new(dmsgd::Dmsgd),

@@ -82,11 +82,13 @@ impl Optimizer for Pmsgd {
             }
         }
 
-        // Identical heavy-ball step on every node.
-        for st in states.iter_mut() {
-            math::axpby(&mut st.m, 1.0, scaled, ctx.beta);
+        // Identical heavy-ball step on every node (parallel over nodes;
+        // `scaled` is read-only from here on).
+        let scaled_ro: &[f32] = scaled;
+        ctx.exec.for_each_mut(states, |_i, st| {
+            math::axpby(&mut st.m, 1.0, scaled_ro, ctx.beta);
             math::axpy(&mut st.x, -ctx.lr, &st.m);
-        }
+        });
     }
 }
 
@@ -96,7 +98,7 @@ mod tests {
     use crate::topology::WeightMatrix;
 
     fn ctx<'a>(wm: &'a WeightMatrix, ranges: &'a [(usize, usize)]) -> RoundCtx<'a> {
-        RoundCtx { wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: ranges }
+        RoundCtx { layer_ranges: ranges, ..RoundCtx::new(wm, 0.1, 0.9, 0, false) }
     }
 
     #[test]
@@ -126,7 +128,7 @@ mod tests {
         let grads = vec![vec![1.0f32], vec![3.0f32]]; // mean 2
         let mut scratch = Scratch::new(2, 1);
         let mut o = Pmsgd::plain();
-        let c = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let c = RoundCtx::new(&wm, 0.1, 0.5, 0, false);
         o.round(&mut states, &grads, &c, &mut scratch);
         // m=2, x=-0.2
         assert!((states[0].m[0] - 2.0).abs() < 1e-6);
@@ -156,7 +158,7 @@ mod tests {
         let grads = vec![g.clone(), g];
         let mut scratch = Scratch::new(2, d);
         let mut o = Pmsgd::lars();
-        let c = RoundCtx { wm: &wm, lr: 1.0, beta: 0.0, step: 0, time_varying: false, layer_ranges: &RANGES };
+        let c = RoundCtx { layer_ranges: &RANGES, ..RoundCtx::new(&wm, 1.0, 0.0, 0, false) };
         o.round(&mut states, &grads, &c, &mut scratch);
         let d0 = (1.0 - states[0].x[0]).abs();
         let d1 = (1.0 - states[0].x[4]).abs();

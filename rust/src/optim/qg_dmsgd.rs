@@ -11,7 +11,7 @@
 //! Aux buffer [0] holds m̂ (we keep `NodeState::m` as its storage — no
 //! aux needed).
 
-use super::{partial_average_all, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct QgDmsgd;
 
@@ -31,23 +31,23 @@ impl Optimizer for QgDmsgd {
         ctx: &RoundCtx,
         scratch: &mut Scratch,
     ) {
-        for (i, st) in states.iter().enumerate() {
-            let z = &mut scratch.publish[i];
-            for (((zi, &xi), &gi), &mi) in
-                z.iter_mut().zip(&st.x).zip(&grads[i]).zip(&st.m)
-            {
+        let states_ro: &[NodeState] = states;
+        ctx.exec.for_each_mut(&mut scratch.publish, |i, z| {
+            let st = &states_ro[i];
+            for (((zi, &xi), &gi), &mi) in z.iter_mut().zip(&st.x).zip(&grads[i]).zip(&st.m) {
                 *zi = xi - ctx.lr * (gi + ctx.beta * mi);
             }
-        }
-        partial_average_all(ctx.wm, &scratch.publish, &mut scratch.mixed);
+        });
+        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
         let inv_gamma = 1.0 / ctx.lr.max(1e-12);
-        for (st, mixed) in states.iter_mut().zip(&scratch.mixed) {
-            for ((mi, xi), &newx) in st.m.iter_mut().zip(st.x.iter_mut()).zip(mixed) {
+        let mixed = &scratch.mixed;
+        ctx.exec.for_each_mut(states, |i, st| {
+            for ((mi, xi), &newx) in st.m.iter_mut().zip(st.x.iter_mut()).zip(&mixed[i]) {
                 let disp = (*xi - newx) * inv_gamma;
                 *mi = ctx.beta * *mi + (1.0 - ctx.beta) * disp;
                 *xi = newx;
             }
-        }
+        });
     }
 }
 
@@ -62,7 +62,7 @@ mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![3.0], 0)).collect();
         let grads = vec![vec![0.0f32]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         QgDmsgd.round(&mut states, &grads, &ctx, &mut scratch);
         for st in &states {
             assert!((st.x[0] - 3.0).abs() < 1e-6);
@@ -79,7 +79,7 @@ mod tests {
         let mut states: Vec<NodeState> =
             (0..4).map(|_| NodeState::new(vec![0.0], 0)).collect();
         let grads = vec![vec![2.0f32]; 4];
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.5, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.5, 0, false);
         let mut o = QgDmsgd;
         for _ in 0..60 {
             o.round(&mut states, &grads, &ctx, &mut scratch);

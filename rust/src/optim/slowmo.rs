@@ -59,18 +59,19 @@ impl Optimizer for SlowMo {
             super::global_average(&xs, &mut scratch.mixed);
             let xbar = scratch.mixed[0].clone();
             let gamma = ctx.lr.max(1e-8);
-            for st in states.iter_mut() {
+            let (slow_beta, alpha) = (self.slow_beta, self.alpha);
+            ctx.exec.for_each_mut(states, |_i, st| {
                 for k in 0..d {
-                    let u = self.slow_beta * st.aux[0][k] + (st.aux[1][k] - xbar[k]) / gamma;
+                    let u = slow_beta * st.aux[0][k] + (st.aux[1][k] - xbar[k]) / gamma;
                     st.aux[0][k] = u;
-                    let xk = st.aux[1][k] - self.alpha * gamma * u;
+                    let xk = st.aux[1][k] - alpha * gamma * u;
                     st.x[k] = xk;
                     st.aux[1][k] = xk; // new anchor
                 }
                 // Reset the fast momentum at sync (per the SlowMo paper's
                 // base-optimizer buffer reset variant).
                 st.m.iter_mut().for_each(|v| *v = 0.0);
-            }
+            });
         }
     }
 }
@@ -88,7 +89,7 @@ mod tests {
         let grads = vec![vec![0.0f32; 2]; 4];
         let mut o = SlowMo::new(2, 0.5);
         for step in 0..2 {
-            let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step, time_varying: false, layer_ranges: &[] };
+            let ctx = RoundCtx::new(&wm, 0.1, 0.9, step, false);
             o.round(&mut states, &grads, &ctx, &mut scratch);
         }
         // After the sync at step 1 (period 2), all nodes share x exactly.
@@ -104,7 +105,7 @@ mod tests {
             (0..4).map(|_| NodeState::new(vec![5.0], 2)).collect();
         let grads = vec![vec![0.0f32]; 4];
         let mut o = SlowMo::new(1, 0.5);
-        let ctx = RoundCtx { wm: &wm, lr: 0.1, beta: 0.9, step: 0, time_varying: false, layer_ranges: &[] };
+        let ctx = RoundCtx::new(&wm, 0.1, 0.9, 0, false);
         o.round(&mut states, &grads, &ctx, &mut scratch);
         for st in &states {
             assert!((st.x[0] - 5.0).abs() < 1e-6);

@@ -11,12 +11,14 @@
 //! (all nodes must draw the same graph — paper App. G.3 keeps "the same
 //! random seed in all nodes to avoid deadlocks").
 
+pub mod sparse;
 pub mod spectral;
 pub mod weights;
 
 use crate::util::rng::Pcg64;
 
-pub use spectral::rho;
+pub use sparse::SparseWeights;
+pub use spectral::{rho, rho_power};
 pub use weights::{metropolis_hastings, WeightMatrix};
 
 /// Topology kinds (paper Table 5 + App. G.3 + one-peer exp of Assran et al.).
@@ -33,6 +35,34 @@ pub enum Kind {
 }
 
 impl Kind {
+    /// Every topology kind — the single source of truth for exhaustive
+    /// sweeps (property tests, the explorer). Extend this when adding a
+    /// variant so new kinds get sparse-engine coverage automatically.
+    pub const ALL: [Kind; 8] = [
+        Kind::Ring,
+        Kind::Mesh,
+        Kind::Full,
+        Kind::Star,
+        Kind::SymExp,
+        Kind::OnePeerExp,
+        Kind::BipartiteRandomMatch,
+        Kind::ErdosRenyi,
+    ];
+
+    /// Canonical name (the primary spelling `parse` accepts).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Ring => "ring",
+            Kind::Mesh => "mesh",
+            Kind::Full => "full",
+            Kind::Star => "star",
+            Kind::SymExp => "sym-exp",
+            Kind::OnePeerExp => "one-peer-exp",
+            Kind::BipartiteRandomMatch => "bipartite",
+            Kind::ErdosRenyi => "erdos",
+        }
+    }
+
     pub fn parse(s: &str) -> anyhow::Result<Kind> {
         Ok(match s {
             "ring" => Kind::Ring,
@@ -318,5 +348,12 @@ mod tests {
         assert!(Kind::parse("moebius").is_err());
         assert!(Kind::BipartiteRandomMatch.time_varying());
         assert!(!Kind::Ring.time_varying());
+    }
+
+    #[test]
+    fn canonical_names_round_trip_through_parse() {
+        for kind in Kind::ALL {
+            assert_eq!(Kind::parse(kind.name()).unwrap(), kind, "{kind:?}");
+        }
     }
 }

@@ -1,0 +1,195 @@
+//! Sparse neighbor-list mixing weights — the CSR-style comm engine the
+//! trainer runs on (DESIGN.md §3).
+//!
+//! [`SparseWeights`] stores only the populated entries of the
+//! Metropolis–Hastings matrix: `row_ptr` offsets plus `(neighbor,
+//! weight)` pairs sorted by neighbor index, self entry included. Memory
+//! and per-step rebuild cost are O(n + edges) instead of the dense
+//! engine's O(n²) — the difference between simulating a ring at n=1024
+//! in microseconds versus megabytes of matrix rebuilt every step on
+//! time-varying topologies (`benches/sparse_vs_dense.rs` quantifies
+//! it). The weights themselves are identical to the dense
+//! [`super::weights::metropolis_hastings`] construction; the property
+//! suite (`rust/tests/properties.rs`) pins the two engines together to
+//! 1e-6 on random topologies.
+
+use crate::comm::engine::{CommEngine, RowEntry};
+
+use super::Topology;
+
+/// CSR-style symmetric doubly-stochastic mixing weights.
+#[derive(Debug, Clone, Default)]
+pub struct SparseWeights {
+    n: usize,
+    /// Row offsets into `entries`, length n + 1.
+    row_ptr: Vec<u32>,
+    /// (neighbor index incl. self, weight), rows sorted by neighbor.
+    entries: Vec<RowEntry>,
+}
+
+impl SparseWeights {
+    /// Build Metropolis–Hastings weights for a topology without ever
+    /// materializing the dense matrix: O(edges).
+    pub fn metropolis_hastings(topo: &Topology) -> SparseWeights {
+        let mut sw = SparseWeights::default();
+        sw.rebuild_metropolis(topo);
+        sw
+    }
+
+    /// Rebuild in place for a new topology realization — the per-step
+    /// path for time-varying topologies (one-peer exponential,
+    /// bipartite random match). Reuses the allocations and rewrites
+    /// all neighbor lists in O(n + edges); it never touches (let alone
+    /// rebuilds) an n×n matrix. There is no incremental per-row
+    /// diffing — for these graphs every row changes each step anyway.
+    pub fn rebuild_metropolis(&mut self, topo: &Topology) {
+        let n = topo.n;
+        self.n = n;
+        self.row_ptr.clear();
+        self.entries.clear();
+        self.row_ptr.push(0);
+        for i in 0..n {
+            let deg_i = topo.degree(i);
+            // Same f64 off-diagonal terms as the dense builder; the
+            // diagonal differs from it only by summation-order rounding
+            // (tests compare at 1e-6, far above f64 ulps).
+            let mut self_w = 1.0f64;
+            let mut self_slot: Option<usize> = None;
+            for &j in topo.neighbors(i) {
+                if j > i && self_slot.is_none() {
+                    self_slot = Some(self.entries.len());
+                    self.entries.push((i as u32, 0.0));
+                }
+                let w = 1.0 / (1.0 + deg_i.max(topo.degree(j)) as f64);
+                self_w -= w;
+                self.entries.push((j as u32, w as f32));
+            }
+            let slot = match self_slot {
+                Some(s) => s,
+                None => {
+                    self.entries.push((i as u32, 0.0));
+                    self.entries.len() - 1
+                }
+            };
+            self.entries[slot].1 = self_w as f32;
+            self.row_ptr.push(self.entries.len() as u32);
+        }
+    }
+
+    /// Lazy (half-identity) transform in place: W ← (I + W)/2, the
+    /// positive-definite variant Theorem 1 assumes.
+    pub fn make_lazy(&mut self) {
+        for i in 0..self.n {
+            let (start, end) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for e in &mut self.entries[start..end] {
+                e.1 *= 0.5;
+                if e.0 as usize == i {
+                    e.1 += 0.5;
+                }
+            }
+        }
+    }
+
+    /// Stored entries (diagnostic; n + 2·edges).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+impl CommEngine for SparseWeights {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, i: usize) -> &[RowEntry] {
+        &self.entries[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind};
+
+    fn agree(sw: &SparseWeights, topo: &Topology) {
+        let wm = metropolis_hastings(topo);
+        assert_eq!(sw.n(), wm.n);
+        for i in 0..topo.n {
+            assert_eq!(sw.row(i).len(), wm.row(i).len(), "row {i} length");
+            for (&(js, ws), &(jd, wd)) in sw.row(i).iter().zip(wm.row(i)) {
+                assert_eq!(js, jd, "row {i} neighbor order");
+                assert!((ws - wd).abs() < 1e-6, "w[{i}][{js}]: {ws} vs {wd}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_builder_on_static_kinds() {
+        for kind in [Kind::Ring, Kind::Mesh, Kind::Full, Kind::Star, Kind::SymExp] {
+            for n in [2usize, 3, 5, 8, 16] {
+                let topo = Topology::build(kind, n);
+                agree(&SparseWeights::metropolis_hastings(&topo), &topo);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_builder_on_time_varying_kinds() {
+        for kind in [Kind::OnePeerExp, Kind::BipartiteRandomMatch] {
+            for step in 0..6 {
+                let topo = Topology::at_step(kind, 8, 11, step);
+                agree(&SparseWeights::metropolis_hastings(&topo), &topo);
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_allocations_and_stays_correct() {
+        let mut sw = SparseWeights::default();
+        for step in 0..10 {
+            let topo = Topology::at_step(Kind::BipartiteRandomMatch, 12, 5, step);
+            sw.rebuild_metropolis(&topo);
+            agree(&sw, &topo);
+            assert!(sw.row_sum_error() < 1e-6, "step {step}");
+        }
+    }
+
+    #[test]
+    fn rows_sorted_with_self_entry() {
+        let topo = Topology::build(Kind::SymExp, 16);
+        let sw = SparseWeights::metropolis_hastings(&topo);
+        for i in 0..16 {
+            let row = sw.row(i);
+            assert!(row.windows(2).all(|p| p[0].0 < p[1].0), "row {i} unsorted");
+            assert!(row.iter().any(|&(j, _)| j as usize == i), "row {i} missing self");
+        }
+    }
+
+    #[test]
+    fn edge_and_degree_counts_match_topology() {
+        let topo = Topology::build(Kind::Mesh, 12);
+        let sw = SparseWeights::metropolis_hastings(&topo);
+        assert_eq!(sw.num_edges(), topo.num_edges());
+        assert_eq!(sw.max_degree(), topo.max_degree());
+    }
+
+    #[test]
+    fn lazy_halves_gossip_and_keeps_stochasticity() {
+        let topo = Topology::build(Kind::Ring, 8);
+        let mut sw = SparseWeights::metropolis_hastings(&topo);
+        let off_before = sw.row(0).iter().find(|&&(j, _)| j == 1).unwrap().1;
+        sw.make_lazy();
+        assert!(sw.row_sum_error() < 1e-6);
+        let off_after = sw.row(0).iter().find(|&&(j, _)| j == 1).unwrap().1;
+        assert!((off_after - off_before / 2.0).abs() < 1e-7);
+        assert!((sw.self_weight(0) - (0.5 + 1.0 / 6.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_node_is_identity() {
+        let topo = Topology::build(Kind::Ring, 1);
+        let sw = SparseWeights::metropolis_hastings(&topo);
+        assert_eq!(sw.row(0), &[(0u32, 1.0f32)]);
+        assert_eq!(sw.num_edges(), 0);
+    }
+}

@@ -1,5 +1,13 @@
 //! Spectral analysis of mixing matrices: ρ = max(|λ₂|, |λₙ|) (paper
 //! App. A, eq. (28)) — the constant every convergence bound depends on.
+//!
+//! Two routes: the exact dense eigensolve ([`rho`], O(n³), fine up to a
+//! few dozen nodes) and a deflated power iteration over any
+//! [`CommEngine`] ([`rho_power`], O(edges · iters)) — the one the
+//! large-n tools use so a ring at n=512–1024 stays interactive.
+
+use crate::comm::engine::CommEngine;
+use crate::util::rng::Pcg64;
 
 use super::weights::WeightMatrix;
 
@@ -14,6 +22,63 @@ pub fn rho(w: &WeightMatrix) -> f64 {
     ev[0].abs().max(ev[n - 2].abs())
 }
 
+/// ρ(W) via power iteration on the consensus-deflated operator, using
+/// only the sparse rows: start from a mean-zero vector (orthogonal to
+/// the top eigenvector 1), repeatedly apply W, re-center against f64
+/// drift, and read |λ| off the norm growth. Deterministic (fixed seed)
+/// and O(edges) per iteration; stops when the estimate moves < 1e-10
+/// or after `max_iters`.
+pub fn rho_power(w: &dyn CommEngine, max_iters: usize) -> f64 {
+    let n = w.n();
+    if n <= 1 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::seeded(0x59ec ^ n as u64);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.f64() - 0.5).collect();
+    center(&mut x);
+    let mut norm = norm2(&x);
+    if norm < 1e-300 {
+        return 0.0;
+    }
+    for v in x.iter_mut() {
+        *v /= norm;
+    }
+    let mut y = vec![0.0f64; n];
+    let mut lambda = 0.0f64;
+    for _ in 0..max_iters {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = w.row(i).iter().map(|&(j, wij)| wij as f64 * x[j as usize]).sum();
+        }
+        center(&mut y);
+        norm = norm2(&y);
+        if norm < 1e-300 {
+            // Deflated spectrum is (numerically) zero — e.g. the
+            // complete graph, where W = 11ᵀ/n exactly.
+            return 0.0;
+        }
+        let next = norm; // ‖W x‖ with ‖x‖ = 1 -> dominant |λ| estimate
+        for (xi, yi) in x.iter_mut().zip(&y) {
+            *xi = yi / norm;
+        }
+        if (next - lambda).abs() < 1e-10 {
+            return next.min(1.0);
+        }
+        lambda = next;
+    }
+    lambda.min(1.0)
+}
+
+fn center(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
 /// Spectral gap 1 − ρ.
 pub fn spectral_gap(w: &WeightMatrix) -> f64 {
     1.0 - rho(w)
@@ -22,7 +87,11 @@ pub fn spectral_gap(w: &WeightMatrix) -> f64 {
 /// Iterations for gossip averaging to contract consensus error by `eps`
 /// (diagnostic: k ≈ ln(1/eps) / ln(1/ρ)).
 pub fn mixing_time(w: &WeightMatrix, eps: f64) -> f64 {
-    let r = rho(w);
+    mixing_time_of(rho(w), eps)
+}
+
+/// [`mixing_time`] from an already-computed ρ (e.g. [`rho_power`]).
+pub fn mixing_time_of(r: f64, eps: f64) -> f64 {
     if r <= 0.0 {
         return 1.0;
     }
@@ -84,5 +153,37 @@ mod tests {
     fn mixing_time_monotone_in_eps() {
         let w = metropolis_hastings(&Topology::build(Kind::Ring, 8));
         assert!(mixing_time(&w, 1e-6) > mixing_time(&w, 1e-2));
+    }
+
+    #[test]
+    fn power_iteration_matches_dense_rho() {
+        use crate::topology::SparseWeights;
+        for kind in [Kind::Ring, Kind::Mesh, Kind::SymExp, Kind::Star] {
+            let topo = Topology::build(kind, 16);
+            let dense = rho(&metropolis_hastings(&topo));
+            let sparse = rho_power(&SparseWeights::metropolis_hastings(&topo), 200_000);
+            assert!(
+                (dense - sparse).abs() < 1e-4,
+                "{kind:?}: dense rho {dense} vs power-iteration {sparse}"
+            );
+        }
+    }
+
+    #[test]
+    fn power_iteration_complete_graph_is_zero() {
+        use crate::topology::SparseWeights;
+        let topo = Topology::build(Kind::Full, 12);
+        let r = rho_power(&SparseWeights::metropolis_hastings(&topo), 10_000);
+        assert!(r < 1e-6, "complete graph mixes in one round, rho={r}");
+    }
+
+    #[test]
+    fn power_iteration_feasible_at_ring_512() {
+        use crate::topology::SparseWeights;
+        let topo = Topology::build(Kind::Ring, 512);
+        let r = rho_power(&SparseWeights::metropolis_hastings(&topo), 200_000);
+        // Ring ρ = (1 + 2cos(2π/n))/3 -> extremely close to 1 at n=512.
+        let exact = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / 512.0).cos()) / 3.0;
+        assert!((r - exact).abs() < 1e-3, "rho {r} vs exact {exact}");
     }
 }

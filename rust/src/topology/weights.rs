@@ -10,18 +10,23 @@
 //! `lazy` mixing W' = (I + W)/2 shifts the spectrum into (0, 1], giving
 //! the positive-definite matrix Theorem 1 assumes (ablation `--pd`).
 
+use crate::comm::engine::{CommEngine, RowEntry};
 use crate::util::math::SymMatrix;
 
 use super::Topology;
 
-/// A dense symmetric mixing matrix plus per-node sparse views.
+/// A dense symmetric mixing matrix plus per-node sparse views. Kept for
+/// spectral analysis (eigenvalues need the full matrix) and as the
+/// reference the sparse engine ([`super::sparse::SparseWeights`]) is
+/// property-tested against; the trainer's hot path no longer touches
+/// it.
 #[derive(Debug, Clone)]
 pub struct WeightMatrix {
     pub n: usize,
     /// Dense row-major weights (n x n), kept in f64 for spectral math.
     pub dense: SymMatrix,
     /// Per node: (neighbor index including self, weight), sorted.
-    rows: Vec<Vec<(usize, f32)>>,
+    rows: Vec<Vec<RowEntry>>,
 }
 
 impl WeightMatrix {
@@ -31,7 +36,7 @@ impl WeightMatrix {
             .map(|i| {
                 (0..n)
                     .filter(|&j| dense.get(i, j) != 0.0)
-                    .map(|j| (j, dense.get(i, j) as f32))
+                    .map(|j| (j as u32, dense.get(i, j) as f32))
                     .collect()
             })
             .collect();
@@ -39,7 +44,7 @@ impl WeightMatrix {
     }
 
     /// Sparse row for node `i`: (j, w_ij) with w_ij > 0, includes self.
-    pub fn row(&self, i: usize) -> &[(usize, f32)] {
+    pub fn row(&self, i: usize) -> &[RowEntry] {
         &self.rows[i]
     }
 
@@ -98,7 +103,18 @@ impl WeightMatrix {
     }
 }
 
-/// Metropolis–Hastings weights for a topology.
+impl CommEngine for WeightMatrix {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, i: usize) -> &[RowEntry] {
+        &self.rows[i]
+    }
+}
+
+/// Metropolis–Hastings weights for a topology (dense reference builder;
+/// the trainer uses [`super::sparse::SparseWeights::metropolis_hastings`]).
 pub fn metropolis_hastings(topo: &Topology) -> WeightMatrix {
     let n = topo.n;
     let mut d = SymMatrix::zeros(n);
@@ -153,7 +169,7 @@ mod tests {
     fn rows_include_self_and_match_dense() {
         let w = metropolis_hastings(&Topology::build(Kind::Ring, 6));
         for i in 0..6 {
-            assert!(w.row(i).iter().any(|&(j, _)| j == i));
+            assert!(w.row(i).iter().any(|&(j, _)| j as usize == i));
             let s: f32 = w.row(i).iter().map(|&(_, v)| v).sum();
             assert!((s - 1.0).abs() < 1e-6);
         }

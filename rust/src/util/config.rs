@@ -93,7 +93,8 @@ pub struct Config {
     pub positive_definite: bool,
     /// Evaluate every `eval_every` steps (0 = only at the end).
     pub eval_every: usize,
-    /// Number of worker threads for the gradient phase (0 = nodes).
+    /// Worker threads for the gradient/exchange/update phases
+    /// (0 = one per hardware thread, 1 = serial).
     pub threads: usize,
 }
 

@@ -2,9 +2,13 @@
 //! mixing, batching, state management) using the in-tree `prop` harness
 //! (proptest substitute — see DESIGN.md §2).
 
-use decentlam::optim::{self, partial_average_all, NodeState, RoundCtx, Scratch};
+use decentlam::comm::CommEngine;
+use decentlam::coordinator::NodeExecutor;
+use decentlam::optim::{
+    self, partial_average_all, partial_average_all_par, NodeState, RoundCtx, Scratch,
+};
 use decentlam::prop::{check, gens};
-use decentlam::topology::{metropolis_hastings, rho, Kind, Topology};
+use decentlam::topology::{metropolis_hastings, rho, Kind, SparseWeights, Topology};
 use decentlam::util::math;
 use decentlam::util::rng::Pcg64;
 
@@ -126,14 +130,7 @@ fn prop_every_optimizer_preserves_consensus_fixed_point() {
             let grads = vec![vec![0.0f32; d]; *n];
             let mut scratch = Scratch::new(*n, d);
             for step in 0..5 {
-                let ctx = RoundCtx {
-                    wm: &wm,
-                    lr: 0.1,
-                    beta: 0.9,
-                    step,
-                    time_varying: false,
-                    layer_ranges: &[],
-                };
+                let ctx = RoundCtx::new(&wm, 0.1, 0.9, step, false);
                 o.round(&mut states, &grads, &ctx, &mut scratch);
             }
             for (i, st) in states.iter().enumerate() {
@@ -169,7 +166,7 @@ fn prop_decentralized_rounds_preserve_network_mean_modulo_gradient() {
                 xs.iter().map(|x| NodeState::new(x.clone(), 0)).collect();
             let mut scratch = Scratch::new(*n, d);
             let lr = 0.05f32;
-            let ctx = RoundCtx { wm: &wm, lr, beta: 0.0, step: 0, time_varying: false, layer_ranges: &[] };
+            let ctx = RoundCtx::new(&wm, lr, 0.0, 0, false);
             o.round(&mut states, gs, &ctx, &mut scratch);
             for j in 0..d {
                 let mean_before: f64 =
@@ -214,6 +211,112 @@ fn prop_accumulator_mean_equals_manual_mean() {
                 if (got[j] - want).abs() > 1e-5 {
                     return Err(format!("dim {j}: {} vs {want}", got[j]));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_and_dense_partial_averaging_agree() {
+    // The tentpole invariant: the CSR neighbor-list engine and the
+    // dense reference matrix compute the same exchange to 1e-6 on
+    // random topologies (static AND time-varying realizations).
+    check(
+        "sparse and dense partial averaging agree to 1e-6",
+        60,
+        |rng| {
+            let kind = Kind::ALL[rng.below(Kind::ALL.len())];
+            let n = 2 + 2 * rng.below(8); // even, for bipartite matching
+            let d = 1 + rng.below(24);
+            let step = rng.below(50);
+            let seed = rng.next_u64();
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (kind, n, step, seed, src)
+        },
+        |(kind, n, step, seed, src)| {
+            let d = src[0].len();
+            let topo = Topology::at_step(*kind, *n, *seed, *step);
+            let dense = metropolis_hastings(&topo);
+            let sparse = SparseWeights::metropolis_hastings(&topo);
+            let mut out_dense = vec![vec![0.0f32; d]; *n];
+            let mut out_sparse = vec![vec![0.0f32; d]; *n];
+            partial_average_all(&dense, src, &mut out_dense);
+            partial_average_all(&sparse, src, &mut out_sparse);
+            for i in 0..*n {
+                for k in 0..d {
+                    let (a, b) = (out_dense[i][k], out_sparse[i][k]);
+                    if (a - b).abs() > 1e-6 * (1.0 + a.abs()) {
+                        return Err(format!("{kind:?} node {i} dim {k}: dense {a} sparse {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_mh_rows_sum_to_one() {
+    // Metropolis–Hastings rows (and their lazy transform) must stay
+    // stochastic no matter which topology realization produced them.
+    check(
+        "sparse MH weight rows sum to 1 (plain and lazy)",
+        60,
+        |rng| {
+            let kind = Kind::ALL[rng.below(Kind::ALL.len())];
+            let n = 2 + 2 * rng.below(10);
+            let step = rng.below(100);
+            (kind, n, rng.next_u64(), step)
+        },
+        |&(kind, n, seed, step)| {
+            let topo = Topology::at_step(kind, n, seed, step);
+            let mut sw = SparseWeights::metropolis_hastings(&topo);
+            if sw.row_sum_error() > 1e-6 {
+                return Err(format!("{kind:?}: row sums off by {}", sw.row_sum_error()));
+            }
+            for i in 0..n {
+                if sw.self_weight(i) <= 0.0 {
+                    return Err(format!("{kind:?}: w_{i}{i} <= 0"));
+                }
+                if sw.row(i).iter().any(|&(_, w)| w < 0.0) {
+                    return Err(format!("{kind:?}: negative weight in row {i}"));
+                }
+            }
+            sw.make_lazy();
+            if sw.row_sum_error() > 1e-6 {
+                return Err(format!("{kind:?}: lazy row sums off by {}", sw.row_sum_error()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_exchange_bitwise_matches_serial() {
+    // The node executor chunks work but never reorders arithmetic:
+    // parallel partial averaging must equal the serial result exactly.
+    check(
+        "parallel partial averaging is bitwise identical to serial",
+        30,
+        |rng| {
+            let kind = random_kind(rng);
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(64);
+            let threads = 2 + rng.below(7);
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (kind, threads, src)
+        },
+        |(kind, threads, src)| {
+            let n = src.len();
+            let d = src[0].len();
+            let sw = SparseWeights::metropolis_hastings(&Topology::at_step(*kind, n, 1, 0));
+            let mut serial = vec![vec![0.0f32; d]; n];
+            let mut parallel = vec![vec![0.0f32; d]; n];
+            partial_average_all(&sw, src, &mut serial);
+            partial_average_all_par(&sw, src, &mut parallel, NodeExecutor::new(*threads));
+            if serial != parallel {
+                return Err("parallel result differs from serial".into());
             }
             Ok(())
         },
