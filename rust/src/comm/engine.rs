@@ -12,6 +12,10 @@
 //!   spectral analysis (eigenvalues need the full matrix) and as the
 //!   reference implementation the sparse engine is property-tested
 //!   against.
+//! * [`crate::sim::FaultyEngine`] — wraps the sparse engine and
+//!   realizes a fault schedule on its rows (masking + renormalization
+//!   + stale-message substitution); what the trainer mixes through
+//!   when `--faults` is set.
 //!
 //! Rows always include the self entry `(i, w_ii)`, sorted by neighbor
 //! index, so one weighted sum over the row is the whole exchange.
@@ -57,31 +61,12 @@ pub trait CommEngine: Sync {
     }
 
     /// out = Σ_{j ∈ N(i) ∪ {i}} w_ij · src[j] — one node's exchange.
-    /// Allocation-free (the step loop's hot path): terms are fused
-    /// pairwise straight off the row slice, mirroring
-    /// `math::weighted_sum_into`'s destination-traffic halving.
+    /// Delegates to [`mix_row`]; engines that resolve entries against
+    /// other sources (the fault engine's stale cache) override this but
+    /// fall back to `mix_row` on unaffected rows, which keeps them
+    /// bitwise identical to the default path there.
     fn mix_node(&self, i: usize, src: &[Vec<f32>], out: &mut [f32]) {
-        match self.row(i) {
-            [] => out.iter_mut().for_each(|v| *v = 0.0),
-            [(j0, w0), rest @ ..] => {
-                for (o, &x) in out.iter_mut().zip(&src[*j0 as usize]) {
-                    *o = w0 * x;
-                }
-                let mut pairs = rest.chunks_exact(2);
-                for pair in &mut pairs {
-                    let (ja, wa) = pair[0];
-                    let (jb, wb) = pair[1];
-                    let xa = &src[ja as usize];
-                    let xb = &src[jb as usize];
-                    for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
-                        *o += wa * a + wb * b;
-                    }
-                }
-                if let [(j, w)] = pairs.remainder() {
-                    math::axpy(out, *w, &src[*j as usize]);
-                }
-            }
-        }
+        mix_row(self.row(i), src, out);
     }
 
     /// Max |row sum − 1| over all nodes (stochasticity diagnostic).
@@ -92,6 +77,34 @@ pub trait CommEngine: Sync {
                 (s - 1.0).abs()
             })
             .fold(0.0, f64::max)
+    }
+}
+
+/// out = Σ_t w_t · src[j_t] over one sparse row — the shared kernel of
+/// every engine's exchange. Allocation-free (the step loop's hot path):
+/// terms are fused pairwise straight off the row slice, mirroring
+/// `math::weighted_sum_into`'s destination-traffic halving.
+pub fn mix_row(row: &[RowEntry], src: &[Vec<f32>], out: &mut [f32]) {
+    match row {
+        [] => out.iter_mut().for_each(|v| *v = 0.0),
+        [(j0, w0), rest @ ..] => {
+            for (o, &x) in out.iter_mut().zip(&src[*j0 as usize]) {
+                *o = w0 * x;
+            }
+            let mut pairs = rest.chunks_exact(2);
+            for pair in &mut pairs {
+                let (ja, wa) = pair[0];
+                let (jb, wb) = pair[1];
+                let xa = &src[ja as usize];
+                let xb = &src[jb as usize];
+                for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                    *o += wa * a + wb * b;
+                }
+            }
+            if let [(j, w)] = pairs.remainder() {
+                math::axpy(out, *w, &src[*j as usize]);
+            }
+        }
     }
 }
 

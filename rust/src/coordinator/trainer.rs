@@ -18,13 +18,21 @@
 //! to n=512–1024. Time-varying topologies (one-peer exp, bipartite
 //! random match) rebuild only the neighbor lists each step from the
 //! shared seed, never an n×n matrix.
+//!
+//! When `Config::faults` is set, a [`FaultyEngine`] sits between the
+//! nominal weights and the optimizers: each step it masks dropped
+//! nodes / failed links, renormalizes the Metropolis–Hastings weights
+//! in place, and serves stale cached messages for stragglers — the
+//! whole run stays deterministic under the fault seed (DESIGN.md §6).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::comm::CommEngine;
 use crate::grad::Workload;
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
+use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
 use crate::util::math;
@@ -55,8 +63,12 @@ pub struct Trainer {
     pub cfg: Config,
     pub workload: Workload,
     pub kind: Kind,
-    /// Sparse neighbor-list comm engine (the mixing weights).
+    /// Sparse neighbor-list comm engine (the nominal mixing weights).
     pub comm: SparseWeights,
+    /// Fault-injection wrapper (None = ideal network). When present,
+    /// every round mixes through the masked + renormalized realized
+    /// rows instead of the nominal ones.
+    faults: Option<FaultyEngine>,
     topo: Topology,
     pub states: Vec<NodeState>,
     optimizer: Box<dyn Optimizer>,
@@ -86,11 +98,53 @@ impl Trainer {
             workload.nodes.len()
         );
         let topo = Topology::at_step(kind, n, cfg.seed, 0);
+        // B-connectivity sanity: the union graph over the kind's
+        // declared window must be connected (Assumption A.3 over a
+        // window); kinds with only probabilistic guarantees (bipartite
+        // random match) declare no window and are exempt.
+        if let Some(w) = kind.connectivity_window(n) {
+            let union = Topology::union_over_window(kind, n, cfg.seed, 0, w);
+            anyhow::ensure!(
+                union.is_connected(),
+                "{kind:?} union over its {w}-step window is disconnected at n={n}"
+            );
+        }
         let mut comm = SparseWeights::metropolis_hastings(&topo);
         if cfg.positive_definite {
             comm.make_lazy();
         }
         let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
+        let faults = if cfg.faults.trim().is_empty() {
+            None
+        } else {
+            // Validate the spec for every optimizer, but only attach an
+            // engine when the optimizer actually mixes through the comm
+            // engine — pure all-reduce baselines (PmSGD) model a
+            // centralized fabric outside the decentralized fault model,
+            // and attaching one would report faults that never touched
+            // training (`fault_stats()` stays None for them).
+            let spec = FaultSpec::parse(&cfg.faults, cfg.seed)?;
+            match optimizer.comm_pattern() {
+                optim::CommPattern::AllReduce => None,
+                pattern => {
+                    let mut engine = FaultyEngine::new(FaultPlan::new(spec));
+                    // Stale replay is only faithful when the round
+                    // publishes a single quantity — the cache then holds
+                    // last round's same payload. Multi-payload optimizers
+                    // (da-dmsgd) fall back to masking for straggle/stale
+                    // faults (see FaultyEngine docs).
+                    let single_payload = match pattern {
+                        optim::CommPattern::Neighbor { payloads } => payloads == 1,
+                        optim::CommPattern::NeighborPlusPeriodicAllReduce {
+                            payloads, ..
+                        } => payloads == 1,
+                        optim::CommPattern::AllReduce => unreachable!(),
+                    };
+                    engine.set_stale_capable(single_payload);
+                    Some(engine)
+                }
+            }
+        };
         let d = workload.dim;
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
@@ -106,6 +160,7 @@ impl Trainer {
             workload,
             kind,
             comm,
+            faults,
             topo,
             states,
             optimizer,
@@ -167,16 +222,38 @@ impl Trainer {
                 self.comm.make_lazy();
             }
         }
+        // Realize this step's faults over the nominal weights. An
+        // active fault plan makes the *realized* mixing matrix
+        // time-varying even on static topologies, so the optimizers'
+        // time-varying guards (DecentLaM's disagreement clip) engage.
+        let faults_active = match &mut self.faults {
+            Some(f) => {
+                f.begin_step(k, &self.comm);
+                f.active()
+            }
+            None => false,
+        };
+        let comm: &dyn CommEngine = match &self.faults {
+            Some(f) => f,
+            None => &self.comm,
+        };
         let ctx = RoundCtx {
-            comm: &self.comm,
+            comm,
             exec: self.update_exec,
             lr,
             beta: self.cfg.momentum as f32,
             step: k,
-            time_varying: self.kind.time_varying(),
+            time_varying: self.kind.time_varying() || faults_active,
             layer_ranges: &self.workload.layer_ranges,
         };
         self.optimizer.round(&mut self.states, &self.grads, &ctx, &mut self.scratch);
+        if let Some(f) = &mut self.faults {
+            if f.needs_publish_cache() {
+                // What went on the wire this round is next round's
+                // stale payload for stragglers / stale links.
+                f.record_publish(&self.scratch.publish);
+            }
+        }
         loss
     }
 
@@ -188,6 +265,13 @@ impl Trainer {
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// Cumulative fault accounting (None when running fault-free, or
+    /// when the optimizer's all-reduce traffic bypasses the fault
+    /// model entirely).
+    pub fn fault_stats(&self) -> Option<&FaultStats> {
+        self.faults.as_ref().map(|f| f.stats())
     }
 
     /// Run the full schedule, reporting losses/evals.
@@ -347,6 +431,92 @@ mod tests {
         for (a, b) in seq.iter().zip(&par) {
             assert!((a - b).abs() < 1e-9, "threading changed results: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn faulty_run_descends_and_replays_identically() {
+        let mk = || {
+            let mut cfg = small_cfg("decentlam", 40);
+            cfg.lr = 0.02;
+            cfg.faults = "drop=0.15,straggle=0.1,seed=5".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let losses = t.run().losses;
+            let stats = *t.fault_stats().unwrap();
+            (losses, stats)
+        };
+        let (a, stats) = mk();
+        let (b, stats_b) = mk();
+        assert_eq!(a, b, "fault schedule must replay bit-identically");
+        assert_eq!(stats, stats_b);
+        assert!(a.iter().all(|l| l.is_finite()));
+        let first = a[..5].iter().sum::<f64>() / 5.0;
+        let last = a[a.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(last < first, "loss did not descend under faults ({first} -> {last})");
+        assert_eq!(stats.steps, 40);
+        assert!(stats.masked_edges > 0, "drop=0.15 never masked an edge");
+        assert!(stats.stale_messages > 0, "straggle=0.1 never went stale");
+        assert!(stats.realized_edges < stats.nominal_edges);
+    }
+
+    #[test]
+    fn zero_rate_faults_bitwise_match_fault_free_run() {
+        let run = |faults: &str| {
+            let mut cfg = small_cfg("dmsgd", 25);
+            cfg.faults = faults.into();
+            Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+        };
+        assert_eq!(run(""), run("drop=0,link=0,seed=99"));
+    }
+
+    #[test]
+    fn faults_compose_with_time_varying_topologies() {
+        let mut cfg = small_cfg("decentlam", 30);
+        cfg.topology = "one-peer-exp".into();
+        cfg.faults = "drop=0.2,link=0.1,seed=2".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let r = t.run();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        let stats = t.fault_stats().unwrap();
+        assert_eq!(stats.steps, 30);
+        assert!(stats.realized_edges < stats.nominal_edges);
+    }
+
+    #[test]
+    fn allreduce_optimizer_ignores_fault_spec_honestly() {
+        // pmsgd never touches the comm engine; a fault spec must not
+        // attach an engine that would report phantom fault traffic.
+        let mut cfg = small_cfg("pmsgd", 10);
+        cfg.faults = "drop=0.5,seed=4".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let r = t.run();
+        assert!(t.fault_stats().is_none());
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        // Still validated: a malformed spec fails even for pmsgd.
+        let mut bad = small_cfg("pmsgd", 5);
+        bad.faults = "drop=2".into();
+        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+    }
+
+    #[test]
+    fn multi_payload_optimizer_masks_stragglers_instead_of_staling() {
+        // da-dmsgd publishes two quantities per round; a single stale
+        // cache cannot replay both, so its straggle faults must fall
+        // back to edge masking (no stale deliveries, edges lost).
+        let mut cfg = small_cfg("da-dmsgd", 20);
+        cfg.faults = "straggle=0.4,seed=8".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let r = t.run();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        let stats = t.fault_stats().unwrap();
+        assert_eq!(stats.stale_messages, 0, "multi-payload round must not stale");
+        assert!(stats.masked_edges > 0, "stragglers should mask exchanges");
+    }
+
+    #[test]
+    fn bad_fault_spec_rejected_at_construction() {
+        let mut cfg = small_cfg("dsgd", 5);
+        cfg.faults = "drop=7".into();
+        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Fault sweep: the DecentLaM-vs-DmSGD bias gap under imperfect
+//! communication (the sim layer's headline figure; no paper analog —
+//! this extends §7 to the fault regimes of arXiv 2410.11998).
+//!
+//! For each (method, drop rate) cell, train in the large-batch
+//! heterogeneous regime where DmSGD's momentum-amplified inconsistency
+//! bias is visible, with the [`crate::sim::FaultyEngine`] masking the
+//! requested fraction of nodes per step, and report consensus distance,
+//! global eval loss at the average model, accuracy, and the realized
+//! (post-masking) edge fraction. Fault masking weakens mixing — the
+//! effective ρ grows with the drop rate — so *both* methods degrade;
+//! the claim under test is that DecentLaM, whose momentum is built from
+//! bias-corrected gradients, degrades **no faster** than DmSGD.
+//!
+//! Everything is seeded (data, topology, fault schedule), so two runs
+//! of the same opts produce identical tables byte for byte.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::grad::mlp;
+use crate::util::cli::Args;
+use crate::util::config::{Config, LrSchedule};
+use crate::util::table::{pct, sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub nodes: usize,
+    pub steps: usize,
+    pub topology: String,
+    /// Methods to compare (Table 3 names).
+    pub methods: Vec<String>,
+    /// Per-step node dropout rates swept across columns.
+    pub drop_rates: Vec<f64>,
+    /// Extra fault rates applied at every cell (0 = off).
+    pub straggle: f64,
+    pub stale: f64,
+    pub link: f64,
+    pub total_batch: usize,
+    pub arch: String,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 16,
+            steps: 200,
+            topology: "ring".into(),
+            methods: vec!["dmsgd".into(), "decentlam".into()],
+            drop_rates: vec![0.0, 0.1, 0.3],
+            straggle: 0.0,
+            stale: 0.0,
+            link: 0.0,
+            total_batch: 2048,
+            arch: "mlp-xs".into(),
+            seed: 7,
+        }
+    }
+}
+
+impl Opts {
+    /// Apply the shared CLI flags (`--nodes`, `--steps`, `--seed`,
+    /// `--straggle`, `--stale`, `--link`, `--topology`) — one parser
+    /// for the `fig-faults` subcommand and `examples/fault_sweep.rs`.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.nodes = args.get_usize("nodes", self.nodes)?;
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        self.straggle = args.get_f64("straggle", self.straggle)?;
+        self.stale = args.get_f64("stale", self.stale)?;
+        self.link = args.get_f64("link", self.link)?;
+        if let Some(t) = args.get("topology") {
+            self.topology = t.into();
+        }
+        Ok(())
+    }
+}
+
+/// One trained cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub drop: f64,
+    /// Final consensus distance (1/n)Σ‖x_i − x̄‖².
+    pub consensus: f64,
+    /// Eval loss of the network-average model.
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    /// Fraction of nominal edges that actually carried messages.
+    pub realized_frac: f64,
+}
+
+fn fault_string(opts: &Opts, drop: f64) -> String {
+    format!(
+        "drop={drop},link={},straggle={},stale={},seed={}",
+        opts.link, opts.straggle, opts.stale, opts.seed
+    )
+}
+
+pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
+    // One dataset, cloned per cell: every cell sees the same shards,
+    // so differences are method + faults only.
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes: opts.nodes,
+        samples_per_node: 256,
+        eval_samples: 512,
+        dirichlet_alpha: 0.1, // strongly heterogeneous: bias regime
+        seed: opts.seed,
+        ..Default::default()
+    });
+    let mut rows = Vec::new();
+    for &drop in &opts.drop_rates {
+        for method in &opts.methods {
+            let mut cfg = Config::default();
+            cfg.optimizer = method.clone();
+            cfg.nodes = opts.nodes;
+            cfg.steps = opts.steps;
+            cfg.topology = opts.topology.clone();
+            cfg.total_batch = opts.total_batch;
+            cfg.micro_batch = 32;
+            cfg.lr = 0.08;
+            cfg.linear_scaling = false;
+            cfg.momentum = 0.9;
+            cfg.schedule = LrSchedule::Constant;
+            cfg.seed = opts.seed;
+            cfg.faults = fault_string(opts, drop);
+            let wl = mlp::workload(
+                mlp::MlpArch::family(&opts.arch)?,
+                data.clone(),
+                cfg.micro_batch,
+                opts.seed,
+            );
+            let mut t = Trainer::new(cfg, wl)?;
+            let report = t.run();
+            let xbar = t.average_model();
+            let eval_loss = t.workload.eval.loss(&xbar).unwrap_or(f64::NAN);
+            let realized_frac =
+                t.fault_stats().map(|s| s.realized_edge_fraction()).unwrap_or(1.0);
+            rows.push(Row {
+                method: method.clone(),
+                drop,
+                consensus: report.final_consensus,
+                eval_loss,
+                accuracy: report.final_accuracy,
+                realized_frac,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "fault sweep — {} n={} {} steps, drop rates {:?} (seed {})",
+            opts.topology, opts.nodes, opts.steps, opts.drop_rates, opts.seed
+        ),
+        &["method", "drop", "consensus", "eval loss", "acc", "edges realized"],
+    );
+    for row in &rows {
+        table.row(vec![
+            row.method.clone(),
+            format!("{}", row.drop),
+            sig(row.consensus, 3),
+            sig(row.eval_loss, 4),
+            pct(row.accuracy),
+            pct(row.realized_frac),
+        ]);
+    }
+    Ok((rows, table))
+}
+
+/// Consensus degradation factor of `method` at each drop rate relative
+/// to its own fault-free consensus. Empty when the sweep has no
+/// `drop == 0.0` baseline — callers must not fabricate a verdict from
+/// a baseline-less sweep (NaN factors would slip through comparisons).
+pub fn degradation(rows: &[Row], method: &str) -> Vec<(f64, f64)> {
+    let Some(base) = rows
+        .iter()
+        .find(|r| r.method == method && r.drop == 0.0)
+        .map(|r| r.consensus)
+    else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter(|r| r.method == method)
+        .map(|r| (r.drop, r.consensus / base))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrunk_sweep_keeps_decentlam_ahead_of_dmsgd() {
+        let opts = Opts {
+            nodes: 8,
+            steps: 150,
+            drop_rates: vec![0.0, 0.3],
+            ..Default::default()
+        };
+        let (rows, table) = run(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.consensus.is_finite() && r.consensus >= 0.0));
+        assert!(rows.iter().all(|r| r.eval_loss.is_finite()));
+        let cons = |method: &str, drop: f64| {
+            rows.iter()
+                .find(|r| r.method == method && r.drop == drop)
+                .unwrap()
+                .consensus
+        };
+        // The bias regime: DecentLaM's consensus stays below DmSGD's,
+        // fault-free and under 30% dropout alike (slack for noise).
+        assert!(
+            cons("decentlam", 0.0) < 1.25 * cons("dmsgd", 0.0),
+            "fault-free: decentlam {} vs dmsgd {}",
+            cons("decentlam", 0.0),
+            cons("dmsgd", 0.0)
+        );
+        assert!(
+            cons("decentlam", 0.3) < 1.25 * cons("dmsgd", 0.3),
+            "drop=0.3: decentlam {} vs dmsgd {}",
+            cons("decentlam", 0.3),
+            cons("dmsgd", 0.3)
+        );
+        // Faults were actually injected.
+        let faulted = rows.iter().find(|r| r.drop == 0.3).unwrap();
+        assert!(faulted.realized_frac < 0.95, "drop=0.3 masked almost nothing");
+        let clean = rows.iter().find(|r| r.drop == 0.0).unwrap();
+        assert!((clean.realized_frac - 1.0).abs() < 1e-12);
+        let rendered = table.render();
+        assert!(rendered.contains("decentlam") && rendered.contains("dmsgd"));
+    }
+
+    #[test]
+    fn sweep_output_is_deterministic() {
+        let opts = Opts {
+            nodes: 4,
+            steps: 30,
+            drop_rates: vec![0.2],
+            total_batch: 256,
+            ..Default::default()
+        };
+        let (_, a) = run(&opts).unwrap();
+        let (_, b) = run(&opts).unwrap();
+        assert_eq!(a.render(), b.render(), "same opts must render byte-identically");
+    }
+
+    #[test]
+    fn degradation_is_relative_to_fault_free() {
+        let rows = vec![
+            Row {
+                method: "m".into(),
+                drop: 0.0,
+                consensus: 2.0,
+                eval_loss: 0.0,
+                accuracy: 0.0,
+                realized_frac: 1.0,
+            },
+            Row {
+                method: "m".into(),
+                drop: 0.3,
+                consensus: 5.0,
+                eval_loss: 0.0,
+                accuracy: 0.0,
+                realized_frac: 0.5,
+            },
+        ];
+        let d = degradation(&rows, "m");
+        assert_eq!(d, vec![(0.0, 1.0), (0.3, 2.5)]);
+        // No baseline row -> empty, never NaN factors.
+        assert!(degradation(&rows[1..], "m").is_empty());
+        assert!(degradation(&rows, "other").is_empty());
+    }
+}

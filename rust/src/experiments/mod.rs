@@ -15,10 +15,14 @@
 //! | Fig. 5 (loss / acc curves)              | [`fig5`]   |
 //! | Fig. 6 (runtime breakdown)              | [`fig6`]   |
 //! | Table 6 (detection analog)              | [`table6`] |
+//!
+//! Beyond the paper: [`fig_faults`] sweeps the DecentLaM-vs-DmSGD bias
+//! gap under fault injection (sim layer, DESIGN.md §6).
 
 pub mod fig2_3;
 pub mod fig5;
 pub mod fig6;
+pub mod fig_faults;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -279,9 +279,9 @@ impl MlpEvaluator {
         MlpEvaluator { arch, x: data.eval_x.clone(), y: data.eval_y.clone(), pass, batch }
     }
 
-    fn logits_argmax(&mut self, theta: &[f32], xb: &[f32], b: usize) -> Vec<usize> {
-        // Forward only (reuse fwd_bwd machinery would also do backward; we
-        // inline a forward pass over `acts`).
+    /// Forward-only pass over a batch (reuse fwd_bwd machinery would
+    /// also do backward); leaves the logits in the last `acts` buffer.
+    fn forward(&mut self, theta: &[f32], xb: &[f32], b: usize) {
         let dims = self.arch.dims();
         let layers = dims.len() - 1;
         self.pass.acts[0][..b * dims[0]].copy_from_slice(xb);
@@ -313,6 +313,12 @@ impl MlpEvaluator {
                 }
             }
         }
+    }
+
+    fn logits_argmax(&mut self, theta: &[f32], xb: &[f32], b: usize) -> Vec<usize> {
+        self.forward(theta, xb, b);
+        let dims = self.arch.dims();
+        let layers = dims.len() - 1;
         let c = dims[layers];
         let logits = &self.pass.acts[layers];
         (0..b)
@@ -346,6 +352,38 @@ impl Evaluator for MlpEvaluator {
             done += b;
         }
         correct as f64 / n as f64
+    }
+
+    /// Mean softmax cross-entropy over the eval split — the same loss
+    /// the training forward/backward optimizes, so the experiment
+    /// harness can compare the GLOBAL objective at the average model
+    /// (per-node local loss is the wrong observable under bias drift).
+    fn loss(&mut self, theta: &[f32]) -> Option<f64> {
+        let d = self.arch.input_dim;
+        let n = self.y.len();
+        if n == 0 {
+            return None;
+        }
+        let dims = self.arch.dims();
+        let layers = dims.len() - 1;
+        let c = dims[layers];
+        let mut total = 0.0f64;
+        let mut done = 0usize;
+        while done < n {
+            let b = self.batch.min(n - done);
+            let xb: Vec<f32> = self.x[done * d..(done + b) * d].to_vec();
+            self.forward(theta, &xb, b);
+            let logits = &self.pass.acts[layers];
+            for r in 0..b {
+                let row = &logits[r * c..(r + 1) * c];
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v)) as f64;
+                let lse =
+                    m + row.iter().map(|&v| (v as f64 - m).exp()).sum::<f64>().ln();
+                total += lse - row[self.y[done + r] as usize] as f64;
+            }
+            done += b;
+        }
+        Some(total / n as f64)
     }
 }
 
@@ -442,6 +480,31 @@ mod tests {
         assert!(l1 < 0.7 * l0, "loss {l0} -> {l1}");
         let acc = wl.eval.accuracy(&x);
         assert!(acc > 0.5, "accuracy {acc} should beat chance (0.1)");
+    }
+
+    #[test]
+    fn eval_loss_starts_near_chance_and_tracks_training() {
+        let spec = SynthSpec {
+            samples_per_node: 512,
+            eval_samples: 512,
+            nodes: 1,
+            dirichlet_alpha: 100.0,
+            ..Default::default()
+        };
+        let data = ClassificationData::generate(&spec);
+        let arch = MlpArch::family("mlp-xs").unwrap();
+        let mut wl = workload(arch, data, 64, 2);
+        let mut x = wl.init.clone();
+        let l0 = wl.eval.loss(&x).expect("MLP evaluator reports a loss");
+        // Small random logits at init: cross-entropy near ln(num_classes).
+        assert!((1.5..4.0).contains(&l0), "init eval loss {l0}");
+        let mut g = vec![0.0f32; wl.dim];
+        for _ in 0..100 {
+            wl.nodes[0].grad_accum(&x, 1, &mut g);
+            crate::util::math::axpy(&mut x, -0.1, &g);
+        }
+        let l1 = wl.eval.loss(&x).unwrap();
+        assert!(l1.is_finite() && l1 < 0.8 * l0, "eval loss {l0} -> {l1}");
     }
 
     #[test]

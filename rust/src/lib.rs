@@ -8,8 +8,9 @@
 //!   topologies + Metropolis–Hastings mixing weights ([`topology`]), the
 //!   ten optimizer update rules ([`optim`]), multi-node training driver
 //!   ([`coordinator`]), communication cost model ([`comm`]), gradient
-//!   engines ([`grad`]), synthetic workloads ([`data`]) and the paper's
-//!   experiment harness ([`experiments`]).
+//!   engines ([`grad`]), fault-injection simulation ([`sim`]), synthetic
+//!   workloads ([`data`]) and the paper's experiment harness
+//!   ([`experiments`]).
 //! - **Layer 2 / Layer 1 (python/, build time only)** — JAX models and
 //!   Pallas kernels, AOT-lowered to HLO-text artifacts that `runtime`
 //!   loads and executes through the PJRT CPU client (`xla` crate).
@@ -28,6 +29,7 @@ pub mod optim;
 pub mod prop;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sim;
 pub mod topology;
 pub mod util;
 

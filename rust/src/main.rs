@@ -6,6 +6,7 @@
 //! ```text
 //! decentlam table1|table2|table3|table4|table5|table6   # paper tables
 //! decentlam fig2|fig3|fig5|fig6                         # paper figures
+//! decentlam fig-faults [--nodes N --straggle R ...]     # fault sweep
 //! decentlam train [--optimizer X --batch B ...]         # one run
 //! decentlam ablate-pd | ablate-atc | ablate-rho         # design ablations
 //! decentlam topo [--nodes N]                            # topology report
@@ -148,6 +149,24 @@ fn dispatch(args: &Args) -> Result<()> {
             let (_, table) = exp::fig6::run(&opts)?;
             println!("{}", table.render());
         }
+        "fig-faults" => {
+            let mut opts = exp::fig_faults::Opts::default();
+            if quick {
+                opts.nodes = 8;
+                opts.steps = 100;
+                opts.drop_rates = vec![0.0, 0.3];
+            }
+            opts.apply_args(args)?;
+            let (rows, table) = exp::fig_faults::run(&opts)?;
+            println!("{}", table.render());
+            for method in &opts.methods {
+                let deg: Vec<String> = exp::fig_faults::degradation(&rows, method)
+                    .iter()
+                    .map(|(r, d)| format!("drop={r}: {d:.2}x"))
+                    .collect();
+                println!("{method} consensus degradation vs fault-free: {}", deg.join("  "));
+            }
+        }
         "train" => train(args)?,
         "topo" => topo_report(args)?,
         "ablate-pd" => ablate_pd(args)?,
@@ -158,13 +177,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 "decentlam — decentralized large-batch momentum training\n\n\
                  subcommands:\n  \
                  table1..table6, fig2, fig3, fig5, fig6   regenerate paper results\n  \
+                 fig-faults   DecentLaM vs DmSGD under fault injection\n  \
                  train        one training run (all Config flags apply)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
                  ablate-atc   ATC vs AWC partial-averaging ablation\n  \
                  ablate-rho   limiting bias vs topology rho\n\n\
                  common flags: --quick, --steps N, --csv FILE, --nodes N,\n  \
-                 --optimizer X, --batch B, --beta B, --lr G, --topology T"
+                 --optimizer X, --batch B, --beta B, --lr G, --topology T,\n  \
+                 --faults drop=0.1,straggle=0.05,seed=7"
             );
         }
     }
@@ -182,8 +203,17 @@ fn train(args: &Args) -> Result<()> {
         cfg.seed,
     )?;
     println!(
-        "train: optimizer={} topology={} nodes={} total_batch={} steps={}",
-        cfg.optimizer, cfg.topology, cfg.nodes, cfg.total_batch, cfg.steps
+        "train: optimizer={} topology={} nodes={} total_batch={} steps={}{}",
+        cfg.optimizer,
+        cfg.topology,
+        cfg.nodes,
+        cfg.total_batch,
+        cfg.steps,
+        if cfg.faults.is_empty() {
+            String::new()
+        } else {
+            format!(" faults=[{}]", cfg.faults)
+        }
     );
     let eval_every = if cfg.eval_every == 0 { cfg.steps / 10 } else { cfg.eval_every };
     let mut cfg = cfg;
@@ -201,6 +231,22 @@ fn train(args: &Args) -> Result<()> {
         report.steps,
         report.grad_seconds
     );
+    match t.fault_stats() {
+        Some(s) => println!(
+            "faults: {:.1}% of edges realized ({} masked), {} stale msgs, \
+             {} dropped / {} straggler node-steps",
+            100.0 * s.realized_edge_fraction(),
+            s.masked_edges,
+            s.stale_messages,
+            s.dropped_node_steps,
+            s.straggler_node_steps
+        ),
+        None if !t.cfg.faults.is_empty() => println!(
+            "faults: n/a — {}'s all-reduce traffic bypasses the decentralized fault model",
+            t.cfg.optimizer
+        ),
+        None => {}
+    }
     Ok(())
 }
 

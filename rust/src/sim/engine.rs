@@ -1,0 +1,430 @@
+//! The fault-injecting comm engine (DESIGN.md §6).
+//!
+//! [`FaultyEngine`] wraps a nominal mixing-weight engine and realizes
+//! one step of the [`FaultPlan`] on top of it:
+//!
+//! * **masking** — edges incident to a dropped node, and links the plan
+//!   fails this step, are removed from both rows;
+//! * **renormalization** — each masked edge's Metropolis–Hastings
+//!   weight w_ij is folded back into w_ii *and* w_jj. The mask set is
+//!   symmetric and the nominal matrix is symmetric doubly stochastic,
+//!   so the realized matrix stays symmetric doubly stochastic (row sums
+//!   are untouched; the property suite pins it);
+//! * **staleness** — entries whose sender straggled (or whose link the
+//!   plan marked stale) keep their weight but are resolved against the
+//!   engine's cache of the *previous* round's published vectors instead
+//!   of this round's `src`. Until the cache is warm (before the first
+//!   `record_publish`) stale entries deliver fresh data — staleness
+//!   starts at step 1 at the earliest.
+//!
+//! The rebuild reuses the CSR allocation path of
+//! [`crate::topology::sparse::SparseWeights`]: `begin_step` rewrites
+//! `row_ptr` + entry lists in O(n + edges) without touching a dense
+//! matrix. Rows with no stale entry mix through the exact same
+//! [`mix_row`] kernel as every other engine, which makes a zero-rate
+//! plan bitwise identical to the fault-free engine (tested), and
+//! per-row mixing stays independent across nodes, so parallel execution
+//! remains bitwise equal to serial under faults.
+//!
+//! Cost accounting is *realized*, not nominal: the engine's rows after
+//! masking are what [`crate::comm::cost::CommStats::of_engine`] sees,
+//! and [`FaultStats`] accumulates the realized/masked/stale totals a
+//! sweep reports.
+
+use crate::comm::engine::{mix_row, CommEngine, RowEntry};
+use crate::util::math;
+
+use super::plan::FaultPlan;
+
+/// Cumulative fault accounting across `begin_step` calls.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Steps realized.
+    pub steps: usize,
+    /// Undirected edge totals of the nominal topology.
+    pub nominal_edges: usize,
+    /// Undirected edges that actually carried a message (incl. stale).
+    pub realized_edges: usize,
+    /// Undirected edges masked (dropout or link failure).
+    pub masked_edges: usize,
+    /// Directed stale deliveries (message served from the cache).
+    pub stale_messages: usize,
+    /// Node-steps spent fully dropped out.
+    pub dropped_node_steps: usize,
+    /// Node-steps spent straggling.
+    pub straggler_node_steps: usize,
+}
+
+impl FaultStats {
+    /// Fraction of nominal edges that carried a message.
+    pub fn realized_edge_fraction(&self) -> f64 {
+        if self.nominal_edges == 0 {
+            1.0
+        } else {
+            self.realized_edges as f64 / self.nominal_edges as f64
+        }
+    }
+}
+
+/// A comm engine that masks, renormalizes and staleness-injects a
+/// nominal engine's rows according to a [`FaultPlan`].
+#[derive(Debug, Clone)]
+pub struct FaultyEngine {
+    plan: FaultPlan,
+    n: usize,
+    /// Realized CSR rows (masked + renormalized), self entries kept.
+    row_ptr: Vec<u32>,
+    entries: Vec<RowEntry>,
+    /// Parallel to `entries`: resolve this entry from the stale cache?
+    stale: Vec<bool>,
+    /// Per-row flag so fresh rows skip straight to `mix_row`.
+    row_has_stale: Vec<bool>,
+    /// Previous round's published vectors (what a straggler's neighbors
+    /// mix instead of the fresh message).
+    cache: Vec<Vec<f32>>,
+    cache_warm: bool,
+    /// Can stale delivery be simulated faithfully? True for optimizers
+    /// that publish ONE quantity per round (the cache then holds the
+    /// previous round's same quantity). Optimizers with multi-payload
+    /// rounds (da-dmsgd exchanges momentum AND parameters) would mix a
+    /// cached payload of the wrong kind, so for them straggle/stale
+    /// faults degrade to symmetric edge masking instead: the
+    /// deadline-missed message is lost, not replayed.
+    stale_capable: bool,
+    stats: FaultStats,
+}
+
+impl FaultyEngine {
+    pub fn new(plan: FaultPlan) -> FaultyEngine {
+        FaultyEngine {
+            plan,
+            n: 0,
+            row_ptr: Vec::new(),
+            entries: Vec::new(),
+            stale: Vec::new(),
+            row_has_stale: Vec::new(),
+            cache: Vec::new(),
+            cache_warm: false,
+            stale_capable: true,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Disable stale-message substitution (multi-payload optimizers):
+    /// straggle/stale faults become symmetric edge masks instead.
+    pub fn set_stale_capable(&mut self, capable: bool) {
+        self.stale_capable = capable;
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.stats
+    }
+
+    /// Any nonzero rate? (Zero-rate engines are pass-throughs; the
+    /// trainer also skips the stale cache entirely for them.)
+    pub fn active(&self) -> bool {
+        !self.plan.spec.is_zero()
+    }
+
+    /// Does this engine need `record_publish` after each round?
+    pub fn needs_publish_cache(&self) -> bool {
+        self.stale_capable && self.plan.spec.wants_stale()
+    }
+
+    /// Realize step `step`'s faults over the nominal engine: rebuild the
+    /// masked + renormalized rows in place, O(n + edges).
+    pub fn begin_step(&mut self, step: usize, nominal: &dyn CommEngine) {
+        let n = nominal.n();
+        self.n = n;
+        let faults = self.plan.node_faults(step, n);
+        self.row_ptr.clear();
+        self.entries.clear();
+        self.stale.clear();
+        self.row_has_stale.clear();
+        self.row_ptr.push(0);
+        let warm = self.cache_warm;
+        let (mut realized_dir, mut masked_dir, mut stale_dir) = (0usize, 0usize, 0usize);
+        for i in 0..n {
+            // Weight folded back into w_ii from this row's masked edges.
+            let mut returned = 0.0f64;
+            let mut self_slot = None;
+            let mut any_stale = false;
+            for &(j, w) in nominal.row(i) {
+                let ju = j as usize;
+                if ju == i {
+                    self_slot = Some(self.entries.len());
+                    self.entries.push((j, w));
+                    self.stale.push(false);
+                    continue;
+                }
+                let mut masked = faults.dropped[i]
+                    || faults.dropped[ju]
+                    || self.plan.link_failed(step, i, ju);
+                if !self.stale_capable {
+                    // No faithful stale replay: the deadline-missed
+                    // message is lost. Symmetric predicate (either
+                    // endpoint straggling kills the whole exchange) so
+                    // the renormalized weights stay doubly stochastic.
+                    masked = masked
+                        || faults.straggler[i]
+                        || faults.straggler[ju]
+                        || self.plan.link_stale(step, i, ju);
+                }
+                if masked {
+                    returned += w as f64;
+                    masked_dir += 1;
+                    continue;
+                }
+                let is_stale = self.stale_capable
+                    && warm
+                    && (faults.straggler[ju] || self.plan.link_stale(step, i, ju));
+                self.entries.push((j, w));
+                self.stale.push(is_stale);
+                any_stale |= is_stale;
+                realized_dir += 1;
+                if is_stale {
+                    stale_dir += 1;
+                }
+            }
+            let slot = self_slot.expect("MH rows always carry a self entry");
+            // Renormalization: masked weight returns to the diagonal.
+            // `+= 0.0` when nothing was masked, so zero-rate plans keep
+            // the nominal weights bit-for-bit.
+            self.entries[slot].1 += returned as f32;
+            self.row_ptr.push(self.entries.len() as u32);
+            self.row_has_stale.push(any_stale);
+        }
+        self.stats.steps += 1;
+        self.stats.nominal_edges += nominal.num_edges();
+        // The mask predicate is symmetric, so directed counts are even.
+        self.stats.realized_edges += realized_dir / 2;
+        self.stats.masked_edges += masked_dir / 2;
+        self.stats.stale_messages += stale_dir;
+        self.stats.dropped_node_steps += faults.dropped.iter().filter(|&&d| d).count();
+        self.stats.straggler_node_steps +=
+            faults.straggler.iter().filter(|&&s| s).count();
+    }
+
+    /// Record this round's published vectors as the next round's stale
+    /// payloads. Call after the optimizer round (the trainer does).
+    pub fn record_publish(&mut self, publish: &[Vec<f32>]) {
+        if self.cache.len() == publish.len()
+            && self.cache.first().map(|c| c.len()) == publish.first().map(|p| p.len())
+        {
+            for (c, p) in self.cache.iter_mut().zip(publish) {
+                c.copy_from_slice(p);
+            }
+        } else {
+            self.cache = publish.to_vec();
+        }
+        self.cache_warm = true;
+    }
+}
+
+impl CommEngine for FaultyEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, i: usize) -> &[RowEntry] {
+        &self.entries[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Resolve stale entries against the publish cache; rows without
+    /// stale entries take the exact default kernel. Allocation-free
+    /// like [`mix_row`], with the same pairwise term fusion — only the
+    /// per-entry source lookup differs.
+    fn mix_node(&self, i: usize, src: &[Vec<f32>], out: &mut [f32]) {
+        let (start, end) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        let row = &self.entries[start..end];
+        if !self.row_has_stale[i] {
+            mix_row(row, src, out);
+            return;
+        }
+        let stale = &self.stale[start..end];
+        fn pick<'a>(
+            k: usize,
+            row: &[RowEntry],
+            stale: &[bool],
+            cache: &'a [Vec<f32>],
+            src: &'a [Vec<f32>],
+        ) -> &'a [f32] {
+            let j = row[k].0 as usize;
+            if stale[k] {
+                &cache[j]
+            } else {
+                &src[j]
+            }
+        }
+        let len = row.len();
+        let w0 = row[0].1;
+        for (o, &x) in out.iter_mut().zip(pick(0, row, stale, &self.cache, src)) {
+            *o = w0 * x;
+        }
+        let mut k = 1;
+        while k + 1 < len {
+            let (wa, wb) = (row[k].1, row[k + 1].1);
+            let xa = pick(k, row, stale, &self.cache, src);
+            let xb = pick(k + 1, row, stale, &self.cache, src);
+            for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                *o += wa * a + wb * b;
+            }
+            k += 2;
+        }
+        if k < len {
+            math::axpy(out, row[k].1, pick(k, row, stale, &self.cache, src));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::FaultSpec;
+    use super::*;
+    use crate::topology::{Kind, SparseWeights, Topology};
+
+    fn engine(spec: &str) -> FaultyEngine {
+        FaultyEngine::new(FaultPlan::new(FaultSpec::parse(spec, 11).unwrap()))
+    }
+
+    #[test]
+    fn zero_rate_rows_match_nominal_bitwise() {
+        let topo = Topology::build(Kind::SymExp, 12);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("");
+        for step in 0..4 {
+            f.begin_step(step, &nominal);
+            assert_eq!(f.n(), nominal.n());
+            for i in 0..12 {
+                assert_eq!(f.row(i), nominal.row(i), "step {step} row {i}");
+            }
+            assert_eq!(f.num_edges(), nominal.num_edges());
+        }
+        assert!(!f.active());
+    }
+
+    #[test]
+    fn full_dropout_is_identity_matrix() {
+        let topo = Topology::build(Kind::Ring, 6);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("drop=1");
+        f.begin_step(0, &nominal);
+        for i in 0..6 {
+            assert_eq!(f.row(i).len(), 1, "row {i}");
+            let (j, w) = f.row(i)[0];
+            assert_eq!(j as usize, i);
+            assert!((w - 1.0).abs() < 1e-6, "w_{i}{i} = {w}");
+        }
+        assert_eq!(f.num_edges(), 0);
+        assert_eq!(f.stats().masked_edges, 6);
+        assert_eq!(f.stats().realized_edges, 0);
+        assert_eq!(f.stats().dropped_node_steps, 6);
+    }
+
+    #[test]
+    fn masked_weights_return_to_both_diagonals() {
+        // Fail every link: each node's self weight becomes its row sum.
+        let topo = Topology::build(Kind::Star, 5);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("link=1");
+        f.begin_step(3, &nominal);
+        assert!(f.row_sum_error() < 1e-6);
+        for i in 0..5 {
+            assert!((f.self_weight(i) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stale_entries_mix_from_cache() {
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("stale=1");
+        let old: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32]).collect();
+        let fresh: Vec<Vec<f32>> = (0..4).map(|i| vec![10.0 + i as f32]).collect();
+
+        // Cold cache: stale entries deliver fresh data.
+        f.begin_step(0, &nominal);
+        let mut out = vec![0.0f32];
+        f.mix_node(0, &fresh, &mut out);
+        let fresh_mix = out[0];
+
+        // Warm cache: neighbor entries resolve against `old`, the self
+        // entry stays fresh.
+        f.record_publish(&old);
+        f.begin_step(1, &nominal);
+        f.mix_node(0, &fresh, &mut out);
+        let want: f32 = f
+            .row(0)
+            .iter()
+            .map(|&(j, w)| {
+                let v = if j == 0 { fresh[0][0] } else { old[j as usize][0] };
+                w * v
+            })
+            .sum();
+        assert!((out[0] - want).abs() < 1e-6, "{} vs {want}", out[0]);
+        assert!((out[0] - fresh_mix).abs() > 1.0, "staleness had no effect");
+        assert!(f.stats().stale_messages > 0);
+    }
+
+    #[test]
+    fn straggler_outgoing_messages_are_stale_incoming_fresh() {
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("straggle=1");
+        f.begin_step(0, &nominal);
+        f.record_publish(&(0..4).map(|i| vec![i as f32]).collect::<Vec<_>>());
+        f.begin_step(1, &nominal);
+        for i in 0..4 {
+            let start = f.row_ptr[i] as usize;
+            for (k, &(j, _)) in f.row(i).iter().enumerate() {
+                let expect_stale = j as usize != i; // every sender straggles
+                assert_eq!(f.stale[start + k], expect_stale, "row {i} entry {j}");
+            }
+        }
+        assert_eq!(f.stats().straggler_node_steps, 8);
+    }
+
+    #[test]
+    fn multi_payload_mode_masks_instead_of_staling() {
+        // With stale replay disabled (multi-payload optimizers), a
+        // straggler kills its exchanges symmetrically instead of being
+        // served from the cache — weights must stay doubly stochastic.
+        let topo = Topology::build(Kind::Ring, 6);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("straggle=1");
+        f.set_stale_capable(false);
+        assert!(!f.needs_publish_cache());
+        f.begin_step(0, &nominal);
+        for i in 0..6 {
+            assert_eq!(f.row(i).len(), 1, "row {i} should be fully masked");
+        }
+        assert!(f.row_sum_error() < 1e-6);
+        assert_eq!(f.stats().stale_messages, 0);
+        assert_eq!(f.stats().masked_edges, 6);
+    }
+
+    #[test]
+    fn realized_stats_accumulate() {
+        let topo = Topology::build(Kind::Ring, 8);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("drop=0.4,seed=3");
+        for step in 0..50 {
+            f.begin_step(step, &nominal);
+            assert_eq!(
+                f.stats().realized_edges + f.stats().masked_edges,
+                f.stats().nominal_edges
+            );
+        }
+        let s = f.stats();
+        assert_eq!(s.steps, 50);
+        assert_eq!(s.nominal_edges, 8 * 50);
+        assert!(s.masked_edges > 0 && s.realized_edges > 0);
+        let frac = s.realized_edge_fraction();
+        // P(edge survives) = (1-0.4)^2 = 0.36.
+        assert!((0.2..0.55).contains(&frac), "realized fraction {frac}");
+    }
+}

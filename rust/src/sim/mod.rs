@@ -1,0 +1,29 @@
+//! Fault-injection simulation layer (DESIGN.md §6).
+//!
+//! Real decentralized deployments are not the ideal synchronous
+//! networks of the paper's analysis: nodes drop out, links fail,
+//! stragglers miss sync deadlines and deliver stale messages ("From
+//! promise to practice", arXiv 2410.11998). This module makes those
+//! regimes simulable — deterministically — on top of any
+//! `topology::Kind`:
+//!
+//! * [`plan::FaultSpec`] / [`plan::FaultPlan`] — seeded per-step fault
+//!   schedules (node dropout, link failure, straggler delay, stale
+//!   links), replayable and iteration-order-free;
+//! * [`engine::FaultyEngine`] — a [`crate::comm::CommEngine`] wrapper
+//!   that masks failed edges, renormalizes the Metropolis–Hastings
+//!   weights in place (masked weight returns to both diagonals, so the
+//!   realized matrix stays symmetric doubly stochastic) and substitutes
+//!   cached previous-round messages on stale entries. Realized — not
+//!   nominal — edges are what the cost model charges.
+//!
+//! The trainer enables it via `Config::faults`
+//! (`--faults drop=0.1,straggle=0.05,seed=7`); `experiments::fig_faults`
+//! and `examples/fault_sweep.rs` sweep the DecentLaM-vs-DmSGD bias gap
+//! as fault rates grow.
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::{FaultStats, FaultyEngine};
+pub use plan::{FaultPlan, FaultSpec, StepFaults};

@@ -1,0 +1,254 @@
+//! Seeded, deterministic fault schedules (DESIGN.md §6).
+//!
+//! A [`FaultPlan`] turns a [`FaultSpec`] (per-step rates) into concrete
+//! per-step fault realizations. Every decision — "does node i drop out
+//! at step k?", "does edge (i,j) fail at step k?" — is drawn from its
+//! own counter-keyed [`Pcg64`] stream, so the schedule is
+//!
+//! * **replayable**: the same (spec, step) always yields the same
+//!   faults, independent of how many times or in what order queries
+//!   are made;
+//! * **order-free**: decisions for different entities never share RNG
+//!   state, so iterating edges in any order (or skipping some) cannot
+//!   perturb the others — the property suite pins this.
+//!
+//! All nodes of the simulated cluster share the plan the same way they
+//! share the topology seed (paper App. G.3): everyone agrees on who is
+//! out this step, so the synchronous round structure is preserved.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+
+/// Per-step fault rates plus the schedule seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// P(node drops out for a step): all its edges are masked; it
+    /// neither sends nor receives and updates on its own state only.
+    pub drop: f64,
+    /// P(an individual link fails for a step): that edge is masked.
+    pub link: f64,
+    /// P(node straggles for a step): it misses the sync deadline, so
+    /// neighbors mix its *previous* published message (stale) while it
+    /// still receives fresh messages itself.
+    pub straggle: f64,
+    /// P(a link delivers stale data for a step, both directions).
+    pub stale: f64,
+    /// Seed of the fault schedule (independent of the topology seed).
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { drop: 0.0, link: 0.0, straggle: 0.0, stale: 0.0, seed: 0 }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the CLI form `drop=0.1,straggle=0.05,seed=7`. Keys:
+    /// `drop`, `link`, `straggle`, `stale` (rates in [0,1]) and `seed`.
+    /// Omitted keys default to 0 / `default_seed`.
+    pub fn parse(s: &str, default_seed: u64) -> Result<FaultSpec> {
+        let mut spec = FaultSpec { seed: default_seed, ..Default::default() };
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("fault spec entry `{part}` is not key=value");
+            };
+            match k.trim() {
+                "drop" => spec.drop = parse_rate(k, v)?,
+                "link" => spec.link = parse_rate(k, v)?,
+                "straggle" => spec.straggle = parse_rate(k, v)?,
+                "stale" => spec.stale = parse_rate(k, v)?,
+                "seed" => spec.seed = v.trim().parse()?,
+                other => bail!("unknown fault key `{other}` (drop|link|straggle|stale|seed)"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True when every rate is zero — the fault-free degenerate plan.
+    pub fn is_zero(&self) -> bool {
+        self.drop == 0.0 && self.link == 0.0 && self.straggle == 0.0 && self.stale == 0.0
+    }
+
+    /// Does this spec ever substitute stale messages (and therefore
+    /// need the engine's publish cache)?
+    pub fn wants_stale(&self) -> bool {
+        self.straggle > 0.0 || self.stale > 0.0
+    }
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f64> {
+    let rate: f64 = v.trim().parse()?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("fault rate `{key}={rate}` outside [0, 1]");
+    }
+    Ok(rate)
+}
+
+/// Node-level fault flags for one step.
+#[derive(Debug, Clone)]
+pub struct StepFaults {
+    /// dropped[i]: node i is fully out this step.
+    pub dropped: Vec<bool>,
+    /// straggler[i]: node i missed the deadline; its outgoing messages
+    /// are served stale from the cache.
+    pub straggler: Vec<bool>,
+}
+
+impl StepFaults {
+    pub fn none(n: usize) -> StepFaults {
+        StepFaults { dropped: vec![false; n], straggler: vec![false; n] }
+    }
+}
+
+/// Domain-separation tags: one independent stream family per fault kind.
+const TAG_DROP: u64 = 0xfa17_d209;
+const TAG_STRAGGLE: u64 = 0xfa17_57a6;
+const TAG_LINK: u64 = 0xfa17_11f4;
+const TAG_STALE: u64 = 0xfa17_57a1;
+
+/// A deterministic fault schedule over steps.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { spec }
+    }
+
+    /// One Bernoulli draw on the (tag, step, entity) stream.
+    fn draw(&self, tag: u64, step: usize, entity: u64, rate: f64) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let seed = self
+            .spec
+            .seed
+            .wrapping_add((step as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            ^ tag;
+        Pcg64::new(seed, entity).f64() < rate
+    }
+
+    /// Node dropout / straggler flags at `step`.
+    pub fn node_faults(&self, step: usize, n: usize) -> StepFaults {
+        StepFaults {
+            dropped: (0..n)
+                .map(|i| self.draw(TAG_DROP, step, i as u64, self.spec.drop))
+                .collect(),
+            straggler: (0..n)
+                .map(|i| self.draw(TAG_STRAGGLE, step, i as u64, self.spec.straggle))
+                .collect(),
+        }
+    }
+
+    /// Does the undirected edge {i, j} fail at `step`? Symmetric in
+    /// (i, j) by canonicalization — masking must be symmetric for the
+    /// renormalized weights to stay doubly stochastic.
+    pub fn link_failed(&self, step: usize, i: usize, j: usize) -> bool {
+        self.draw(TAG_LINK, step, edge_key(i, j), self.spec.link)
+    }
+
+    /// Does the undirected edge {i, j} deliver stale data at `step`?
+    pub fn link_stale(&self, step: usize, i: usize, j: usize) -> bool {
+        self.draw(TAG_STALE, step, edge_key(i, j), self.spec.stale)
+    }
+}
+
+/// Canonical stream id of an undirected edge.
+fn edge_key(i: usize, j: usize) -> u64 {
+    let (lo, hi) = (i.min(j) as u64, i.max(j) as u64);
+    (lo << 32) | hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse("drop=0.1,straggle=0.05,seed=7", 1).unwrap();
+        assert_eq!(s.drop, 0.1);
+        assert_eq!(s.straggle, 0.05);
+        assert_eq!(s.link, 0.0);
+        assert_eq!(s.seed, 7);
+        assert!(!s.is_zero());
+        assert!(s.wants_stale());
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        let s = FaultSpec::parse("", 9).unwrap();
+        assert!(s.is_zero());
+        assert_eq!(s.seed, 9);
+        assert!(FaultSpec::parse("drop=1.5", 0).is_err());
+        assert!(FaultSpec::parse("warp=0.1", 0).is_err());
+        assert!(FaultSpec::parse("drop", 0).is_err());
+        assert!(FaultSpec::parse("link=-0.2", 0).is_err());
+    }
+
+    #[test]
+    fn schedule_replays_identically() {
+        let plan = FaultPlan::new(
+            FaultSpec::parse("drop=0.3,link=0.2,straggle=0.2,stale=0.1,seed=42", 0).unwrap(),
+        );
+        for step in [0usize, 1, 17, 999] {
+            let a = plan.node_faults(step, 16);
+            let b = plan.node_faults(step, 16);
+            assert_eq!(a.dropped, b.dropped, "step {step}");
+            assert_eq!(a.straggler, b.straggler, "step {step}");
+            for i in 0..16 {
+                for j in (i + 1)..16 {
+                    assert_eq!(
+                        plan.link_failed(step, i, j),
+                        plan.link_failed(step, j, i),
+                        "link symmetry step {step} ({i},{j})"
+                    );
+                    assert_eq!(
+                        plan.link_stale(step, i, j),
+                        plan.link_stale(step, j, i),
+                        "stale symmetry step {step} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rates_hit_empirical_frequencies() {
+        let plan =
+            FaultPlan::new(FaultSpec { drop: 0.2, ..Default::default() });
+        let mut hits = 0usize;
+        let trials = 5000;
+        for step in 0..trials / 10 {
+            let f = plan.node_faults(step, 10);
+            hits += f.dropped.iter().filter(|&&d| d).count();
+        }
+        let freq = hits as f64 / trials as f64;
+        assert!((freq - 0.2).abs() < 0.03, "empirical drop rate {freq}");
+    }
+
+    #[test]
+    fn zero_and_one_rates_are_exact() {
+        let never = FaultPlan::new(FaultSpec::default());
+        let f = never.node_faults(3, 8);
+        assert!(f.dropped.iter().all(|&d| !d));
+        let always = FaultPlan::new(FaultSpec { drop: 1.0, ..Default::default() });
+        assert!(always.node_faults(3, 8).dropped.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mk = |seed| {
+            FaultPlan::new(FaultSpec { drop: 0.5, seed, ..Default::default() })
+                .node_faults(0, 64)
+                .dropped
+        };
+        assert_ne!(mk(1), mk(2));
+    }
+}

@@ -81,6 +81,25 @@ impl Kind {
     pub fn time_varying(self) -> bool {
         matches!(self, Kind::OnePeerExp | Kind::BipartiteRandomMatch)
     }
+
+    /// The B-connectivity window: number of consecutive steps whose
+    /// union graph is guaranteed connected (Assumption A.3 holds over a
+    /// window for time-varying kinds, per step for static ones).
+    /// `None` for kinds with only probabilistic guarantees (bipartite
+    /// random match, where any fixed window can miss a node pair).
+    pub fn connectivity_window(self, n: usize) -> Option<usize> {
+        match self {
+            // One-peer exp cycles hops 2^0..2^(stages-1); any `stages`
+            // consecutive steps realize every hop once, and hop 1 alone
+            // is the connected ring.
+            Kind::OnePeerExp => {
+                let stages = (usize::BITS - n.saturating_sub(1).leading_zeros()) as usize;
+                Some(stages.max(1))
+            }
+            Kind::BipartiteRandomMatch => None,
+            _ => Some(1),
+        }
+    }
 }
 
 /// An undirected graph over `n` nodes, stored as sorted adjacency lists
@@ -200,6 +219,36 @@ impl Topology {
                         break;
                     }
                     attempt += 1;
+                }
+            }
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        Topology { n, kind, adj }
+    }
+
+    /// Union graph of `window` consecutive realizations starting at
+    /// `start` — the object the B-connectivity assumption (A.3 over a
+    /// window) is about. [`Kind::connectivity_window`] names the window
+    /// for which this union is guaranteed connected; the trainer
+    /// asserts it at startup and the topology tests sweep it.
+    pub fn union_over_window(
+        kind: Kind,
+        n: usize,
+        seed: u64,
+        start: usize,
+        window: usize,
+    ) -> Topology {
+        assert!(window >= 1, "window must cover at least one step");
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for step in start..start + window {
+            let t = Topology::at_step(kind, n, seed, step);
+            for (i, merged) in adj.iter_mut().enumerate() {
+                for &j in t.neighbors(i) {
+                    if !merged.contains(&j) {
+                        merged.push(j);
+                    }
                 }
             }
         }
@@ -339,6 +388,51 @@ mod tests {
         // union over one period is the symmetric exponential graph
         let t3 = Topology::at_step(Kind::OnePeerExp, 8, 0, 3);
         assert_eq!(t3.adj, t0.adj);
+    }
+
+    #[test]
+    fn union_over_declared_window_is_connected_from_any_start() {
+        // The B-connectivity guarantee: for ring/exp/one-peer kinds the
+        // union of any `connectivity_window` consecutive realizations
+        // must be connected, wherever the window starts.
+        for kind in [Kind::Ring, Kind::SymExp, Kind::OnePeerExp] {
+            for n in [2usize, 3, 4, 8, 10, 16] {
+                let w = kind.connectivity_window(n).unwrap();
+                for start in 0..8 {
+                    let u = Topology::union_over_window(kind, n, 5, start, w);
+                    assert!(
+                        u.is_connected(),
+                        "{kind:?} n={n} start={start} window={w} disconnected"
+                    );
+                    assert!(u.is_symmetric(), "{kind:?} n={n} union asymmetric");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_exp_needs_the_full_window() {
+        // A one-peer step at hop 4 (step 2 of the n=8 cycle) is a
+        // perfect matching: disconnected — the window is load-bearing.
+        let single = Topology::at_step(Kind::OnePeerExp, 8, 0, 2);
+        assert!(!single.is_connected());
+        assert_eq!(Kind::OnePeerExp.connectivity_window(8), Some(3));
+        // The union over the window equals the symmetric exponential graph.
+        let union = Topology::union_over_window(Kind::OnePeerExp, 8, 0, 0, 3);
+        let sym = Topology::build(Kind::SymExp, 8);
+        for i in 0..8 {
+            assert_eq!(union.neighbors(i), sym.neighbors(i), "node {i}");
+        }
+    }
+
+    #[test]
+    fn connectivity_windows_declared() {
+        assert_eq!(Kind::Ring.connectivity_window(8), Some(1));
+        assert_eq!(Kind::SymExp.connectivity_window(64), Some(1));
+        assert_eq!(Kind::OnePeerExp.connectivity_window(2), Some(1));
+        assert_eq!(Kind::OnePeerExp.connectivity_window(16), Some(4));
+        assert_eq!(Kind::BipartiteRandomMatch.connectivity_window(8), None);
+        assert_eq!(Kind::Ring.connectivity_window(1), Some(1));
     }
 
     #[test]

@@ -96,6 +96,10 @@ pub struct Config {
     /// Worker threads for the gradient/exchange/update phases
     /// (0 = one per hardware thread, 1 = serial).
     pub threads: usize,
+    /// Fault-injection spec, e.g. `drop=0.1,straggle=0.05,seed=7`
+    /// (empty = fault-free; see `sim::FaultSpec::parse`). The fault
+    /// seed defaults to `seed` when the spec omits `seed=`.
+    pub faults: String,
 }
 
 impl Default for Config {
@@ -122,6 +126,7 @@ impl Default for Config {
             positive_definite: false,
             eval_every: 0,
             threads: 0,
+            faults: String::new(),
         }
     }
 }
@@ -195,6 +200,13 @@ impl Config {
             "positive-definite" | "pd" => self.positive_definite = v.parse()?,
             "eval-every" => self.eval_every = v.parse()?,
             "threads" => self.threads = v.parse()?,
+            "faults" => {
+                // Validate eagerly so a typo fails at the CLI, not
+                // deep inside Trainer::new (seed resolution happens
+                // there, where the run seed is known).
+                crate::sim::FaultSpec::parse(v, 0)?;
+                self.faults = v.into();
+            }
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
         }
@@ -305,6 +317,15 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = Config::default();
         assert!(c.apply_kv("warp-drive", "on").is_err());
+    }
+
+    #[test]
+    fn faults_key_validated_eagerly() {
+        let mut c = Config::default();
+        c.apply_kv("faults", "drop=0.1,straggle=0.05,seed=7").unwrap();
+        assert_eq!(c.faults, "drop=0.1,straggle=0.05,seed=7");
+        assert!(c.apply_kv("faults", "drop=2.0").is_err());
+        assert!(c.apply_kv("faults", "gremlins=0.1").is_err());
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Fault-injection suite (DESIGN.md §6): property tests over the
+//! masked/renormalized mixing weights and a deterministic scenario
+//! harness running every fault class end to end through the trainer.
+//!
+//! The four tentpole invariants:
+//! (a) masked matrices stay symmetric doubly stochastic after
+//!     renormalization,
+//! (b) a `FaultPlan` replays bit-identical schedules per seed,
+//! (c) zero-rate plans are bitwise identical to the fault-free engine,
+//! (d) parallel execution stays bitwise equal to serial under faults.
+//!
+//! Scenario tests marked `#[ignore]` are the slow nightly tier
+//! (`cargo test -q -- --include-ignored`).
+
+use decentlam::comm::CommEngine;
+use decentlam::coordinator::{NodeExecutor, Trainer};
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::{mlp, Workload};
+use decentlam::optim::{partial_average_all, partial_average_all_par};
+use decentlam::prop::{check, gens};
+use decentlam::sim::{FaultPlan, FaultSpec, FaultyEngine};
+use decentlam::topology::{Kind, SparseWeights, Topology};
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::rng::Pcg64;
+
+const KINDS: [Kind; 5] = [Kind::Ring, Kind::Mesh, Kind::Star, Kind::SymExp, Kind::Full];
+
+fn random_spec(rng: &mut Pcg64) -> FaultSpec {
+    FaultSpec {
+        drop: rng.f64() * 0.6,
+        link: rng.f64() * 0.6,
+        straggle: rng.f64() * 0.6,
+        stale: rng.f64() * 0.6,
+        seed: rng.next_u64(),
+    }
+}
+
+fn realized(spec: FaultSpec, topo: &Topology, step: usize) -> FaultyEngine {
+    let nominal = SparseWeights::metropolis_hastings(topo);
+    let mut f = FaultyEngine::new(FaultPlan::new(spec));
+    f.begin_step(step, &nominal);
+    f
+}
+
+#[test]
+fn prop_masked_matrices_stay_doubly_stochastic() {
+    // (a) Whatever the rates mask, the renormalized weights must stay
+    // symmetric, non-negative, row-stochastic, with positive diagonal.
+    check(
+        "masked + renormalized weights are symmetric doubly stochastic",
+        60,
+        |rng| {
+            let kind = KINDS[rng.below(KINDS.len())];
+            let n = gens::nodes(rng);
+            (kind, n, random_spec(rng), rng.below(50))
+        },
+        |&(kind, n, spec, step)| {
+            let topo = Topology::build(kind, n);
+            let f = realized(spec, &topo, step);
+            if f.row_sum_error() > 1e-6 {
+                return Err(format!("row sums off by {}", f.row_sum_error()));
+            }
+            for i in 0..n {
+                if f.self_weight(i) <= 0.0 {
+                    return Err(format!("w_{i}{i} <= 0"));
+                }
+                for &(j, w) in f.row(i) {
+                    if w < 0.0 {
+                        return Err(format!("negative w[{i}][{j}]"));
+                    }
+                    // Symmetry: the mirrored entry must exist and match.
+                    let ju = j as usize;
+                    if ju != i {
+                        let Some(&(_, wm)) =
+                            f.row(ju).iter().find(|&&(jj, _)| jj as usize == i)
+                        else {
+                            return Err(format!("edge ({i},{ju}) not mirrored"));
+                        };
+                        if (w - wm).abs() > 1e-7 {
+                            return Err(format!("asymmetric: w[{i}][{ju}]={w} vs {wm}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_schedule_replays_per_seed() {
+    // (b) Same spec => identical realized rows at every step; the
+    // schedule is a pure function of (seed, step, entity).
+    check(
+        "fault schedules replay bit-identically per seed",
+        40,
+        |rng| {
+            let kind = KINDS[rng.below(KINDS.len())];
+            let n = gens::nodes(rng);
+            (kind, n, random_spec(rng), rng.below(100))
+        },
+        |&(kind, n, spec, step)| {
+            let topo = Topology::build(kind, n);
+            let a = realized(spec, &topo, step);
+            let b = realized(spec, &topo, step);
+            for i in 0..n {
+                if a.row(i) != b.row(i) {
+                    return Err(format!("row {i} differs across replays"));
+                }
+            }
+            if a.stats() != b.stats() {
+                return Err("stats differ across replays".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_zero_rates_bitwise_match_fault_free_engine() {
+    // (c) A zero-rate plan must be indistinguishable — rows AND mixed
+    // output, bit for bit — from the plain sparse engine.
+    check(
+        "zero-rate fault engine is bitwise the fault-free engine",
+        40,
+        |rng| {
+            let kind = KINDS[rng.below(KINDS.len())];
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(32);
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (kind, rng.next_u64(), rng.below(20), src)
+        },
+        |(kind, seed, step, src)| {
+            let n = src.len();
+            let d = src[0].len();
+            let topo = Topology::build(*kind, n);
+            let nominal = SparseWeights::metropolis_hastings(&topo);
+            let spec = FaultSpec { seed: *seed, ..Default::default() };
+            let mut f = FaultyEngine::new(FaultPlan::new(spec));
+            f.begin_step(*step, &nominal);
+            for i in 0..n {
+                if f.row(i) != nominal.row(i) {
+                    return Err(format!("row {i} differs from nominal"));
+                }
+            }
+            let mut out_f = vec![vec![0.0f32; d]; n];
+            let mut out_n = vec![vec![0.0f32; d]; n];
+            partial_average_all(&f, src, &mut out_f);
+            partial_average_all(&nominal, src, &mut out_n);
+            if out_f != out_n {
+                return Err("mixed output differs from nominal".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_mixing_bitwise_matches_serial_under_faults() {
+    // (d) Chunked threads never reorder per-row arithmetic, stale
+    // entries included.
+    check(
+        "parallel faulty mixing is bitwise identical to serial",
+        30,
+        |rng| {
+            let kind = KINDS[rng.below(KINDS.len())];
+            let n = gens::nodes(rng);
+            let d = 1 + rng.below(48);
+            let threads = 2 + rng.below(7);
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            let prev: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            (kind, random_spec(rng), threads, src, prev)
+        },
+        |(kind, spec, threads, src, prev)| {
+            let n = src.len();
+            let d = src[0].len();
+            let topo = Topology::build(*kind, n);
+            let nominal = SparseWeights::metropolis_hastings(&topo);
+            let mut f = FaultyEngine::new(FaultPlan::new(*spec));
+            // Warm the stale cache so straggle/stale entries resolve
+            // against `prev` — the hardest path to keep deterministic.
+            f.begin_step(0, &nominal);
+            f.record_publish(prev);
+            f.begin_step(1, &nominal);
+            let mut serial = vec![vec![0.0f32; d]; n];
+            let mut parallel = vec![vec![0.0f32; d]; n];
+            partial_average_all(&f, src, &mut serial);
+            partial_average_all_par(&f, src, &mut parallel, NodeExecutor::new(*threads));
+            if serial != parallel {
+                return Err("parallel faulty mixing differs from serial".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Deterministic scenario harness: named fault regimes run end to end
+// through the trainer; each must stay finite and replay bit-identically.
+// ---------------------------------------------------------------------
+
+struct Scenario {
+    name: &'static str,
+    optimizer: &'static str,
+    topology: &'static str,
+    faults: &'static str,
+    nodes: usize,
+    steps: usize,
+}
+
+const SCENARIOS: [Scenario; 5] = [
+    Scenario {
+        name: "ring-dropout",
+        optimizer: "decentlam",
+        topology: "ring",
+        faults: "drop=0.2,seed=11",
+        nodes: 8,
+        steps: 30,
+    },
+    Scenario {
+        name: "exp-link-failures",
+        optimizer: "dmsgd",
+        topology: "sym-exp",
+        faults: "link=0.3,seed=12",
+        nodes: 8,
+        steps: 30,
+    },
+    Scenario {
+        name: "ring-stragglers",
+        optimizer: "decentlam",
+        topology: "ring",
+        faults: "straggle=0.25,seed=13",
+        nodes: 6,
+        steps: 30,
+    },
+    Scenario {
+        name: "stale-links-time-varying",
+        optimizer: "dsgd",
+        topology: "one-peer-exp",
+        faults: "stale=0.2,link=0.1,seed=14",
+        nodes: 8,
+        steps: 30,
+    },
+    Scenario {
+        name: "star-hub-under-everything",
+        optimizer: "qg-dmsgd",
+        topology: "star",
+        faults: "drop=0.1,link=0.1,straggle=0.1,stale=0.1,seed=15",
+        nodes: 6,
+        steps: 30,
+    },
+];
+
+fn scenario_workload(nodes: usize, seed: u64) -> Workload {
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 128,
+        eval_samples: 128,
+        dirichlet_alpha: 0.5,
+        seed,
+        ..Default::default()
+    });
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 16, seed)
+}
+
+fn scenario_cfg(s: &Scenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = s.optimizer.into();
+    cfg.topology = s.topology.into();
+    cfg.nodes = s.nodes;
+    cfg.steps = s.steps;
+    cfg.total_batch = 16 * s.nodes;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.02;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.seed = 5;
+    cfg.faults = s.faults.into();
+    cfg
+}
+
+fn run_scenario(s: &Scenario) -> (Vec<f64>, f64) {
+    let mut t = Trainer::new(scenario_cfg(s), scenario_workload(s.nodes, 5)).unwrap();
+    let r = t.run();
+    (r.losses, r.final_consensus)
+}
+
+#[test]
+fn scenarios_stay_finite_and_replay_identically() {
+    for s in &SCENARIOS {
+        let (losses, consensus) = run_scenario(s);
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "{}: non-finite loss",
+            s.name
+        );
+        assert!(consensus.is_finite(), "{}: non-finite consensus", s.name);
+        let (replay, replay_consensus) = run_scenario(s);
+        assert_eq!(losses, replay, "{}: replay diverged", s.name);
+        assert_eq!(consensus, replay_consensus, "{}: consensus replay diverged", s.name);
+    }
+}
+
+#[test]
+fn scenario_faults_actually_fire() {
+    for s in &SCENARIOS {
+        let mut t = Trainer::new(scenario_cfg(s), scenario_workload(s.nodes, 5)).unwrap();
+        for k in 0..s.steps {
+            t.step(k);
+        }
+        let stats = t.fault_stats().expect(s.name);
+        assert_eq!(stats.steps, s.steps, "{}", s.name);
+        assert!(
+            stats.masked_edges + stats.stale_messages > 0,
+            "{}: no fault ever realized",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn trainer_threads_agree_under_faults() {
+    // (d) at trainer level: a faulty run fans the same arithmetic over
+    // however many threads.
+    let run = |threads: usize| {
+        let mut cfg = scenario_cfg(&SCENARIOS[0]);
+        cfg.threads = threads;
+        let mut t = Trainer::new(cfg, scenario_workload(SCENARIOS[0].nodes, 5)).unwrap();
+        t.run().losses
+    };
+    assert_eq!(run(1), run(4), "threading changed faulty-run results");
+}
+
+/// Slow nightly tier: every optimizer under dropout + stragglers for
+/// 120 steps; losses must stay finite and end below where they start.
+#[test]
+#[ignore = "slow scenario sweep — nightly tier (--include-ignored)"]
+fn slow_all_optimizers_survive_fault_mix() {
+    for name in decentlam::optim::ALL.iter().chain([&"dsgd"]) {
+        let s = Scenario {
+            name: "nightly-mix",
+            optimizer: "", // overridden below
+            topology: "ring",
+            faults: "drop=0.1,link=0.05,straggle=0.1,seed=21",
+            nodes: 8,
+            steps: 120,
+        };
+        let mut cfg = scenario_cfg(&s);
+        cfg.optimizer = (*name).into();
+        let mut t = Trainer::new(cfg, scenario_workload(s.nodes, 5)).unwrap();
+        let r = t.run();
+        assert!(
+            r.losses.iter().all(|l| l.is_finite()),
+            "{name}: diverged under fault mix"
+        );
+        let first = r.losses[..10].iter().sum::<f64>() / 10.0;
+        let last = r.losses[r.losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(last < first, "{name}: no progress under fault mix ({first} -> {last})");
+    }
+}
+
+/// Slow nightly tier: drop-rate sweep keeps the DecentLaM bias gap.
+#[test]
+#[ignore = "slow scenario sweep — nightly tier (--include-ignored)"]
+fn slow_fig_faults_default_sweep_is_deterministic() {
+    use decentlam::experiments::fig_faults;
+    let opts = fig_faults::Opts { nodes: 16, steps: 120, ..Default::default() };
+    let (rows, table) = fig_faults::run(&opts).unwrap();
+    let (_, again) = fig_faults::run(&opts).unwrap();
+    assert_eq!(table.render(), again.render());
+    assert!(rows.iter().all(|r| r.consensus.is_finite()));
+}

@@ -3,12 +3,16 @@
 //! shrunk workloads, and failure-injection around config/workload
 //! mismatches.
 
+use decentlam::comm::{wire_bytes_per_iter, CommStats};
 use decentlam::coordinator::Trainer;
 use decentlam::data::synth::{ClassificationData, SynthSpec};
 use decentlam::data::LinRegProblem;
 use decentlam::experiments as exp;
 use decentlam::grad::{linreg, mlp};
+use decentlam::optim::{self, CommPattern, NodeState, RoundCtx, Scratch};
+use decentlam::topology::{metropolis_hastings, Kind, Topology};
 use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::math;
 
 fn mlp_data(nodes: usize, alpha: f64, seed: u64) -> ClassificationData {
     ClassificationData::generate(&SynthSpec {
@@ -176,6 +180,70 @@ fn experiment_harness_fig6_matches_paper_band() {
         (1.1..2.2).contains(&r.speedup_vs_pmsgd),
         "speedup {}",
         r.speedup_vs_pmsgd
+    );
+}
+
+#[test]
+fn wire_bytes_pinned_for_ring_grid_exp() {
+    // Regression pins for the PR-1 cost model: exact per-iteration wire
+    // bytes (2 · edges · payload for one neighbor exchange) at the edge
+    // counts these topologies realize. A change to topology
+    // construction or the byte accounting must show up here.
+    let payload = 1.0; // bytes; totals below are exact edge-count doubles
+    let expected: [(Kind, usize, f64); 6] = [
+        (Kind::Ring, 8, 16.0),    // 8 edges
+        (Kind::Ring, 64, 128.0),  // 64 edges
+        (Kind::Mesh, 8, 24.0),    // 2x4 torus: 8 horizontal + 4 vertical
+        (Kind::Mesh, 64, 256.0),  // 8x8 torus: 128 edges
+        (Kind::SymExp, 8, 40.0),  // hops 1,2,4: 20 edges
+        (Kind::SymExp, 64, 704.0) // hops 1..32: 352 edges
+    ];
+    for (kind, n, want) in expected {
+        let stats = CommStats::of_topology(&Topology::build(kind, n));
+        let got = wire_bytes_per_iter(CommPattern::Neighbor { payloads: 1 }, &stats, payload);
+        assert_eq!(got, want, "{kind:?} n={n}: {got} wire bytes, want {want}");
+    }
+}
+
+#[test]
+fn dsgd_gossip_consensus_monotone_on_static_ring() {
+    // Pure gossip (zero gradients) under a doubly-stochastic W is a
+    // contraction toward consensus: the consensus distance must never
+    // increase round over round, and must shrink overall.
+    let n = 8;
+    let d = 6;
+    let wm = metropolis_hastings(&Topology::build(Kind::Ring, n));
+    let mut o = optim::build("dsgd", 1, 0.0).unwrap();
+    let mut rng = decentlam::util::rng::Pcg64::seeded(31);
+    let mut states: Vec<NodeState> = (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.normal_fill(&mut x, 1.0);
+            NodeState::new(x, 0)
+        })
+        .collect();
+    let grads = vec![vec![0.0f32; d]; n];
+    let mut scratch = Scratch::new(n, d);
+    let consensus = |states: &[NodeState]| -> f64 {
+        let refs: Vec<&[f32]> = states.iter().map(|s| s.x.as_slice()).collect();
+        let xbar = math::mean_of(&refs);
+        states.iter().map(|s| math::dist2(&s.x, &xbar)).sum::<f64>() / n as f64
+    };
+    let mut prev = consensus(&states);
+    let initial = prev;
+    for step in 0..50 {
+        let ctx = RoundCtx::new(&wm, 0.1, 0.0, step, false);
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+        let now = consensus(&states);
+        assert!(
+            now <= prev + 1e-12,
+            "consensus grew at round {step}: {prev} -> {now}"
+        );
+        prev = now;
+    }
+    assert!(
+        prev < initial * 1e-3,
+        "gossip barely contracted: {initial} -> {prev}"
     );
 }
 
