@@ -7,7 +7,7 @@
 //! cargo run --release --example large_batch_sweep -- --steps 250
 //! ```
 
-use decentlam::comm::{CommCost, CommStats, LinkSpec};
+use decentlam::comm::{CommCost, CommStats, LinkSpec, PayloadBytes};
 use decentlam::coordinator::Trainer;
 use decentlam::experiments::{mlp_workload_named, protocol_config, synth_imagenet};
 use decentlam::topology::{Kind, Topology};
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
 
     let cost = CommCost::new(LinkSpec::tcp_10gbps());
     let stats = CommStats::of_topology(&Topology::build(Kind::SymExp, nodes));
-    let bytes = 25.5e6 * 4.0; // model the comm of a ResNet-50-sized run
+    let bytes = PayloadBytes::uniform(25.5e6 * 4.0); // ResNet-50-sized fp32 payload
 
     let mut table = Table::new(
         "large-batch sweep — accuracy and modeled per-iter wall time (10 Gbps)",
@@ -56,7 +56,8 @@ fn main() -> anyhow::Result<()> {
         "shape check: DmSGD acc drops fastest with batch; DecentLaM holds; \
          PmSGD pays ~{}x the comm of partial averaging.",
         sig(
-            cost.allreduce_s(nodes, bytes) / cost.neighbor_exchange_s(&stats, bytes),
+            cost.allreduce_s(nodes, bytes.allreduce)
+                / cost.neighbor_exchange_s(&stats, bytes.neighbor),
             2
         )
     );

@@ -13,7 +13,9 @@
 //! At n ≤ 8 the per-node weight rows and the Fig. 1 dense-matrix
 //! analogue are printed too (the App. G.3 material).
 
-use decentlam::comm::{wire_bytes_per_iter, CommCost, CommEngine, CommStats, LinkSpec};
+use decentlam::comm::{
+    wire_bytes_per_iter, CommCost, CommEngine, CommStats, LinkSpec, PayloadBytes,
+};
 use decentlam::optim::CommPattern;
 use decentlam::topology::{
     metropolis_hastings, rho_power, spectral, Kind, SparseWeights, Topology,
@@ -25,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("nodes", 6)?;
     // ResNet-50-sized fp32 payload per exchanged model, as in Fig. 6.
-    let bytes = 25.5e6 * 4.0;
+    let bytes = PayloadBytes::uniform(25.5e6 * 4.0);
     let cost = CommCost::new(LinkSpec::tcp_10gbps());
     // Resolve the filter through Kind::parse so aliases work ("grid",
     // "er", ...) and typos error out instead of printing an empty table.

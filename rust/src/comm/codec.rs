@@ -1,0 +1,792 @@
+//! Payload codecs for the gossip wire path (DESIGN.md §7).
+//!
+//! Every decentralized optimizer here ships one (or two) parameter-sized
+//! payloads per neighbor per round; at large n the wire volume — not the
+//! topology — is what gates real speedups ("From promise to practice",
+//! PAPERS.md). A [`PayloadCodec`] compresses what goes on the wire:
+//!
+//! * [`Fp32`] — identity (the pre-codec engine, bit for bit);
+//! * [`Fp16`] — IEEE binary16 round-to-nearest-even, 2 bytes/element;
+//! * [`Int8Stochastic`] — max-abs-scaled int8 with *seeded stochastic
+//!   rounding* (unbiased, counter-keyed per (seed, step, node, slot) so
+//!   the quantization replays bit-identically and is iteration-order
+//!   free) plus an optional per-node **error-feedback residual**: the
+//!   quantization error of round k is added back into round k+1's
+//!   payload, so compression error averages out instead of accumulating;
+//! * [`TopK`] — magnitude sparsification: the k largest-|v| entries ship
+//!   as (index, value) pairs, the rest stay in the EF residual.
+//!
+//! The simulation never materializes byte buffers: `encode` writes the
+//! *receiver-side reconstruction* (decode ∘ encode) directly, which is
+//! value-identical to encoding once and decoding per edge because decode
+//! is deterministic and senders broadcast one payload to all neighbors.
+//! The wire format (int8 lanes + one f32 scale, f16 lanes, (u32, f32)
+//! pairs) defines the byte accounting via [`PayloadCodec::wire_bytes`],
+//! which [`crate::comm::cost::PayloadBytes`] charges instead of 4·d.
+//!
+//! [`CodecState`] owns the cross-round mutable state: per-(node, slot)
+//! EF residuals (multi-payload rounds like da-dmsgd get one residual per
+//! exchange slot, so payload kinds never share a residual) and the wire
+//! buffers the mix path reads. Encoding fans out per node over the
+//! [`NodeExecutor`]; each node draws from its own stream, so parallel
+//! encoding is bitwise identical to serial.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::executor::NodeExecutor;
+use crate::util::rng::Pcg64;
+
+/// Which codec, parsed from the CLI form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    Fp32,
+    Fp16,
+    Int8,
+    TopK,
+}
+
+/// Parsed codec configuration: `--codec int8,ef=true,seed=7` or
+/// `topk,k=0.05`. The seed defaults to the run seed (like `--faults`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecSpec {
+    pub kind: CodecKind,
+    /// Error feedback: carry each round's compression error into the
+    /// next round's payload. Defaults on for int8/topk (the lossy
+    /// codecs it provably helps), off for fp16.
+    pub ef: bool,
+    /// Kept fraction for top-k sparsification, in (0, 1].
+    pub k: f64,
+    /// Seed of the stochastic-rounding streams.
+    pub seed: u64,
+}
+
+impl CodecSpec {
+    /// Parse `kind[,key=value,...]` with keys `ef`, `k`, `seed`.
+    pub fn parse(s: &str, default_seed: u64) -> Result<CodecSpec> {
+        let mut parts = s.split(',').map(str::trim).filter(|p| !p.is_empty());
+        let kind = match parts.next() {
+            Some("fp32") | Some("none") => CodecKind::Fp32,
+            Some("fp16") => CodecKind::Fp16,
+            Some("int8") => CodecKind::Int8,
+            Some("topk") => CodecKind::TopK,
+            Some(other) => bail!("unknown codec `{other}` (fp32|fp16|int8|topk)"),
+            None => bail!("empty codec spec"),
+        };
+        let mut spec = CodecSpec {
+            kind,
+            ef: matches!(kind, CodecKind::Int8 | CodecKind::TopK),
+            k: 0.05,
+            seed: default_seed,
+        };
+        for part in parts {
+            let Some((key, v)) = part.split_once('=') else {
+                bail!("codec spec entry `{part}` is not key=value");
+            };
+            // Keys that the chosen codec would silently ignore are
+            // rejected — eager validation means a misconfiguration
+            // (e.g. `int8,k=0.01` expecting sparsification) fails at
+            // the CLI instead of running with a different meaning.
+            match key.trim() {
+                "ef" => {
+                    if kind == CodecKind::Fp32 {
+                        bail!("`ef` does not apply to fp32 (lossless identity codec)");
+                    }
+                    spec.ef = v.trim().parse()?;
+                }
+                "k" => {
+                    if kind != CodecKind::TopK {
+                        bail!("`k` only applies to the topk codec");
+                    }
+                    spec.k = v.trim().parse()?;
+                    if !(spec.k > 0.0 && spec.k <= 1.0) {
+                        bail!("topk fraction `k={}` outside (0, 1]", spec.k);
+                    }
+                }
+                "seed" => {
+                    if kind != CodecKind::Int8 {
+                        bail!("`seed` only applies to int8 (the one stochastic codec)");
+                    }
+                    spec.seed = v.trim().parse()?;
+                }
+                other => bail!("unknown codec key `{other}` (ef|k|seed)"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Instantiate the codec this spec names.
+    pub fn build(&self) -> Box<dyn PayloadCodec> {
+        match self.kind {
+            CodecKind::Fp32 => Box::new(Fp32),
+            CodecKind::Fp16 => Box::new(Fp16 { ef: self.ef }),
+            CodecKind::Int8 => Box::new(Int8Stochastic { ef: self.ef }),
+            CodecKind::TopK => Box::new(TopK { frac: self.k, ef: self.ef }),
+        }
+    }
+}
+
+/// Stream identity of one encode call: every (seed, step, node, slot)
+/// gets its own counter-keyed PCG64, the same discipline as
+/// `sim::FaultPlan` — replayable and iteration-order free.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamKey {
+    pub seed: u64,
+    pub step: usize,
+    pub node: usize,
+    pub slot: usize,
+}
+
+/// Domain-separation tag for the stochastic-rounding streams.
+const TAG_STOCHASTIC: u64 = 0xc0de_c517;
+
+impl StreamKey {
+    fn rng(&self) -> Pcg64 {
+        let seed = self
+            .seed
+            .wrapping_add((self.step as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            ^ TAG_STOCHASTIC;
+        let entity = ((self.node as u64) << 8) | (self.slot as u64 & 0xff);
+        Pcg64::new(seed, entity)
+    }
+}
+
+/// Reusable per-node encode scratch, owned by [`CodecState`] so the
+/// per-round encode path stays allocation-free like the rest of the
+/// step loop (only top-k selection needs it today).
+#[derive(Debug, Clone, Default)]
+pub struct EncodeScratch {
+    /// (|v|, index) selection buffer for top-k.
+    order: Vec<(f32, u32)>,
+}
+
+/// A gossip payload compressor. `encode` reads one node's publish
+/// buffer and writes the receiver-side reconstruction into `wire`,
+/// folding the error-feedback residual in and out when the codec uses
+/// one; `wire_bytes` is what one encoded payload occupies on the wire.
+pub trait PayloadCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Bytes of one encoded d-element payload.
+    fn wire_bytes(&self, d: usize) -> f64;
+
+    /// Identity codecs let the engine mix the publish buffers directly
+    /// (bitwise identical to the pre-codec path, zero copies).
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    fn uses_error_feedback(&self) -> bool {
+        false
+    }
+
+    /// wire = decode(encode(src [+ residual])); residual updated in
+    /// place when error feedback is on, untouched otherwise.
+    fn encode(
+        &self,
+        key: StreamKey,
+        src: &[f32],
+        residual: &mut [f32],
+        wire: &mut [f32],
+        scratch: &mut EncodeScratch,
+    );
+}
+
+/// Identity codec: raw fp32 lanes, 4 bytes/element.
+pub struct Fp32;
+
+impl PayloadCodec for Fp32 {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn wire_bytes(&self, d: usize) -> f64 {
+        4.0 * d as f64
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn encode(
+        &self,
+        _key: StreamKey,
+        src: &[f32],
+        _residual: &mut [f32],
+        wire: &mut [f32],
+        _scratch: &mut EncodeScratch,
+    ) {
+        wire.copy_from_slice(src);
+    }
+}
+
+/// IEEE 754 binary16 round-trip, 2 bytes/element.
+pub struct Fp16 {
+    pub ef: bool,
+}
+
+impl PayloadCodec for Fp16 {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn wire_bytes(&self, d: usize) -> f64 {
+        2.0 * d as f64
+    }
+
+    fn uses_error_feedback(&self) -> bool {
+        self.ef
+    }
+
+    fn encode(
+        &self,
+        _key: StreamKey,
+        src: &[f32],
+        residual: &mut [f32],
+        wire: &mut [f32],
+        _scratch: &mut EncodeScratch,
+    ) {
+        for k in 0..src.len() {
+            let v = if self.ef { src[k] + residual[k] } else { src[k] };
+            let w = f16_bits_to_f32(f32_to_f16_bits(v));
+            wire[k] = w;
+            if self.ef {
+                residual[k] = v - w;
+            }
+        }
+    }
+}
+
+/// Max-abs-scaled int8 with seeded stochastic rounding and optional
+/// error feedback: 1 byte/element + one f32 scale per payload.
+pub struct Int8Stochastic {
+    pub ef: bool,
+}
+
+impl PayloadCodec for Int8Stochastic {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn wire_bytes(&self, d: usize) -> f64 {
+        d as f64 + 4.0
+    }
+
+    fn uses_error_feedback(&self) -> bool {
+        self.ef
+    }
+
+    fn encode(
+        &self,
+        key: StreamKey,
+        src: &[f32],
+        residual: &mut [f32],
+        wire: &mut [f32],
+        _scratch: &mut EncodeScratch,
+    ) {
+        let d = src.len();
+        let mut maxabs = 0.0f32;
+        for k in 0..d {
+            let v = if self.ef { src[k] + residual[k] } else { src[k] };
+            maxabs = maxabs.max(v.abs());
+        }
+        if maxabs == 0.0 || !maxabs.is_finite() {
+            // All-zero payload quantizes exactly; non-finite payloads
+            // pass through so divergence stays visible, not masked.
+            for k in 0..d {
+                let v = if self.ef { src[k] + residual[k] } else { src[k] };
+                wire[k] = v;
+                if self.ef {
+                    residual[k] = 0.0;
+                }
+            }
+            return;
+        }
+        let scale = maxabs / 127.0;
+        let inv = 127.0 / maxabs;
+        let mut rng = key.rng();
+        for k in 0..d {
+            let v = if self.ef { src[k] + residual[k] } else { src[k] };
+            // Unbiased stochastic floor: E[q] = v/scale. The clamp only
+            // guards the q = ±128 corner f32 rounding can reach.
+            let q = (v * inv + rng.f32()).floor().clamp(-127.0, 127.0);
+            let w = q * scale;
+            wire[k] = w;
+            if self.ef {
+                residual[k] = v - w;
+            }
+        }
+    }
+}
+
+/// Magnitude sparsification: keep the ⌈frac·d⌉ largest-|v| entries as
+/// (u32 index, f32 value) pairs, leave the rest to the EF residual.
+pub struct TopK {
+    pub frac: f64,
+    pub ef: bool,
+}
+
+impl TopK {
+    fn kept(&self, d: usize) -> usize {
+        ((self.frac * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl PayloadCodec for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn wire_bytes(&self, d: usize) -> f64 {
+        8.0 * self.kept(d) as f64
+    }
+
+    fn uses_error_feedback(&self) -> bool {
+        self.ef
+    }
+
+    fn encode(
+        &self,
+        _key: StreamKey,
+        src: &[f32],
+        residual: &mut [f32],
+        wire: &mut [f32],
+        scratch: &mut EncodeScratch,
+    ) {
+        let d = src.len();
+        if d == 0 {
+            return;
+        }
+        let kept = self.kept(d);
+        // Selection is deterministic: |v| descending, index ascending on
+        // ties is a strict total order (total_cmp — no partial-order
+        // surprises), so the kept SET is unique however the selection
+        // algorithm permutes. A full O(d log d) sort is not needed —
+        // select_nth partitions the top `kept` in O(d), and the scatter
+        // below writes distinct indices, so iteration order inside the
+        // kept prefix never affects the output.
+        let order = &mut scratch.order;
+        order.clear();
+        order.extend((0..d).map(|k| {
+            let v = if self.ef { src[k] + residual[k] } else { src[k] };
+            (v.abs(), k as u32)
+        }));
+        if kept < d {
+            order.select_nth_unstable_by(kept - 1, |a, b| {
+                b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+            });
+        }
+        for k in 0..d {
+            let v = if self.ef { src[k] + residual[k] } else { src[k] };
+            wire[k] = 0.0;
+            if self.ef {
+                residual[k] = v;
+            }
+        }
+        for &(_, idx) in &order[..kept] {
+            let k = idx as usize;
+            let v = if self.ef { residual[k] } else { src[k] };
+            wire[k] = v;
+            if self.ef {
+                residual[k] = 0.0;
+            }
+        }
+    }
+}
+
+/// Cross-round codec state owned by the trainer: the codec itself,
+/// per-(slot, node) error-feedback residuals, and the wire buffers the
+/// mix path (and the fault engine's stale cache) read. One instance per
+/// run; `begin_step` resets the slot counter so multi-payload rounds
+/// deterministically map exchange #0, #1, … to their own residuals.
+pub struct CodecState {
+    codec: Box<dyn PayloadCodec>,
+    seed: u64,
+    step: usize,
+    slot: usize,
+    /// residuals[slot][node] — error feedback, one buffer per exchange
+    /// slot per node so payload kinds never mix residuals.
+    residuals: Vec<Vec<Vec<f32>>>,
+    /// wire[node] — receiver-side reconstruction of the latest exchange.
+    wire: Vec<Vec<f32>>,
+    /// Per-node encode scratch (reused every round, zipped with `wire`).
+    scratch: Vec<EncodeScratch>,
+    n: usize,
+    d: usize,
+}
+
+impl CodecState {
+    pub fn new(spec: &CodecSpec, n: usize, d: usize) -> CodecState {
+        CodecState {
+            codec: spec.build(),
+            seed: spec.seed,
+            step: 0,
+            slot: 0,
+            residuals: Vec::new(),
+            wire: (0..n).map(|_| vec![0.0; d]).collect(),
+            scratch: vec![EncodeScratch::default(); n],
+            n,
+            d,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.codec.name()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.codec.is_identity()
+    }
+
+    /// Bytes one encoded payload of this run's dimension occupies.
+    pub fn payload_bytes(&self) -> f64 {
+        self.codec.wire_bytes(self.d)
+    }
+
+    /// Start step `step`: exchange slots restart at 0.
+    pub fn begin_step(&mut self, step: usize) {
+        self.step = step;
+        self.slot = 0;
+    }
+
+    /// Encode one round's publish buffers into the wire view and return
+    /// it. Fans out per node over `exec`; every node draws from its own
+    /// (seed, step, node, slot) stream, so parallel == serial bitwise.
+    pub fn encode_round(&mut self, src: &[Vec<f32>], exec: NodeExecutor) -> &[Vec<f32>] {
+        assert_eq!(src.len(), self.n, "publish rows != node count");
+        let slot = self.slot;
+        self.slot += 1;
+        while self.residuals.len() <= slot {
+            let (n, d) = (self.n, self.d);
+            self.residuals.push((0..n).map(|_| vec![0.0; d]).collect());
+        }
+        let (codec, seed, step) = (&self.codec, self.seed, self.step);
+        let residuals = &mut self.residuals[slot];
+        exec.for_each_triple_mut(
+            &mut self.wire,
+            residuals,
+            &mut self.scratch,
+            |node, wire, residual, scratch| {
+                assert_eq!(src[node].len(), wire.len(), "payload dim mismatch");
+                let key = StreamKey { seed, step, node, slot };
+                codec.encode(key, &src[node], residual, wire, scratch);
+            },
+        );
+        &self.wire
+    }
+
+    /// Wire view of the latest exchange (what the fault engine's stale
+    /// cache must hold: the compressed payload, not the raw publish).
+    pub fn wire(&self) -> &[Vec<f32>] {
+        &self.wire
+    }
+
+    /// ‖residual‖₂ of one node's EF buffer (diagnostics/tests); 0 when
+    /// the slot never ran or the codec keeps no residual.
+    pub fn residual_norm(&self, slot: usize, node: usize) -> f64 {
+        self.residuals
+            .get(slot)
+            .map(|r| crate::util::math::norm2(&r[node]))
+            .unwrap_or(0.0)
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// underflow → subnormals → ±0).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (NaN payloads collapse to one quiet NaN).
+        let nan = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign;
+        }
+        // Subnormal: shift the implicit-1 mantissa into 10 bits.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let round = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let up = rem > round || (rem == round && (half & 1) == 1);
+        return sign | (half as u16 + up as u16);
+    }
+    let half = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    let up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // A mantissa carry ripples into the exponent correctly (1.11… → 10.0,
+    // and max-normal + carry → inf).
+    sign | (half + up as u32) as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, _) => {
+            // Subnormal: renormalize into an f32 normal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+        (31, 0) => sign | 0x7f80_0000,
+        (31, _) => sign | 0x7fc0_0000,
+        _ => sign | ((exp + 112) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(step: usize, node: usize) -> StreamKey {
+        StreamKey { seed: 7, step, node, slot: 0 }
+    }
+
+    #[test]
+    fn spec_parses_kinds_keys_and_defaults() {
+        let s = CodecSpec::parse("int8,ef=true,seed=5", 1).unwrap();
+        assert_eq!(s.kind, CodecKind::Int8);
+        assert!(s.ef);
+        assert_eq!(s.seed, 5);
+        let s = CodecSpec::parse("int8", 9).unwrap();
+        assert!(s.ef, "int8 defaults to error feedback on");
+        assert_eq!(s.seed, 9, "seed defaults to the run seed");
+        let s = CodecSpec::parse("fp16", 0).unwrap();
+        assert!(!s.ef, "fp16 defaults to error feedback off");
+        let s = CodecSpec::parse("topk,k=0.1,ef=false", 0).unwrap();
+        assert_eq!(s.k, 0.1);
+        assert!(!s.ef);
+        assert!(CodecSpec::parse("", 0).is_err());
+        assert!(CodecSpec::parse("zfp", 0).is_err());
+        assert!(CodecSpec::parse("topk,k=0", 0).is_err());
+        assert!(CodecSpec::parse("topk,k=1.5", 0).is_err());
+        assert!(CodecSpec::parse("int8,warp=1", 0).is_err());
+        assert!(CodecSpec::parse("int8,ef", 0).is_err());
+        // Keys the chosen codec would ignore are rejected, not dropped.
+        assert!(CodecSpec::parse("int8,k=0.01", 0).is_err());
+        assert!(CodecSpec::parse("fp32,ef=true", 0).is_err());
+        assert!(CodecSpec::parse("fp16,seed=7", 0).is_err());
+        assert!(CodecSpec::parse("topk,seed=7", 0).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_per_codec() {
+        let d = 1000;
+        assert_eq!(Fp32.wire_bytes(d), 4000.0);
+        assert_eq!(Fp16 { ef: false }.wire_bytes(d), 2000.0);
+        assert_eq!(Int8Stochastic { ef: true }.wire_bytes(d), 1004.0);
+        assert_eq!(TopK { frac: 0.05, ef: true }.wire_bytes(d), 8.0 * 50.0);
+        // int8 cuts >= 3.9x as soon as d >= 160 (the acceptance bound).
+        let ratio = Fp32.wire_bytes(4810) / Int8Stochastic { ef: true }.wire_bytes(4810);
+        assert!(ratio >= 3.9, "int8 ratio {ratio}");
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_on_representable_values() {
+        for &v in &[0.0f32, -0.0, 0.5, 1.0, -1.5, 2.0, 65504.0, -65504.0, 6.103_515_6e-5] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(rt.to_bits(), v.to_bits(), "{v} -> {rt}");
+        }
+        // Smallest f16 subnormal survives the round trip.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+    }
+
+    #[test]
+    fn f16_rounding_and_overflow() {
+        // Relative error of a normal-range value is <= 2^-11.
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..2000 {
+            let v = (rng.f32() - 0.5) * 100.0;
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!(
+                (rt - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-7,
+                "{v} -> {rt}"
+            );
+        }
+        // Ties round to even: 65520 sits exactly between 65504 and the
+        // (overflowing) next step, whose mantissa is even -> inf.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(65520.0)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e30)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e30)), f32::NEG_INFINITY);
+        // Below half the smallest subnormal -> zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0);
+    }
+
+    #[test]
+    fn int8_is_deterministic_and_element_bounded() {
+        let c = Int8Stochastic { ef: true };
+        let mut sc = EncodeScratch::default();
+        let mut rng = Pcg64::seeded(11);
+        let d = 257;
+        let mut src = vec![0.0f32; d];
+        rng.normal_fill(&mut src, 1.0);
+        let maxabs = src.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = maxabs / 127.0;
+        let (mut r1, mut w1) = (vec![0.0; d], vec![0.0; d]);
+        let (mut r2, mut w2) = (vec![0.0; d], vec![0.0; d]);
+        c.encode(key(3, 1), &src, &mut r1, &mut w1, &mut sc);
+        c.encode(key(3, 1), &src, &mut r2, &mut w2, &mut sc);
+        assert_eq!(w1, w2, "same stream key must replay bit-identically");
+        assert_eq!(r1, r2);
+        for k in 0..d {
+            assert!((w1[k] - src[k]).abs() <= scale + 1e-7, "element {k}");
+            assert!((r1[k] - (src[k] - w1[k])).abs() < 1e-7, "EF residual {k}");
+        }
+        // Different nodes / steps use different streams.
+        let (mut r3, mut w3) = (vec![0.0; d], vec![0.0; d]);
+        c.encode(key(3, 2), &src, &mut r3, &mut w3, &mut sc);
+        assert_ne!(w1, w3, "node streams must differ");
+        let (mut r4, mut w4) = (vec![0.0; d], vec![0.0; d]);
+        c.encode(key(4, 1), &src, &mut r4, &mut w4, &mut sc);
+        assert_ne!(w1, w4, "step streams must differ");
+    }
+
+    #[test]
+    fn int8_zero_payload_stays_zero() {
+        let c = Int8Stochastic { ef: true };
+        let mut sc = EncodeScratch::default();
+        let (mut r, mut w) = (vec![0.0f32; 8], vec![1.0f32; 8]);
+        c.encode(key(0, 0), &[0.0; 8], &mut r, &mut w, &mut sc);
+        assert!(w.iter().all(|&v| v == 0.0));
+        assert!(r.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int8_stochastic_rounding_is_unbiased_on_average() {
+        // A constant 0.3-quantum value must round up ~30% of the time
+        // across independent node streams.
+        let c = Int8Stochastic { ef: false };
+        let mut sc = EncodeScratch::default();
+        let d = 4;
+        let src = vec![0.3f32, 127.0, -0.3, -127.0]; // maxabs 127 -> scale 1
+        let mut sum = 0.0f64;
+        let trials = 4000;
+        for node in 0..trials {
+            let (mut r, mut w) = (vec![0.0; d], vec![0.0; d]);
+            c.encode(key(0, node), &src, &mut r, &mut w, &mut sc);
+            assert!(w[0] == 0.0 || w[0] == 1.0, "q of 0.3 must be 0 or 1, got {}", w[0]);
+            sum += w[0] as f64;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 0.3).abs() < 0.03, "E[q] = {mean}, want 0.3");
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_residual_carries_rest() {
+        let c = TopK { frac: 0.4, ef: true };
+        let mut sc = EncodeScratch::default();
+        let src = vec![0.1f32, -3.0, 0.2, 2.0, -0.05];
+        let (mut r, mut w) = (vec![0.0; 5], vec![0.0; 5]);
+        c.encode(key(0, 0), &src, &mut r, &mut w, &mut sc);
+        // ceil(0.4 * 5) = 2 kept: indices 1 and 3.
+        assert_eq!(w, vec![0.0, -3.0, 0.0, 2.0, 0.0]);
+        assert_eq!(r, vec![0.1, 0.0, 0.2, 0.0, -0.05]);
+        // Next round the residual joins the payload: 0.2 + 0.2 = 0.4
+        // outranks... still below |2.0| refill; just pin determinism.
+        let (mut r2, mut w2) = (r.clone(), vec![0.0; 5]);
+        c.encode(key(1, 0), &src, &mut r2, &mut w2, &mut sc);
+        let (mut r3, mut w3) = (r, vec![0.0; 5]);
+        c.encode(key(1, 0), &src, &mut r3, &mut w3, &mut sc);
+        assert_eq!(w2, w3);
+        assert_eq!(r2, r3);
+    }
+
+    #[test]
+    fn topk_tie_breaks_by_lower_index() {
+        let c = TopK { frac: 0.25, ef: false };
+        let mut sc = EncodeScratch::default();
+        let src = vec![1.0f32, -1.0, 1.0, 1.0];
+        let (mut r, mut w) = (vec![0.0; 4], vec![0.0; 4]);
+        c.encode(key(0, 0), &src, &mut r, &mut w, &mut sc);
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ef_residual_stays_bounded_over_rounds() {
+        // Error feedback must not accumulate: with inputs bounded by 1,
+        // the int8 steady-state residual is ~maxabs/127 per element.
+        let spec = CodecSpec::parse("int8,ef=true,seed=3", 0).unwrap();
+        let mut state = CodecState::new(&spec, 2, 64);
+        let mut rng = Pcg64::seeded(21);
+        let mut src = vec![vec![0.0f32; 64]; 2];
+        for step in 0..100 {
+            for row in src.iter_mut() {
+                for v in row.iter_mut() {
+                    *v = rng.f32() * 2.0 - 1.0;
+                }
+            }
+            state.begin_step(step);
+            state.encode_round(&src, NodeExecutor::serial());
+            for node in 0..2 {
+                let norm = state.residual_norm(0, node);
+                assert!(norm <= 64f64.sqrt() * 0.02, "step {step}: residual norm {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_state_parallel_encode_matches_serial() {
+        let spec = CodecSpec::parse("int8,ef=true,seed=9", 0).unwrap();
+        let n = 13;
+        let d = 97;
+        let mut rng = Pcg64::seeded(5);
+        let mut src = vec![vec![0.0f32; d]; n];
+        for row in src.iter_mut() {
+            rng.normal_fill(row, 1.0);
+        }
+        let mut a = CodecState::new(&spec, n, d);
+        let mut b = CodecState::new(&spec, n, d);
+        for step in 0..3 {
+            a.begin_step(step);
+            b.begin_step(step);
+            let wa = a.encode_round(&src, NodeExecutor::serial()).to_vec();
+            let wb = b.encode_round(&src, NodeExecutor::new(4)).to_vec();
+            assert_eq!(wa, wb, "step {step}: parallel encode diverged");
+        }
+    }
+
+    #[test]
+    fn codec_state_slots_keep_independent_residuals() {
+        let spec = CodecSpec::parse("topk,k=0.25", 1).unwrap();
+        let mut state = CodecState::new(&spec, 1, 4);
+        state.begin_step(0);
+        state.encode_round(&[vec![1.0, 0.1, 0.0, 0.0]], NodeExecutor::serial());
+        let slot0 = state.residual_norm(0, 0);
+        state.encode_round(&[vec![0.0, 0.0, 1.0, 0.3]], NodeExecutor::serial());
+        let slot1 = state.residual_norm(1, 0);
+        assert!((slot0 - 0.1).abs() < 1e-7, "slot 0 residual {slot0}");
+        assert!((slot1 - 0.3).abs() < 1e-7, "slot 1 residual {slot1}");
+        // Slot 0's residual untouched by slot 1's exchange.
+        assert!((state.residual_norm(0, 0) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fp32_is_identity() {
+        let spec = CodecSpec::parse("fp32", 0).unwrap();
+        let state = CodecState::new(&spec, 2, 3);
+        assert!(state.is_identity());
+        assert_eq!(state.payload_bytes(), 12.0);
+        let mut sc = EncodeScratch::default();
+        let (mut r, mut w) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        Fp32.encode(key(0, 0), &[1.0, -2.0, 3.5], &mut r, &mut w, &mut sc);
+        assert_eq!(w, vec![1.0, -2.0, 3.5]);
+    }
+}

@@ -91,12 +91,44 @@ impl CommStats {
     }
 }
 
-/// Total bytes put on the wire in one iteration of `pattern` with a
-/// parameter payload of `bytes` — exact in the edge count (each
-/// undirected edge carries the payload once per direction).
-pub fn wire_bytes_per_iter(pattern: CommPattern, stats: &CommStats, bytes: f64) -> f64 {
-    let neighbor = 2.0 * stats.edges as f64 * bytes;
-    let allreduce = if stats.n <= 1 { 0.0 } else { 2.0 * (stats.n as f64 - 1.0) * bytes };
+/// Per-payload byte widths of one iteration's wire traffic. The gossip
+/// payload is whatever the configured [`crate::comm::codec`] puts on
+/// the wire (possibly compressed); periodic all-reduce legs (SlowMo
+/// sync, PmSGD) model a collective fabric outside the codec path and
+/// always ship raw fp32. Replaces the old single `bytes` argument so
+/// nothing in the cost model silently assumes 4·d.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PayloadBytes {
+    /// Bytes of ONE encoded neighbor-gossip payload.
+    pub neighbor: f64,
+    /// Bytes of one all-reduce payload-equivalent (uncompressed).
+    pub allreduce: f64,
+}
+
+impl PayloadBytes {
+    /// Same width on gossip and all-reduce legs (no codec in play).
+    pub fn uniform(bytes: f64) -> PayloadBytes {
+        PayloadBytes { neighbor: bytes, allreduce: bytes }
+    }
+
+    /// Raw fp32 payload of a d-element parameter vector.
+    pub fn fp32(d: usize) -> PayloadBytes {
+        PayloadBytes::uniform(4.0 * d as f64)
+    }
+
+    /// Codec-compressed gossip payload; all-reduce legs stay raw fp32.
+    pub fn compressed(neighbor_bytes: f64, d: usize) -> PayloadBytes {
+        PayloadBytes { neighbor: neighbor_bytes, allreduce: 4.0 * d as f64 }
+    }
+}
+
+/// Total bytes put on the wire in one iteration of `pattern` at the
+/// given per-payload widths — exact in the edge count (each undirected
+/// edge carries the encoded payload once per direction).
+pub fn wire_bytes_per_iter(pattern: CommPattern, stats: &CommStats, payload: PayloadBytes) -> f64 {
+    let neighbor = 2.0 * stats.edges as f64 * payload.neighbor;
+    let allreduce =
+        if stats.n <= 1 { 0.0 } else { 2.0 * (stats.n as f64 - 1.0) * payload.allreduce };
     match pattern {
         CommPattern::Neighbor { payloads } => payloads as f64 * neighbor,
         CommPattern::AllReduce => allreduce,
@@ -138,16 +170,22 @@ impl CommCost {
     }
 
     /// Average per-iteration communication seconds for an optimizer's
-    /// declared pattern.
-    pub fn per_iter_comm_s(&self, pattern: CommPattern, stats: &CommStats, bytes: f64) -> f64 {
+    /// declared pattern at the given per-payload widths (gossip legs
+    /// move the possibly-compressed payload, all-reduce legs raw fp32).
+    pub fn per_iter_comm_s(
+        &self,
+        pattern: CommPattern,
+        stats: &CommStats,
+        payload: PayloadBytes,
+    ) -> f64 {
         match pattern {
             CommPattern::Neighbor { payloads } => {
-                payloads as f64 * self.neighbor_exchange_s(stats, bytes)
+                payloads as f64 * self.neighbor_exchange_s(stats, payload.neighbor)
             }
-            CommPattern::AllReduce => self.allreduce_s(stats.n, bytes),
+            CommPattern::AllReduce => self.allreduce_s(stats.n, payload.allreduce),
             CommPattern::NeighborPlusPeriodicAllReduce { payloads, period } => {
-                payloads as f64 * self.neighbor_exchange_s(stats, bytes)
-                    + self.allreduce_s(stats.n, bytes) / period.max(1) as f64
+                payloads as f64 * self.neighbor_exchange_s(stats, payload.neighbor)
+                    + self.allreduce_s(stats.n, payload.allreduce) / period.max(1) as f64
             }
         }
     }
@@ -206,7 +244,7 @@ mod tests {
     fn comm_pattern_costs_ordered() {
         let c = CommCost::new(LinkSpec::tcp_25gbps());
         let s = stats(Kind::Ring);
-        let bytes = 1e8;
+        let bytes = PayloadBytes::uniform(1e8);
         let one = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 1 }, &s, bytes);
         let two = c.per_iter_comm_s(CommPattern::Neighbor { payloads: 2 }, &s, bytes);
         let ar = c.per_iter_comm_s(CommPattern::AllReduce, &s, bytes);
@@ -243,21 +281,42 @@ mod tests {
     #[test]
     fn wire_bytes_charged_from_edge_counts() {
         let bytes = 1e6;
+        let payload = PayloadBytes::uniform(bytes);
         // Ring n=512: exactly 2 * 512 payloads per exchange — linear in
         // n, nowhere near the n² a dense-matrix walk would charge.
         let ring = CommStats::of_topology(&Topology::build(Kind::Ring, 512));
-        let nb = wire_bytes_per_iter(CommPattern::Neighbor { payloads: 1 }, &ring, bytes);
+        let nb = wire_bytes_per_iter(CommPattern::Neighbor { payloads: 1 }, &ring, payload);
         assert!((nb - 2.0 * 512.0 * bytes).abs() < 1e-3);
         assert!(nb < 512.0 * 511.0 * bytes / 4.0);
         // All-reduce moves 2(n-1) payload-equivalents in total.
-        let ar = wire_bytes_per_iter(CommPattern::AllReduce, &ring, bytes);
+        let ar = wire_bytes_per_iter(CommPattern::AllReduce, &ring, payload);
         assert!((ar - 2.0 * 511.0 * bytes).abs() < 1e-3);
         // SlowMo amortizes the all-reduce over its period.
         let sm = wire_bytes_per_iter(
             CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: 8 },
             &ring,
-            bytes,
+            payload,
         );
         assert!((sm - (nb + ar / 8.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn compressed_gossip_leaves_allreduce_legs_raw() {
+        // A codec shrinks only the neighbor payload: SlowMo's periodic
+        // all-reduce keeps shipping raw fp32.
+        let d = 1000usize;
+        let ring = CommStats::of_topology(&Topology::build(Kind::Ring, 8));
+        let raw = PayloadBytes::fp32(d);
+        let int8 = PayloadBytes::compressed(d as f64 + 4.0, d);
+        assert_eq!(raw.neighbor, 4000.0);
+        assert_eq!(int8.allreduce, 4000.0);
+        let nb = |p| wire_bytes_per_iter(CommPattern::Neighbor { payloads: 1 }, &ring, p);
+        let ratio = nb(raw) / nb(int8);
+        assert!(ratio >= 3.9, "int8 neighbor ratio {ratio}");
+        let ar = |p| wire_bytes_per_iter(CommPattern::AllReduce, &ring, p);
+        assert_eq!(ar(raw), ar(int8), "all-reduce legs must not be compressed");
+        let sm = CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: 4 };
+        let want = nb(int8) + ar(raw) / 4.0;
+        assert!((wire_bytes_per_iter(sm, &ring, int8) - want).abs() < 1e-9);
     }
 }

@@ -1,13 +1,19 @@
 //! Communication layer: the [`engine::CommEngine`] trait every
 //! optimizer exchanges through (sparse neighbor lists in production,
-//! dense matrix as the property-tested reference), plus the *analytic
-//! cost model* ([`cost`]) that maps each optimizer's wire pattern onto
-//! cluster time (Fig. 6) — the substitute for the paper's 8×V100 NCCL
-//! testbed (DESIGN.md §2). Payloads are charged from realized edge
-//! counts ([`cost::CommStats`]), never from an n×n matrix walk.
+//! dense matrix as the property-tested reference), the payload
+//! [`codec`]s that compress what goes on the gossip wire (fp32 / fp16 /
+//! stochastic int8 / top-k, with error feedback — DESIGN.md §7), plus
+//! the *analytic cost model* ([`cost`]) that maps each optimizer's wire
+//! pattern onto cluster time (Fig. 6) — the substitute for the paper's
+//! 8×V100 NCCL testbed (DESIGN.md §2). Payloads are charged from
+//! realized edge counts ([`cost::CommStats`]) at their *encoded* widths
+//! ([`cost::PayloadBytes`]), never from an n×n matrix walk or a blanket
+//! 4·d assumption.
 
+pub mod codec;
 pub mod cost;
 pub mod engine;
 
-pub use cost::{wire_bytes_per_iter, CommCost, CommStats, LinkSpec};
+pub use codec::{CodecSpec, CodecState, EncodeScratch, PayloadCodec};
+pub use cost::{wire_bytes_per_iter, CommCost, CommStats, LinkSpec, PayloadBytes};
 pub use engine::CommEngine;

@@ -24,11 +24,22 @@
 //! nodes / failed links, renormalizes the Metropolis–Hastings weights
 //! in place, and serves stale cached messages for stragglers — the
 //! whole run stays deterministic under the fault seed (DESIGN.md §6).
+//!
+//! When `Config::codec` is set, every gossip payload is compressed
+//! through the named [`CodecState`] (fp16 / stochastic int8 / top-k
+//! with error feedback, DESIGN.md §7): the optimizers' exchanges all
+//! route through `optim::gossip_exchange`, which encodes each publish
+//! buffer once and mixes the decoded wire view; the fault engine's
+//! stale cache then holds encoded payloads, so faults and compression
+//! compose. Runs stay byte-identical under the codec seed.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::comm::codec::{CodecSpec, CodecState};
+use crate::comm::cost::PayloadBytes;
 use crate::comm::CommEngine;
 use crate::grad::Workload;
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
@@ -69,6 +80,10 @@ pub struct Trainer {
     /// every round mixes through the masked + renormalized realized
     /// rows instead of the nominal ones.
     faults: Option<FaultyEngine>,
+    /// Payload codec for the gossip wire path (None = raw fp32). Owned
+    /// here because the EF residuals and wire buffers are cross-round
+    /// state; rounds reach it through `RoundCtx::codec`.
+    codec: Option<Mutex<CodecState>>,
     topo: Topology,
     pub states: Vec<NodeState>,
     optimizer: Box<dyn Optimizer>,
@@ -146,6 +161,21 @@ impl Trainer {
             }
         };
         let d = workload.dim;
+        let codec = if cfg.codec.trim().is_empty() {
+            None
+        } else {
+            // Codec seed defaults to the run seed (like --faults). Pure
+            // all-reduce optimizers (PmSGD) never touch the gossip wire
+            // the codec compresses — validate the spec but attach no
+            // state, so `codec_name()`/`payload_bytes()` never report a
+            // compression that cannot happen (same honesty rule as the
+            // fault engine above).
+            let spec = CodecSpec::parse(&cfg.codec, cfg.seed)?;
+            match optimizer.comm_pattern() {
+                optim::CommPattern::AllReduce => None,
+                _ => Some(Mutex::new(CodecState::new(&spec, n, d))),
+            }
+        };
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
             .collect();
@@ -161,6 +191,7 @@ impl Trainer {
             kind,
             comm,
             faults,
+            codec,
             topo,
             states,
             optimizer,
@@ -237,6 +268,9 @@ impl Trainer {
             Some(f) => f,
             None => &self.comm,
         };
+        if let Some(c) = &self.codec {
+            c.lock().unwrap().begin_step(k);
+        }
         let ctx = RoundCtx {
             comm,
             exec: self.update_exec,
@@ -245,16 +279,45 @@ impl Trainer {
             step: k,
             time_varying: self.kind.time_varying() || faults_active,
             layer_ranges: &self.workload.layer_ranges,
+            codec: self.codec.as_ref(),
         };
         self.optimizer.round(&mut self.states, &self.grads, &ctx, &mut self.scratch);
         if let Some(f) = &mut self.faults {
             if f.needs_publish_cache() {
                 // What went on the wire this round is next round's
-                // stale payload for stragglers / stale links.
-                f.record_publish(&self.scratch.publish);
+                // stale payload for stragglers / stale links. With a
+                // lossy codec that is the ENCODED payload (the codec's
+                // wire view), not the raw publish buffer — a stale
+                // replay re-delivers last round's compressed bytes.
+                match &self.codec {
+                    Some(c) => {
+                        let state = c.lock().unwrap();
+                        if state.is_identity() {
+                            f.record_publish(&self.scratch.publish);
+                        } else {
+                            f.record_publish(state.wire());
+                        }
+                    }
+                    None => f.record_publish(&self.scratch.publish),
+                }
             }
         }
         loss
+    }
+
+    /// Per-payload wire widths of this run: codec-encoded gossip
+    /// payloads, raw fp32 all-reduce legs (for the cost model).
+    pub fn payload_bytes(&self) -> PayloadBytes {
+        let d = self.workload.dim;
+        match &self.codec {
+            Some(c) => PayloadBytes::compressed(c.lock().unwrap().payload_bytes(), d),
+            None => PayloadBytes::fp32(d),
+        }
+    }
+
+    /// Name of the configured payload codec (None = raw fp32 path).
+    pub fn codec_name(&self) -> Option<&'static str> {
+        self.codec.as_ref().map(|c| c.lock().unwrap().name())
     }
 
     /// Communication pattern of the configured optimizer (for the cost
@@ -510,6 +573,133 @@ mod tests {
         let stats = t.fault_stats().unwrap();
         assert_eq!(stats.stale_messages, 0, "multi-payload round must not stale");
         assert!(stats.masked_edges > 0, "stragglers should mask exchanges");
+    }
+
+    #[test]
+    fn fp32_codec_is_bitwise_identical_to_no_codec() {
+        let run = |codec: &str| {
+            let mut cfg = small_cfg("dmsgd", 25);
+            cfg.codec = codec.into();
+            Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+        };
+        assert_eq!(run(""), run("fp32"), "identity codec must not change a single bit");
+    }
+
+    #[test]
+    fn lossy_codecs_train_and_replay_identically() {
+        for codec in ["fp16", "int8,ef=true,seed=5", "topk,k=0.25"] {
+            let run = || {
+                let mut cfg = small_cfg("decentlam", 40);
+                cfg.lr = 0.02;
+                cfg.codec = codec.into();
+                Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "{codec}: rerun must be byte-identical");
+            assert!(a.iter().all(|l| l.is_finite()), "{codec} diverged");
+            let first = a[..5].iter().sum::<f64>() / 5.0;
+            let last = a[a.len() - 5..].iter().sum::<f64>() / 5.0;
+            assert!(last < first, "{codec}: loss did not descend ({first} -> {last})");
+        }
+    }
+
+    #[test]
+    fn codec_threaded_and_serial_runs_agree() {
+        let mk = |threads: usize| {
+            let mut cfg = small_cfg("dmsgd", 10);
+            cfg.threads = threads;
+            cfg.codec = "int8,seed=3".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            t.run().losses
+        };
+        let seq = mk(1);
+        let par = mk(0);
+        assert_eq!(seq, par, "codec must keep parallel == serial bitwise");
+    }
+
+    #[test]
+    fn codec_composes_with_faults_and_stales_encoded_payloads() {
+        // Straggle + int8: the stale cache holds the codec's wire view,
+        // and the run stays deterministic and finite.
+        let run = || {
+            let mut cfg = small_cfg("decentlam", 30);
+            cfg.lr = 0.02;
+            cfg.codec = "int8,ef=true,seed=4".into();
+            cfg.faults = "straggle=0.3,seed=6".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let losses = t.run().losses;
+            let stats = *t.fault_stats().unwrap();
+            (losses, stats)
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(sa.stale_messages > 0, "straggle=0.3 never went stale");
+    }
+
+    #[test]
+    fn multi_payload_optimizer_gets_per_slot_codec_residuals() {
+        // da-dmsgd runs two compressed exchanges per round (momentum
+        // then parameters); the per-slot EF residuals keep them apart
+        // and the run must stay finite + deterministic.
+        let run = || {
+            let mut cfg = small_cfg("da-dmsgd", 25);
+            cfg.lr = 0.02;
+            cfg.codec = "int8,ef=true,seed=2".into();
+            Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn payload_bytes_reflects_codec() {
+        let d_of = |t: &Trainer| t.workload.dim;
+        let mk = |codec: &str| {
+            let mut cfg = small_cfg("decentlam", 1);
+            cfg.codec = codec.into();
+            Trainer::new(cfg, mlp_workload(4)).unwrap()
+        };
+        let raw = mk("");
+        let d = d_of(&raw);
+        assert_eq!(raw.payload_bytes().neighbor, 4.0 * d as f64);
+        assert_eq!(raw.codec_name(), None);
+        let int8 = mk("int8");
+        assert_eq!(int8.payload_bytes().neighbor, d as f64 + 4.0);
+        assert_eq!(int8.payload_bytes().allreduce, 4.0 * d as f64);
+        assert_eq!(int8.codec_name(), Some("int8"));
+        let ratio = raw.payload_bytes().neighbor / int8.payload_bytes().neighbor;
+        assert!(ratio >= 3.9, "int8 byte cut {ratio} < 3.9x at d={d}");
+    }
+
+    #[test]
+    fn allreduce_optimizer_ignores_codec_honestly() {
+        // pmsgd never touches the gossip wire; a codec spec must not
+        // attach state that would report a compression that never
+        // happens — mirrors the fault-engine rule.
+        let mut cfg = small_cfg("pmsgd", 5);
+        cfg.codec = "int8".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let d = t.workload.dim;
+        assert_eq!(t.codec_name(), None);
+        assert_eq!(t.payload_bytes().neighbor, 4.0 * d as f64);
+        let r = t.run();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        // Still validated: a malformed spec fails even for pmsgd.
+        let mut bad = small_cfg("pmsgd", 5);
+        bad.codec = "int8,k=0.5".into();
+        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+    }
+
+    #[test]
+    fn bad_codec_spec_rejected_at_construction() {
+        let mut cfg = small_cfg("dsgd", 5);
+        cfg.codec = "zfp".into();
+        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::comm::{CommCost, CommStats, LinkSpec};
+use crate::comm::{CommCost, CommStats, LinkSpec, PayloadBytes};
 use crate::optim::CommPattern;
 use crate::topology::{Kind, Topology};
 use crate::util::table::{sig, Table};
@@ -59,7 +59,7 @@ pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
     let kind = Kind::parse(&opts.topology)?;
     let topo = Topology::at_step(kind, opts.nodes, 1, 0);
     let stats = CommStats::of_topology(&topo);
-    let bytes = opts.params * 4.0; // fp32 payload per exchange
+    let bytes = PayloadBytes::uniform(opts.params * 4.0); // fp32 payload per exchange
     let mut rows = Vec::new();
     for &bw in &opts.bandwidths_gbps {
         let link = LinkSpec { bandwidth_gbps: bw, latency_us: 25.0 };

@@ -1,0 +1,342 @@
+//! Compression sweep: loss vs wire bytes across payload codecs (the
+//! codec layer's headline figure; no paper analog — this extends §7
+//! toward the wire-volume regimes of "From promise to practice",
+//! PAPERS.md).
+//!
+//! For each (n, optimizer, codec) cell, train on a ring in the
+//! heterogeneous regime and report the final eval loss of the average
+//! model next to the *exact* per-iteration wire bytes the codec ships
+//! ([`wire_bytes_per_iter`] at encoded payload widths). The claim under
+//! test: stochastic int8 with error feedback cuts wire volume ~4× at an
+//! eval loss within a few percent of uncompressed, and fp32 (the
+//! identity codec) reproduces the pre-codec engine bit for bit.
+//!
+//! Everything is seeded (data, topology, stochastic rounding), so two
+//! runs of the same opts produce identical tables byte for byte.
+
+use anyhow::Result;
+
+use crate::comm::cost::PayloadBytes;
+use crate::comm::{wire_bytes_per_iter, CommStats};
+use crate::coordinator::Trainer;
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::grad::mlp;
+use crate::util::cli::Args;
+use crate::util::config::{Config, LrSchedule};
+use crate::util::table::{pct, sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Node counts swept (ring topology scales linearly in edges).
+    pub nodes_list: Vec<usize>,
+    pub steps: usize,
+    pub topology: String,
+    /// Optimizers compared per codec.
+    pub methods: Vec<String>,
+    /// Codec specs swept across columns (`comm::codec` CLI forms).
+    pub codecs: Vec<String>,
+    pub total_batch: usize,
+    pub arch: String,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes_list: vec![16, 64],
+            steps: 160,
+            topology: "ring".into(),
+            methods: vec!["dmsgd".into(), "decentlam".into()],
+            codecs: vec!["fp32".into(), "fp16".into(), "int8".into(), "topk,k=0.05".into()],
+            total_batch: 1024,
+            arch: "mlp-xs".into(),
+            seed: 11,
+        }
+    }
+}
+
+impl Opts {
+    /// Shared CLI flags for the `fig-compression` subcommand and
+    /// `examples/compression_sweep.rs`.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(n) = args.get("nodes") {
+            self.nodes_list = vec![n.parse().map_err(|e| anyhow::anyhow!("--nodes: {e}"))?];
+        }
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        if let Some(t) = args.get("topology") {
+            self.topology = t.into();
+        }
+        if let Some(c) = args.get("codec") {
+            self.codecs = vec![c.into()];
+        }
+        Ok(())
+    }
+}
+
+/// One trained cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub nodes: usize,
+    pub method: String,
+    pub codec: String,
+    /// Bytes of one encoded gossip payload.
+    pub payload_bytes: f64,
+    /// Total wire bytes per iteration at the realized edge count.
+    pub wire_per_iter: f64,
+    /// Wire-byte cut relative to the raw fp32 payload (≥ 1).
+    pub ratio_vs_fp32: f64,
+    /// Eval loss of the network-average model.
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    pub consensus: f64,
+}
+
+fn cell_data(opts: &Opts, n: usize) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes: n,
+        samples_per_node: 128,
+        eval_samples: 512,
+        dirichlet_alpha: 0.3,
+        seed: opts.seed,
+        ..Default::default()
+    })
+}
+
+fn cell_config(opts: &Opts, n: usize, method: &str, codec: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = method.into();
+    cfg.nodes = n;
+    cfg.steps = opts.steps;
+    cfg.topology = opts.topology.clone();
+    cfg.total_batch = opts.total_batch;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.05;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.seed = opts.seed;
+    cfg.codec = codec.into();
+    cfg
+}
+
+/// Train one cell and report it. `data` is cloned per cell so every
+/// codec sees the exact same shards.
+fn cell(
+    opts: &Opts,
+    data: &ClassificationData,
+    n: usize,
+    method: &str,
+    codec: &str,
+) -> Result<Row> {
+    let cfg = cell_config(opts, n, method, codec);
+    let wl = mlp::workload(
+        mlp::MlpArch::family(&opts.arch)?,
+        data.clone(),
+        cfg.micro_batch,
+        opts.seed,
+    );
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    let xbar = t.average_model();
+    let eval_loss = t.workload.eval.loss(&xbar).unwrap_or(f64::NAN);
+    let stats = CommStats::of_engine(&t.comm);
+    let payload = t.payload_bytes();
+    let pattern = t.comm_pattern();
+    let wire = wire_bytes_per_iter(pattern, &stats, payload);
+    let wire_fp32 = wire_bytes_per_iter(pattern, &stats, PayloadBytes::fp32(t.workload.dim));
+    Ok(Row {
+        nodes: n,
+        method: method.into(),
+        codec: codec.into(),
+        payload_bytes: payload.neighbor,
+        wire_per_iter: wire,
+        ratio_vs_fp32: wire_fp32 / wire,
+        eval_loss,
+        accuracy: report.final_accuracy,
+        consensus: report.final_consensus,
+    })
+}
+
+pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
+    let mut rows = Vec::new();
+    for &n in &opts.nodes_list {
+        let data = cell_data(opts, n);
+        for method in &opts.methods {
+            for codec in &opts.codecs {
+                rows.push(cell(opts, &data, n, method, codec)?);
+            }
+        }
+    }
+    let mut table = Table::new(
+        &format!(
+            "compression sweep — {} n={:?}, {} steps, codecs {:?} (seed {})",
+            opts.topology, opts.nodes_list, opts.steps, opts.codecs, opts.seed
+        ),
+        &["n", "method", "codec", "payload B", "wire B/iter", "cut", "eval loss", "acc"],
+    );
+    for row in &rows {
+        table.row(vec![
+            row.nodes.to_string(),
+            row.method.clone(),
+            row.codec.clone(),
+            format!("{:.0}", row.payload_bytes),
+            format!("{:.0}", row.wire_per_iter),
+            format!("{:.2}x", row.ratio_vs_fp32),
+            sig(row.eval_loss, 4),
+            pct(row.accuracy),
+        ]);
+    }
+    Ok((rows, table))
+}
+
+/// CI smoke: the acceptance gate of the codec layer, on a ring at
+/// n=64 with DecentLaM. Asserts (1) the fp32 codec is bitwise
+/// identical to the pre-codec engine, (2) int8 reruns are
+/// byte-identical and parallel == serial, (3) int8 cuts wire bytes
+/// ≥ 3.9× vs fp32, (4) the int8 eval loss lands within 5% of
+/// uncompressed. Exits nonzero on any violation.
+pub fn smoke(args: &Args) -> Result<()> {
+    let nodes = args.get_usize("nodes", 64)?;
+    let steps = args.get_usize("steps", 80)?;
+    let opts = Opts { nodes_list: vec![nodes], steps, ..Default::default() };
+    let data = cell_data(&opts, nodes);
+
+    let run = |codec: &str, threads: usize| -> Result<(Vec<f64>, f64, f64)> {
+        let mut cfg = cell_config(&opts, nodes, "decentlam", codec);
+        cfg.threads = threads;
+        let wl = mlp::workload(
+            mlp::MlpArch::family(&opts.arch)?,
+            data.clone(),
+            cfg.micro_batch,
+            opts.seed,
+        );
+        let mut t = Trainer::new(cfg, wl)?;
+        let report = t.run();
+        let xbar = t.average_model();
+        let eval_loss = t.workload.eval.loss(&xbar).unwrap_or(f64::NAN);
+        let wire = wire_bytes_per_iter(
+            t.comm_pattern(),
+            &CommStats::of_engine(&t.comm),
+            t.payload_bytes(),
+        );
+        Ok((report.losses, eval_loss, wire))
+    };
+
+    let (base, base_loss, wire_fp32) = run("", 0)?;
+    let (fp32, fp32_loss, wire_fp32_codec) = run("fp32", 0)?;
+    anyhow::ensure!(
+        base == fp32 && base_loss == fp32_loss,
+        "fp32 codec diverged from the pre-codec engine"
+    );
+    anyhow::ensure!(wire_fp32 == wire_fp32_codec, "fp32 codec changed byte accounting");
+
+    let (int8_a, int8_loss, wire_int8) = run("int8", 0)?;
+    let (int8_b, _, _) = run("int8", 0)?;
+    anyhow::ensure!(int8_a == int8_b, "int8 rerun was not byte-identical");
+    let (int8_serial, _, _) = run("int8", 1)?;
+    anyhow::ensure!(int8_a == int8_serial, "int8 parallel != serial");
+
+    let ratio = wire_fp32 / wire_int8;
+    anyhow::ensure!(ratio >= 3.9, "int8 wire cut {ratio:.3}x < 3.9x");
+    let rel = (int8_loss - base_loss).abs() / base_loss.abs().max(1e-12);
+    anyhow::ensure!(
+        rel <= 0.05,
+        "int8 eval loss {int8_loss:.4} vs fp32 {base_loss:.4}: {:.1}% > 5%",
+        100.0 * rel
+    );
+
+    let mut table = Table::new(
+        &format!("compression smoke — ring n={nodes}, {steps} steps, decentlam"),
+        &["codec", "wire B/iter", "cut", "final eval loss"],
+    );
+    table.row(vec!["fp32".into(), format!("{wire_fp32:.0}"), "1.00x".into(), sig(base_loss, 4)]);
+    table.row(vec![
+        "int8".into(),
+        format!("{wire_int8:.0}"),
+        format!("{ratio:.2}x"),
+        sig(int8_loss, 4),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "compression smoke OK: int8 cuts {ratio:.2}x, eval loss within {:.2}% of fp32",
+        100.0 * rel
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shrunk() -> Opts {
+        Opts {
+            nodes_list: vec![8],
+            steps: 40,
+            methods: vec!["decentlam".into()],
+            total_batch: 256,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shrunk_sweep_cuts_bytes_and_keeps_loss_close() {
+        let (rows, table) = run(&shrunk()).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.eval_loss.is_finite() && r.consensus.is_finite()));
+        let get = |codec: &str| rows.iter().find(|r| r.codec.starts_with(codec)).unwrap();
+        let (fp32, fp16, int8, topk) = (get("fp32"), get("fp16"), get("int8"), get("topk"));
+        assert!((fp32.ratio_vs_fp32 - 1.0).abs() < 1e-12);
+        assert!((fp16.ratio_vs_fp32 - 2.0).abs() < 1e-12, "fp16 halves the payload");
+        assert!(int8.ratio_vs_fp32 >= 3.9, "int8 cut {} < 3.9x", int8.ratio_vs_fp32);
+        assert!(topk.ratio_vs_fp32 > 5.0, "topk k=0.05 cut {}", topk.ratio_vs_fp32);
+        // Lossy codecs stay in the same loss ballpark as raw fp32
+        // (the tight 5% gate lives in the smoke run at n=64).
+        for r in [fp16, int8] {
+            let rel = (r.eval_loss - fp32.eval_loss).abs() / fp32.eval_loss.abs();
+            assert!(
+                rel < 0.25,
+                "{}: eval loss {} vs fp32 {}",
+                r.codec,
+                r.eval_loss,
+                fp32.eval_loss
+            );
+        }
+        let rendered = table.render();
+        assert!(rendered.contains("int8") && rendered.contains("topk"));
+    }
+
+    #[test]
+    fn fp32_cell_bitwise_matches_no_codec_cell() {
+        let opts = shrunk();
+        let data = cell_data(&opts, 8);
+        let a = cell(&opts, &data, 8, "decentlam", "fp32").unwrap();
+        let b = cell(&opts, &data, 8, "decentlam", "").unwrap();
+        assert_eq!(a.eval_loss, b.eval_loss, "identity codec changed training");
+        assert_eq!(a.wire_per_iter, b.wire_per_iter);
+    }
+
+    #[test]
+    fn sweep_output_is_deterministic() {
+        let mut opts = shrunk();
+        opts.steps = 15;
+        opts.codecs = vec!["int8".into(), "topk,k=0.1".into()];
+        let (_, a) = run(&opts).unwrap();
+        let (_, b) = run(&opts).unwrap();
+        assert_eq!(a.render(), b.render(), "same opts must render byte-identically");
+    }
+
+    #[test]
+    fn wire_bytes_scale_linearly_in_ring_size() {
+        // Ring: 2n payloads per exchange — the codec cut is independent
+        // of n, the totals linear in it.
+        let mut opts = shrunk();
+        opts.steps = 5;
+        opts.nodes_list = vec![8, 16];
+        opts.codecs = vec!["int8".into()];
+        let (rows, _) = run(&opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[1].wire_per_iter / rows[0].wire_per_iter - 2.0).abs() < 1e-9);
+        assert!((rows[1].ratio_vs_fp32 - rows[0].ratio_vs_fp32).abs() < 1e-9);
+    }
+}

@@ -17,11 +17,14 @@
 //! | Table 6 (detection analog)              | [`table6`] |
 //!
 //! Beyond the paper: [`fig_faults`] sweeps the DecentLaM-vs-DmSGD bias
-//! gap under fault injection (sim layer, DESIGN.md §6).
+//! gap under fault injection (sim layer, DESIGN.md §6), and
+//! [`fig_compression`] sweeps loss vs wire bytes across the gossip
+//! payload codecs (codec layer, DESIGN.md §7).
 
 pub mod fig2_3;
 pub mod fig5;
 pub mod fig6;
+pub mod fig_compression;
 pub mod fig_faults;
 pub mod table1;
 pub mod table2;

@@ -7,6 +7,7 @@
 //! decentlam table1|table2|table3|table4|table5|table6   # paper tables
 //! decentlam fig2|fig3|fig5|fig6                         # paper figures
 //! decentlam fig-faults [--nodes N --straggle R ...]     # fault sweep
+//! decentlam fig-compression [--smoke]                   # codec sweep
 //! decentlam train [--optimizer X --batch B ...]         # one run
 //! decentlam ablate-pd | ablate-atc | ablate-rho         # design ablations
 //! decentlam topo [--nodes N]                            # topology report
@@ -149,6 +150,26 @@ fn dispatch(args: &Args) -> Result<()> {
             let (_, table) = exp::fig6::run(&opts)?;
             println!("{}", table.render());
         }
+        "fig-compression" => {
+            if args.get_bool("smoke") {
+                exp::fig_compression::smoke(args)?;
+                return Ok(());
+            }
+            let mut opts = exp::fig_compression::Opts::default();
+            if quick {
+                opts.nodes_list = vec![16];
+                opts.steps = 60;
+            }
+            opts.apply_args(args)?;
+            let (rows, table) = exp::fig_compression::run(&opts)?;
+            println!("{}", table.render());
+            for row in rows.iter().filter(|r| r.codec.starts_with("int8")) {
+                println!(
+                    "n={} {}: int8 ships {:.0} B/iter ({:.2}x cut) at eval loss {:.4}",
+                    row.nodes, row.method, row.wire_per_iter, row.ratio_vs_fp32, row.eval_loss
+                );
+            }
+        }
         "fig-faults" => {
             let mut opts = exp::fig_faults::Opts::default();
             if quick {
@@ -178,6 +199,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  subcommands:\n  \
                  table1..table6, fig2, fig3, fig5, fig6   regenerate paper results\n  \
                  fig-faults   DecentLaM vs DmSGD under fault injection\n  \
+                 fig-compression   loss vs wire bytes per payload codec (--smoke = CI gate)\n  \
                  train        one training run (all Config flags apply)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
@@ -185,7 +207,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  ablate-rho   limiting bias vs topology rho\n\n\
                  common flags: --quick, --steps N, --csv FILE, --nodes N,\n  \
                  --optimizer X, --batch B, --beta B, --lr G, --topology T,\n  \
-                 --faults drop=0.1,straggle=0.05,seed=7"
+                 --faults drop=0.1,straggle=0.05,seed=7,\n  \
+                 --codec int8,ef=true,seed=7 (fp32|fp16|int8|topk,k=0.05)"
             );
         }
     }
@@ -203,7 +226,7 @@ fn train(args: &Args) -> Result<()> {
         cfg.seed,
     )?;
     println!(
-        "train: optimizer={} topology={} nodes={} total_batch={} steps={}{}",
+        "train: optimizer={} topology={} nodes={} total_batch={} steps={}{}{}",
         cfg.optimizer,
         cfg.topology,
         cfg.nodes,
@@ -213,6 +236,11 @@ fn train(args: &Args) -> Result<()> {
             String::new()
         } else {
             format!(" faults=[{}]", cfg.faults)
+        },
+        if cfg.codec.is_empty() {
+            String::new()
+        } else {
+            format!(" codec=[{}]", cfg.codec)
         }
     );
     let eval_every = if cfg.eval_every == 0 { cfg.steps / 10 } else { cfg.eval_every };
@@ -243,6 +271,22 @@ fn train(args: &Args) -> Result<()> {
         ),
         None if !t.cfg.faults.is_empty() => println!(
             "faults: n/a — {}'s all-reduce traffic bypasses the decentralized fault model",
+            t.cfg.optimizer
+        ),
+        None => {}
+    }
+    match t.codec_name() {
+        Some(name) => {
+            let payload = t.payload_bytes();
+            println!(
+                "codec: {name} — gossip payload {:.0} B ({:.2}x cut vs raw fp32 {:.0} B)",
+                payload.neighbor,
+                payload.allreduce / payload.neighbor,
+                payload.allreduce
+            );
+        }
+        None if !t.cfg.codec.is_empty() => println!(
+            "codec: n/a — {}'s all-reduce traffic bypasses the gossip codec path",
             t.cfg.optimizer
         ),
         None => {}

@@ -11,7 +11,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct AwcDmsgd;
 
@@ -36,7 +36,7 @@ impl Optimizer for AwcDmsgd {
         ctx.exec.for_each_mut(&mut scratch.publish, |i, p| {
             p.copy_from_slice(&states_ro[i].x);
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         let mixed = &scratch.mixed;
         ctx.exec.for_each_mut(states, |i, st| {
             math::axpby(&mut st.m, 1.0, &grads[i], ctx.beta);

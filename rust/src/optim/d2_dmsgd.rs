@@ -15,7 +15,7 @@
 //!
 //! Aux buffers: [0] x^{k−1}, [1] the previous update vector γ^{k−1}·m^{k−1}.
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct D2Dmsgd;
 
@@ -62,7 +62,7 @@ impl Optimizer for D2Dmsgd {
                 st.aux[1][k] = ctx.lr * st.m[k];
             }
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         let mixed = &scratch.mixed;
         ctx.exec.for_each_mut(states, |i, st| {
             st.x.copy_from_slice(&mixed[i]);

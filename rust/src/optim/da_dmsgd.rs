@@ -9,7 +9,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct DaDmsgd;
 
@@ -36,7 +36,7 @@ impl Optimizer for DaDmsgd {
                 *pi = ctx.beta * mi + gi;
             }
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         // Install the averaged momentum, publish the half-step with it.
         let mixed_ro: &[Vec<f32>] = &scratch.mixed;
         ctx.exec.for_each_pair_mut(states, &mut scratch.publish, |i, st, z| {
@@ -44,7 +44,7 @@ impl Optimizer for DaDmsgd {
             z.copy_from_slice(&st.x);
             math::axpy(z, -ctx.lr, &st.m);
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         let mixed = &scratch.mixed;
         ctx.exec.for_each_mut(states, |i, st| {
             st.x.copy_from_slice(&mixed[i]);

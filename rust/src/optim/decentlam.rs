@@ -17,7 +17,31 @@
 //! the native mirror, verified against the kernel's golden vectors in
 //! `rust/tests/golden.rs`.
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+
+/// Full-model gradient norms at or below this are treated as vanishing
+/// and skip the disagreement clip. The clip bounds the
+/// correction/gradient loop gain, which is meaningless as ‖g‖ → 0: the
+/// limit would collapse to ~0, rescale `mix` back onto `x`, and freeze
+/// consensus mixing entirely — while the vanishing-gradient dynamics
+/// (pure heavy-ball consensus, x^{k+1} = W x^k + β(x^k − x^{k−1})) are
+/// contractive on their own and need no guard: the echo instability
+/// the clip exists for is *gradient feedback* at disagreeing iterates,
+/// which is numerically absent below this scale. 1e-6 is far below any
+/// training-regime full-model gradient norm (so gradient-driven runs
+/// are untouched) yet wide enough that the near-converged tail doesn't
+/// fall back into the frozen-mixing regime.
+///
+/// The threshold is deliberately ABSOLUTE, not relative to the
+/// disagreement: a relative guard ("skip when corr ≫ clip·‖g‖") would
+/// disarm the clip precisely in the echo-divergence regime it exists
+/// for — the blow-up inflates corr relative to ‖g‖, and stability
+/// rests on the correction staying bounded by clip·‖g‖ there. The
+/// price is that a genuinely small-but-nonzero gradient with large
+/// disagreement mixes slowly (at ~clip·‖g‖·γ per step) until the
+/// disagreement drains; a per-node rule cannot distinguish that benign
+/// case from the echo without global information.
+const CLIP_GRAD_EPS: f32 = 1e-6;
 
 pub struct DecentLam {
     /// Cap on ‖g̃‖ as a multiple of ‖g_raw‖. The corrected gradient
@@ -78,15 +102,17 @@ impl Optimizer for DecentLam {
                 *zi = xi - ctx.lr * gi;
             }
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         // Fused corrected-momentum apply (eq. 17), with the correction
         // clipped at `clip`×‖g‖ (see field docs — time-varying graphs).
+        // Vanishing gradients skip the clip: the limit would otherwise
+        // collapse toward 0 and rewrite mix ≈ x, freezing consensus.
         let clip = self.clip;
         ctx.exec.for_each_pair_mut(states, &mut scratch.mixed, |i, st, mix| {
             let g_norm = crate::util::math::norm2(&grads[i]) as f32;
             let corr_norm = (crate::util::math::dist2(&st.x, mix).sqrt() / ctx.lr as f64) as f32;
-            let limit = clip * g_norm + 1e-12;
-            if ctx.time_varying && corr_norm > limit {
+            let limit = clip * g_norm;
+            if ctx.time_varying && g_norm > CLIP_GRAD_EPS && corr_norm > limit {
                 // mix_eff = x + (mix − x)·s keeps the update direction,
                 // bounds ‖g̃‖ = ‖x − mix_eff‖/γ at the limit.
                 let s = limit / corr_norm;
@@ -129,6 +155,59 @@ mod tests {
         for i in 0..d {
             assert!((x[i] - xe[i]).abs() < 1e-4, "x[{i}]");
             assert!((m[i] - me[i]).abs() < 1e-4, "m[{i}]");
+        }
+    }
+
+    #[test]
+    fn zero_grad_time_varying_consensus_still_contracts() {
+        // Regression: the clip limit used to be `clip*‖g‖ + 1e-12`, so
+        // vanishing gradients on a time-varying topology collapsed the
+        // limit to 1e-12 and the rescale s = limit/corr ≈ 0 rewrote
+        // mix ≈ x — consensus mixing froze completely. With the
+        // vanishing-gradient guard, pure heavy-ball consensus over the
+        // changing matchings must keep contracting.
+        let n = 4;
+        let d = 3;
+        let mut rng = crate::util::rng::Pcg64::seeded(17);
+        let states: Vec<NodeState> = (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f32; d];
+                rng.normal_fill(&mut x, 1.0);
+                NodeState::new(x, 0)
+            })
+            .collect();
+        let consensus = |sts: &[NodeState]| -> f64 {
+            let xbar: Vec<f32> = (0..d)
+                .map(|k| sts.iter().map(|s| s.x[k]).sum::<f32>() / n as f32)
+                .collect();
+            sts.iter()
+                .map(|s| crate::util::math::dist2(&s.x, &xbar))
+                .sum::<f64>()
+                / n as f64
+        };
+        let initial = consensus(&states);
+        assert!(initial > 1e-3, "nodes must start spread out");
+        // Exactly-zero AND tiny-but-nonzero gradients (below the
+        // vanishing threshold) must both leave mixing unfrozen.
+        for tiny in [0.0f32, 1e-9] {
+            let mut states = states.clone();
+            let grads = vec![vec![tiny; d]; n];
+            let mut scratch = Scratch::new(n, d);
+            let mut o = DecentLam::default();
+            let mut sw = crate::topology::SparseWeights::default();
+            for step in 0..120 {
+                let topo =
+                    Topology::at_step(crate::topology::Kind::BipartiteRandomMatch, n, 7, step);
+                sw.rebuild_metropolis(&topo);
+                let ctx = RoundCtx::new(&sw, 0.05, 0.6, step, true);
+                o.round(&mut states, &grads, &ctx, &mut scratch);
+            }
+            let final_c = consensus(&states);
+            assert!(
+                final_c < 0.5 * initial,
+                "g={tiny}: consensus froze on time-varying graph: {initial} -> {final_c}"
+            );
+            assert!(states.iter().all(|s| s.x.iter().all(|v| v.is_finite())));
         }
     }
 

@@ -6,7 +6,7 @@
 
 use crate::util::math;
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct Dmsgd;
 
@@ -34,7 +34,7 @@ impl Optimizer for Dmsgd {
             math::axpy(z, -ctx.lr, &st.m);
         });
         // x = sum_j w_ij z_j  (partial average)
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         let mixed = &scratch.mixed;
         ctx.exec.for_each_mut(states, |i, st| {
             st.x.copy_from_slice(&mixed[i]);

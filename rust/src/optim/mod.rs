@@ -4,12 +4,15 @@
 //! parameter vectors. A round receives this step's per-node gradients
 //! (already averaged over the node's accumulated micro-batches by the
 //! coordinator) and performs its communication + update. Communication
-//! is expressed exclusively through [`partial_average_all`] /
+//! is expressed exclusively through [`gossip_exchange`] (the
+//! codec-aware wire primitive over [`partial_average_all`]) and
 //! [`global_average`] over an abstract [`CommEngine`] (sparse neighbor
 //! lists in production — see `topology::sparse`) so that (a) the
 //! decentralized methods only ever read *neighbor* rows of `W`, never a
-//! dense matrix, and (b) the cost model can charge exactly the payloads
-//! declared by [`Optimizer::comm_pattern`] from realized edge counts.
+//! dense matrix, (b) a configured payload codec compresses every gossip
+//! payload in one place, and (c) the cost model can charge exactly the
+//! payloads declared by [`Optimizer::comm_pattern`] from realized edge
+//! counts at their encoded widths.
 //! Per-node work inside a round fans out through the
 //! [`RoundCtx::exec`] node executor; every loop body is independent
 //! per node, so parallel and serial execution are bitwise identical.
@@ -40,8 +43,11 @@ pub mod qg_dmsgd;
 pub mod schedule;
 pub mod slowmo;
 
+use std::sync::Mutex;
+
 use anyhow::bail;
 
+use crate::comm::codec::CodecState;
 use crate::comm::engine::CommEngine;
 use crate::coordinator::executor::NodeExecutor;
 use crate::util::math;
@@ -84,6 +90,12 @@ pub struct RoundCtx<'a> {
     pub time_varying: bool,
     /// Flat-vector layer boundaries (for LARS); empty = single group.
     pub layer_ranges: &'a [(usize, usize)],
+    /// Payload codec for the gossip wire path (None = raw fp32). Behind
+    /// a mutex because encoding mutates cross-round state (EF
+    /// residuals, wire buffers) while `RoundCtx` is shared immutably
+    /// across the executor's threads; [`gossip_exchange`] locks it once
+    /// per exchange.
+    pub codec: Option<&'a Mutex<CodecState>>,
 }
 
 impl<'a> RoundCtx<'a> {
@@ -104,6 +116,7 @@ impl<'a> RoundCtx<'a> {
             step,
             time_varying,
             layer_ranges: &[],
+            codec: None,
         }
     }
 }
@@ -177,6 +190,32 @@ pub fn partial_average_all_par(
     exec: NodeExecutor,
 ) {
     exec.for_each_mut(dst, |i, row| comm.mix_node(i, src, row));
+}
+
+/// THE gossip wire primitive: one neighbor exchange of `src` under the
+/// round's comm engine, through the configured payload codec when one
+/// is set. Each node's publish buffer is encoded exactly once (its
+/// error-feedback residual updated in the same pass) and the mix reads
+/// the shared decoded wire view — value-identical to decoding per edge,
+/// since decode is deterministic and a sender broadcasts one payload to
+/// all its neighbors. Identity codecs (fp32) skip the wire copy
+/// entirely, so they are bitwise identical to the pre-codec path, and
+/// the mix fan-out stays per-row independent: parallel == serial holds
+/// for every codec.
+pub fn gossip_exchange(ctx: &RoundCtx, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    match ctx.codec {
+        Some(codec) => {
+            let mut state = codec.lock().unwrap();
+            if state.is_identity() {
+                drop(state);
+                partial_average_all_par(ctx.comm, src, dst, ctx.exec);
+            } else {
+                let wire = state.encode_round(src, ctx.exec);
+                partial_average_all_par(ctx.comm, wire, dst, ctx.exec);
+            }
+        }
+        None => partial_average_all_par(ctx.comm, src, dst, ctx.exec),
+    }
 }
 
 /// Global average into every destination row (the All-Reduce primitive).

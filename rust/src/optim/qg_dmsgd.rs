@@ -11,7 +11,7 @@
 //! Aux buffer [0] holds m̂ (we keep `NodeState::m` as its storage — no
 //! aux needed).
 
-use super::{partial_average_all_par, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
+use super::{gossip_exchange, CommPattern, NodeState, Optimizer, RoundCtx, Scratch};
 
 pub struct QgDmsgd;
 
@@ -38,7 +38,7 @@ impl Optimizer for QgDmsgd {
                 *zi = xi - ctx.lr * (gi + ctx.beta * mi);
             }
         });
-        partial_average_all_par(ctx.comm, &scratch.publish, &mut scratch.mixed, ctx.exec);
+        gossip_exchange(ctx, &scratch.publish, &mut scratch.mixed);
         let inv_gamma = 1.0 / ctx.lr.max(1e-12);
         let mixed = &scratch.mixed;
         ctx.exec.for_each_mut(states, |i, st| {

@@ -25,6 +25,16 @@ impl GradAccumulator {
     }
 
     pub fn add(&mut self, grad: &[f32]) {
+        // A mis-sized gradient must fail loudly: axpy's zip (and the
+        // copy loop in mean_into) would silently truncate to the
+        // shorter length and corrupt the mean in release builds.
+        assert_eq!(
+            grad.len(),
+            self.sum.len(),
+            "gradient dim {} != accumulator dim {}",
+            grad.len(),
+            self.sum.len()
+        );
         math::axpy(&mut self.sum, 1.0, grad);
         self.count += 1;
     }
@@ -32,6 +42,13 @@ impl GradAccumulator {
     /// Mean gradient over the accumulated micro-batches, written into `out`.
     pub fn mean_into(&self, out: &mut [f32]) {
         assert!(self.count > 0, "no micro-batches accumulated");
+        assert_eq!(
+            out.len(),
+            self.sum.len(),
+            "output dim {} != accumulator dim {}",
+            out.len(),
+            self.sum.len()
+        );
         let inv = 1.0 / self.count as f32;
         for (o, &s) in out.iter_mut().zip(&self.sum) {
             *o = s * inv;
@@ -65,6 +82,29 @@ mod tests {
     fn empty_mean_panics() {
         let acc = GradAccumulator::new(1);
         let mut out = vec![0.0];
+        acc.mean_into(&mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient dim")]
+    fn short_gradient_panics_instead_of_truncating() {
+        let mut acc = GradAccumulator::new(3);
+        acc.add(&[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient dim")]
+    fn long_gradient_panics_instead_of_truncating() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "output dim")]
+    fn mismatched_mean_output_panics() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0, 2.0]);
+        let mut out = vec![0.0; 3];
         acc.mean_into(&mut out);
     }
 }

@@ -107,14 +107,17 @@ impl Bench {
         items: Option<f64>,
         f: &mut dyn FnMut(),
     ) -> &Measurement {
-        // Warmup + calibration.
+        // Warmup + calibration. Divide by the MEASURED elapsed time,
+        // not the warmup target: a slow final iteration overshoots the
+        // target, and target/iters would underestimate per_iter (and
+        // oversize the timed batches).
         let start = Instant::now();
         let mut calib_iters = 0u64;
         while start.elapsed() < self.warmup {
             f();
             calib_iters += 1;
         }
-        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let per_iter = start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
         let batch = ((self.target_time.as_secs_f64() / self.samples as f64) / per_iter)
             .ceil()
             .max(1.0) as u64;

@@ -100,6 +100,10 @@ pub struct Config {
     /// (empty = fault-free; see `sim::FaultSpec::parse`). The fault
     /// seed defaults to `seed` when the spec omits `seed=`.
     pub faults: String,
+    /// Gossip payload codec, e.g. `int8,ef=true,seed=7` or `topk,k=0.05`
+    /// (empty = raw fp32; see `comm::codec::CodecSpec::parse`). The
+    /// codec seed defaults to `seed` when the spec omits `seed=`.
+    pub codec: String,
 }
 
 impl Default for Config {
@@ -127,6 +131,7 @@ impl Default for Config {
             eval_every: 0,
             threads: 0,
             faults: String::new(),
+            codec: String::new(),
         }
     }
 }
@@ -206,6 +211,12 @@ impl Config {
                 // there, where the run seed is known).
                 crate::sim::FaultSpec::parse(v, 0)?;
                 self.faults = v.into();
+            }
+            "codec" => {
+                // Same eager validation as --faults: typos fail at the
+                // CLI; seed resolution happens in Trainer::new.
+                crate::comm::codec::CodecSpec::parse(v, 0)?;
+                self.codec = v.into();
             }
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
@@ -326,6 +337,17 @@ mod tests {
         assert_eq!(c.faults, "drop=0.1,straggle=0.05,seed=7");
         assert!(c.apply_kv("faults", "drop=2.0").is_err());
         assert!(c.apply_kv("faults", "gremlins=0.1").is_err());
+    }
+
+    #[test]
+    fn codec_key_validated_eagerly() {
+        let mut c = Config::default();
+        c.apply_kv("codec", "int8,ef=true,seed=3").unwrap();
+        assert_eq!(c.codec, "int8,ef=true,seed=3");
+        c.apply_kv("codec", "topk,k=0.05").unwrap();
+        assert!(c.apply_kv("codec", "zfp").is_err());
+        assert!(c.apply_kv("codec", "topk,k=2").is_err());
+        assert!(c.apply_kv("codec", "int8,gremlins=1").is_err());
     }
 
     #[test]

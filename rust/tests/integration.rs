@@ -3,7 +3,7 @@
 //! shrunk workloads, and failure-injection around config/workload
 //! mismatches.
 
-use decentlam::comm::{wire_bytes_per_iter, CommStats};
+use decentlam::comm::{wire_bytes_per_iter, CommStats, PayloadBytes};
 use decentlam::coordinator::Trainer;
 use decentlam::data::synth::{ClassificationData, SynthSpec};
 use decentlam::data::LinRegProblem;
@@ -189,7 +189,7 @@ fn wire_bytes_pinned_for_ring_grid_exp() {
     // bytes (2 · edges · payload for one neighbor exchange) at the edge
     // counts these topologies realize. A change to topology
     // construction or the byte accounting must show up here.
-    let payload = 1.0; // bytes; totals below are exact edge-count doubles
+    let payload = PayloadBytes::uniform(1.0); // totals below are exact edge-count doubles
     let expected: [(Kind, usize, f64); 6] = [
         (Kind::Ring, 8, 16.0),    // 8 edges
         (Kind::Ring, 64, 128.0),  // 64 edges

@@ -345,3 +345,131 @@ fn prop_time_varying_topologies_deterministic_across_nodes() {
         },
     );
 }
+
+#[test]
+fn prop_weighted_sum_into_matches_naive_sum_for_0_to_9_terms() {
+    // Pins the pairwise-fused kernel against the naive Σ wᵢ·xᵢ for
+    // every term count 0..=9 — both parities of the chunks_exact(2)
+    // remainder path, including the empty-terms zero fill.
+    check(
+        "weighted_sum_into == naive sum, k in 0..=9",
+        40,
+        |rng| {
+            let d = gens::dim(rng);
+            let k = rng.below(10);
+            let xs: Vec<Vec<f32>> = (0..k).map(|_| gens::normal_vec(rng, d)).collect();
+            let ws: Vec<f32> = (0..k).map(|_| rng.f32() * 2.0 - 0.7).collect();
+            (d, xs, ws)
+        },
+        |(d, xs, ws)| {
+            let terms: Vec<(f32, &[f32])> =
+                ws.iter().cloned().zip(xs.iter().map(|v| v.as_slice())).collect();
+            let mut got = vec![3.25f32; *d]; // junk: must be overwritten
+            math::weighted_sum_into(&mut got, &terms);
+            for j in 0..*d {
+                let naive: f32 = terms.iter().map(|(w, x)| w * x[j]).sum();
+                if (got[j] - naive).abs() > 1e-4 {
+                    return Err(format!(
+                        "k={} dim {j}: fused {} vs naive {naive}",
+                        terms.len(),
+                        got[j]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int8_ef_residual_bounded_over_100_rounds() {
+    // Codec round-trip error bound: with error feedback, the int8
+    // residual reaches a steady state instead of accumulating. Inputs
+    // bounded by M give a per-element steady-state error ≤ ~M/126, so
+    // ‖r‖₂ stays well under √d·M/50 at every one of 100 rounds.
+    use decentlam::comm::codec::{CodecSpec, CodecState};
+
+    check(
+        "int8+EF residual norm bounded over 100 rounds",
+        8,
+        |rng| {
+            let d = 16 + rng.below(64);
+            let scale = 0.5 + rng.f32() * 4.0;
+            let seed = rng.next_u64();
+            (d, scale, seed)
+        },
+        |&(d, scale, seed)| {
+            let spec = CodecSpec::parse("int8,ef=true", seed).unwrap();
+            let mut state = CodecState::new(&spec, 1, d);
+            let mut rng = Pcg64::seeded(seed ^ 0xabcd);
+            let mut src = vec![vec![0.0f32; d]];
+            let bound = (d as f64).sqrt() * scale as f64 / 50.0;
+            for step in 0..100 {
+                for v in src[0].iter_mut() {
+                    *v = (rng.f32() * 2.0 - 1.0) * scale;
+                }
+                state.begin_step(step);
+                state.encode_round(&src, NodeExecutor::serial());
+                let norm = state.residual_norm(0, 0);
+                if norm > bound {
+                    return Err(format!("step {step}: ‖residual‖ = {norm} > {bound}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_gossip_preserves_mean_within_quantization_error() {
+    // Doubly-stochastic gossip preserves the network mean exactly;
+    // through a lossy codec the drift is bounded by the per-element
+    // quantization error, and the fp32 codec drifts not at all.
+    check(
+        "codec gossip mean drift bounded by quantization error",
+        25,
+        |rng| {
+            let kind = random_kind(rng);
+            let n = gens::nodes(rng);
+            let d = gens::dim(rng);
+            let src: Vec<Vec<f32>> = (0..n).map(|_| gens::normal_vec(rng, d)).collect();
+            let seed = rng.next_u64();
+            (kind, n, d, src, seed)
+        },
+        |&(kind, n, d, ref src, seed)| {
+            use decentlam::comm::codec::{CodecSpec, CodecState};
+            let sw = SparseWeights::metropolis_hastings(&Topology::at_step(kind, n, 5, 0));
+            let mut dst = vec![vec![0.0f32; d]; n];
+            for codec in ["fp32", "int8,ef=true"] {
+                let spec = CodecSpec::parse(codec, seed).unwrap();
+                let mut state = CodecState::new(&spec, n, d);
+                state.begin_step(0);
+                let wire: Vec<Vec<f32>> = if state.is_identity() {
+                    src.clone()
+                } else {
+                    state.encode_round(src, NodeExecutor::serial()).to_vec()
+                };
+                partial_average_all(&sw, &wire, &mut dst);
+                let maxabs = src
+                    .iter()
+                    .flat_map(|r| r.iter())
+                    .fold(0.0f32, |m, v| m.max(v.abs()));
+                // Each wire element is within one quantum of its source.
+                let tol = if codec == "fp32" { 1e-5 } else { maxabs as f64 / 127.0 + 1e-5 };
+                for j in 0..d {
+                    let before: f64 =
+                        src.iter().map(|r| r[j] as f64).sum::<f64>() / n as f64;
+                    let after: f64 =
+                        dst.iter().map(|r| r[j] as f64).sum::<f64>() / n as f64;
+                    if (before - after).abs() > tol {
+                        return Err(format!(
+                            "{codec} {kind:?} n={n} dim {j}: mean drift {} > {tol}",
+                            (before - after).abs()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
