@@ -11,6 +11,7 @@ use decentlam::coordinator::Trainer;
 use decentlam::data::synth::{ClassificationData, SynthSpec};
 use decentlam::experiments::mlp_workload_named;
 use decentlam::util::bench::Bench;
+use decentlam::util::cli::Args;
 use decentlam::util::config::{Config, LrSchedule};
 
 fn data(nodes: usize) -> ClassificationData {
@@ -39,6 +40,7 @@ fn cfg_for(optimizer: &str, nodes: usize, total_batch: usize, threads: usize) ->
 }
 
 fn main() {
+    let args = Args::from_env();
     let mut bench = Bench::new();
     let nodes = 8;
 
@@ -64,6 +66,7 @@ fn main() {
     pjrt_benches::run(&mut bench);
     #[cfg(not(feature = "pjrt"))]
     println!("(pjrt feature disabled: native rows only — rebuild with --features pjrt)");
+    bench.write_json_arg(&args).expect("--json write failed");
 }
 
 #[cfg(feature = "pjrt")]

@@ -3,14 +3,17 @@
 //! every algorithm, at the mlp-s size and at a 3.2M-param (lm-base-like)
 //! size. This is the bench behind EXPERIMENTS.md §Perf L3.
 //!
-//! Run: `cargo bench --bench optim_update` (DECENTLAM_BENCH_FAST=1 to shrink).
+//! Run: `cargo bench --bench optim_update` (DECENTLAM_BENCH_FAST=1 to shrink;
+//! `-- --json out.json` dumps the measurements for the CI perf trajectory).
 
 use decentlam::optim::{self, decentlam::fused_apply, NodeState, RoundCtx, Scratch};
 use decentlam::topology::{metropolis_hastings, Kind, Topology};
 use decentlam::util::bench::{opaque, Bench};
+use decentlam::util::cli::Args;
 use decentlam::util::rng::Pcg64;
 
 fn main() {
+    let args = Args::from_env();
     let mut bench = Bench::new();
     let n = 8;
     let wm = metropolis_hastings(&Topology::build(Kind::SymExp, n));
@@ -53,4 +56,5 @@ fn main() {
         "\nnote: `ns/item` is ns per (node x parameter); the exchange+update \
          phase should stay an order of magnitude below gradient compute."
     );
+    bench.write_json_arg(&args).expect("--json write failed");
 }

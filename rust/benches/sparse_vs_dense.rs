@@ -23,6 +23,7 @@ use decentlam::coordinator::NodeExecutor;
 use decentlam::optim::{partial_average_all, partial_average_all_par};
 use decentlam::topology::{metropolis_hastings, Kind, SparseWeights, Topology};
 use decentlam::util::bench::{opaque, Bench};
+use decentlam::util::cli::Args;
 
 /// The dense path: mixed[i] = Σ_j W[i][j] · src[j] walking every column
 /// of the dense matrix — what an engine without neighbor lists must do.
@@ -43,6 +44,7 @@ fn dense_mix_all(dense: &decentlam::util::math::SymMatrix, src: &[Vec<f32>], dst
 }
 
 fn main() {
+    let args = Args::from_env();
     let mut bench = Bench::new();
     let d = 1024; // parameter dimension per node
     let fast = std::env::var("DECENTLAM_BENCH_FAST").is_ok();
@@ -129,4 +131,5 @@ fn main() {
         }
     }
     println!("sparse/dense agreement verified at n={n}");
+    bench.write_json_arg(&args).expect("--json write failed");
 }

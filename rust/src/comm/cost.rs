@@ -122,6 +122,17 @@ impl PayloadBytes {
     }
 }
 
+/// Seconds for one neighbor exchange of `bytes` payload by a node of
+/// the given degree — the per-node form of the α–β neighbor-exchange
+/// model ([`CommCost::neighbor_exchange_s`] applies it at the
+/// bottleneck degree; the discrete-event clock sim in `sim::clock`
+/// charges each node its own degree). Single source of truth for the
+/// formula.
+pub fn neighbor_exchange_deg_s(link: &LinkSpec, degree: usize, bytes: f64) -> f64 {
+    let deg = degree.max(1) as f64;
+    link.latency_s() + (1.0 + NEIGHBOR_SERIAL * (deg - 1.0)) * link.transfer_s(bytes)
+}
+
 /// Total bytes put on the wire in one iteration of `pattern` at the
 /// given per-payload widths — exact in the edge count (each undirected
 /// edge carries the encoded payload once per direction).
@@ -165,8 +176,7 @@ impl CommCost {
     /// with the given stats (single stage; concurrent full-duplex
     /// streams to the neighbors, bottlenecked by the max-degree node).
     pub fn neighbor_exchange_s(&self, stats: &CommStats, bytes: f64) -> f64 {
-        let deg = stats.max_degree.max(1) as f64;
-        self.link.latency_s() + (1.0 + NEIGHBOR_SERIAL * (deg - 1.0)) * self.link.transfer_s(bytes)
+        neighbor_exchange_deg_s(&self.link, stats.max_degree, bytes)
     }
 
     /// Average per-iteration communication seconds for an optimizer's

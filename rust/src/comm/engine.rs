@@ -69,6 +69,16 @@ pub trait CommEngine: Sync {
         mix_row(self.row(i), src, out);
     }
 
+    /// Hook invoked by [`crate::optim::gossip_exchange`] once per
+    /// exchange, immediately before the mix fan-out, with the exact
+    /// source view the mix will read (the codec's wire view when a
+    /// lossy codec is active, the raw publish otherwise). Engines that
+    /// replay past payloads — the async bounded-staleness mode of
+    /// [`crate::sim::FaultyEngine`] — snapshot it here into their
+    /// per-exchange-slot ring caches; the default is a no-op, so plain
+    /// engines pay nothing.
+    fn begin_exchange(&self, _src: &[Vec<f32>]) {}
+
     /// Max |row sum − 1| over all nodes (stochasticity diagnostic).
     fn row_sum_error(&self) -> f64 {
         (0..self.n())

@@ -32,6 +32,15 @@
 //! buffer once and mixes the decoded wire view; the fault engine's
 //! stale cache then holds encoded payloads, so faults and compression
 //! compose. Runs stay byte-identical under the codec seed.
+//!
+//! When `Config::async_mode` is set (`--async tau=2,spread=4`), rounds
+//! execute against the discrete-event clock sim's bounded-staleness
+//! schedule (DESIGN.md §8): nodes run on heterogeneous seeded virtual
+//! clocks and each edge delivery may be up to `tau` rounds old, served
+//! from the fault engine's per-exchange-slot ring caches. With uniform
+//! speeds, zero jitter and `tau=0` the schedule realizes all-fresh and
+//! the run is bitwise identical to the synchronous path; `pmsgd` runs
+//! as the barrier baseline (simulated time only, no staleness).
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -39,10 +48,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::comm::codec::{CodecSpec, CodecState};
-use crate::comm::cost::PayloadBytes;
+use crate::comm::cost::{CommCost, PayloadBytes};
 use crate::comm::CommEngine;
 use crate::grad::Workload;
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
+use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport, AsyncSpec};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
@@ -84,6 +94,10 @@ pub struct Trainer {
     /// here because the EF residuals and wire buffers are cross-round
     /// state; rounds reach it through `RoundCtx::codec`.
     codec: Option<Mutex<CodecState>>,
+    /// Timing + staleness summary of the `--async` discrete-event run
+    /// (None = synchronous). The schedule itself lives inside the fault
+    /// engine, which replays it round by round.
+    async_report: Option<AsyncReport>,
     topo: Topology,
     pub states: Vec<NodeState>,
     optimizer: Box<dyn Optimizer>,
@@ -129,7 +143,7 @@ impl Trainer {
             comm.make_lazy();
         }
         let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
-        let faults = if cfg.faults.trim().is_empty() {
+        let mut faults = if cfg.faults.trim().is_empty() {
             None
         } else {
             // Validate the spec for every optimizer, but only attach an
@@ -176,6 +190,61 @@ impl Trainer {
                 _ => Some(Mutex::new(CodecState::new(&spec, n, d))),
             }
         };
+        // Asynchronous execution: run the discrete-event clock sim over
+        // the static topology (DESIGN.md §8). Event times are
+        // value-free, so the whole schedule — per-(step, edge)
+        // staleness ages plus completion times — is known up front; the
+        // fault engine replays the ages from per-slot ring caches while
+        // the trainer's global-step loop executes the rounds in order
+        // (a topological execution of the event DAG, value-identical to
+        // firing nodes in event order). Gossip legs charge the codec's
+        // ENCODED payload width, so compression shortens simulated
+        // exchanges too.
+        let async_report = if cfg.async_mode.trim().is_empty() {
+            None
+        } else {
+            let spec = AsyncSpec::parse(&cfg.async_mode, cfg.seed)?;
+            match optimizer.comm_pattern() {
+                optim::CommPattern::AllReduce => {
+                    // Barrier-synchronous baseline: each simulated round
+                    // costs the slowest node's compute plus the
+                    // collective; no staleness ever reaches training.
+                    let ar = CommCost::new(spec.link()).allreduce_s(n, 4.0 * d as f64);
+                    let (cum, wait) = simulate_barrier(&spec, n, ar, cfg.steps);
+                    Some(AsyncReport::barrier(cum, wait))
+                }
+                optim::CommPattern::NeighborPlusPeriodicAllReduce { .. } => {
+                    anyhow::bail!(
+                        "--async models pure gossip rounds; `{}`'s periodic all-reduce \
+                         is a global barrier (run pmsgd for the barrier baseline)",
+                        cfg.optimizer
+                    );
+                }
+                optim::CommPattern::Neighbor { payloads } => {
+                    anyhow::ensure!(
+                        !kind.time_varying(),
+                        "--async requires a static topology; `{}` changes neighbors per step",
+                        cfg.topology
+                    );
+                    let neighbor_bytes = match &codec {
+                        Some(c) => c.lock().unwrap().payload_bytes(),
+                        None => 4.0 * d as f64,
+                    };
+                    let sched = simulate_gossip(&spec, &comm, neighbor_bytes, payloads, cfg.steps);
+                    let report = sched.report();
+                    let engine = faults.get_or_insert_with(|| {
+                        let mut e = FaultyEngine::new(FaultPlan::new(FaultSpec {
+                            seed: cfg.seed,
+                            ..Default::default()
+                        }));
+                        e.set_stale_capable(payloads == 1);
+                        e
+                    });
+                    engine.set_async(sched);
+                    Some(report)
+                }
+            }
+        };
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
             .collect();
@@ -192,6 +261,7 @@ impl Trainer {
             comm,
             faults,
             codec,
+            async_report,
             topo,
             states,
             optimizer,
@@ -253,14 +323,18 @@ impl Trainer {
                 self.comm.make_lazy();
             }
         }
-        // Realize this step's faults over the nominal weights. An
-        // active fault plan makes the *realized* mixing matrix
-        // time-varying even on static topologies, so the optimizers'
-        // time-varying guards (DecentLaM's disagreement clip) engage.
+        // Realize this step's faults (and async staleness ages) over
+        // the nominal weights. An active fault plan makes the
+        // *realized* mixing matrix time-varying even on static
+        // topologies, and bounded staleness re-injects stale-direction
+        // disagreement the same way — either engages the optimizers'
+        // time-varying guards (DecentLaM's disagreement clip). An
+        // all-fresh async schedule (uniform clocks / tau=0) engages
+        // nothing, preserving bitwise equality with synchronous runs.
         let faults_active = match &mut self.faults {
             Some(f) => {
                 f.begin_step(k, &self.comm);
-                f.active()
+                f.active() || f.async_engaged()
             }
             None => false,
         };
@@ -335,6 +409,14 @@ impl Trainer {
     /// model entirely).
     pub fn fault_stats(&self) -> Option<&FaultStats> {
         self.faults.as_ref().map(|f| f.stats())
+    }
+
+    /// Timing + staleness summary of the `--async` discrete-event run
+    /// (None in synchronous mode). `step_done_s[k]` is the simulated
+    /// wall second at which every node has completed step k — the
+    /// x-axis of time-to-target-loss plots.
+    pub fn async_report(&self) -> Option<&AsyncReport> {
+        self.async_report.as_ref()
     }
 
     /// Run the full schedule, reporting losses/evals.
@@ -692,6 +774,130 @@ mod tests {
         // Still validated: a malformed spec fails even for pmsgd.
         let mut bad = small_cfg("pmsgd", 5);
         bad.codec = "int8,k=0.5".into();
+        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+    }
+
+    #[test]
+    fn async_uniform_tau0_is_bitwise_synchronous() {
+        // The tentpole invariant: uniform speeds + zero jitter + tau=0
+        // must reproduce the synchronous trainer losses bit for bit
+        // (star included — irregular degrees desynchronize gather
+        // times, but version capping keeps every delivery exact).
+        for topology in ["ring", "star"] {
+            for opt in ["dmsgd", "decentlam"] {
+                let run = |asynch: &str| {
+                    let mut cfg = small_cfg(opt, 25);
+                    cfg.topology = topology.into();
+                    cfg.async_mode = asynch.into();
+                    Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+                };
+                assert_eq!(
+                    run(""),
+                    run("tau=0,spread=1,jitter=0"),
+                    "{opt} on {topology}: async(uniform, tau=0) must be bitwise synchronous"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn async_heterogeneous_run_is_deterministic_and_stale() {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg("decentlam", 40);
+            cfg.lr = 0.02;
+            cfg.threads = threads;
+            cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let losses = t.run().losses;
+            let report = t.async_report().unwrap().clone();
+            (losses, report)
+        };
+        let (a, ra) = run(0);
+        let (b, rb) = run(0);
+        assert_eq!(a, b, "async rerun must be byte-identical");
+        assert_eq!(ra, rb);
+        let (c, _) = run(1);
+        assert_eq!(a, c, "async parallel != serial");
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(ra.max_staleness >= 1, "spread=6 never delivered stale");
+        assert!(ra.mean_staleness > 0.0 && ra.max_staleness <= 2);
+        assert_eq!(ra.step_done_s.len(), 40);
+        assert!(ra.makespan_s > 0.0);
+        let first = a[..5].iter().sum::<f64>() / 5.0;
+        let last = a[a.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(last < first, "loss did not descend under staleness ({first} -> {last})");
+    }
+
+    #[test]
+    fn async_composes_with_faults_and_codec() {
+        let run = || {
+            let mut cfg = small_cfg("decentlam", 30);
+            cfg.lr = 0.02;
+            cfg.async_mode = "tau=2,spread=4,jitter=0.2,seed=3".into();
+            cfg.faults = "drop=0.1,straggle=0.2,seed=5".into();
+            cfg.codec = "int8,ef=true,seed=4".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let losses = t.run().losses;
+            let stats = *t.fault_stats().unwrap();
+            (losses, stats)
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(sa.masked_edges > 0, "drop=0.1 never masked");
+    }
+
+    #[test]
+    fn async_multi_payload_optimizer_staleness_is_faithful() {
+        // da-dmsgd exchanges two payload kinds per round; the per-slot
+        // ring caches replay each kind's own history, so async staleness
+        // needs no masking downgrade.
+        let run = |threads: usize| {
+            let mut cfg = small_cfg("da-dmsgd", 30);
+            cfg.lr = 0.02;
+            cfg.threads = threads;
+            cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=11".into();
+            let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+            let losses = t.run().losses;
+            let stats = *t.fault_stats().unwrap();
+            (losses, stats)
+        };
+        let (a, sa) = run(0);
+        assert_eq!(a, run(0).0, "rerun must be byte-identical");
+        assert_eq!(a, run(1).0, "parallel != serial");
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(sa.async_stale_messages > 0, "spread=6 never delivered stale");
+        assert_eq!(sa.masked_edges, 0, "async staleness must not mask edges");
+    }
+
+    #[test]
+    fn async_allreduce_baseline_reports_barrier_time_only() {
+        let mut cfg = small_cfg("pmsgd", 10);
+        cfg.async_mode = "tau=2,spread=4,jitter=0.2".into();
+        let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
+        let r = t.run();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(t.fault_stats().is_none(), "pmsgd must not grow a fault engine");
+        let rep = t.async_report().unwrap();
+        assert_eq!(rep.step_done_s.len(), 10);
+        assert_eq!(rep.max_staleness, 0, "all-reduce is a barrier: nothing stales");
+        assert!(rep.total_wait_s > 0.0, "a 4x spread barrier must wait");
+        assert!(rep.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn async_rejects_time_varying_topologies_and_slowmo() {
+        let mut cfg = small_cfg("decentlam", 5);
+        cfg.topology = "bipartite".into();
+        cfg.async_mode = "tau=1".into();
+        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+        let mut cfg = small_cfg("slowmo", 5);
+        cfg.async_mode = "tau=1".into();
+        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+        let mut bad = small_cfg("decentlam", 5);
+        bad.async_mode = "tau=999".into();
         assert!(Trainer::new(bad, mlp_workload(4)).is_err());
     }
 

@@ -1,0 +1,444 @@
+//! Async sweep: time-to-target-loss vs heterogeneity spread for DmSGD
+//! vs DecentLaM vs PmSGD (the clock layer's headline figure; no paper
+//! analog — this extends §7 to the asynchronous straggler regimes of
+//! "From promise to practice", arXiv 2410.11998, probing whether
+//! DecentLaM's bias correction survives bounded staleness the way
+//! Momentum Tracking, arXiv 2209.15505, suggests raw momentum may not).
+//!
+//! For each heterogeneity spread S the discrete-event clock sim prices
+//! a wall-clock budget: the simulated time `opts.steps` asynchronous
+//! gossip rounds take at spread S. Both gossip methods are timed by the
+//! *same* schedule (timing is value-free), so they run the identical
+//! number of rounds inside the budget — the comparison between them is
+//! pure staleness bias at matched simulated wall-clock. PmSGD, the
+//! barrier baseline, fits however many barrier rounds the same budget
+//! allows (fewer, under stragglers: every round waits for the slowest
+//! node and pays the all-reduce) — the "how much wall-clock does
+//! decentralization buy" axis.
+//!
+//! Everything is seeded (data, topology, clock draws), so two runs of
+//! the same opts produce identical tables byte for byte.
+
+use anyhow::Result;
+
+use crate::comm::CommCost;
+use crate::coordinator::Trainer;
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::grad::mlp;
+use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncSpec};
+use crate::topology::{Kind, SparseWeights, Topology};
+use crate::util::cli::Args;
+use crate::util::config::{Config, LrSchedule};
+use crate::util::table::{sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub nodes: usize,
+    /// Gossip rounds per cell — also what prices the per-spread budget.
+    pub steps: usize,
+    pub topology: String,
+    /// Methods to compare (gossip methods share the schedule; `pmsgd`
+    /// runs as the barrier baseline).
+    pub methods: Vec<String>,
+    /// Heterogeneity spreads swept across columns (slowdown of the
+    /// slowest draw relative to the fastest, log-uniform per node).
+    pub spreads: Vec<f64>,
+    /// Bounded-staleness window.
+    pub tau: usize,
+    /// Lognormal per-(node, step) jitter sigma.
+    pub jitter: f64,
+    /// Base compute ms per round at slowdown 1.
+    pub compute_ms: f64,
+    pub total_batch: usize,
+    pub arch: String,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 16,
+            steps: 150,
+            topology: "ring".into(),
+            methods: vec!["dmsgd".into(), "decentlam".into(), "pmsgd".into()],
+            spreads: vec![1.0, 2.0, 4.0, 8.0],
+            tau: 2,
+            jitter: 0.2,
+            compute_ms: 10.0,
+            total_batch: 2048,
+            arch: "mlp-xs".into(),
+            seed: 7,
+        }
+    }
+}
+
+impl Opts {
+    /// Shared CLI flags for the `fig-async` subcommand and
+    /// `examples/async_sweep.rs`.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.nodes = args.get_usize("nodes", self.nodes)?;
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        self.tau = args.get_usize("tau", self.tau)?;
+        self.jitter = args.get_f64("jitter", self.jitter)?;
+        self.compute_ms = args.get_f64("compute", self.compute_ms)?;
+        if let Some(s) = args.get("spread") {
+            self.spreads = vec![s.parse().map_err(|e| anyhow::anyhow!("--spread: {e}"))?];
+        }
+        if let Some(t) = args.get("topology") {
+            self.topology = t.into();
+        }
+        Ok(())
+    }
+
+    fn spec_string(&self, spread: f64) -> String {
+        format!(
+            "tau={},spread={spread},jitter={},compute={},seed={}",
+            self.tau, self.jitter, self.compute_ms, self.seed
+        )
+    }
+}
+
+/// One trained cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub spread: f64,
+    /// Rounds executed inside the spread's wall-clock budget.
+    pub steps: usize,
+    /// Simulated seconds the run took (≤ the budget, by construction).
+    pub sim_s: f64,
+    pub mean_staleness: f64,
+    /// Eval loss of the network-average model at the end of the budget.
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    pub consensus: f64,
+    /// (simulated seconds, eval loss) curve for time-to-target plots.
+    pub curve: Vec<(f64, f64)>,
+}
+
+fn cell_data(opts: &Opts) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes: opts.nodes,
+        samples_per_node: 256,
+        eval_samples: 512,
+        dirichlet_alpha: 0.1, // strongly heterogeneous: bias regime
+        seed: opts.seed,
+        ..Default::default()
+    })
+}
+
+fn cell_config(opts: &Opts, method: &str, spread: f64, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = method.into();
+    cfg.nodes = opts.nodes;
+    cfg.steps = steps;
+    cfg.topology = opts.topology.clone();
+    cfg.total_batch = opts.total_batch;
+    cfg.micro_batch = 32;
+    cfg.lr = 0.08;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.seed = opts.seed;
+    cfg.eval_every = (steps / 10).max(1);
+    cfg.async_mode = opts.spec_string(spread);
+    cfg
+}
+
+fn cell(
+    opts: &Opts,
+    data: &ClassificationData,
+    method: &str,
+    spread: f64,
+    steps: usize,
+) -> Result<Row> {
+    let cfg = cell_config(opts, method, spread, steps);
+    let wl = mlp::workload(
+        mlp::MlpArch::family(&opts.arch)?,
+        data.clone(),
+        cfg.micro_batch,
+        opts.seed,
+    );
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    let xbar = t.average_model();
+    let eval_loss = t.workload.eval.loss(&xbar).unwrap_or(f64::NAN);
+    let async_rep = t.async_report().expect("async cells always carry a report");
+    let curve: Vec<(f64, f64)> = report
+        .eval_losses
+        .iter()
+        .map(|&(k, l)| (async_rep.step_done_s[k - 1], l))
+        .collect();
+    Ok(Row {
+        method: method.into(),
+        spread,
+        steps,
+        sim_s: async_rep.makespan_s,
+        mean_staleness: async_rep.mean_staleness,
+        eval_loss,
+        accuracy: report.final_accuracy,
+        consensus: report.final_consensus,
+        curve,
+    })
+}
+
+/// Rounds a barrier-synchronous (all-reduce) run fits into `budget_s`.
+fn barrier_steps_within(opts: &Opts, spec: &AsyncSpec, d: usize, budget_s: f64) -> usize {
+    let ar = CommCost::new(spec.link()).allreduce_s(opts.nodes, 4.0 * d as f64);
+    let cap = opts.steps * 4;
+    let (cum, _) = simulate_barrier(spec, opts.nodes, ar, cap);
+    cum.iter().take_while(|&&t| t <= budget_s).count().max(1)
+}
+
+pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
+    let kind = Kind::parse(&opts.topology)?;
+    let topo = Topology::at_step(kind, opts.nodes, opts.seed, 0);
+    let sw = SparseWeights::metropolis_hastings(&topo);
+    let data = cell_data(opts);
+    // Any cell's workload has the same dim — build one to size payloads.
+    let d = mlp::workload(mlp::MlpArch::family(&opts.arch)?, data.clone(), 32, opts.seed).dim;
+
+    let mut rows = Vec::new();
+    for &spread in &opts.spreads {
+        let spec = AsyncSpec::parse(&opts.spec_string(spread), opts.seed)?;
+        // The spread's wall-clock budget: what `opts.steps` async gossip
+        // rounds cost. Gossip methods share this schedule exactly.
+        let budget_s =
+            simulate_gossip(&spec, &sw, 4.0 * d as f64, 1, opts.steps).report().makespan_s;
+        for method in &opts.methods {
+            let steps = if method == "pmsgd" {
+                barrier_steps_within(opts, &spec, d, budget_s)
+            } else {
+                opts.steps
+            };
+            rows.push(cell(opts, &data, method, spread, steps)?);
+        }
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "async sweep — {} n={}, tau={}, jitter={}, budget = {} gossip rounds (seed {})",
+            opts.topology, opts.nodes, opts.tau, opts.jitter, opts.steps, opts.seed
+        ),
+        &["method", "spread", "rounds", "sim s", "mean stale", "eval loss", "vs spread=1"],
+    );
+    for row in &rows {
+        let deg = degradation(&rows, &row.method)
+            .iter()
+            .find(|(s, _)| *s == row.spread)
+            .map(|&(_, d)| format!("{d:+.4}"))
+            .unwrap_or_else(|| "n/a".into());
+        table.row(vec![
+            row.method.clone(),
+            format!("{}", row.spread),
+            row.steps.to_string(),
+            sig(row.sim_s, 4),
+            sig(row.mean_staleness, 3),
+            sig(row.eval_loss, 4),
+            deg,
+        ]);
+    }
+    Ok((rows, table))
+}
+
+/// Absolute eval-loss degradation of `method` at each spread relative
+/// to its own spread=1 cell: `loss(S) − loss(1)`. Empty when the sweep
+/// has no spread=1 baseline — callers must not fabricate a verdict
+/// from a baseline-less sweep.
+pub fn degradation(rows: &[Row], method: &str) -> Vec<(f64, f64)> {
+    let Some(base) = rows
+        .iter()
+        .find(|r| r.method == method && r.spread == 1.0)
+        .map(|r| r.eval_loss)
+    else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter(|r| r.method == method)
+        .map(|r| (r.spread, r.eval_loss - base))
+        .collect()
+}
+
+/// First simulated second at which `curve` reaches `target` (curves are
+/// sampled at eval points; None if never).
+pub fn time_to_target(curve: &[(f64, f64)], target: f64) -> Option<f64> {
+    curve.iter().find(|&&(_, l)| l <= target).map(|&(t, _)| t)
+}
+
+/// CI smoke: the acceptance gate of the async runtime. Asserts
+/// (1) async(uniform, tau=0) is bitwise equal to the synchronous
+/// trainer, (2) the heterogeneous sweep is deterministic across reruns
+/// and parallel == serial, (3) at heterogeneity spread ≥ 4× and matched
+/// simulated wall-clock budget, DecentLaM's final eval loss degrades
+/// strictly less than DmSGD's. Exits nonzero on any violation.
+pub fn smoke(args: &Args) -> Result<()> {
+    let mut opts = Opts { spreads: vec![1.0, 8.0], ..Default::default() };
+    opts.apply_args(args)?;
+    let gate_spread = opts.spreads.iter().cloned().fold(1.0, f64::max);
+    anyhow::ensure!(gate_spread >= 4.0, "smoke needs a spread ≥ 4x cell to gate on");
+    let data = cell_data(&opts);
+
+    // (1) bitwise: uniform clocks, tau=0 must reproduce the synchronous
+    // trainer exactly.
+    {
+        let steps = 60;
+        let run = |asynch: &str| -> Result<Vec<f64>> {
+            let mut cfg = cell_config(&opts, "decentlam", 1.0, steps);
+            cfg.async_mode = asynch.into();
+            let wl = mlp::workload(
+                mlp::MlpArch::family(&opts.arch)?,
+                data.clone(),
+                cfg.micro_batch,
+                opts.seed,
+            );
+            Ok(Trainer::new(cfg, wl)?.run().losses)
+        };
+        let sync = run("")?;
+        let uniform = run(&format!("tau=0,spread=1,jitter=0,compute={}", opts.compute_ms))?;
+        anyhow::ensure!(
+            sync == uniform,
+            "async(uniform, tau=0) diverged from the synchronous trainer"
+        );
+        println!("smoke 1/3 OK: async(uniform, tau=0) bitwise == synchronous ({steps} steps)");
+    }
+
+    // (2) determinism + parallel == serial on a heterogeneous cell.
+    {
+        let run = |threads: usize| -> Result<Vec<f64>> {
+            let mut cfg = cell_config(&opts, "decentlam", gate_spread, 40);
+            cfg.threads = threads;
+            let wl = mlp::workload(
+                mlp::MlpArch::family(&opts.arch)?,
+                data.clone(),
+                cfg.micro_batch,
+                opts.seed,
+            );
+            Ok(Trainer::new(cfg, wl)?.run().losses)
+        };
+        let a = run(0)?;
+        anyhow::ensure!(a == run(0)?, "async rerun was not byte-identical");
+        anyhow::ensure!(a == run(1)?, "async parallel != serial");
+        println!("smoke 2/3 OK: heterogeneous async deterministic, parallel == serial");
+    }
+
+    // (3) the bias gate at matched wall-clock budget.
+    let (rows, table) = run(&opts)?;
+    println!("{}", table.render());
+    let stale = rows
+        .iter()
+        .find(|r| r.method == "decentlam" && r.spread == gate_spread)
+        .expect("gate cell missing");
+    anyhow::ensure!(
+        stale.mean_staleness > 0.0,
+        "spread={gate_spread} realized no staleness — the gate would be vacuous"
+    );
+    let deg = |method: &str| -> Result<f64> {
+        degradation(&rows, method)
+            .iter()
+            .find(|(s, _)| *s == gate_spread)
+            .map(|&(_, d)| d)
+            .ok_or_else(|| anyhow::anyhow!("{method}: no spread={gate_spread} cell"))
+    };
+    let dl = deg("decentlam")?;
+    let dm = deg("dmsgd")?;
+    anyhow::ensure!(
+        dl < dm,
+        "DecentLaM degraded no less than DmSGD at spread={gate_spread}: {dl:+.4} vs {dm:+.4}"
+    );
+    println!(
+        "smoke 3/3 OK: at spread={gate_spread} and matched simulated budget, DecentLaM's eval \
+         loss degrades {dl:+.4} vs DmSGD's {dm:+.4}"
+    );
+    // Context line: what the budget bought each pattern.
+    if let (Some(g), Some(p)) = (
+        rows.iter().find(|r| r.method == "decentlam" && r.spread == gate_spread),
+        rows.iter().find(|r| r.method == "pmsgd" && r.spread == gate_spread),
+    ) {
+        println!(
+            "at spread={gate_spread}, the budget bought {} gossip rounds vs {} all-reduce \
+             barriers ({:.2}x)",
+            g.steps,
+            p.steps,
+            g.steps as f64 / p.steps as f64
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shrunk() -> Opts {
+        Opts {
+            nodes: 8,
+            steps: 40,
+            spreads: vec![1.0, 6.0],
+            methods: vec!["dmsgd".into(), "decentlam".into(), "pmsgd".into()],
+            total_batch: 256,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shrunk_sweep_has_sane_shape() {
+        let opts = shrunk();
+        let (rows, table) = run(&opts).unwrap();
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.eval_loss.is_finite() && r.sim_s > 0.0));
+        // Gossip methods share the schedule: same rounds, same sim time.
+        for spread in [1.0, 6.0] {
+            let get = |m: &str| rows.iter().find(|r| r.method == m && r.spread == spread).unwrap();
+            assert_eq!(get("dmsgd").steps, opts.steps);
+            assert_eq!(get("dmsgd").steps, get("decentlam").steps);
+            assert_eq!(get("dmsgd").sim_s, get("decentlam").sim_s, "shared schedule");
+            // PmSGD fits its rounds inside the same budget.
+            assert!(get("pmsgd").sim_s <= get("dmsgd").sim_s + 1e-9);
+            assert!(get("pmsgd").steps >= 1);
+        }
+        // Heterogeneity slows the budgeted wall-clock down and realizes
+        // staleness for the gossip methods.
+        let dl = |spread: f64| {
+            rows.iter().find(|r| r.method == "decentlam" && r.spread == spread).unwrap()
+        };
+        assert!(dl(6.0).sim_s > dl(1.0).sim_s);
+        assert_eq!(dl(1.0).mean_staleness, 0.0, "uniform clocks never stale");
+        assert!(dl(6.0).mean_staleness > 0.0, "spread=6 never went stale");
+        assert!(table.render().contains("decentlam"));
+    }
+
+    #[test]
+    fn sweep_output_is_deterministic() {
+        let mut opts = shrunk();
+        opts.steps = 20;
+        opts.methods = vec!["decentlam".into()];
+        opts.spreads = vec![4.0];
+        let (_, a) = run(&opts).unwrap();
+        let (_, b) = run(&opts).unwrap();
+        assert_eq!(a.render(), b.render(), "same opts must render byte-identically");
+    }
+
+    #[test]
+    fn degradation_and_time_to_target_helpers() {
+        let mk = |method: &str, spread: f64, loss: f64| Row {
+            method: method.into(),
+            spread,
+            steps: 10,
+            sim_s: 1.0,
+            mean_staleness: 0.0,
+            eval_loss: loss,
+            accuracy: 0.0,
+            consensus: 0.0,
+            curve: vec![(0.5, 2.0), (1.0, loss)],
+        };
+        let rows = vec![mk("m", 1.0, 1.0), mk("m", 4.0, 1.5)];
+        let d = degradation(&rows, "m");
+        assert_eq!(d, vec![(1.0, 0.0), (4.0, 0.5)]);
+        assert!(degradation(&rows[1..], "m").is_empty(), "no baseline -> no verdict");
+        assert!(degradation(&rows, "other").is_empty());
+        assert_eq!(time_to_target(&rows[0].curve, 1.2), Some(1.0));
+        assert_eq!(time_to_target(&rows[0].curve, 2.5), Some(0.5));
+        assert_eq!(time_to_target(&rows[0].curve, 0.1), None);
+    }
+}

@@ -14,16 +14,19 @@
 //! | Table 5 (topologies)                    | [`table5`] |
 //! | Fig. 5 (loss / acc curves)              | [`fig5`]   |
 //! | Fig. 6 (runtime breakdown)              | [`fig6`]   |
-//! | Table 6 (detection analog)              | [`table6`] |
+//! | Table 6 (detection analog)              | `table6` (pjrt feature) |
 //!
 //! Beyond the paper: [`fig_faults`] sweeps the DecentLaM-vs-DmSGD bias
-//! gap under fault injection (sim layer, DESIGN.md §6), and
+//! gap under fault injection (sim layer, DESIGN.md §6),
 //! [`fig_compression`] sweeps loss vs wire bytes across the gossip
-//! payload codecs (codec layer, DESIGN.md §7).
+//! payload codecs (codec layer, DESIGN.md §7), and [`fig_async`] sweeps
+//! time-to-target-loss against heterogeneous node clocks under bounded
+//! staleness (clock layer, DESIGN.md §8).
 
 pub mod fig2_3;
 pub mod fig5;
 pub mod fig6;
+pub mod fig_async;
 pub mod fig_compression;
 pub mod fig_faults;
 pub mod table1;

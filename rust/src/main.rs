@@ -170,6 +170,42 @@ fn dispatch(args: &Args) -> Result<()> {
                 );
             }
         }
+        "fig-async" => {
+            if args.get_bool("smoke") {
+                exp::fig_async::smoke(args)?;
+                return Ok(());
+            }
+            let mut opts = exp::fig_async::Opts::default();
+            if quick {
+                opts.nodes = 8;
+                opts.steps = 60;
+                opts.spreads = vec![1.0, 4.0];
+            }
+            opts.apply_args(args)?;
+            let (rows, table) = exp::fig_async::run(&opts)?;
+            println!("{}", table.render());
+            // Time-to-target view: first simulated second each cell
+            // reaches 1.1x the uniform DecentLaM final loss.
+            if let Some(base) = rows
+                .iter()
+                .find(|r| r.method == "decentlam" && r.spread == 1.0)
+                .map(|r| r.eval_loss)
+            {
+                let target = 1.1 * base;
+                for row in &rows {
+                    match exp::fig_async::time_to_target(&row.curve, target) {
+                        Some(t) => println!(
+                            "{} spread={}: reaches eval loss {target:.4} at {t:.3} sim s",
+                            row.method, row.spread
+                        ),
+                        None => println!(
+                            "{} spread={}: never reaches eval loss {target:.4} in budget",
+                            row.method, row.spread
+                        ),
+                    }
+                }
+            }
+        }
         "fig-faults" => {
             let mut opts = exp::fig_faults::Opts::default();
             if quick {
@@ -200,6 +236,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  table1..table6, fig2, fig3, fig5, fig6   regenerate paper results\n  \
                  fig-faults   DecentLaM vs DmSGD under fault injection\n  \
                  fig-compression   loss vs wire bytes per payload codec (--smoke = CI gate)\n  \
+                 fig-async    time-to-target-loss vs clock heterogeneity (--smoke = CI gate)\n  \
                  train        one training run (all Config flags apply)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
@@ -208,7 +245,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  common flags: --quick, --steps N, --csv FILE, --nodes N,\n  \
                  --optimizer X, --batch B, --beta B, --lr G, --topology T,\n  \
                  --faults drop=0.1,straggle=0.05,seed=7,\n  \
-                 --codec int8,ef=true,seed=7 (fp32|fp16|int8|topk,k=0.05)"
+                 --codec int8,ef=true,seed=7 (fp32|fp16|int8|topk,k=0.05),\n  \
+                 --async tau=2,spread=4,jitter=0.2,seed=7"
             );
         }
     }
@@ -290,6 +328,18 @@ fn train(args: &Args) -> Result<()> {
             t.cfg.optimizer
         ),
         None => {}
+    }
+    if let Some(a) = t.async_report() {
+        println!(
+            "async: {:.3} simulated s ({:.3} ms/round), {:.1}% deliveries stale \
+             (mean age {:.3}, max {}), {:.3} node-s waited",
+            a.makespan_s,
+            1e3 * a.makespan_s / t.cfg.steps.max(1) as f64,
+            100.0 * a.stale_fraction,
+            a.mean_staleness,
+            a.max_staleness,
+            a.total_wait_s
+        );
     }
     Ok(())
 }

@@ -202,19 +202,30 @@ pub fn partial_average_all_par(
 /// entirely, so they are bitwise identical to the pre-codec path, and
 /// the mix fan-out stays per-row independent: parallel == serial holds
 /// for every codec.
+///
+/// The engine's [`CommEngine::begin_exchange`] hook fires once per
+/// exchange with the exact view the mix reads — the async
+/// bounded-staleness engine records its per-slot payload history there
+/// (encoded wire bytes under a lossy codec, so staleness composes with
+/// compression); plain engines ignore it.
 pub fn gossip_exchange(ctx: &RoundCtx, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
     match ctx.codec {
         Some(codec) => {
             let mut state = codec.lock().unwrap();
             if state.is_identity() {
                 drop(state);
+                ctx.comm.begin_exchange(src);
                 partial_average_all_par(ctx.comm, src, dst, ctx.exec);
             } else {
                 let wire = state.encode_round(src, ctx.exec);
+                ctx.comm.begin_exchange(wire);
                 partial_average_all_par(ctx.comm, wire, dst, ctx.exec);
             }
         }
-        None => partial_average_all_par(ctx.comm, src, dst, ctx.exec),
+        None => {
+            ctx.comm.begin_exchange(src);
+            partial_average_all_par(ctx.comm, src, dst, ctx.exec);
+        }
     }
 }
 

@@ -1,0 +1,698 @@
+//! Discrete-event asynchronous gossip clock (DESIGN.md §8).
+//!
+//! The synchronous [`crate::coordinator::Trainer`] models every round
+//! as an instantaneous barrier; the closed-form α–β formula in
+//! [`crate::comm::cost`] then prices it after the fact. Real
+//! decentralized clusters are neither: nodes run at different speeds,
+//! fire their rounds when their own clock allows, and mix against
+//! whatever their neighbors last published ("From promise to practice",
+//! arXiv 2410.11998). This module simulates that regime exactly, and
+//! deterministically:
+//!
+//! * [`AsyncSpec`] — the `--async tau=2,spread=4,jitter=0.2` knobs:
+//!   bounded-staleness window τ, per-node slowdown spread, lognormal
+//!   per-step jitter, base compute time and link bandwidth;
+//! * [`NodeClocks`] — seeded per-(node, step) compute-time draws from
+//!   counter-keyed PCG64 streams (replayable, iteration-order-free,
+//!   exactly like the PR-2 fault schedules);
+//! * [`EventQueue`] — a binary-heap event queue with a *total* order on
+//!   `(time, phase, node)`, so the pop sequence is independent of
+//!   insertion order and replay-identical for a fixed seed;
+//! * [`simulate_gossip`] — the engine itself: each node's local step is
+//!   a publish event (gradient + publish payload, after its seeded
+//!   compute time) followed by a gather event (after its α–β exchange
+//!   time, charged at the node's own degree). A node at local step `k`
+//!   mixes, for every neighbor `j`, the payload version
+//!   `min(latest_published_j, k)` and *blocks* until
+//!   `latest_published_j ≥ max(k − τ, 0)` — the bounded-staleness
+//!   window. Blocked gathers park and are woken by the unblocking
+//!   publish (plus one per-edge α + M/B retransmit).
+//!
+//! The output is an [`AsyncSchedule`]: per (global step, edge) staleness
+//! ages in `[0, τ]` plus simulated completion times. The schedule is
+//! **value-free** — event times depend only on the spec, topology and
+//! payload width, never on gradients — so the same engine prices Fig. 6
+//! (uniform clocks) and drives training (the trainer replays the
+//! schedule through the [`super::FaultyEngine`] ring caches, one global
+//! step at a time).
+//!
+//! Why the global-step replay is faithful: a node at step `k` only ever
+//! mixes payload versions in `[max(k − τ, 0), k]` (versions newer than
+//! its own round are capped at `k` to keep momentum round-aligned), and
+//! every version `≤ k` is a function of state from rounds `< k` plus
+//! round `k`'s own publishes. Executing global steps in order is
+//! therefore a topological execution of the event DAG — the values are
+//! identical to firing nodes in event order. With uniform speeds, zero
+//! jitter and τ = 0 every entry is version-exact (`= k`), so async
+//! training is **bitwise equal** to the synchronous trainer (pinned in
+//! `rust/tests/async_gossip.rs`).
+//!
+//! Liveness: the minimum-step unfinished node is never blocked (every
+//! neighbor has published at least that step − 1 ≥ its requirement), so
+//! the event loop cannot deadlock for any τ ≥ 0.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+use crate::comm::cost::{neighbor_exchange_deg_s, LinkSpec};
+use crate::comm::engine::CommEngine;
+use crate::util::rng::Pcg64;
+
+/// Hard cap on the staleness window: each unit of τ costs one n×d ring
+/// entry per exchange slot, so an unbounded τ is a memory foot-gun.
+pub const MAX_TAU: usize = 32;
+
+/// The `--async` knobs: bounded staleness + heterogeneous clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncSpec {
+    /// Bounded-staleness window: a node at local step k blocks until
+    /// every neighbor has published step max(k − tau, 0), and never
+    /// mixes anything older. tau = 0 is barrier-exact synchrony.
+    pub tau: usize,
+    /// Slowdown spread: per-node multipliers are drawn log-uniform in
+    /// [1, spread] (spread = 1 ⇒ every node exactly 1.0).
+    pub spread: f64,
+    /// Lognormal per-(node, step) jitter sigma (0 ⇒ exactly 1.0).
+    pub jitter: f64,
+    /// Base compute seconds per local step at slowdown 1, in ms.
+    pub compute_ms: f64,
+    /// NIC bandwidth of the α–β link model, Gbit/s.
+    pub bw_gbps: f64,
+    /// Seed of the clock draws (independent of data/topology seeds).
+    pub seed: u64,
+}
+
+impl Default for AsyncSpec {
+    fn default() -> Self {
+        AsyncSpec { tau: 1, spread: 1.0, jitter: 0.0, compute_ms: 10.0, bw_gbps: 25.0, seed: 0 }
+    }
+}
+
+impl AsyncSpec {
+    /// Parse the CLI form `tau=2,spread=4,jitter=0.2,seed=7`. Keys:
+    /// `tau` (0..=32), `spread` (≥ 1), `jitter` (in [0, 4]), `compute`
+    /// (ms > 0), `bw` (Gbps > 0), `seed`. Omitted keys default; a bare
+    /// `--async` (the parser passes `true`) means all defaults.
+    pub fn parse(s: &str, default_seed: u64) -> Result<AsyncSpec> {
+        let mut spec = AsyncSpec { seed: default_seed, ..Default::default() };
+        if s.trim() == "true" {
+            return Ok(spec);
+        }
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("async spec entry `{part}` is not key=value");
+            };
+            let v = v.trim();
+            match k.trim() {
+                "tau" => {
+                    spec.tau = v.parse()?;
+                    if spec.tau > MAX_TAU {
+                        bail!("async tau={} above the cap {MAX_TAU}", spec.tau);
+                    }
+                }
+                "spread" => {
+                    spec.spread = v.parse()?;
+                    if !(1.0..=1e6).contains(&spec.spread) {
+                        bail!("async spread={} outside [1, 1e6]", spec.spread);
+                    }
+                }
+                "jitter" => {
+                    spec.jitter = v.parse()?;
+                    if !(0.0..=4.0).contains(&spec.jitter) {
+                        bail!("async jitter={} outside [0, 4]", spec.jitter);
+                    }
+                }
+                "compute" => {
+                    spec.compute_ms = v.parse()?;
+                    if !spec.compute_ms.is_finite() || spec.compute_ms <= 0.0 {
+                        bail!("async compute={} must be > 0 ms", spec.compute_ms);
+                    }
+                }
+                "bw" => {
+                    spec.bw_gbps = v.parse()?;
+                    if !spec.bw_gbps.is_finite() || spec.bw_gbps <= 0.0 {
+                        bail!("async bw={} must be > 0 Gbps", spec.bw_gbps);
+                    }
+                }
+                "seed" => spec.seed = v.parse()?,
+                other => bail!("unknown async key `{other}` (tau|spread|jitter|compute|bw|seed)"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Uniform clocks: every compute draw is exactly `compute_ms`.
+    pub fn is_uniform(&self) -> bool {
+        self.spread <= 1.0 && self.jitter <= 0.0
+    }
+
+    /// The α–β link this spec's exchanges are priced on.
+    pub fn link(&self) -> LinkSpec {
+        LinkSpec { bandwidth_gbps: self.bw_gbps, latency_us: 25.0 }
+    }
+}
+
+/// Domain-separation tags (same pattern as the fault plan's).
+const TAG_SPEED: u64 = 0xc10c_5eed;
+const TAG_JITTER: u64 = 0xc10c_717e;
+const STEP_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Seeded per-(node, step) virtual compute times. Every draw comes from
+/// its own counter-keyed PCG64 stream, so clocks are replayable and
+/// iteration-order-free — querying (i, k) never perturbs (j, l).
+#[derive(Debug, Clone)]
+pub struct NodeClocks {
+    spec: AsyncSpec,
+}
+
+impl NodeClocks {
+    pub fn new(spec: AsyncSpec) -> NodeClocks {
+        NodeClocks { spec }
+    }
+
+    /// Fixed per-node slowdown multiplier, log-uniform in [1, spread].
+    /// Exactly 1.0 when spread = 1 (no draw: uniform runs stay bitwise
+    /// independent of the seed).
+    pub fn slowdown(&self, node: usize) -> f64 {
+        if self.spec.spread <= 1.0 {
+            return 1.0;
+        }
+        let u = Pcg64::new(self.spec.seed ^ TAG_SPEED, node as u64).f64();
+        (self.spec.spread.ln() * u).exp()
+    }
+
+    /// Per-(node, step) lognormal jitter factor; exactly 1.0 at σ = 0.
+    pub fn jitter(&self, node: usize, step: usize) -> f64 {
+        if self.spec.jitter <= 0.0 {
+            return 1.0;
+        }
+        let seed = self.spec.seed.wrapping_add((step as u64).wrapping_mul(STEP_MIX)) ^ TAG_JITTER;
+        (self.spec.jitter * Pcg64::new(seed, node as u64).normal()).exp()
+    }
+
+    /// Virtual seconds node `node` spends computing local step `step`.
+    pub fn compute_s(&self, node: usize, step: usize) -> f64 {
+        self.spec.compute_ms * 1e-3 * self.slowdown(node) * self.jitter(node, step)
+    }
+}
+
+/// Event phase: all publishes at a tick precede all gathers at the same
+/// tick, so a gather never misses a same-time publish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Publish,
+    Gather,
+}
+
+/// One scheduled node event. The ordering key `(time, phase, node)` is
+/// total (f64 via `total_cmp`; times are always finite here) and unique
+/// while each node owns at most one pending event — which makes the
+/// queue's pop sequence independent of insertion order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub time: f64,
+    pub phase: Phase,
+    pub node: u32,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.phase.cmp(&other.phase))
+            .then(self.node.cmp(&other.node))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-heap over [`Event`]s.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        debug_assert!(ev.time.is_finite(), "event times must be finite");
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Timing + staleness summary of a simulated run (what sweeps report).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AsyncReport {
+    /// Simulated seconds at which ALL nodes have completed step k.
+    pub step_done_s: Vec<f64>,
+    /// `step_done_s` of the final step.
+    pub makespan_s: f64,
+    /// Node-seconds spent blocked on the staleness window (gossip) or
+    /// the barrier (all-reduce baseline).
+    pub total_wait_s: f64,
+    /// Mean staleness age over all (step, directed edge) deliveries.
+    pub mean_staleness: f64,
+    /// Largest staleness age any delivery saw (≤ τ by construction).
+    pub max_staleness: u16,
+    /// Fraction of deliveries with age ≥ 1.
+    pub stale_fraction: f64,
+}
+
+impl AsyncReport {
+    /// Barrier-synchronous report (the PmSGD baseline): cumulative
+    /// per-round times, zero staleness.
+    pub fn barrier(step_done_s: Vec<f64>, total_wait_s: f64) -> AsyncReport {
+        let makespan_s = step_done_s.last().copied().unwrap_or(0.0);
+        AsyncReport { step_done_s, makespan_s, total_wait_s, ..Default::default() }
+    }
+}
+
+/// A realized asynchronous run: per-(global step, directed edge)
+/// staleness ages plus the event times. Value-free — reusable across
+/// optimizers with the same wire pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsyncSchedule {
+    n: usize,
+    steps: usize,
+    tau: usize,
+    /// CSR over each node's non-self neighbors, ascending — the exact
+    /// order of the comm engine's nominal rows with the self entry
+    /// removed, so the fault engine can align by ordinal.
+    row_ptr: Vec<u32>,
+    neighbors: Vec<u32>,
+    /// stale[step * nnz + row_ptr[i] + e]: age of the payload node i
+    /// mixes from its e-th neighbor at global step `step` (0 = fresh).
+    stale: Vec<u16>,
+    report: AsyncReport,
+}
+
+impl AsyncSchedule {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Non-self neighbors of node `i`, ascending.
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.neighbors[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Staleness ages of node `i`'s incoming payloads at global step
+    /// `step`, aligned with [`AsyncSchedule::neighbors`]. `None` past
+    /// the simulated horizon (callers run fresh there).
+    pub fn staleness(&self, step: usize, i: usize) -> Option<&[u16]> {
+        if step >= self.steps {
+            return None;
+        }
+        let nnz = self.neighbors.len();
+        let base = step * nnz;
+        Some(&self.stale[base + self.row_ptr[i] as usize..base + self.row_ptr[i + 1] as usize])
+    }
+
+    pub fn max_staleness(&self) -> u16 {
+        self.report.max_staleness
+    }
+
+    pub fn report(&self) -> AsyncReport {
+        self.report.clone()
+    }
+
+    /// Hand-built schedule for the engine's unit tests: staleness ages
+    /// given directly, CSR taken from the engine's nominal rows.
+    #[cfg(test)]
+    pub(crate) fn handmade(
+        comm: &dyn CommEngine,
+        tau: usize,
+        stale_per_step: Vec<Vec<u16>>,
+    ) -> AsyncSchedule {
+        let n = comm.n();
+        let mut row_ptr = vec![0u32];
+        let mut neighbors = Vec::new();
+        for i in 0..n {
+            for &(j, _) in comm.row(i) {
+                if j as usize != i {
+                    neighbors.push(j);
+                }
+            }
+            row_ptr.push(neighbors.len() as u32);
+        }
+        let nnz = neighbors.len();
+        let steps = stale_per_step.len();
+        let mut stale = Vec::with_capacity(nnz * steps);
+        for s in &stale_per_step {
+            assert_eq!(s.len(), nnz);
+            stale.extend_from_slice(s);
+        }
+        let max = stale.iter().copied().max().unwrap_or(0);
+        let report = AsyncReport { max_staleness: max, ..Default::default() };
+        AsyncSchedule { n, steps, tau, row_ptr, neighbors, stale, report }
+    }
+}
+
+/// Run the discrete-event simulation of `steps` asynchronous gossip
+/// rounds over the engine's (static) topology: per-node seeded compute
+/// times, per-node α–β exchange times at `payloads` payloads of
+/// `payload_bytes` each, bounded staleness `spec.tau`.
+pub fn simulate_gossip(
+    spec: &AsyncSpec,
+    comm: &dyn CommEngine,
+    payload_bytes: f64,
+    payloads: usize,
+    steps: usize,
+) -> AsyncSchedule {
+    let n = comm.n();
+    // CSR of non-self neighbors, in nominal row order.
+    let mut row_ptr = vec![0u32];
+    let mut neighbors: Vec<u32> = Vec::new();
+    for i in 0..n {
+        for &(j, _) in comm.row(i) {
+            if j as usize != i {
+                neighbors.push(j);
+            }
+        }
+        row_ptr.push(neighbors.len() as u32);
+    }
+    let nnz = neighbors.len();
+    let nbrs = |i: usize| &neighbors[row_ptr[i] as usize..row_ptr[i + 1] as usize];
+
+    let clocks = NodeClocks::new(spec.clone());
+    let link = spec.link();
+    // Per-node exchange time: the node's whole neighbor fan charged at
+    // its own degree (the cost model's formula, per node instead of at
+    // the bottleneck degree).
+    let exchange_s: Vec<f64> = (0..n)
+        .map(|i| {
+            payloads.max(1) as f64 * neighbor_exchange_deg_s(&link, nbrs(i).len(), payload_bytes)
+        })
+        .collect();
+    // A payload that arrives late (its publish is what unblocks a parked
+    // gather) pays one extra per-edge retransmit: α + M/B.
+    let wake_s = link.latency_s() + link.transfer_s(payload_bytes);
+
+    let mut version = vec![-1i64; n];
+    let mut cur_step = vec![0u32; n];
+    let mut parked: Vec<Option<f64>> = vec![None; n];
+    let mut finish = vec![0f64; n * steps];
+    let mut stale = vec![0u16; nnz * steps];
+    let tau = spec.tau as i64;
+    let satisfied = |k: usize, row: &[u32], version: &[i64]| -> bool {
+        let need = (k as i64 - tau).max(0);
+        row.iter().all(|&j| version[j as usize] >= need)
+    };
+
+    let mut q = EventQueue::new();
+    for i in 0..n {
+        if steps > 0 {
+            q.push(Event { time: clocks.compute_s(i, 0), phase: Phase::Publish, node: i as u32 });
+        }
+    }
+
+    let (mut total_wait, mut sum_stale, mut stale_entries) = (0.0f64, 0u64, 0usize);
+    let mut max_stale = 0u16;
+    while let Some(ev) = q.pop() {
+        let i = ev.node as usize;
+        let k = cur_step[i] as usize;
+        match ev.phase {
+            Phase::Publish => {
+                version[i] = k as i64;
+                q.push(Event {
+                    time: ev.time + exchange_s[i],
+                    phase: Phase::Gather,
+                    node: ev.node,
+                });
+                // Wake neighbors whose staleness window this publish
+                // completes (ascending id — deterministic).
+                for &jn in nbrs(i) {
+                    let w = jn as usize;
+                    if let Some(since) = parked[w] {
+                        if satisfied(cur_step[w] as usize, nbrs(w), &version) {
+                            parked[w] = None;
+                            let wake = ev.time + wake_s;
+                            total_wait += wake - since;
+                            q.push(Event { time: wake, phase: Phase::Gather, node: jn });
+                        }
+                    }
+                }
+            }
+            Phase::Gather => {
+                if !satisfied(k, nbrs(i), &version) {
+                    parked[i] = Some(ev.time);
+                    continue;
+                }
+                let base = k * nnz + row_ptr[i] as usize;
+                for (e, &j) in nbrs(i).iter().enumerate() {
+                    let age = (k as i64 - version[j as usize].min(k as i64)) as u16;
+                    debug_assert!(age as i64 <= tau);
+                    stale[base + e] = age;
+                    sum_stale += age as u64;
+                    stale_entries += (age > 0) as usize;
+                    max_stale = max_stale.max(age);
+                }
+                finish[k * n + i] = ev.time;
+                cur_step[i] += 1;
+                if (cur_step[i] as usize) < steps {
+                    q.push(Event {
+                        time: ev.time + clocks.compute_s(i, cur_step[i] as usize),
+                        phase: Phase::Publish,
+                        node: ev.node,
+                    });
+                }
+            }
+        }
+    }
+    debug_assert!(cur_step.iter().all(|&k| k as usize == steps), "event loop stalled");
+
+    let step_done_s: Vec<f64> = (0..steps)
+        .map(|k| finish[k * n..(k + 1) * n].iter().cloned().fold(0.0, f64::max))
+        .collect();
+    let deliveries = (nnz * steps).max(1);
+    let report = AsyncReport {
+        makespan_s: step_done_s.last().copied().unwrap_or(0.0),
+        step_done_s,
+        total_wait_s: total_wait,
+        mean_staleness: sum_stale as f64 / deliveries as f64,
+        max_staleness: max_stale,
+        stale_fraction: stale_entries as f64 / deliveries as f64,
+    };
+    AsyncSchedule { n, steps, tau: spec.tau, row_ptr, neighbors, stale, report }
+}
+
+/// Barrier-synchronous timing (the PmSGD / all-reduce baseline): every
+/// round costs the slowest node's compute draw plus `comm_s`. Returns
+/// cumulative per-round times and the summed barrier wait.
+pub fn simulate_barrier(spec: &AsyncSpec, n: usize, comm_s: f64, steps: usize) -> (Vec<f64>, f64) {
+    let clocks = NodeClocks::new(spec.clone());
+    let mut cum = Vec::with_capacity(steps);
+    let mut t = 0.0;
+    let mut wait = 0.0;
+    for k in 0..steps {
+        let mut slowest = 0.0f64;
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let c = clocks.compute_s(i, k);
+            slowest = slowest.max(c);
+            sum += c;
+        }
+        wait += n as f64 * slowest - sum;
+        t += slowest + comm_s;
+        cum.push(t);
+    }
+    (cum, wait)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommCost, CommStats};
+    use crate::optim::CommPattern;
+    use crate::topology::{Kind, SparseWeights, Topology};
+
+    fn ring(n: usize) -> SparseWeights {
+        SparseWeights::metropolis_hastings(&Topology::build(Kind::Ring, n))
+    }
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let s = AsyncSpec::parse("tau=3,spread=4,jitter=0.2,seed=9", 1).unwrap();
+        assert_eq!(s.tau, 3);
+        assert_eq!(s.spread, 4.0);
+        assert_eq!(s.jitter, 0.2);
+        assert_eq!(s.seed, 9);
+        assert!(!s.is_uniform());
+        let d = AsyncSpec::parse("", 5).unwrap();
+        assert_eq!(d.seed, 5);
+        assert!(d.is_uniform());
+        // A bare `--async` arrives as the string "true": all defaults.
+        assert_eq!(AsyncSpec::parse("true", 5).unwrap(), d);
+        assert!(AsyncSpec::parse("tau=99", 0).is_err());
+        assert!(AsyncSpec::parse("spread=0.5", 0).is_err());
+        assert!(AsyncSpec::parse("jitter=-1", 0).is_err());
+        assert!(AsyncSpec::parse("warp=1", 0).is_err());
+        assert!(AsyncSpec::parse("tau", 0).is_err());
+    }
+
+    #[test]
+    fn clocks_are_deterministic_and_exact_at_uniform() {
+        let uni = NodeClocks::new(AsyncSpec { compute_ms: 7.0, ..Default::default() });
+        for i in 0..8 {
+            for k in [0usize, 3, 999] {
+                assert_eq!(uni.compute_s(i, k), 7.0e-3, "uniform draw must be exact");
+            }
+        }
+        let het =
+            NodeClocks::new(AsyncSpec { spread: 4.0, jitter: 0.3, seed: 11, ..Default::default() });
+        let a = het.compute_s(3, 17);
+        assert_eq!(a, het.compute_s(3, 17), "counter-keyed draws must replay");
+        assert_ne!(a, het.compute_s(4, 17));
+        assert_ne!(a, het.compute_s(3, 18));
+        for i in 0..32 {
+            let m = het.slowdown(i);
+            assert!((1.0..=4.0).contains(&m), "slowdown {m} outside [1, spread]");
+        }
+    }
+
+    #[test]
+    fn event_order_is_total_and_publish_precedes_gather() {
+        let a = Event { time: 1.0, phase: Phase::Publish, node: 5 };
+        let b = Event { time: 1.0, phase: Phase::Gather, node: 0 };
+        let c = Event { time: 1.0, phase: Phase::Publish, node: 6 };
+        assert!(a < b, "same-time publish must precede gather");
+        assert!(a < c, "node id breaks ties");
+        let mut q = EventQueue::new();
+        for ev in [b, c, a] {
+            q.push(ev);
+        }
+        assert_eq!(q.pop(), Some(a));
+        assert_eq!(q.pop(), Some(c));
+        assert_eq!(q.pop(), Some(b));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn uniform_ring_is_lockstep_and_matches_formula_exactly() {
+        // Uniform speeds, zero jitter on a regular graph: the event time
+        // per step equals compute + the closed-form neighbor-exchange
+        // cost, and no delivery is ever stale.
+        let n = 16;
+        let sw = ring(n);
+        let spec = AsyncSpec { tau: 2, compute_ms: 5.0, ..Default::default() };
+        let bytes = 4.0 * 10_000.0;
+        let steps = 12;
+        let sched = simulate_gossip(&spec, &sw, bytes, 1, steps);
+        let r = sched.report();
+        assert_eq!(r.max_staleness, 0, "uniform regular lockstep never goes stale");
+        assert_eq!(r.total_wait_s, 0.0);
+        let cost = CommCost::new(spec.link());
+        let stats = CommStats::of_engine(&sw);
+        let payload = crate::comm::PayloadBytes::uniform(bytes);
+        let per_iter = 5.0e-3
+            + cost.per_iter_comm_s(CommPattern::Neighbor { payloads: 1 }, &stats, payload);
+        let sim_per_iter = r.makespan_s / steps as f64;
+        assert!(
+            (sim_per_iter - per_iter).abs() <= 1e-12 + 1e-9 * per_iter,
+            "sim {sim_per_iter} vs formula {per_iter}"
+        );
+        // Per-step completion times are evenly spaced.
+        for k in 1..steps {
+            let dt = r.step_done_s[k] - r.step_done_s[k - 1];
+            assert!((dt - per_iter).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn schedule_replays_identically() {
+        let sw = ring(12);
+        let spec = AsyncSpec { tau: 3, spread: 6.0, jitter: 0.4, seed: 13, ..Default::default() };
+        let a = simulate_gossip(&spec, &sw, 4096.0, 1, 40);
+        let b = simulate_gossip(&spec, &sw, 4096.0, 1, 40);
+        assert_eq!(a, b, "same spec must produce the identical schedule");
+    }
+
+    #[test]
+    fn staleness_is_bounded_by_tau_and_realized_under_heterogeneity() {
+        let sw = ring(12);
+        for tau in [1usize, 2, 3] {
+            let spec = AsyncSpec { tau, spread: 8.0, jitter: 0.3, seed: 7, ..Default::default() };
+            let sched = simulate_gossip(&spec, &sw, 4096.0, 1, 60);
+            let r = sched.report();
+            assert!(r.max_staleness as usize <= tau, "tau={tau}: max {}", r.max_staleness);
+            assert!(r.max_staleness >= 1, "spread=8 never went stale at tau={tau}");
+            assert!(r.mean_staleness > 0.0 && r.mean_staleness <= tau as f64);
+            // Exhaustive bound over every (step, edge) delivery.
+            for k in 0..60 {
+                for i in 0..12 {
+                    for &s in sched.staleness(k, i).unwrap() {
+                        assert!(s as usize <= tau);
+                        assert!(s as usize <= k, "staleness {s} exceeds available history at {k}");
+                    }
+                }
+            }
+            assert!(sched.staleness(60, 0).is_none(), "past the horizon is fresh");
+        }
+    }
+
+    #[test]
+    fn tau_zero_forces_every_delivery_fresh_even_with_stragglers() {
+        let sw = ring(8);
+        let spec = AsyncSpec { tau: 0, spread: 8.0, jitter: 0.5, seed: 3, ..Default::default() };
+        let sched = simulate_gossip(&spec, &sw, 4096.0, 1, 30);
+        let r = sched.report();
+        assert_eq!(r.max_staleness, 0, "tau=0 is barrier-exact");
+        assert!(r.total_wait_s > 0.0, "a 8x straggler must make someone wait");
+    }
+
+    #[test]
+    fn makespan_tracks_the_slowest_node() {
+        let sw = ring(8);
+        let slow = AsyncSpec { tau: 2, spread: 8.0, seed: 5, ..Default::default() };
+        let fast = AsyncSpec { tau: 2, spread: 1.0, seed: 5, ..Default::default() };
+        let ms = |spec: &AsyncSpec| simulate_gossip(spec, &sw, 4096.0, 1, 40).report().makespan_s;
+        assert!(ms(&slow) > 1.5 * ms(&fast), "an 8x spread must slow the run down");
+    }
+
+    #[test]
+    fn barrier_matches_allreduce_formula_at_uniform() {
+        let spec = AsyncSpec { compute_ms: 4.0, ..Default::default() };
+        let ar = CommCost::new(spec.link()).allreduce_s(16, 1e6);
+        let (cum, wait) = simulate_barrier(&spec, 16, ar, 10);
+        assert_eq!(cum.len(), 10);
+        assert!(wait.abs() < 1e-12, "uniform barrier wait {wait}");
+        let per_iter = cum[9] / 10.0;
+        assert!((per_iter - (4.0e-3 + ar)).abs() < 1e-12);
+        // Heterogeneous barrier pays the max every round.
+        let het = AsyncSpec { spread: 4.0, jitter: 0.2, seed: 2, compute_ms: 4.0, ..spec };
+        let (cum_h, wait_h) = simulate_barrier(&het, 16, ar, 10);
+        assert!(cum_h[9] > cum[9]);
+        assert!(wait_h > 0.0);
+    }
+}

@@ -31,9 +31,13 @@
 //! and [`FaultStats`] accumulates the realized/masked/stale totals a
 //! sweep reports.
 
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
 use crate::comm::engine::{mix_row, CommEngine, RowEntry};
 use crate::util::math;
 
+use super::clock::AsyncSchedule;
 use super::plan::FaultPlan;
 
 /// Cumulative fault accounting across `begin_step` calls.
@@ -49,6 +53,9 @@ pub struct FaultStats {
     pub masked_edges: usize,
     /// Directed stale deliveries (message served from the cache).
     pub stale_messages: usize,
+    /// Directed deliveries the async bounded-staleness schedule served
+    /// from a past round's ring cache (DESIGN.md §8).
+    pub async_stale_messages: usize,
     /// Node-steps spent fully dropped out.
     pub dropped_node_steps: usize,
     /// Node-steps spent straggling.
@@ -66,9 +73,37 @@ impl FaultStats {
     }
 }
 
+/// Per-exchange-slot ring caches of past rounds' wire payloads, behind
+/// a mutex because [`CommEngine::begin_exchange`] runs on a shared
+/// `&self`. da-dmsgd's two exchanges per round (momentum, then
+/// parameters) each get their own slot, so an entry aged `d` always
+/// replays the *same payload kind* from `d` rounds ago — the reason the
+/// PR-2 fault path had to downgrade multi-payload staleness to masking
+/// disappears here.
+#[derive(Debug, Default)]
+struct SlotCaches {
+    /// rings[slot][age − 1] = that slot's payloads from `age` rounds ago.
+    rings: Vec<VecDeque<Vec<Vec<f32>>>>,
+    /// This round's payloads per slot; committed to the rings at the
+    /// next `begin_step` (a round must never read its own publish as
+    /// history).
+    staged: Vec<Vec<Vec<f32>>>,
+    /// Retired ring entries recycled as staging buffers (keeps the
+    /// async step loop allocation-free after warmup).
+    spare: Vec<Vec<Vec<f32>>>,
+    /// Slot the in-flight exchange resolves against.
+    cur_slot: usize,
+    /// Exchanges seen this round (the slot allocator).
+    seen: usize,
+    /// Ring depth = the schedule's staleness bound τ.
+    depth: usize,
+}
+
 /// A comm engine that masks, renormalizes and staleness-injects a
-/// nominal engine's rows according to a [`FaultPlan`].
-#[derive(Debug, Clone)]
+/// nominal engine's rows according to a [`FaultPlan`] — and, when an
+/// [`AsyncSchedule`] is attached, replays the discrete-event clock
+/// sim's bounded staleness from per-slot ring caches (DESIGN.md §8).
+#[derive(Debug)]
 pub struct FaultyEngine {
     plan: FaultPlan,
     n: usize,
@@ -89,8 +124,24 @@ pub struct FaultyEngine {
     /// rounds (da-dmsgd exchanges momentum AND parameters) would mix a
     /// cached payload of the wrong kind, so for them straggle/stale
     /// faults degrade to symmetric edge masking instead: the
-    /// deadline-missed message is lost, not replayed.
+    /// deadline-missed message is lost, not replayed. (The async ring
+    /// caches below are per-slot and exempt from this restriction.)
     stale_capable: bool,
+    /// Bounded-staleness schedule from `sim::clock` (None = the PR-2
+    /// synchronous behavior, bit for bit).
+    async_sched: Option<AsyncSchedule>,
+    /// Will any mix ever read the ring history? True when the schedule
+    /// realized staleness OR the fault plan wants stale replay. False
+    /// keeps `begin_exchange` a no-op, so all-fresh async runs (uniform
+    /// clocks, τ = 0) pay zero copies.
+    ring_needed: bool,
+    /// Parallel to `entries`: ring age this entry resolves at (0 =
+    /// fresh `src`). Only nonzero while an async schedule is attached;
+    /// fault-origin stales fold in at age 1.
+    async_age: Vec<u16>,
+    /// Per-row flag for the async resolver path.
+    row_has_async: Vec<bool>,
+    slots: Mutex<SlotCaches>,
     stats: FaultStats,
 }
 
@@ -106,8 +157,44 @@ impl FaultyEngine {
             cache: Vec::new(),
             cache_warm: false,
             stale_capable: true,
+            async_sched: None,
+            ring_needed: false,
+            async_age: Vec::new(),
+            row_has_async: Vec::new(),
+            slots: Mutex::new(SlotCaches::default()),
             stats: FaultStats::default(),
         }
+    }
+
+    /// Attach a bounded-staleness schedule from the discrete-event
+    /// clock sim. Entries the schedule marks stale resolve against
+    /// per-exchange-slot ring caches of past wire payloads (recorded by
+    /// [`CommEngine::begin_exchange`]); fault-origin stales fold into
+    /// the same rings at age 1 and the trainer-driven single cache goes
+    /// unused ([`FaultyEngine::needs_publish_cache`] turns false).
+    pub fn set_async(&mut self, sched: AsyncSchedule) {
+        // The ring must cover the schedule's window AND the age-1
+        // replay fault stales need — a τ = 0 window with a straggle/
+        // stale fault plan still keeps one round of history (otherwise
+        // those faults would silently become no-ops). Conversely, an
+        // all-fresh schedule with no stale-wanting plan never reads the
+        // rings, so the recording path stays off entirely.
+        let wants_fault_stale = self.plan.spec.wants_stale();
+        self.slots.get_mut().unwrap().depth = sched.tau().max(wants_fault_stale as usize);
+        self.ring_needed = sched.max_staleness() > 0 || wants_fault_stale;
+        self.async_sched = Some(sched);
+    }
+
+    /// Does the attached schedule ever deliver a stale payload? False
+    /// when no schedule is attached or when it realized all-fresh
+    /// (uniform clocks / τ = 0) — the trainer's time-varying guard keys
+    /// off this so all-fresh async runs stay bitwise synchronous.
+    pub fn async_engaged(&self) -> bool {
+        self.async_sched.as_ref().is_some_and(|s| s.max_staleness() > 0)
+    }
+
+    pub fn async_schedule(&self) -> Option<&AsyncSchedule> {
+        self.async_sched.as_ref()
     }
 
     /// Disable stale-message substitution (multi-payload optimizers):
@@ -130,14 +217,44 @@ impl FaultyEngine {
         !self.plan.spec.is_zero()
     }
 
-    /// Does this engine need `record_publish` after each round?
+    /// Does this engine need `record_publish` after each round? Not in
+    /// async mode: there the per-slot rings recorded by
+    /// `begin_exchange` hold the history, including what fault-origin
+    /// stales replay.
     pub fn needs_publish_cache(&self) -> bool {
-        self.stale_capable && self.plan.spec.wants_stale()
+        self.stale_capable && self.plan.spec.wants_stale() && self.async_sched.is_none()
     }
 
     /// Realize step `step`'s faults over the nominal engine: rebuild the
-    /// masked + renormalized rows in place, O(n + edges).
+    /// masked + renormalized rows in place, O(n + edges). With an async
+    /// schedule attached, also commit last round's staged payloads to
+    /// the ring history and stamp each surviving entry with the age the
+    /// schedule assigns it at this global step.
     pub fn begin_step(&mut self, step: usize, nominal: &dyn CommEngine) {
+        // Commit staged payloads: they are now one round old. Retired
+        // entries past the ring depth are recycled as staging buffers.
+        if self.ring_needed {
+            let s = self.slots.get_mut().unwrap();
+            for slot in 0..s.staged.len() {
+                if s.staged[slot].is_empty() {
+                    continue;
+                }
+                let staged = std::mem::take(&mut s.staged[slot]);
+                s.rings[slot].push_front(staged);
+                if s.rings[slot].len() > s.depth.max(1) {
+                    if let Some(old) = s.rings[slot].pop_back() {
+                        s.spare.push(old);
+                    }
+                }
+            }
+            s.seen = 0;
+            s.cur_slot = 0;
+        }
+        // Fault-origin stales need one round of ring history before
+        // they can replay (same warmup rule as the PR-2 cache).
+        let async_warm = self.async_sched.is_some()
+            && self.slots.get_mut().unwrap().rings.first().is_some_and(|r| !r.is_empty());
+        let sched = self.async_sched.as_ref();
         let n = nominal.n();
         self.n = n;
         let faults = self.plan.node_faults(step, n);
@@ -145,30 +262,54 @@ impl FaultyEngine {
         self.entries.clear();
         self.stale.clear();
         self.row_has_stale.clear();
+        self.async_age.clear();
+        self.row_has_async.clear();
         self.row_ptr.push(0);
         let warm = self.cache_warm;
         let (mut realized_dir, mut masked_dir, mut stale_dir) = (0usize, 0usize, 0usize);
+        let mut async_stale_dir = 0usize;
         for i in 0..n {
             // Weight folded back into w_ii from this row's masked edges.
             let mut returned = 0.0f64;
             let mut self_slot = None;
             let mut any_stale = false;
+            let mut any_async = false;
+            // Schedule row for this step (None past the horizon → all
+            // fresh), aligned by non-self ordinal with the nominal row.
+            let srow = sched.and_then(|sc| sc.staleness(step, i));
+            let mut ord = 0usize;
             for &(j, w) in nominal.row(i) {
                 let ju = j as usize;
                 if ju == i {
                     self_slot = Some(self.entries.len());
                     self.entries.push((j, w));
                     self.stale.push(false);
+                    self.async_age.push(0);
                     continue;
                 }
+                let sched_age = match srow {
+                    Some(ss) => {
+                        debug_assert_eq!(
+                            sched.map(|sc| sc.neighbors(i)[ord]),
+                            Some(j),
+                            "async schedule misaligned with the nominal rows"
+                        );
+                        let a = ss[ord];
+                        ord += 1;
+                        a
+                    }
+                    None => 0,
+                };
                 let mut masked = faults.dropped[i]
                     || faults.dropped[ju]
                     || self.plan.link_failed(step, i, ju);
-                if !self.stale_capable {
+                if !self.stale_capable && sched.is_none() {
                     // No faithful stale replay: the deadline-missed
                     // message is lost. Symmetric predicate (either
                     // endpoint straggling kills the whole exchange) so
                     // the renormalized weights stay doubly stochastic.
+                    // In async mode the per-slot rings replay the right
+                    // payload kind, so multi-payload rounds are exempt.
                     masked = masked
                         || faults.straggler[i]
                         || faults.straggler[ju]
@@ -179,14 +320,27 @@ impl FaultyEngine {
                     masked_dir += 1;
                     continue;
                 }
-                let is_stale = self.stale_capable
-                    && warm
+                let fault_stale = (self.stale_capable || sched.is_some())
+                    && if sched.is_some() { async_warm } else { warm }
                     && (faults.straggler[ju] || self.plan.link_stale(step, i, ju));
                 self.entries.push((j, w));
-                self.stale.push(is_stale);
-                any_stale |= is_stale;
                 realized_dir += 1;
-                if is_stale {
+                if sched.is_some() {
+                    // Async resolver: fault stales fold in at age 1;
+                    // the legacy single-cache flags stay off.
+                    let age = sched_age.max(fault_stale as u16);
+                    self.stale.push(false);
+                    self.async_age.push(age);
+                    any_async |= age > 0;
+                    if sched_age > 0 {
+                        async_stale_dir += 1;
+                    }
+                } else {
+                    self.stale.push(fault_stale);
+                    self.async_age.push(0);
+                    any_stale |= fault_stale;
+                }
+                if fault_stale {
                     stale_dir += 1;
                 }
             }
@@ -197,6 +351,7 @@ impl FaultyEngine {
             self.entries[slot].1 += returned as f32;
             self.row_ptr.push(self.entries.len() as u32);
             self.row_has_stale.push(any_stale);
+            self.row_has_async.push(any_async);
         }
         self.stats.steps += 1;
         self.stats.nominal_edges += nominal.num_edges();
@@ -204,6 +359,7 @@ impl FaultyEngine {
         self.stats.realized_edges += realized_dir / 2;
         self.stats.masked_edges += masked_dir / 2;
         self.stats.stale_messages += stale_dir;
+        self.stats.async_stale_messages += async_stale_dir;
         self.stats.dropped_node_steps += faults.dropped.iter().filter(|&&d| d).count();
         self.stats.straggler_node_steps +=
             faults.straggler.iter().filter(|&&s| s).count();
@@ -223,6 +379,60 @@ impl FaultyEngine {
         }
         self.cache_warm = true;
     }
+
+    /// The async mix resolver: entries aged `a ≥ 1` read the current
+    /// exchange slot's ring at depth `a − 1` (the payload of `a` rounds
+    /// ago), fresh entries read `src`. One lock per stale row; the ring
+    /// is read-only during the fan-out, so parallel == serial holds.
+    fn mix_node_async(
+        &self,
+        i: usize,
+        start: usize,
+        end: usize,
+        src: &[Vec<f32>],
+        out: &mut [f32],
+    ) {
+        let row = &self.entries[start..end];
+        let age = &self.async_age[start..end];
+        let slots = self.slots.lock().unwrap();
+        assert!(
+            slots.cur_slot < slots.rings.len(),
+            "async staleness requires exchanges to flow through gossip_exchange \
+             (begin_exchange never ran for node {i})"
+        );
+        let ring = &slots.rings[slots.cur_slot];
+        fn pick<'a>(
+            k: usize,
+            row: &[RowEntry],
+            age: &[u16],
+            ring: &'a VecDeque<Vec<Vec<f32>>>,
+            src: &'a [Vec<f32>],
+        ) -> &'a [f32] {
+            let j = row[k].0 as usize;
+            match age[k] {
+                0 => &src[j],
+                a => &ring[(a - 1) as usize][j],
+            }
+        }
+        let len = row.len();
+        let w0 = row[0].1;
+        for (o, &x) in out.iter_mut().zip(pick(0, row, age, ring, src)) {
+            *o = w0 * x;
+        }
+        let mut k = 1;
+        while k + 1 < len {
+            let (wa, wb) = (row[k].1, row[k + 1].1);
+            let xa = pick(k, row, age, ring, src);
+            let xb = pick(k + 1, row, age, ring, src);
+            for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                *o += wa * a + wb * b;
+            }
+            k += 2;
+        }
+        if k < len {
+            math::axpy(out, row[k].1, pick(k, row, age, ring, src));
+        }
+    }
 }
 
 impl CommEngine for FaultyEngine {
@@ -234,13 +444,52 @@ impl CommEngine for FaultyEngine {
         &self.entries[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
     }
 
-    /// Resolve stale entries against the publish cache; rows without
-    /// stale entries take the exact default kernel. Allocation-free
-    /// like [`mix_row`], with the same pairwise term fusion — only the
+    /// Snapshot the exchange's wire view into this round's staging slot
+    /// (async mode only; a no-op otherwise, so the PR-2 paths cost
+    /// nothing). Runs once per exchange on the orchestrating thread,
+    /// before the per-row mix fan-out — the parallel mixes then only
+    /// read, so parallel == serial still holds.
+    fn begin_exchange(&self, src: &[Vec<f32>]) {
+        if !self.ring_needed {
+            // No schedule, all-fresh schedule, or no stale-wanting
+            // fault plan: nothing will ever read the rings.
+            return;
+        }
+        let mut s = self.slots.lock().unwrap();
+        let slot = s.seen;
+        s.seen += 1;
+        s.cur_slot = slot;
+        while s.rings.len() <= slot {
+            s.rings.push(VecDeque::new());
+            s.staged.push(Vec::new());
+        }
+        let same_shape = |b: &Vec<Vec<f32>>| {
+            b.len() == src.len() && b.first().map(|r| r.len()) == src.first().map(|r| r.len())
+        };
+        let buf = match s.spare.pop() {
+            Some(mut b) if same_shape(&b) => {
+                for (dst, src_row) in b.iter_mut().zip(src) {
+                    dst.copy_from_slice(src_row);
+                }
+                b
+            }
+            _ => src.to_vec(),
+        };
+        s.staged[slot] = buf;
+    }
+
+    /// Resolve stale entries against the publish cache (fault mode) or
+    /// the per-slot ring history (async mode); rows without stale
+    /// entries take the exact default kernel. Allocation-free like
+    /// [`mix_row`], with the same pairwise term fusion — only the
     /// per-entry source lookup differs.
     fn mix_node(&self, i: usize, src: &[Vec<f32>], out: &mut [f32]) {
         let (start, end) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
         let row = &self.entries[start..end];
+        if self.row_has_async.get(i).copied().unwrap_or(false) {
+            self.mix_node_async(i, start, end, src, out);
+            return;
+        }
         if !self.row_has_stale[i] {
             mix_row(row, src, out);
             return;
@@ -405,6 +654,130 @@ mod tests {
         assert!(f.row_sum_error() < 1e-6);
         assert_eq!(f.stats().stale_messages, 0);
         assert_eq!(f.stats().masked_edges, 6);
+    }
+
+    #[test]
+    fn all_fresh_async_schedule_is_bitwise_nominal() {
+        // A τ=2 schedule whose realized ages are all zero (what uniform
+        // clocks produce) must leave rows AND mixing bit-identical to
+        // the plain zero-rate engine — the foundation of the trainer's
+        // "async(uniform, tau=0) == sync" guarantee.
+        let topo = Topology::build(Kind::SymExp, 8);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let nnz = (0..8).map(|i| nominal.row(i).len() - 1).sum::<usize>();
+        let mut f = engine("");
+        f.set_async(super::super::clock::AsyncSchedule::handmade(
+            &nominal,
+            2,
+            vec![vec![0u16; nnz]; 3],
+        ));
+        assert!(!f.async_engaged(), "all-fresh schedule must not engage the guard");
+        let src: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32, -(i as f32)]).collect();
+        for step in 0..3 {
+            f.begin_step(step, &nominal);
+            f.begin_exchange(&src);
+            for i in 0..8 {
+                assert_eq!(f.row(i), nominal.row(i), "step {step} row {i}");
+                let mut a = vec![0.0f32; 2];
+                let mut b = vec![0.0f32; 2];
+                f.mix_node(i, &src, &mut a);
+                nominal.mix_node(i, &src, &mut b);
+                assert_eq!(a, b, "step {step} row {i} mix");
+            }
+        }
+    }
+
+    #[test]
+    fn async_ages_replay_the_right_round_from_the_ring() {
+        // Ring n=4; node 0's two neighbor entries aged 1 and 2 at step
+        // 2: the mix must combine the fresh self entry with the
+        // payloads staged 1 and 2 rounds ago.
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let nnz = (0..4).map(|i| nominal.row(i).len() - 1).sum::<usize>();
+        // Node 0's row is [(0, self), (1, w), (3, w)] → non-self
+        // ordinals 0 and 1 of the CSR.
+        let mut step2 = vec![0u16; nnz];
+        step2[0] = 1; // payload of round 1
+        step2[1] = 2; // payload of round 0
+        let mut f = engine("");
+        f.set_async(super::super::clock::AsyncSchedule::handmade(
+            &nominal,
+            2,
+            vec![vec![0u16; nnz], vec![0u16; nnz], step2],
+        ));
+        assert!(f.async_engaged());
+        assert!(!f.needs_publish_cache(), "rings replace the trainer-driven cache");
+        let round: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|r| (0..4).map(|i| vec![100.0 * r as f32 + i as f32]).collect())
+            .collect();
+        let mut out = vec![0.0f32];
+        for step in 0..2 {
+            f.begin_step(step, &nominal);
+            f.begin_exchange(&round[step]);
+            f.mix_node(0, &round[step], &mut out); // fresh rounds
+        }
+        f.begin_step(2, &nominal);
+        f.begin_exchange(&round[2]);
+        f.mix_node(0, &round[2], &mut out);
+        let row = f.row(0);
+        let want: f32 = row
+            .iter()
+            .map(|&(j, w)| {
+                let v = match j {
+                    0 => round[2][0][0], // self: fresh
+                    1 => round[1][1][0], // age 1 → round 1
+                    3 => round[0][3][0], // age 2 → round 0
+                    _ => unreachable!(),
+                };
+                w * v
+            })
+            .sum();
+        assert!((out[0] - want).abs() < 1e-6, "{} vs {want}", out[0]);
+        assert_eq!(f.stats().async_stale_messages, 2);
+    }
+
+    #[test]
+    fn multi_slot_exchanges_keep_their_own_history() {
+        // Two exchanges per round (the da-dmsgd shape) with different
+        // payloads: an aged entry must replay its OWN slot's past
+        // payload, never the other exchange's.
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let nnz = (0..4).map(|i| nominal.row(i).len() - 1).sum::<usize>();
+        let mut step1 = vec![0u16; nnz];
+        step1[0] = 1; // node 0's first neighbor (node 1), one round old
+        let mut f = engine("");
+        f.set_async(super::super::clock::AsyncSchedule::handmade(
+            &nominal,
+            1,
+            vec![vec![0u16; nnz], step1],
+        ));
+        let momentum: Vec<Vec<f32>> = (0..4).map(|i| vec![10.0 + i as f32]).collect();
+        let params: Vec<Vec<f32>> = (0..4).map(|i| vec![20.0 + i as f32]).collect();
+        let mut out = vec![0.0f32];
+        f.begin_step(0, &nominal);
+        f.begin_exchange(&momentum); // slot 0, round 0
+        f.mix_node(0, &momentum, &mut out);
+        f.begin_exchange(&params); // slot 1, round 0
+        f.mix_node(0, &params, &mut out);
+        f.begin_step(1, &nominal);
+        let fresh_m: Vec<Vec<f32>> = (0..4).map(|i| vec![30.0 + i as f32]).collect();
+        let fresh_p: Vec<Vec<f32>> = (0..4).map(|i| vec![40.0 + i as f32]).collect();
+        let expect = |fresh: &[Vec<f32>], old: &[Vec<f32>]| -> f32 {
+            f.row(0)
+                .iter()
+                .map(|&(j, w)| w * if j == 1 { old[1][0] } else { fresh[j as usize][0] })
+                .sum()
+        };
+        f.begin_exchange(&fresh_m);
+        f.mix_node(0, &fresh_m, &mut out);
+        let want_m = expect(&fresh_m, &momentum);
+        assert!((out[0] - want_m).abs() < 1e-6, "slot 0: {} vs {want_m}", out[0]);
+        f.begin_exchange(&fresh_p);
+        f.mix_node(0, &fresh_p, &mut out);
+        let want_p = expect(&fresh_p, &params);
+        assert!((out[0] - want_p).abs() < 1e-6, "slot 1: {} vs {want_p}", out[0]);
     }
 
     #[test]

@@ -21,9 +21,20 @@
 //! (`--faults drop=0.1,straggle=0.05,seed=7`); `experiments::fig_faults`
 //! and `examples/fault_sweep.rs` sweep the DecentLaM-vs-DmSGD bias gap
 //! as fault rates grow.
+//!
+//! On top of the fault layer, [`clock`] adds the asynchronous regime
+//! (DESIGN.md §8): a deterministic discrete-event engine with
+//! heterogeneous per-node clocks whose bounded-staleness schedules the
+//! [`engine::FaultyEngine`] replays through per-exchange-slot ring
+//! caches — `--async tau=2,spread=4,jitter=0.2`, composing with both
+//! codecs and faults. `experiments::fig_async` and
+//! `examples/async_sweep.rs` sweep time-to-target-loss against the
+//! heterogeneity spread.
 
+pub mod clock;
 pub mod engine;
 pub mod plan;
 
+pub use clock::{simulate_barrier, simulate_gossip, AsyncReport, AsyncSchedule, AsyncSpec};
 pub use engine::{FaultStats, FaultyEngine};
 pub use plan::{FaultPlan, FaultSpec, StepFaults};

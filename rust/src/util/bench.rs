@@ -1,6 +1,10 @@
 //! Micro-benchmark harness (no `criterion` offline): warmup + timed
 //! iterations, robust statistics, throughput reporting. Used by every
 //! target in `rust/benches/` (all declared `harness = false`).
+//!
+//! `--json <path>` (see [`Bench::write_json_arg`]) dumps the collected
+//! measurements as one JSON object keyed by case name — what CI merges
+//! into the `BENCH_<PR>.json` perf-trajectory artifact.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -154,6 +158,48 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Machine-readable dump of every collected case: one JSON object
+    /// keyed by case name, values carrying the robust statistics
+    /// (`median_ns` is the perf-trajectory headline; mean/percentiles
+    /// and iteration counts ride along for context).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        for (idx, m) in self.results.iter().enumerate() {
+            if idx > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "  \"{}\": {{\"median_ns\": {:.3}, \"mean_ns\": {:.3}, \"p10_ns\": {:.3}, \
+                 \"p90_ns\": {:.3}, \"iters\": {}}}",
+                json_escape(&m.name),
+                m.median_ns,
+                m.mean_ns,
+                m.p10_ns,
+                m.p90_ns,
+                m.iters
+            ));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    /// Honor a bench target's `--json <path>` flag: write [`Bench::to_json`]
+    /// to the path and say so. No flag = no-op, so every target can call
+    /// this unconditionally at the end of `main`.
+    pub fn write_json_arg(&self, args: &super::cli::Args) -> std::io::Result<()> {
+        if let Some(path) = args.get("json") {
+            std::fs::write(path, self.to_json())?;
+            println!("wrote {} cases to {path}", self.results.len());
+        }
+        Ok(())
+    }
+}
+
+/// Minimal JSON string escaping (case names are ASCII identifiers plus
+/// spaces/=/punctuation; quotes and backslashes are the only hazards).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Re-export of `black_box` so bench targets only import this module.
@@ -191,6 +237,28 @@ mod tests {
             items_per_iter: None,
         };
         assert!((m.gibps().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_dump_is_well_formed_and_keyed_by_case() {
+        std::env::set_var("DECENTLAM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        b.case("alpha d=64", || {
+            acc = opaque(acc.wrapping_add(1));
+        });
+        b.case("beta \"quoted\"", || {
+            acc = opaque(acc.wrapping_add(3));
+        });
+        let json = b.to_json();
+        let v = crate::util::json::Value::parse(&json).expect("bench JSON must parse");
+        assert_eq!(v.as_obj().unwrap().len(), 2);
+        let median =
+            v.get("alpha d=64").unwrap().get("median_ns").unwrap().as_f64().unwrap();
+        assert!(median > 0.0);
+        let iters = v.get("alpha d=64").unwrap().get("iters").unwrap().as_usize().unwrap();
+        assert!(iters > 0);
+        assert!(v.get("beta \"quoted\"").is_ok(), "escaping must round-trip");
     }
 
     #[test]

@@ -104,6 +104,12 @@ pub struct Config {
     /// (empty = raw fp32; see `comm::codec::CodecSpec::parse`). The
     /// codec seed defaults to `seed` when the spec omits `seed=`.
     pub codec: String,
+    /// Asynchronous execution spec, e.g. `tau=2,spread=4,jitter=0.2`
+    /// (empty = synchronous rounds; see `sim::clock::AsyncSpec::parse`).
+    /// Nodes run on heterogeneous simulated clocks and mix neighbor
+    /// payloads up to `tau` rounds stale; requires a static topology.
+    /// The clock seed defaults to `seed` when the spec omits `seed=`.
+    pub async_mode: String,
 }
 
 impl Default for Config {
@@ -132,6 +138,7 @@ impl Default for Config {
             threads: 0,
             faults: String::new(),
             codec: String::new(),
+            async_mode: String::new(),
         }
     }
 }
@@ -217,6 +224,12 @@ impl Config {
                 // CLI; seed resolution happens in Trainer::new.
                 crate::comm::codec::CodecSpec::parse(v, 0)?;
                 self.codec = v.into();
+            }
+            "async" => {
+                // Eager validation like --faults/--codec. A bare
+                // `--async` parses as "true" = all defaults.
+                crate::sim::AsyncSpec::parse(v, 0)?;
+                self.async_mode = v.into();
             }
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
@@ -348,6 +361,17 @@ mod tests {
         assert!(c.apply_kv("codec", "zfp").is_err());
         assert!(c.apply_kv("codec", "topk,k=2").is_err());
         assert!(c.apply_kv("codec", "int8,gremlins=1").is_err());
+    }
+
+    #[test]
+    fn async_key_validated_eagerly() {
+        let mut c = Config::default();
+        c.apply_kv("async", "tau=2,spread=4,jitter=0.2,seed=7").unwrap();
+        assert_eq!(c.async_mode, "tau=2,spread=4,jitter=0.2,seed=7");
+        c.apply_kv("async", "true").unwrap(); // bare --async: defaults
+        assert!(c.apply_kv("async", "tau=99").is_err());
+        assert!(c.apply_kv("async", "spread=0.1").is_err());
+        assert!(c.apply_kv("async", "gremlins=1").is_err());
     }
 
     #[test]

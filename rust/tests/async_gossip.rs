@@ -1,0 +1,325 @@
+//! Property tests for the discrete-event asynchronous gossip runtime
+//! (DESIGN.md §8): the three pinned invariants of the clock layer —
+//!
+//! 1. async(uniform speeds, zero jitter, τ = 0) is **bitwise equal** to
+//!    the synchronous `Trainer`;
+//! 2. the event queue and the realized schedule are replay-identical
+//!    across thread counts and shuffled insertion orders;
+//! 3. simulated wall time matches the closed-form `per_iter_comm_s`
+//!    prediction within 1% on a homogeneous ring —
+//!
+//! plus staleness-bound, composition (faults × codec × async) and
+//! multi-payload checks.
+
+use decentlam::comm::{CommCost, CommStats, PayloadBytes};
+use decentlam::coordinator::Trainer;
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::{mlp, Workload};
+use decentlam::optim::CommPattern;
+use decentlam::sim::clock::{simulate_barrier, simulate_gossip, AsyncSpec, Event, EventQueue, Phase};
+use decentlam::topology::{Kind, SparseWeights, Topology};
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::rng::Pcg64;
+
+fn workload(nodes: usize, seed: u64) -> Workload {
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 128,
+        eval_samples: 128,
+        dirichlet_alpha: 0.3,
+        seed,
+        ..Default::default()
+    });
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 16, seed)
+}
+
+fn cfg(optimizer: &str, nodes: usize, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = nodes;
+    cfg.steps = steps;
+    cfg.total_batch = 32 * nodes;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.03;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.topology = "ring".into();
+    cfg.seed = 5;
+    cfg
+}
+
+// ---- invariant 1: uniform + tau=0 is bitwise synchronous ------------
+
+#[test]
+fn async_uniform_tau0_bitwise_equals_sync_across_optimizers() {
+    // Every gossip optimizer, including the two-payload da-dmsgd, on a
+    // regular AND an irregular topology.
+    for topology in ["ring", "star"] {
+        for opt in ["dsgd", "dmsgd", "decentlam", "qg-dmsgd", "awc-dmsgd", "d2-dmsgd", "da-dmsgd"]
+        {
+            let run = |asynch: &str| {
+                let mut c = cfg(opt, 6, 20);
+                c.topology = topology.into();
+                c.async_mode = asynch.into();
+                Trainer::new(c, workload(6, 5)).unwrap().run().losses
+            };
+            assert_eq!(
+                run(""),
+                run("tau=0,spread=1,jitter=0"),
+                "{opt} on {topology}: async(uniform, tau=0) must be bitwise synchronous"
+            );
+        }
+    }
+}
+
+#[test]
+fn async_uniform_regular_graph_is_fresh_even_with_positive_tau() {
+    // Uniform clocks on a regular graph run in lockstep: τ > 0 gives
+    // slack nothing uses, so the run stays bitwise synchronous.
+    let run = |asynch: &str| {
+        let mut c = cfg("decentlam", 8, 20);
+        c.async_mode = asynch.into();
+        Trainer::new(c, workload(8, 5)).unwrap().run().losses
+    };
+    assert_eq!(run(""), run("tau=2,spread=1,jitter=0"));
+}
+
+// ---- invariant 2: replay identity -----------------------------------
+
+#[test]
+fn event_queue_pop_order_is_insertion_order_free() {
+    // Build a deterministic event population (each node once — the
+    // queue's uniqueness domain), pop in every shuffled insertion
+    // order: the sequence must be identical.
+    let mut events = Vec::new();
+    for node in 0..257u32 {
+        events.push(Event {
+            // Quantized times: many exact ties, so the (phase, node)
+            // tiebreak actually decides the order.
+            time: (node % 7) as f64 * 0.5,
+            phase: if node % 3 == 0 { Phase::Publish } else { Phase::Gather },
+            node,
+        });
+    }
+    let reference: Vec<Event> = {
+        let mut q = EventQueue::new();
+        for &e in &events {
+            q.push(e);
+        }
+        std::iter::from_fn(move || q.pop()).collect()
+    };
+    assert_eq!(reference.len(), events.len());
+    for shuffle_seed in [1u64, 7, 99] {
+        let mut shuffled = events.clone();
+        Pcg64::seeded(shuffle_seed).shuffle(&mut shuffled);
+        let mut q = EventQueue::new();
+        for &e in &shuffled {
+            q.push(e);
+        }
+        let got: Vec<Event> = std::iter::from_fn(move || q.pop()).collect();
+        assert_eq!(got, reference, "pop order changed under shuffle seed {shuffle_seed}");
+    }
+    // And the order is the documented (time, phase, node) total order.
+    for w in reference.windows(2) {
+        assert!(w[0] <= w[1]);
+    }
+}
+
+#[test]
+fn schedule_and_training_replay_across_thread_counts() {
+    let sw = SparseWeights::metropolis_hastings(&Topology::build(Kind::Ring, 8));
+    let spec = AsyncSpec::parse("tau=2,spread=6,jitter=0.3,seed=9", 0).unwrap();
+    let a = simulate_gossip(&spec, &sw, 4096.0, 1, 50);
+    let b = simulate_gossip(&spec, &sw, 4096.0, 1, 50);
+    assert_eq!(a, b, "schedule must replay identically");
+
+    let run = |threads: usize| {
+        let mut c = cfg("decentlam", 8, 30);
+        c.threads = threads;
+        c.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+        Trainer::new(c, workload(8, 5)).unwrap().run().losses
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(0), "async training must be thread-count free");
+    assert_eq!(serial, run(3));
+    assert!(serial.iter().all(|l| l.is_finite()));
+}
+
+// ---- invariant 3: simulated time vs the closed-form cost model ------
+
+#[test]
+fn simulated_wall_time_within_1pct_of_formula_on_homogeneous_ring() {
+    let n = 16;
+    let sw = SparseWeights::metropolis_hastings(&Topology::build(Kind::Ring, n));
+    let stats = CommStats::of_engine(&sw);
+    let bytes = 25.5e6 * 4.0; // the Fig. 6 ResNet-50 payload
+    let spec = AsyncSpec::parse("tau=1,spread=1,jitter=0,compute=12", 0).unwrap();
+    let steps = 20;
+    let cost = CommCost::new(spec.link());
+    let payload = PayloadBytes::uniform(bytes);
+
+    // Gossip: per-iteration event time vs compute + neighbor exchange.
+    let sched = simulate_gossip(&spec, &sw, bytes, 1, steps);
+    let sim = sched.report().makespan_s / steps as f64;
+    let formula =
+        12.0e-3 + cost.per_iter_comm_s(CommPattern::Neighbor { payloads: 1 }, &stats, payload);
+    let rel = (sim - formula).abs() / formula;
+    assert!(rel < 0.01, "gossip: sim {sim} vs formula {formula} ({:.4}% off)", 100.0 * rel);
+
+    // All-reduce barrier: per-iteration vs compute + ring all-reduce.
+    let ar = cost.allreduce_s(n, bytes);
+    let (cum, _) = simulate_barrier(&spec, n, ar, steps);
+    let sim_ar = cum[steps - 1] / steps as f64;
+    let formula_ar = 12.0e-3 + ar;
+    let rel_ar = (sim_ar - formula_ar).abs() / formula_ar;
+    assert!(rel_ar < 0.01, "barrier: sim {sim_ar} vs formula {formula_ar}");
+}
+
+// ---- staleness semantics --------------------------------------------
+
+#[test]
+fn staleness_is_bounded_by_tau_and_history() {
+    let sw = SparseWeights::metropolis_hastings(&Topology::build(Kind::Ring, 12));
+    for tau in [0usize, 1, 3] {
+        let spec = AsyncSpec::parse(&format!("tau={tau},spread=8,jitter=0.4,seed=3"), 0).unwrap();
+        let sched = simulate_gossip(&spec, &sw, 4096.0, 1, 50);
+        let r = sched.report();
+        assert!(
+            r.max_staleness as usize <= tau,
+            "tau={tau}: delivered age {} beyond the window",
+            r.max_staleness
+        );
+        if tau == 0 {
+            assert_eq!(r.mean_staleness, 0.0, "tau=0 must be barrier-exact");
+            assert!(r.total_wait_s > 0.0, "tau=0 under an 8x spread must wait");
+        } else {
+            assert!(r.max_staleness >= 1, "tau={tau}: an 8x spread never went stale");
+        }
+    }
+}
+
+#[test]
+fn async_run_descends_and_reports_staleness() {
+    let mut c = cfg("decentlam", 8, 60);
+    c.lr = 0.02;
+    c.async_mode = "tau=2,spread=6,jitter=0.2,seed=4".into();
+    let mut t = Trainer::new(c, workload(8, 5)).unwrap();
+    let report = t.run();
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let first = report.losses[..5].iter().sum::<f64>() / 5.0;
+    let last = report.losses[report.losses.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(last < first, "no descent under bounded staleness ({first} -> {last})");
+    let a = t.async_report().unwrap();
+    assert_eq!(a.step_done_s.len(), 60);
+    assert!(a.step_done_s.windows(2).all(|w| w[0] < w[1]), "time must advance");
+    assert!(a.max_staleness >= 1 && a.max_staleness <= 2);
+    assert!(a.stale_fraction > 0.0 && a.stale_fraction < 1.0);
+    let stats = t.fault_stats().expect("async gossip runs carry engine stats");
+    assert!(stats.async_stale_messages > 0);
+    assert_eq!(stats.masked_edges, 0, "staleness must not mask edges");
+}
+
+// ---- composition ------------------------------------------------------
+
+#[test]
+fn async_composes_with_faults_and_codecs_deterministically() {
+    let run = || {
+        let mut c = cfg("decentlam", 8, 40);
+        c.lr = 0.02;
+        c.async_mode = "tau=2,spread=4,jitter=0.2,seed=6".into();
+        c.faults = "drop=0.1,straggle=0.15,seed=8".into();
+        c.codec = "int8,ef=true,seed=2".into();
+        let mut t = Trainer::new(c, workload(8, 5)).unwrap();
+        let losses = t.run().losses;
+        let stats = *t.fault_stats().unwrap();
+        (losses, stats)
+    };
+    let (a, sa) = run();
+    let (b, sb) = run();
+    assert_eq!(a, b, "faults x codec x async must replay byte-identically");
+    assert_eq!(sa, sb);
+    assert!(a.iter().all(|l| l.is_finite()));
+    assert!(sa.masked_edges > 0, "drop=0.1 never masked an edge");
+    assert!(
+        sa.stale_messages + sa.async_stale_messages > 0,
+        "neither stragglers nor the clock spread ever delivered stale"
+    );
+}
+
+#[test]
+fn fault_stales_replay_even_at_tau_zero() {
+    // tau=0 means no CLOCK staleness, but straggle faults must still
+    // replay age-1 payloads from the ring history (regression: the ring
+    // depth covers fault stales even when the async window itself is 0
+    // — without that, straggle/stale faults under `--async tau=0` were
+    // silent no-ops: no replay AND no masking fallback).
+    let run = |faults: &str| {
+        let mut c = cfg("decentlam", 8, 30);
+        c.lr = 0.02;
+        c.async_mode = "tau=0,spread=4,jitter=0.2,seed=6".into();
+        c.faults = faults.into();
+        let mut t = Trainer::new(c, workload(8, 5)).unwrap();
+        let losses = t.run().losses;
+        let stats = *t.fault_stats().unwrap();
+        (losses, stats)
+    };
+    let (a, sa) = run("straggle=0.3,seed=8");
+    assert_eq!(a, run("straggle=0.3,seed=8").0, "must replay identically");
+    assert!(a.iter().all(|l| l.is_finite()));
+    assert!(sa.stale_messages > 0, "straggle=0.3 never delivered a stale replay at tau=0");
+    assert_eq!(sa.async_stale_messages, 0, "a tau=0 window never clock-stales");
+    // The replays actually reach training: different from fault-free.
+    let (b, sb) = run("");
+    assert_eq!(sb.stale_messages, 0);
+    assert_ne!(a, b, "stale replay had no effect on training");
+}
+
+#[test]
+fn multi_payload_async_replays_per_slot_history() {
+    // da-dmsgd's two exchanges per round get their own ring caches: the
+    // run must be finite, deterministic and thread-count free, with
+    // staleness realized and no masking downgrade.
+    let run = |threads: usize| {
+        let mut c = cfg("da-dmsgd", 8, 30);
+        c.lr = 0.02;
+        c.threads = threads;
+        c.async_mode = "tau=2,spread=6,jitter=0.3,seed=7".into();
+        let mut t = Trainer::new(c, workload(8, 5)).unwrap();
+        let losses = t.run().losses;
+        let stats = *t.fault_stats().unwrap();
+        (losses, stats)
+    };
+    let (a, sa) = run(0);
+    assert_eq!(a, run(0).0);
+    assert_eq!(a, run(1).0, "parallel != serial for multi-payload async");
+    assert!(a.iter().all(|l| l.is_finite()));
+    assert!(sa.async_stale_messages > 0);
+    assert_eq!(sa.masked_edges, 0);
+}
+
+// ---- guard rails ------------------------------------------------------
+
+#[test]
+fn async_guard_rails_reject_unsupported_shapes() {
+    // Time-varying topologies have no static event graph.
+    let mut c = cfg("decentlam", 6, 5);
+    c.topology = "one-peer-exp".into();
+    c.async_mode = "tau=1".into();
+    assert!(Trainer::new(c, workload(6, 5)).is_err());
+    // SlowMo's periodic all-reduce is a global barrier.
+    let mut c = cfg("slowmo", 6, 5);
+    c.async_mode = "tau=1".into();
+    assert!(Trainer::new(c, workload(6, 5)).is_err());
+    // PmSGD runs as the barrier baseline: report only, no staleness.
+    let mut c = cfg("pmsgd", 6, 8);
+    c.async_mode = "tau=2,spread=4,jitter=0.1".into();
+    let mut t = Trainer::new(c, workload(6, 5)).unwrap();
+    let r = t.run();
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(t.fault_stats().is_none());
+    let a = t.async_report().unwrap();
+    assert_eq!(a.max_staleness, 0);
+    assert_eq!(a.step_done_s.len(), 8);
+    assert!(a.total_wait_s > 0.0);
+}
