@@ -1,0 +1,77 @@
+//! Elastic-churn sweep driver: DmSGD vs DecentLaM vs PmSGD on a ring
+//! whose roster grows and shrinks mid-run — the elastic layer's
+//! bias-under-churn demonstration (DESIGN.md §9). Every source of
+//! randomness (data, topology, churn schedule) is seeded, so two
+//! identical invocations print byte-identical output.
+//!
+//! ```bash
+//! cargo run --release --example elastic_churn
+//! cargo run --release --example elastic_churn -- --nodes 8 --capacity 12 --steps 80
+//! cargo run --release --example elastic_churn -- --rate 0.05   # one column
+//! ```
+
+use decentlam::experiments::fig_elastic;
+use decentlam::util::cli::Args;
+use decentlam::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut opts = fig_elastic::Opts::default();
+    opts.steps = 120;
+    opts.apply_args(&args)?;
+
+    let (rows, table) = fig_elastic::run(&opts)?;
+    println!("{}", table.render());
+
+    // The bias-gap view: eval-loss degradation relative to each
+    // method's own churn-free cell, side by side. `degradation`
+    // returns empty when the sweep lacks a rate=0 baseline — no
+    // verdict then.
+    let dm = fig_elastic::degradation(&rows, "dmsgd");
+    let dl = fig_elastic::degradation(&rows, "decentlam");
+    if dm.is_empty() || dl.is_empty() {
+        println!("verdict: n/a (sweep has no rate=0 baseline to compare against)");
+        return Ok(());
+    }
+    let mut gap = Table::new(
+        "eval-loss degradation vs churn-free (lower = more robust to membership churn)",
+        &["rate", "dmsgd", "decentlam", "decentlam - dmsgd"],
+    );
+    let mut decentlam_no_worse = true;
+    for ((rate, dmd), (_, dld)) in dm.iter().zip(&dl) {
+        gap.row(vec![
+            format!("{rate}"),
+            format!("{dmd:+.4}"),
+            format!("{dld:+.4}"),
+            format!("{:+.4}", dld - dmd),
+        ]);
+        if *rate > 0.0 && *dld > dmd + 1e-9 {
+            decentlam_no_worse = false;
+        }
+    }
+    println!("{}", gap.render());
+    println!(
+        "{}",
+        if decentlam_no_worse {
+            "verdict: DecentLaM's eval loss degrades no faster than DmSGD's under churn"
+        } else {
+            "verdict: DecentLaM degraded FASTER than DmSGD on this sweep"
+        }
+    );
+
+    // Roster view: how much the fleet actually moved per rate.
+    let mut fleet = Table::new(
+        "realized membership churn (decentlam cells)",
+        &["rate", "joins", "leaves", "final n"],
+    );
+    for row in rows.iter().filter(|r| r.method == "decentlam") {
+        fleet.row(vec![
+            format!("{}", row.rate),
+            row.joins.to_string(),
+            row.leaves.to_string(),
+            row.final_nodes.to_string(),
+        ]);
+    }
+    println!("{}", fleet.render());
+    Ok(())
+}

@@ -141,12 +141,8 @@ const TAG_STOCHASTIC: u64 = 0xc0de_c517;
 
 impl StreamKey {
     fn rng(&self) -> Pcg64 {
-        let seed = self
-            .seed
-            .wrapping_add((self.step as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
-            ^ TAG_STOCHASTIC;
         let entity = ((self.node as u64) << 8) | (self.slot as u64 & 0xff);
-        Pcg64::new(seed, entity)
+        Pcg64::counter_keyed(self.seed, TAG_STOCHASTIC, self.step as u64, entity)
     }
 }
 
@@ -410,9 +406,19 @@ pub struct CodecState {
     wire: Vec<Vec<f32>>,
     /// Per-node encode scratch (reused every round, zipped with `wire`).
     scratch: Vec<EncodeScratch>,
+    /// Stable id of each dense row — the stochastic-rounding stream
+    /// identity. Identity `0..n` on fixed rosters (bit-compatible with
+    /// the pre-elastic engine); under churn [`CodecState::set_roster`]
+    /// keeps each physical node on its own stream across resizes.
+    ids: Vec<u32>,
     n: usize,
     d: usize,
 }
+
+/// Reserved exchange-slot id for joiner warm-start reconstruction —
+/// `StreamKey` packs the slot into the low 8 bits of the entity, so the
+/// regular slots (0, 1, …) never collide with it.
+const WARM_START_SLOT: usize = 0xff;
 
 impl CodecState {
     pub fn new(spec: &CodecSpec, n: usize, d: usize) -> CodecState {
@@ -424,6 +430,7 @@ impl CodecState {
             residuals: Vec::new(),
             wire: (0..n).map(|_| vec![0.0; d]).collect(),
             scratch: vec![EncodeScratch::default(); n],
+            ids: (0..n as u32).collect(),
             n,
             d,
         }
@@ -460,6 +467,7 @@ impl CodecState {
             self.residuals.push((0..n).map(|_| vec![0.0; d]).collect());
         }
         let (codec, seed, step) = (&self.codec, self.seed, self.step);
+        let ids = &self.ids;
         let residuals = &mut self.residuals[slot];
         exec.for_each_triple_mut(
             &mut self.wire,
@@ -467,7 +475,7 @@ impl CodecState {
             &mut self.scratch,
             |node, wire, residual, scratch| {
                 assert_eq!(src[node].len(), wire.len(), "payload dim mismatch");
-                let key = StreamKey { seed, step, node, slot };
+                let key = StreamKey { seed, step, node: ids[node] as usize, slot };
                 codec.encode(key, &src[node], residual, wire, scratch);
             },
         );
@@ -487,6 +495,96 @@ impl CodecState {
             .get(slot)
             .map(|r| crate::util::math::norm2(&r[node]))
             .unwrap_or(0.0)
+    }
+
+    /// Remap the per-node state to a new roster of stable ids (elastic
+    /// membership, DESIGN.md §9): surviving nodes carry their EF
+    /// residuals over, joiners start from zero residuals, and the
+    /// stochastic-rounding streams stay keyed to the stable id so the
+    /// quantization schedule follows physical nodes across resizes.
+    pub fn set_roster(&mut self, ids: &[u32]) {
+        let old_ids = std::mem::take(&mut self.ids);
+        let n = ids.len();
+        let d = self.d;
+        for slot in self.residuals.iter_mut() {
+            let mut old: Vec<Option<Vec<f32>>> =
+                std::mem::take(slot).into_iter().map(Some).collect();
+            *slot = ids
+                .iter()
+                .map(|id| match old_ids.iter().position(|o| o == id) {
+                    Some(p) => old[p].take().unwrap_or_else(|| vec![0.0; d]),
+                    None => vec![0.0; d],
+                })
+                .collect();
+        }
+        self.wire = (0..n).map(|_| vec![0.0; d]).collect();
+        self.scratch = vec![EncodeScratch::default(); n];
+        self.n = n;
+        self.ids = ids.to_vec();
+    }
+
+    /// Point the per-node state at a new roster WITHOUT carrying
+    /// residuals over — the resume path, where the snapshot supplies
+    /// them wholesale right after ([`CodecState::restore_residuals`]);
+    /// a [`CodecState::set_roster`] remap here would be thrown away.
+    pub fn reset_roster(&mut self, ids: &[u32]) {
+        let n = ids.len();
+        let d = self.d;
+        self.residuals.clear();
+        self.wire = (0..n).map(|_| vec![0.0; d]).collect();
+        self.scratch = vec![EncodeScratch::default(); n];
+        self.n = n;
+        self.ids = ids.to_vec();
+    }
+
+    /// EF residuals per (slot, dense node) — the codec's only
+    /// cross-round state; what a checkpoint captures (DESIGN.md §9).
+    pub fn export_residuals(&self) -> Vec<Vec<Vec<f32>>> {
+        self.residuals.clone()
+    }
+
+    /// Restore residuals captured by [`CodecState::export_residuals`].
+    pub fn restore_residuals(&mut self, residuals: Vec<Vec<Vec<f32>>>) -> Result<()> {
+        for (s, slot) in residuals.iter().enumerate() {
+            anyhow::ensure!(
+                slot.len() == self.n,
+                "snapshot residual slot {s} has {} rows, run has {} nodes",
+                slot.len(),
+                self.n
+            );
+            for (node, row) in slot.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == self.d,
+                    "snapshot residual [{s}][{node}] has dim {}, run has {}",
+                    row.len(),
+                    self.d
+                );
+            }
+        }
+        self.residuals = residuals;
+        Ok(())
+    }
+
+    /// Receiver-side reconstruction of one payload OUTSIDE the round
+    /// flow: joiner warm-start reads each neighbor's params through the
+    /// wire codec (what would actually cross the wire) using a
+    /// throwaway residual on the reserved warm-start slot, so live EF
+    /// state is untouched while the draw stays seeded per
+    /// (step, stable id).
+    pub fn reconstruct(&self, step: usize, node_id: u32, src: &[f32], out: &mut [f32]) {
+        if self.codec.is_identity() {
+            out.copy_from_slice(src);
+            return;
+        }
+        let mut residual = vec![0.0f32; src.len()];
+        let mut scratch = EncodeScratch::default();
+        let key = StreamKey {
+            seed: self.seed,
+            step,
+            node: node_id as usize,
+            slot: WARM_START_SLOT,
+        };
+        self.codec.encode(key, src, &mut residual, out, &mut scratch);
     }
 }
 
@@ -776,6 +874,51 @@ mod tests {
         assert!((slot1 - 0.3).abs() < 1e-7, "slot 1 residual {slot1}");
         // Slot 0's residual untouched by slot 1's exchange.
         assert!((state.residual_norm(0, 0) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn set_roster_carries_residuals_by_stable_id() {
+        let spec = CodecSpec::parse("topk,k=0.25", 1).unwrap();
+        let mut state = CodecState::new(&spec, 3, 4);
+        state.begin_step(0);
+        // Nodes 0..3 encode; node 1's residual ends up nonzero.
+        state.encode_round(
+            &[vec![1.0, 0.0, 0.0, 0.0], vec![1.0, 0.5, 0.0, 0.0], vec![1.0, 0.25, 0.0, 0.0]],
+            NodeExecutor::serial(),
+        );
+        let r1 = state.residual_norm(0, 1);
+        assert!((r1 - 0.5).abs() < 1e-7);
+        // New roster drops node 0, keeps 1 and 2, adds 5: node 1 is now
+        // dense row 0 and keeps its residual; the joiner starts clean.
+        state.set_roster(&[1, 2, 5]);
+        assert!((state.residual_norm(0, 0) - 0.5).abs() < 1e-7, "node 1 residual moved");
+        assert!((state.residual_norm(0, 1) - 0.25).abs() < 1e-7, "node 2 residual moved");
+        assert_eq!(state.residual_norm(0, 2), 0.0, "joiner starts with zero residual");
+    }
+
+    #[test]
+    fn reconstruct_is_deterministic_and_leaves_residuals_alone() {
+        let spec = CodecSpec::parse("int8,ef=true,seed=9", 1).unwrap();
+        let mut state = CodecState::new(&spec, 2, 16);
+        let mut rng = Pcg64::seeded(4);
+        let mut src = vec![0.0f32; 16];
+        rng.normal_fill(&mut src, 1.0);
+        state.begin_step(2);
+        state.encode_round(&[src.clone(), src.clone()], NodeExecutor::serial());
+        let before = state.residual_norm(0, 0);
+        let (mut a, mut b) = (vec![0.0f32; 16], vec![0.0f32; 16]);
+        state.reconstruct(3, 7, &src, &mut a);
+        state.reconstruct(3, 7, &src, &mut b);
+        assert_eq!(a, b, "same (step, id) must reconstruct identically");
+        let mut c = vec![0.0f32; 16];
+        state.reconstruct(3, 8, &src, &mut c);
+        assert_ne!(a, c, "different stable ids draw different streams");
+        assert_eq!(state.residual_norm(0, 0), before, "live EF residual touched");
+        // Identity codec: exact passthrough.
+        let fp32 = CodecState::new(&CodecSpec::parse("fp32", 0).unwrap(), 2, 16);
+        let mut d = vec![0.0f32; 16];
+        fp32.reconstruct(0, 0, &src, &mut d);
+        assert_eq!(d, src);
     }
 
     #[test]

@@ -41,7 +41,27 @@
 //! speeds, zero jitter and `tau=0` the schedule realizes all-fresh and
 //! the run is bitwise identical to the synchronous path; `pmsgd` runs
 //! as the barrier baseline (simulated time only, no staleness).
+//!
+//! When `Config::churn` is set (`--churn join=0.02,leave=0.02,nmin=8,
+//! nmax=64`), the roster itself becomes elastic (DESIGN.md §9): a
+//! seeded [`ChurnPlan`] realizes join/leave events at the top of each
+//! step, the CSR mixing weights are rebuilt in place at the new node
+//! count (symmetric doubly stochastic at every size), joiners
+//! warm-start from their neighbors' decoded wire average with momentum
+//! zeroed, and every seeded schedule (faults, codec streams, churn
+//! itself) keys on STABLE node ids so resizes never perturb another
+//! node's randomness. A zero-rate plan leaves the run bitwise
+//! identical to the fixed-roster trainer.
+//!
+//! [`Trainer::checkpoint`] / [`Trainer::resume`] capture and restore
+//! the complete cross-step mutable state — node states, shard cursors
+//! + RNG counters, codec EF residuals, fault cache and async ring
+//! history, the roster — through the checksummed
+//! [`crate::elastic::Snapshot`] format: save → restore → continue is
+//! bitwise identical to an uninterrupted run.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -50,12 +70,16 @@ use anyhow::Result;
 use crate::comm::codec::{CodecSpec, CodecState};
 use crate::comm::cost::{CommCost, PayloadBytes};
 use crate::comm::CommEngine;
-use crate::grad::Workload;
+use crate::data::synth::ShardCursor;
+use crate::elastic::snapshot::{FaultState, Snapshot, SnapshotMeta};
+use crate::elastic::{ChurnPlan, ChurnSpec, ChurnStats, Roster, StepChurn};
+use crate::grad::{NodeGrad, Workload};
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
 use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport, AsyncSpec};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
+use crate::util::json::Value;
 use crate::util::math;
 
 use super::executor::NodeExecutor;
@@ -63,6 +87,12 @@ use super::executor::NodeExecutor;
 /// Everything a finished run reports.
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
+    /// Run manifest (compact JSON): every reproducibility-relevant
+    /// config knob of the run that produced this report — seed,
+    /// topology, node counts, optimizer, batch shape, codec/fault/
+    /// async/churn specs — so an experiment artifact alone suffices to
+    /// replay the run.
+    pub manifest: String,
     /// Mean training loss per step (averaged over nodes).
     pub losses: Vec<f64>,
     /// (step, accuracy) evaluation points of the average model.
@@ -110,6 +140,29 @@ pub struct Trainer {
     /// small to amortize thread spawns (results are identical either
     /// way — the executor never reorders arithmetic).
     update_exec: NodeExecutor,
+    /// Elastic membership (None = fixed roster; DESIGN.md §9).
+    elastic: Option<Elastic>,
+    /// Stable id owning each `workload.nodes` slot. Invariant: slots
+    /// [0..m) are the active ids in dense order, [m..capacity) the
+    /// parked ids — the gradient phase fans over the first m slots.
+    engine_ids: Vec<u32>,
+    /// First step `run` executes next: 0 on a fresh trainer, the
+    /// checkpoint's cursor after [`Trainer::restore`].
+    next_step: usize,
+    /// Step the current topology realization was built at (last resize).
+    topo_step: usize,
+    /// Has any membership change happened? Engages the optimizers'
+    /// time-varying guard from the first resize on (a resize makes the
+    /// realized W time-varying exactly like a fault mask does).
+    churned: bool,
+}
+
+/// Elastic-membership state: the seeded event schedule, the live
+/// roster, and cumulative accounting.
+struct Elastic {
+    plan: ChurnPlan,
+    roster: Roster,
+    stats: ChurnStats,
 }
 
 /// Below this many touched f32s per phase (n·d), the exchange/update
@@ -121,9 +174,35 @@ impl Trainer {
     pub fn new(cfg: Config, workload: Workload) -> Result<Trainer> {
         let kind = Kind::parse(&cfg.topology)?;
         let n = cfg.nodes;
+        // Elastic membership: resolve the churn bounds against the
+        // run's initial node count. The stable-id space is 0..nmax and
+        // the workload must supply one shard per stable id; `nodes`
+        // stays the INITIAL active count.
+        let elastic = if cfg.churn.trim().is_empty() {
+            None
+        } else {
+            let spec = ChurnSpec::parse(&cfg.churn, cfg.seed)?.resolve(n)?;
+            anyhow::ensure!(
+                !kind.time_varying(),
+                "--churn requires a static topology; `{}` changes neighbors per step",
+                cfg.topology
+            );
+            anyhow::ensure!(
+                cfg.async_mode.trim().is_empty(),
+                "--churn models synchronous rounds over an elastic roster; composing \
+                 with --async (churn-aware schedules) is an open item — see ROADMAP.md"
+            );
+            Some(Elastic {
+                plan: ChurnPlan::new(spec),
+                roster: Roster::new(n, spec.nmax),
+                stats: ChurnStats::default(),
+            })
+        };
+        let capacity = elastic.as_ref().map(|el| el.roster.capacity()).unwrap_or(n);
         anyhow::ensure!(
-            workload.nodes.len() == n,
-            "workload has {} node shards, config wants {n}",
+            workload.nodes.len() == capacity,
+            "workload has {} node shards, run wants {capacity} (the churn capacity \
+             nmax; initial active nodes = {n})",
             workload.nodes.len()
         );
         let topo = Topology::at_step(kind, n, cfg.seed, 0);
@@ -245,6 +324,14 @@ impl Trainer {
                 }
             }
         };
+        // Elastic runs key every fault stream on stable ids from the
+        // start (identity initially, so draws are unchanged); resizes
+        // then only swap the id list.
+        if elastic.is_some() {
+            if let Some(f) = &mut faults {
+                f.set_ids(Some((0..n as u32).collect()));
+            }
+        }
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
             .collect();
@@ -270,6 +357,11 @@ impl Trainer {
             losses: vec![0.0; n],
             exec,
             update_exec,
+            elastic,
+            engine_ids: (0..capacity as u32).collect(),
+            next_step: 0,
+            topo_step: 0,
+            churned: false,
         })
     }
 
@@ -298,15 +390,31 @@ impl Trainer {
         }
     }
 
-    /// One training step; returns the mean training loss.
+    /// One training step; returns the mean training loss (over the
+    /// active roster).
     pub fn step(&mut self, k: usize) -> f64 {
+        // --- elastic membership (DESIGN.md §9) ---
+        // Realize this step's churn events before any phase: leavers
+        // are gone for the whole step, joiners warm-start from their
+        // neighbors and contribute a gradient immediately. A quiet
+        // step (or a zero-rate plan) touches nothing, so zero-churn
+        // runs stay bitwise identical to the fixed-roster trainer.
+        let ev = self.elastic.as_ref().map(|el| el.plan.step_churn(k, &el.roster));
+        if let Some(ev) = ev {
+            if !ev.is_empty() {
+                self.apply_churn(k, ev);
+            }
+        }
         let accum = self.cfg.accum_steps();
         let lr = self.cfg.lr_at(k);
+        let m = self.states.len();
         // --- gradient phase (executor-chunked over nodes) ---
+        // Active engines occupy the first m slots in dense order (the
+        // `engine_ids` invariant); parked shards never compute.
         let loss = {
             let states = &self.states;
             self.exec.for_each_triple_mut(
-                &mut self.workload.nodes,
+                &mut self.workload.nodes[..m],
                 &mut self.grads,
                 &mut self.losses,
                 |i, node, g, loss| {
@@ -317,11 +425,7 @@ impl Trainer {
         };
         // --- exchange + update phase ---
         if self.kind.time_varying() {
-            self.topo = Topology::at_step(self.kind, self.cfg.nodes, self.cfg.seed, k);
-            self.comm.rebuild_metropolis(&self.topo);
-            if self.cfg.positive_definite {
-                self.comm.make_lazy();
-            }
+            self.rebuild_topology(self.cfg.nodes, k);
         }
         // Realize this step's faults (and async staleness ages) over
         // the nominal weights. An active fault plan makes the
@@ -351,7 +455,11 @@ impl Trainer {
             lr,
             beta: self.cfg.momentum as f32,
             step: k,
-            time_varying: self.kind.time_varying() || faults_active,
+            // A membership resize makes the realized W time-varying
+            // exactly like a fault mask does — once any resize has
+            // happened the guard stays engaged (momentum still carries
+            // pre-resize directions for a few rounds).
+            time_varying: self.kind.time_varying() || faults_active || self.churned,
             layer_ranges: &self.workload.layer_ranges,
             codec: self.codec.as_ref(),
         };
@@ -376,7 +484,437 @@ impl Trainer {
                 }
             }
         }
+        self.next_step = k + 1;
         loss
+    }
+
+    /// THE topology rebuild rule: realize the kind at `n` nodes for
+    /// `step` and rebuild the CSR mixing weights in place (+ the lazy
+    /// transform when configured). Every path that changes the
+    /// realized graph — time-varying steps, churn resizes, snapshot
+    /// restore — goes through this one helper so the rule can never
+    /// fork between them.
+    fn rebuild_topology(&mut self, n: usize, step: usize) {
+        self.topo = Topology::at_step(self.kind, n, self.cfg.seed, step);
+        self.comm.rebuild_metropolis(&self.topo);
+        if self.cfg.positive_definite {
+            self.comm.make_lazy();
+        }
+    }
+
+    /// Realize one step's membership events (DESIGN.md §9): leavers'
+    /// rows fold out of the mixing graph and the Metropolis–Hastings
+    /// CSR is rebuilt in place at the new node count (symmetric doubly
+    /// stochastic at every size, by construction); joiners warm-start
+    /// from their neighbors' decoded wire average with momentum zeroed;
+    /// every per-node resource (states, shard engines, codec residuals,
+    /// fault streams) follows its stable id into the new dense order.
+    fn apply_churn(&mut self, step: usize, ev: StepChurn) {
+        let d = self.workload.dim;
+        let el = self.elastic.as_mut().expect("churn event without elastic state");
+        let old_active = el.roster.active().to_vec();
+        el.roster.apply(&ev);
+        el.stats.record(&ev);
+        let new_active = el.roster.active().to_vec();
+        let slot_order = el.roster.slot_order();
+        let m = new_active.len();
+
+        // Survivors keep their full state, keyed by stable id.
+        let mut survivors: BTreeMap<u32, NodeState> = old_active
+            .iter()
+            .copied()
+            .zip(std::mem::take(&mut self.states))
+            .filter(|(id, _)| !ev.leaves.contains(id))
+            .collect();
+
+        // Live topology resize: the PR-1 in-place CSR rebuild extended
+        // to a changing n. Static kinds are connected at every size;
+        // the assert is defense in depth (the churn plan must never
+        // realize a disconnected roster).
+        self.rebuild_topology(m, step);
+        assert!(self.topo.is_connected(), "realized churn topology disconnected at n={m}");
+        self.topo_step = step;
+        self.churned = true;
+
+        // Joiner warm-start params: the average of the joiner's
+        // non-joiner neighbors in the NEW topology, each payload read
+        // through the wire codec when one is configured (exactly what
+        // the joiner would receive over the wire). A neighborhood made
+        // entirely of fellow joiners falls back to the survivor-wide
+        // average — deterministic and order-free either way, because
+        // only pre-existing nodes are ever read.
+        let joiner_dense: Vec<bool> =
+            new_active.iter().map(|id| ev.joins.contains(id)).collect();
+        let mut warm: Vec<(usize, Vec<f32>)> = Vec::with_capacity(ev.joins.len());
+        {
+            let codec_guard = self.codec.as_ref().map(|c| c.lock().unwrap());
+            let mut tmp = vec![0.0f32; d];
+            let add = |acc: &mut Vec<f32>, src_id: u32, src: &[f32], tmp: &mut Vec<f32>| {
+                match &codec_guard {
+                    Some(state) => {
+                        state.reconstruct(step, src_id, src, tmp);
+                        math::axpy(acc, 1.0, tmp);
+                    }
+                    None => math::axpy(acc, 1.0, src),
+                }
+            };
+            for (dj, &joins) in joiner_dense.iter().enumerate() {
+                if !joins {
+                    continue;
+                }
+                let mut acc = vec![0.0f32; d];
+                let mut count = 0usize;
+                for &p in self.topo.neighbors(dj) {
+                    if joiner_dense[p] {
+                        continue;
+                    }
+                    let nid = new_active[p];
+                    add(&mut acc, nid, &survivors[&nid].x, &mut tmp);
+                    count += 1;
+                }
+                if count == 0 {
+                    for (&nid, st) in survivors.iter() {
+                        add(&mut acc, nid, &st.x, &mut tmp);
+                        count += 1;
+                    }
+                }
+                math::scale(&mut acc, 1.0 / count as f32);
+                warm.push((dj, acc));
+            }
+        }
+
+        // Rebuild the dense state vector: survivors in order, joiners
+        // from their warm-started params with optimizer buffers
+        // initialized by the optimizer's own rule.
+        let mut warm = warm.into_iter();
+        let mut new_states = Vec::with_capacity(m);
+        for (dj, &id) in new_active.iter().enumerate() {
+            if joiner_dense[dj] {
+                let (wdj, x) = warm.next().expect("warm-start entry missing");
+                debug_assert_eq!(wdj, dj);
+                let mut st = NodeState::new(x, self.optimizer.aux_count());
+                self.optimizer.warm_start(&mut st);
+                new_states.push(st);
+            } else {
+                new_states.push(survivors.remove(&id).expect("survivor state missing"));
+            }
+        }
+        self.states = new_states;
+
+        // Per-node buffers follow the roster size; contents are
+        // per-round transient.
+        self.grads.resize_with(m, || vec![0.0; d]);
+        self.losses.resize(m, 0.0);
+        self.scratch.resize(m, d);
+
+        // Per-stable-id resources repack into the new dense order.
+        self.reorder_engines(&slot_order);
+        if let Some(c) = &self.codec {
+            c.lock().unwrap().set_roster(&new_active);
+        }
+        if let Some(f) = &mut self.faults {
+            f.set_ids(Some(new_active));
+            // Per-dense-row history is invalid across a resize: the
+            // first post-resize round serves fresh messages while the
+            // publish cache re-warms (same rule as the cold start).
+            f.clear_cache();
+        }
+    }
+
+    /// Permute `workload.nodes` so slots hold `target` stable ids in
+    /// order (active dense order first, parked tail after) — O(capacity)
+    /// pointer moves, no shard data is copied.
+    fn reorder_engines(&mut self, target: &[u32]) {
+        debug_assert_eq!(target.len(), self.engine_ids.len());
+        if self.engine_ids == target {
+            return;
+        }
+        let capacity = self.engine_ids.len();
+        let mut by_id = vec![usize::MAX; capacity];
+        for (slot, &id) in self.engine_ids.iter().enumerate() {
+            by_id[id as usize] = slot;
+        }
+        let mut slots: Vec<Option<Box<dyn NodeGrad>>> =
+            std::mem::take(&mut self.workload.nodes).into_iter().map(Some).collect();
+        self.workload.nodes = target
+            .iter()
+            .map(|&id| slots[by_id[id as usize]].take().expect("engine slot reused"))
+            .collect();
+        self.engine_ids = target.to_vec();
+    }
+
+    /// Current active node count (elastic rosters move mid-run).
+    pub fn active_nodes(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Active stable ids in dense order (identity 0..n on a fixed
+    /// roster).
+    pub fn active_ids(&self) -> Vec<u32> {
+        match &self.elastic {
+            Some(el) => el.roster.active().to_vec(),
+            None => (0..self.cfg.nodes as u32).collect(),
+        }
+    }
+
+    /// Cumulative membership accounting (None = fixed roster).
+    pub fn churn_stats(&self) -> Option<&ChurnStats> {
+        self.elastic.as_ref().map(|el| &el.stats)
+    }
+
+    /// Run manifest (compact JSON): every reproducibility-relevant
+    /// config knob, so an experiment artifact alone suffices to replay
+    /// the run. Also embedded in every [`TrainReport`].
+    pub fn manifest_json(&self) -> String {
+        Value::obj(vec![
+            // The seed is a STRING: u64 seeds above 2^53 would lose
+            // precision through the f64 JSON number path, silently
+            // breaking the exact-replay contract.
+            ("seed", Value::Str(self.cfg.seed.to_string())),
+            ("topology", Value::Str(self.cfg.topology.clone())),
+            ("optimizer", Value::Str(self.cfg.optimizer.clone())),
+            ("nodes", Value::Num(self.cfg.nodes as f64)),
+            ("active_nodes", Value::Num(self.states.len() as f64)),
+            ("steps", Value::Num(self.cfg.steps as f64)),
+            ("total_batch", Value::Num(self.cfg.total_batch as f64)),
+            ("micro_batch", Value::Num(self.cfg.micro_batch as f64)),
+            ("lr", Value::Num(self.cfg.lr)),
+            ("linear_scaling", Value::Bool(self.cfg.linear_scaling)),
+            ("lr_ref_batch", Value::Num(self.cfg.lr_ref_batch as f64)),
+            ("max_lr_scale", Value::Num(self.cfg.max_lr_scale)),
+            ("schedule", Value::Str(format!("{:?}", self.cfg.schedule))),
+            ("momentum", Value::Num(self.cfg.momentum)),
+            ("positive_definite", Value::Bool(self.cfg.positive_definite)),
+            ("slowmo_period", Value::Num(self.cfg.slowmo_period as f64)),
+            ("slowmo_beta", Value::Num(self.cfg.slowmo_beta)),
+            ("dirichlet_alpha", Value::Num(self.cfg.dirichlet_alpha)),
+            ("dim", Value::Num(self.workload.dim as f64)),
+            ("model", Value::Str(self.workload.name.clone())),
+            ("codec", Value::Str(self.cfg.codec.clone())),
+            ("faults", Value::Str(self.cfg.faults.clone())),
+            ("async", Value::Str(self.cfg.async_mode.clone())),
+            ("churn", Value::Str(self.cfg.churn.clone())),
+            ("eval_every", Value::Num(self.cfg.eval_every as f64)),
+            ("threads", Value::Num(self.cfg.threads as f64)),
+        ])
+        .to_string()
+    }
+
+    /// Canonical fingerprint of every trajectory-determining hyper
+    /// parameter. Part of [`SnapshotMeta`]: resuming under a different
+    /// lr / momentum / schedule / batch shape / lazy-W / SlowMo config
+    /// would silently diverge from the uninterrupted run, so restore
+    /// refuses on any mismatch here.
+    fn hyper_fingerprint(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "lr={};momentum={};schedule={:?};linear_scaling={};lr_ref_batch={};\
+             max_lr_scale={};total_batch={};micro_batch={};steps={};\
+             positive_definite={};slowmo={}x{};alpha={}",
+            c.lr,
+            c.momentum,
+            c.schedule,
+            c.linear_scaling,
+            c.lr_ref_batch,
+            c.max_lr_scale,
+            c.total_batch,
+            c.micro_batch,
+            c.steps,
+            c.positive_definite,
+            c.slowmo_period,
+            c.slowmo_beta,
+            c.dirichlet_alpha
+        )
+    }
+
+    fn snapshot_meta(&self) -> SnapshotMeta {
+        let capacity = match &self.elastic {
+            Some(el) => el.roster.capacity(),
+            None => self.cfg.nodes,
+        };
+        SnapshotMeta {
+            optimizer: self.cfg.optimizer.clone(),
+            topology: self.cfg.topology.clone(),
+            codec: self.cfg.codec.clone(),
+            faults: self.cfg.faults.clone(),
+            async_mode: self.cfg.async_mode.clone(),
+            churn: self.cfg.churn.clone(),
+            seed: self.cfg.seed,
+            nodes: self.cfg.nodes as u32,
+            capacity: capacity as u32,
+            dim: self.workload.dim as u32,
+            model: self.workload.name.clone(),
+            aux_labels: self.optimizer.aux_labels().join(","),
+            hyper: self.hyper_fingerprint(),
+        }
+    }
+
+    /// Capture the complete cross-step mutable state (DESIGN.md §9):
+    /// restoring the snapshot into a freshly constructed trainer of the
+    /// same configuration and continuing is bitwise identical to never
+    /// having stopped.
+    pub fn checkpoint(&self) -> Snapshot {
+        let meta = self.snapshot_meta();
+        let capacity = meta.capacity as usize;
+        let (active, churn_stats) = match &self.elastic {
+            Some(el) => (el.roster.active().to_vec(), el.stats),
+            None => ((0..self.cfg.nodes as u32).collect(), ChurnStats::default()),
+        };
+        let mut cursors: Vec<Option<ShardCursor>> = vec![None; capacity];
+        for (slot, &id) in self.engine_ids.iter().enumerate() {
+            cursors[id as usize] = self.workload.nodes[slot].export_cursor();
+        }
+        let codec_residuals =
+            self.codec.as_ref().map(|c| c.lock().unwrap().export_residuals());
+        let faults = self.faults.as_ref().map(|f| FaultState {
+            cache: f.export_cache(),
+            stats: *f.stats(),
+            rings: f.export_rings(),
+        });
+        Snapshot {
+            meta,
+            step: self.next_step as u64,
+            churned: self.churned,
+            topo_step: self.topo_step as u64,
+            churn_stats,
+            active,
+            states: self.states.clone(),
+            cursors,
+            codec_residuals,
+            faults,
+        }
+    }
+
+    /// [`Trainer::checkpoint`] straight to a checksummed file.
+    pub fn checkpoint_to(&self, path: &Path) -> Result<()> {
+        self.checkpoint().write_file(path)
+    }
+
+    /// Restore a snapshot into this (freshly constructed) trainer.
+    /// Refuses on any configuration mismatch — a checkpoint is only
+    /// bitwise-resumable into the exact run that wrote it.
+    pub fn restore(&mut self, snap: &Snapshot) -> Result<()> {
+        let meta = self.snapshot_meta();
+        anyhow::ensure!(
+            snap.meta == meta,
+            "snapshot belongs to a different run\n  snapshot: {:?}\n  this run: {:?}",
+            snap.meta,
+            meta
+        );
+        anyhow::ensure!(
+            snap.step as usize <= self.cfg.steps,
+            "snapshot is at step {} but the schedule has only {} steps",
+            snap.step,
+            self.cfg.steps
+        );
+        let capacity = meta.capacity as usize;
+        let d = self.workload.dim;
+        let m = snap.active.len();
+        anyhow::ensure!(
+            snap.states.len() == m,
+            "snapshot holds {} states for {m} active nodes",
+            snap.states.len()
+        );
+        for st in &snap.states {
+            anyhow::ensure!(
+                st.x.len() == d && st.m.len() == d,
+                "snapshot state dim {} != run dim {d}",
+                st.x.len()
+            );
+            anyhow::ensure!(
+                st.aux.len() == self.optimizer.aux_count()
+                    && st.aux.iter().all(|a| a.len() == d),
+                "snapshot aux layout does not match `{}`",
+                self.cfg.optimizer
+            );
+        }
+        anyhow::ensure!(
+            snap.cursors.len() == capacity,
+            "snapshot has {} shard cursors for capacity {capacity}",
+            snap.cursors.len()
+        );
+        // Roster + topology at the restored size.
+        match &mut self.elastic {
+            Some(el) => {
+                el.roster = Roster::from_active(snap.active.clone(), capacity)?;
+                el.stats = snap.churn_stats;
+            }
+            None => anyhow::ensure!(
+                snap.active.len() == self.cfg.nodes
+                    && snap.active.iter().enumerate().all(|(i, &id)| id as usize == i),
+                "fixed-roster run cannot restore a churned roster"
+            ),
+        }
+        if self.elastic.is_some() {
+            self.topo_step = snap.topo_step as usize;
+            self.rebuild_topology(m, self.topo_step);
+        }
+        self.states = snap.states.clone();
+        self.next_step = snap.step as usize;
+        self.churned = snap.churned;
+        self.grads.resize_with(m, || vec![0.0; d]);
+        self.losses.resize(m, 0.0);
+        self.scratch.resize(m, d);
+        // Engines into dense order, then cursors by stable id. Presence
+        // must agree: a stateful engine with no snapshot cursor (or
+        // vice versa) would silently drift off the batch sequence.
+        let slot_order: Vec<u32> = match &self.elastic {
+            Some(el) => el.roster.slot_order(),
+            None => (0..capacity as u32).collect(),
+        };
+        self.reorder_engines(&slot_order);
+        for (slot, &id) in self.engine_ids.iter().enumerate() {
+            let engine_stateful = self.workload.nodes[slot].export_cursor().is_some();
+            match &snap.cursors[id as usize] {
+                Some(c) => {
+                    anyhow::ensure!(
+                        engine_stateful,
+                        "snapshot has a cursor for stateless engine {id}"
+                    );
+                    self.workload.nodes[slot].restore_cursor(c)?;
+                }
+                None => anyhow::ensure!(
+                    !engine_stateful,
+                    "snapshot lacks the cursor for stateful engine {id}"
+                ),
+            }
+        }
+        // Codec + fault engine state.
+        match (&self.codec, &snap.codec_residuals) {
+            (Some(c), Some(res)) => {
+                let mut state = c.lock().unwrap();
+                if self.elastic.is_some() {
+                    // Resize-only repoint: the snapshot supplies the
+                    // residuals wholesale, so no carry-over remap.
+                    state.reset_roster(&snap.active);
+                }
+                state.restore_residuals(res.clone())?;
+            }
+            (None, None) => {}
+            _ => anyhow::bail!("snapshot codec state does not match the run's codec config"),
+        }
+        match (&mut self.faults, &snap.faults) {
+            (Some(f), Some(fs)) => {
+                if self.elastic.is_some() {
+                    f.set_ids(Some(snap.active.clone()));
+                }
+                f.restore_cache(fs.cache.clone());
+                f.restore_stats(fs.stats);
+                f.restore_rings(fs.rings.clone());
+            }
+            (None, None) => {}
+            _ => anyhow::bail!("snapshot fault state does not match the run's fault config"),
+        }
+        Ok(())
+    }
+
+    /// Construct a trainer and restore a snapshot into it in one call —
+    /// the resume entry point. `cfg` and `workload` must be built
+    /// exactly as for the run that wrote the snapshot.
+    pub fn resume(cfg: Config, workload: Workload, snap: &Snapshot) -> Result<Trainer> {
+        let mut t = Trainer::new(cfg, workload)?;
+        t.restore(snap)?;
+        Ok(t)
     }
 
     /// Per-payload wire widths of this run: codec-encoded gossip
@@ -419,12 +957,17 @@ impl Trainer {
         self.async_report.as_ref()
     }
 
-    /// Run the full schedule, reporting losses/evals.
+    /// Run the full schedule (or, after [`Trainer::restore`], the
+    /// remaining steps), reporting losses/evals.
     pub fn run(&mut self) -> TrainReport {
-        let mut report = TrainReport { steps: self.cfg.steps, ..Default::default() };
+        let mut report = TrainReport {
+            steps: self.cfg.steps,
+            manifest: self.manifest_json(),
+            ..Default::default()
+        };
         let mut grad_s = 0.0;
         let mut upd_s = 0.0;
-        for k in 0..self.cfg.steps {
+        for k in self.next_step..self.cfg.steps {
             let t0 = Instant::now();
             let loss = self.step(k);
             let dt = t0.elapsed().as_secs_f64();
@@ -920,6 +1463,180 @@ mod tests {
         let mut cfg = small_cfg("dmsgd", 5);
         cfg.nodes = 6;
         assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+    }
+
+    #[test]
+    fn zero_churn_is_bitwise_identical_to_fixed_roster() {
+        let run = |churn: &str| {
+            let mut cfg = small_cfg("decentlam", 25);
+            cfg.churn = churn.into();
+            Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
+        };
+        assert_eq!(
+            run(""),
+            run("join=0,leave=0,nmin=4,nmax=4,seed=9"),
+            "a zero-rate churn plan must not change a single bit"
+        );
+    }
+
+    #[test]
+    fn churn_resizes_roster_and_stays_deterministic() {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg("decentlam", 50);
+            cfg.lr = 0.02;
+            cfg.threads = threads;
+            cfg.churn = "join=0.15,leave=0.15,nmin=2,nmax=6,seed=3".into();
+            let mut t = Trainer::new(cfg, mlp_workload(6)).unwrap();
+            let losses = t.run().losses;
+            let stats = *t.churn_stats().unwrap();
+            let ids = t.active_ids();
+            (losses, stats, ids)
+        };
+        let (a, sa, ids_a) = run(0);
+        let (b, sb, ids_b) = run(0);
+        assert_eq!(a, b, "churn rerun must be byte-identical");
+        assert_eq!(sa, sb);
+        assert_eq!(ids_a, ids_b);
+        let (c, _, _) = run(1);
+        assert_eq!(a, c, "churn parallel != serial");
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(sa.joins > 0 && sa.leaves > 0, "rates 0.15 never realized events: {sa:?}");
+        assert!((2..=6).contains(&ids_a.len()), "roster size {} out of bounds", ids_a.len());
+    }
+
+    #[test]
+    fn churn_composes_with_faults_and_codec() {
+        let run = || {
+            let mut cfg = small_cfg("decentlam", 40);
+            cfg.lr = 0.02;
+            cfg.churn = "join=0.1,leave=0.1,nmin=2,nmax=6,seed=5".into();
+            cfg.faults = "drop=0.1,straggle=0.1,seed=7".into();
+            cfg.codec = "int8,ef=true,seed=4".into();
+            let mut t = Trainer::new(cfg, mlp_workload(6)).unwrap();
+            let losses = t.run().losses;
+            (losses, *t.fault_stats().unwrap(), *t.churn_stats().unwrap())
+        };
+        let (a, fa, ca) = run();
+        let (b, fb, cb) = run();
+        assert_eq!(a, b);
+        assert_eq!(fa, fb);
+        assert_eq!(ca, cb);
+        assert!(a.iter().all(|l| l.is_finite()));
+        assert!(ca.resizes > 0, "no resize ever happened");
+    }
+
+    #[test]
+    fn churn_rejects_time_varying_async_and_bad_capacity() {
+        let mut cfg = small_cfg("decentlam", 5);
+        cfg.topology = "bipartite".into();
+        cfg.churn = "join=0.1,nmax=6".into();
+        assert!(Trainer::new(cfg, mlp_workload(6)).is_err(), "time-varying must be rejected");
+        let mut cfg = small_cfg("decentlam", 5);
+        cfg.churn = "join=0.1,nmax=6".into();
+        cfg.async_mode = "tau=1".into();
+        assert!(Trainer::new(cfg, mlp_workload(6)).is_err(), "async must be rejected");
+        let mut cfg = small_cfg("decentlam", 5);
+        cfg.churn = "join=0.1,nmax=6".into();
+        assert!(
+            Trainer::new(cfg, mlp_workload(4)).is_err(),
+            "workload must supply nmax shards"
+        );
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bitwise_mid_run() {
+        let mut cfg = small_cfg("decentlam", 12);
+        cfg.churn = "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8".into();
+        // Uninterrupted reference.
+        let mut full = Trainer::new(cfg.clone(), mlp_workload(6)).unwrap();
+        let mut ref_losses = Vec::new();
+        for k in 0..12 {
+            ref_losses.push(full.step(k));
+        }
+        // Interrupted run: checkpoint at step 6, resume from the BYTES
+        // (exercising the checksummed wire format), continue.
+        let mut first = Trainer::new(cfg.clone(), mlp_workload(6)).unwrap();
+        for k in 0..6 {
+            assert_eq!(first.step(k), ref_losses[k], "prefix diverged at {k}");
+        }
+        let bytes = first.checkpoint().to_bytes();
+        let snap = crate::elastic::Snapshot::from_bytes(&bytes).unwrap();
+        let mut resumed = Trainer::resume(cfg, mlp_workload(6), &snap).unwrap();
+        for (k, want) in ref_losses.iter().enumerate().skip(6) {
+            assert_eq!(resumed.step(k), *want, "resumed run diverged at step {k}");
+        }
+        let a: Vec<u32> = full.average_model().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = resumed.average_model().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "final average model differs after resume");
+        assert_eq!(full.active_ids(), resumed.active_ids());
+        assert_eq!(full.churn_stats().unwrap(), resumed.churn_stats().unwrap());
+    }
+
+    #[test]
+    fn restore_refuses_mismatched_runs() {
+        let cfg = small_cfg("decentlam", 10);
+        let mut t = Trainer::new(cfg.clone(), mlp_workload(4)).unwrap();
+        t.step(0);
+        let snap = t.checkpoint();
+        // Different optimizer.
+        let mut other = small_cfg("dmsgd", 10);
+        other.threads = cfg.threads;
+        assert!(Trainer::resume(other, mlp_workload(4), &snap).is_err());
+        // Different seed.
+        let mut other = cfg.clone();
+        other.seed = cfg.seed + 1;
+        assert!(Trainer::resume(other, mlp_workload(4), &snap).is_err());
+        // Different hyper parameters (lr, schedule) — a resumed run
+        // would silently diverge, so the fingerprint must refuse.
+        let mut other = cfg.clone();
+        other.lr = cfg.lr * 0.5;
+        assert!(Trainer::resume(other, mlp_workload(4), &snap).is_err());
+        let mut other = cfg.clone();
+        other.schedule = LrSchedule::WarmupCosine { warmup_steps: 2, total_steps: 10 };
+        assert!(Trainer::resume(other, mlp_workload(4), &snap).is_err());
+        // Same config resumes fine.
+        assert!(Trainer::resume(cfg, mlp_workload(4), &snap).is_ok());
+    }
+
+    #[test]
+    fn run_after_restore_covers_remaining_steps_only() {
+        let cfg = small_cfg("dmsgd", 10);
+        let mut full = Trainer::new(cfg.clone(), mlp_workload(4)).unwrap();
+        let all = full.run().losses;
+        assert_eq!(all.len(), 10);
+        let mut first = Trainer::new(cfg.clone(), mlp_workload(4)).unwrap();
+        for k in 0..4 {
+            first.step(k);
+        }
+        let snap = first.checkpoint();
+        let mut resumed = Trainer::resume(cfg, mlp_workload(4), &snap).unwrap();
+        let tail = resumed.run().losses;
+        assert_eq!(tail.len(), 6, "resumed run must cover the remaining steps only");
+        assert_eq!(tail, all[4..].to_vec(), "resumed tail diverged");
+    }
+
+    #[test]
+    fn manifest_is_valid_json_with_run_identity() {
+        let mut cfg = small_cfg("decentlam", 3);
+        cfg.codec = "int8,seed=3".into();
+        cfg.churn = "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2".into();
+        let mut t = Trainer::new(cfg, mlp_workload(5)).unwrap();
+        let report = t.run();
+        let v = crate::util::json::Value::parse(&report.manifest).unwrap();
+        assert_eq!(v.get("optimizer").unwrap().as_str().unwrap(), "decentlam");
+        assert_eq!(v.get("topology").unwrap().as_str().unwrap(), "ring");
+        assert_eq!(v.get("nodes").unwrap().as_usize().unwrap(), 4);
+        // Seeds serialize as strings: u64 must survive above 2^53.
+        assert_eq!(v.get("seed").unwrap().as_str().unwrap(), "1");
+        assert_eq!(v.get("codec").unwrap().as_str().unwrap(), "int8,seed=3");
+        assert!(v.get("churn").unwrap().as_str().unwrap().contains("join=0.1"));
+        assert!(v.get("active_nodes").unwrap().as_usize().unwrap() >= 2);
+        // Deterministic: same run, same manifest bytes.
+        let mut cfg2 = small_cfg("decentlam", 3);
+        cfg2.codec = "int8,seed=3".into();
+        cfg2.churn = "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2".into();
+        let manifest2 = Trainer::new(cfg2, mlp_workload(5)).unwrap().manifest_json();
+        assert_eq!(report.manifest, manifest2, "manifest must be deterministic");
     }
 
     #[test]

@@ -85,6 +85,17 @@ pub struct CorpusShard {
 }
 
 impl CorpusShard {
+    /// Raw PCG64 counters of the window-sampling RNG — the shard's only
+    /// cross-step state (checkpointing, DESIGN.md §9).
+    pub fn export_rng(&self) -> [u64; 4] {
+        self.rng.raw_state()
+    }
+
+    /// Restore counters captured by [`CorpusShard::export_rng`].
+    pub fn restore_rng(&mut self, raw: [u64; 4]) {
+        self.rng = Pcg64::from_raw_state(raw);
+    }
+
     /// Fill `(batch, seq)` token windows; targets are inputs shifted by 1.
     pub fn next_batch(&mut self, batch: usize, seq: usize, xs: &mut [i32], ys: &mut [i32]) {
         assert!(self.tokens.len() > seq + 1, "shard too small for seq_len");

@@ -60,6 +60,39 @@ impl NodeShard {
         b
     }
 
+    /// Export the shard's cross-step sampling state — epoch cursor,
+    /// shuffle order and RNG counters — for bitwise checkpoint/resume
+    /// (DESIGN.md §9).
+    pub fn export_cursor(&self) -> ShardCursor {
+        ShardCursor {
+            cursor: self.cursor as u64,
+            order: self.order.iter().map(|&i| i as u32).collect(),
+            rng: self.rng.raw_state(),
+        }
+    }
+
+    /// Restore a cursor captured by [`NodeShard::export_cursor`]: the
+    /// next `next_batch` yields exactly what the exported shard's would
+    /// have.
+    pub fn restore_cursor(&mut self, c: &ShardCursor) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            c.order.len() == self.n,
+            "shard cursor covers {} samples, shard holds {}",
+            c.order.len(),
+            self.n
+        );
+        anyhow::ensure!(
+            c.cursor as usize <= self.n,
+            "shard cursor position {} past shard size {}",
+            c.cursor,
+            self.n
+        );
+        self.cursor = c.cursor as usize;
+        self.order = c.order.iter().map(|&i| i as usize).collect();
+        self.rng = Pcg64::from_raw_state(c.rng);
+        Ok(())
+    }
+
     /// Label histogram (diagnostic for heterogeneity).
     pub fn label_histogram(&self, num_classes: usize) -> Vec<usize> {
         let mut h = vec![0usize; num_classes];
@@ -72,6 +105,19 @@ impl NodeShard {
 
 /// RNG stream tag for shard shuffling (distinct from data generation).
 const SHARD_STREAM: u64 = 0x5aa5_1234_9876_feed;
+
+/// Cross-step sampling state of one shard, the unit a checkpoint must
+/// carry so resumed runs draw the exact same micro-batches
+/// (`rust/tests/elastic.rs` pins save → restore → batch equality).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardCursor {
+    /// Position inside the current epoch's shuffle order.
+    pub cursor: u64,
+    /// The epoch's sample permutation.
+    pub order: Vec<u32>,
+    /// Raw PCG64 counters ([`Pcg64::raw_state`]) of the shuffle RNG.
+    pub rng: [u64; 4],
+}
 
 /// Parameters for dataset synthesis.
 #[derive(Debug, Clone)]
@@ -252,6 +298,38 @@ mod tests {
         }
         assert!(seen.len() <= 10, "only 10 distinct samples exist");
         assert!(seen.len() >= 9, "epoch iteration should visit most samples");
+    }
+
+    #[test]
+    fn shard_cursor_roundtrip_replays_batches() {
+        let spec = SynthSpec { samples_per_node: 24, eval_samples: 4, ..Default::default() };
+        let mut a = ClassificationData::generate(&spec);
+        let shard = &mut a.shards[0];
+        let d = shard.input_dim;
+        let (mut bx, mut by) = (vec![0.0f32; 8 * d], vec![0i32; 8]);
+        // Advance past an epoch boundary so the reshuffle RNG moved.
+        for _ in 0..5 {
+            shard.next_batch(&mut bx, &mut by);
+        }
+        let cur = shard.export_cursor();
+        let mut b = ClassificationData::generate(&spec);
+        b.shards[0].restore_cursor(&cur).unwrap();
+        let (mut bx2, mut by2) = (vec![0.0f32; 8 * d], vec![0i32; 8]);
+        for _ in 0..7 {
+            shard.next_batch(&mut bx, &mut by);
+            b.shards[0].next_batch(&mut bx2, &mut by2);
+            assert_eq!(bx.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                bx2.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+            assert_eq!(by, by2);
+        }
+        // Mismatched shard size is rejected.
+        let other = ClassificationData::generate(&SynthSpec {
+            samples_per_node: 10,
+            eval_samples: 4,
+            ..Default::default()
+        });
+        let mut wrong = other.shards[0].clone();
+        assert!(wrong.restore_cursor(&cur).is_err());
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Roster bookkeeping for elastic membership (DESIGN.md §9).
+//!
+//! Two index spaces coexist once the node set can change:
+//!
+//! * **stable ids** name physical nodes for the whole run (0..capacity;
+//!   each owns its data shard, fault streams, codec streams and churn
+//!   streams) — every seeded schedule keys on them, so a resize never
+//!   perturbs another node's randomness;
+//! * **dense rows** are the contiguous 0..m space the comm engine,
+//!   optimizer rounds and executors see.
+//!
+//! The [`Roster`] is the bijection between the two: the active stable
+//! ids sorted ascending ARE the dense order, so the mapping is fully
+//! determined by the set membership — no positional state to corrupt
+//! or checkpoint beyond the set itself.
+
+use anyhow::Result;
+
+use super::plan::StepChurn;
+
+/// The active node set of an elastic run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Roster {
+    capacity: usize,
+    /// Active stable ids, sorted ascending (dense row = rank here).
+    active: Vec<u32>,
+}
+
+impl Roster {
+    /// Initial roster: stable ids 0..n0 active out of `capacity`.
+    pub fn new(n0: usize, capacity: usize) -> Roster {
+        assert!(n0 >= 1 && n0 <= capacity, "need 1 <= n0 <= capacity");
+        Roster { capacity, active: (0..n0 as u32).collect() }
+    }
+
+    /// Rebuild from a snapshot's active set (sorted unique ids below
+    /// `capacity`).
+    pub fn from_active(active: Vec<u32>, capacity: usize) -> Result<Roster> {
+        anyhow::ensure!(!active.is_empty(), "roster must keep at least one node");
+        anyhow::ensure!(
+            active.windows(2).all(|w| w[0] < w[1]),
+            "active ids must be sorted and unique"
+        );
+        anyhow::ensure!(
+            (*active.last().unwrap() as usize) < capacity,
+            "active id {} outside capacity {capacity}",
+            active.last().unwrap()
+        );
+        Ok(Roster { capacity, active })
+    }
+
+    /// Active node count m.
+    pub fn n(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Stable-id capacity (= nmax).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Active stable ids, sorted (dense order).
+    pub fn active(&self) -> &[u32] {
+        &self.active
+    }
+
+    pub fn is_active(&self, id: u32) -> bool {
+        self.active.binary_search(&id).is_ok()
+    }
+
+    /// Dense row of stable id `id` (None when parked).
+    pub fn dense_of(&self, id: u32) -> Option<usize> {
+        self.active.binary_search(&id).ok()
+    }
+
+    /// Stable id at dense row `dense`.
+    pub fn id_at(&self, dense: usize) -> u32 {
+        self.active[dense]
+    }
+
+    /// Parked ids, sorted — the tail order for engine slots.
+    pub fn parked(&self) -> Vec<u32> {
+        (0..self.capacity as u32).filter(|&id| !self.is_active(id)).collect()
+    }
+
+    /// Engine-slot order: active ids (dense order) then parked ids.
+    pub fn slot_order(&self) -> Vec<u32> {
+        let mut order = self.active.clone();
+        order.extend(self.parked());
+        order
+    }
+
+    /// Apply one step's realized events (leaves out, joins in).
+    pub fn apply(&mut self, ev: &StepChurn) {
+        self.active.retain(|id| !ev.leaves.contains(id));
+        self.active.extend_from_slice(&ev.joins);
+        self.active.sort_unstable();
+        debug_assert!(
+            self.active.windows(2).all(|w| w[0] < w[1]),
+            "roster invariant broken: duplicate or unsorted ids"
+        );
+        debug_assert!(!self.active.is_empty());
+    }
+}
+
+/// Cumulative membership accounting across a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnStats {
+    /// Nodes that joined (warm-started) over the run.
+    pub joins: usize,
+    /// Nodes that left over the run.
+    pub leaves: usize,
+    /// Steps at which the roster changed (and W was rebuilt).
+    pub resizes: usize,
+}
+
+impl ChurnStats {
+    pub fn record(&mut self, ev: &StepChurn) {
+        self.joins += ev.joins.len();
+        self.leaves += ev.leaves.len();
+        self.resizes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_roster_is_prefix_and_maps_both_ways() {
+        let r = Roster::new(4, 8);
+        assert_eq!(r.n(), 4);
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.active(), &[0, 1, 2, 3]);
+        assert_eq!(r.parked(), vec![4, 5, 6, 7]);
+        assert_eq!(r.slot_order(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(r.dense_of(2), Some(2));
+        assert_eq!(r.dense_of(5), None);
+        assert_eq!(r.id_at(3), 3);
+    }
+
+    #[test]
+    fn apply_keeps_sorted_dense_order() {
+        let mut r = Roster::new(4, 8);
+        r.apply(&StepChurn { joins: vec![6], leaves: vec![1] });
+        assert_eq!(r.active(), &[0, 2, 3, 6]);
+        assert_eq!(r.dense_of(6), Some(3));
+        assert_eq!(r.dense_of(1), None);
+        assert!(r.is_active(6) && !r.is_active(1));
+        assert_eq!(r.parked(), vec![1, 4, 5, 7]);
+        r.apply(&StepChurn { joins: vec![1], leaves: vec![6] });
+        assert_eq!(r.active(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn from_active_validates() {
+        assert!(Roster::from_active(vec![0, 2, 5], 8).is_ok());
+        assert!(Roster::from_active(vec![], 8).is_err());
+        assert!(Roster::from_active(vec![2, 2], 8).is_err());
+        assert!(Roster::from_active(vec![3, 1], 8).is_err());
+        assert!(Roster::from_active(vec![0, 8], 8).is_err());
+    }
+
+    #[test]
+    fn churn_stats_accumulate() {
+        let mut s = ChurnStats::default();
+        s.record(&StepChurn { joins: vec![4, 5], leaves: vec![0] });
+        s.record(&StepChurn { joins: vec![], leaves: vec![2] });
+        assert_eq!(s, ChurnStats { joins: 2, leaves: 2, resizes: 2 });
+    }
+}

@@ -1,0 +1,43 @@
+//! Elastic membership (DESIGN.md §9): seeded node churn, live topology
+//! resize and bitwise checkpoint/resume.
+//!
+//! Real decentralized fleets grow and shrink mid-run — the systems gap
+//! "From promise to practice" (arXiv 2410.11998) names between
+//! decentralized theory (which fixes the node set) and deployable
+//! training. This subsystem makes the roster a first-class, *seeded*
+//! quantity:
+//!
+//! * [`plan`] — a [`ChurnPlan`] draws per-(step, stable id) join/leave
+//!   events from counter-keyed PCG64 streams, in the style of
+//!   `sim::plan::FaultPlan`: replayable, iteration-order free, and
+//!   realized deterministically against the `[nmin, nmax]` roster
+//!   bounds.
+//! * [`membership`] — the [`Roster`] bijection between *stable ids*
+//!   (physical nodes, what every seeded schedule keys on) and *dense
+//!   rows* (the contiguous 0..m space the comm engine and optimizer
+//!   rounds see). The trainer extends the PR-1 in-place CSR rebuild to
+//!   a changing n: departures fold out of the mixing graph and the
+//!   Metropolis–Hastings weights are rebuilt over the survivors, so
+//!   realized W stays symmetric doubly stochastic at every size
+//!   (`rust/tests/elastic.rs` pins row sums and symmetry after every
+//!   resize); joiners warm-start from their neighbors' decoded wire
+//!   average with momentum zeroed.
+//! * [`snapshot`] — a versioned, checksummed [`Snapshot`] of the
+//!   complete cross-step trainer state (params, momentum, aux buffers,
+//!   shard cursors + RNG counters, codec EF residuals, fault cache and
+//!   async ring history, the active roster), such that
+//!   save → restore → continue is bitwise identical to an
+//!   uninterrupted run.
+//!
+//! Wired through `Config::churn` /
+//! `--churn join=0.02,leave=0.02,nmin=8,nmax=64,seed=7`,
+//! `Trainer::{checkpoint, restore, resume}` and
+//! `experiments::fig_elastic` (`fig-elastic --smoke` is the CI gate).
+
+pub mod membership;
+pub mod plan;
+pub mod snapshot;
+
+pub use membership::{ChurnStats, Roster};
+pub use plan::{ChurnPlan, ChurnSpec, StepChurn};
+pub use snapshot::Snapshot;

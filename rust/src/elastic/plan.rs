@@ -1,0 +1,305 @@
+//! Seeded, deterministic churn schedules — the membership analog of
+//! [`crate::sim::FaultPlan`] (DESIGN.md §9).
+//!
+//! A [`ChurnPlan`] turns a [`ChurnSpec`] (per-step join/leave rates
+//! plus roster bounds) into concrete per-step membership events. Every
+//! decision — "does active node `id` leave at step k?", "does parked
+//! id `id` join?" — is drawn from its own counter-keyed
+//! [`Pcg64`] stream, so the schedule is
+//!
+//! * **replayable**: the same (spec, step, id) always yields the same
+//!   answer, independent of query order or repetition;
+//! * **stable-id keyed**: a node keeps its stream however the dense
+//!   roster is packed around it, so fault/codec schedules (which share
+//!   the discipline) stay valid across resizes.
+//!
+//! Realization is deterministic too: candidate leaves are capped so
+//! the active count never drops below `nmin`, candidate joins so it
+//! never exceeds `nmax`, both lowest-id-first; and events begin at
+//! step 1 (step 0 always trains on the initial roster). The realized
+//! topology is rebuilt over the surviving roster each resize, so it
+//! can never disconnect — the trainer asserts connectivity at every
+//! resize as defense in depth.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+
+use super::membership::Roster;
+
+/// Per-step churn rates plus roster bounds and the schedule seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnSpec {
+    /// P(a parked stable id joins at a step).
+    pub join: f64,
+    /// P(an active node leaves at a step).
+    pub leave: f64,
+    /// Roster floor: leaves are capped so the active count never drops
+    /// below it. 0 = unset until [`ChurnSpec::resolve`].
+    pub nmin: usize,
+    /// Roster capacity: the stable-id space is 0..nmax and the workload
+    /// must supply one shard per stable id. 0 = unset until
+    /// [`ChurnSpec::resolve`].
+    pub nmax: usize,
+    /// Seed of the churn schedule (independent of the topology seed).
+    pub seed: u64,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec { join: 0.0, leave: 0.0, nmin: 0, nmax: 0, seed: 0 }
+    }
+}
+
+impl ChurnSpec {
+    /// Parse the CLI form `join=0.02,leave=0.02,nmin=8,nmax=64,seed=7`.
+    /// Rates in [0, 1]; omitted keys default to 0 / `default_seed`;
+    /// `nmin`/`nmax` default to the run's node count at
+    /// [`ChurnSpec::resolve`]. A bare `--churn` (the literal "true")
+    /// parses as all defaults, like `--async`.
+    pub fn parse(s: &str, default_seed: u64) -> Result<ChurnSpec> {
+        let mut spec = ChurnSpec { seed: default_seed, ..Default::default() };
+        if s.trim() == "true" {
+            return Ok(spec);
+        }
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("churn spec entry `{part}` is not key=value");
+            };
+            match k.trim() {
+                "join" => spec.join = parse_rate(k, v)?,
+                "leave" => spec.leave = parse_rate(k, v)?,
+                "nmin" => spec.nmin = parse_count(k, v)?,
+                "nmax" => spec.nmax = parse_count(k, v)?,
+                "seed" => spec.seed = v.trim().parse()?,
+                other => bail!("unknown churn key `{other}` (join|leave|nmin|nmax|seed)"),
+            }
+        }
+        if spec.nmin > 0 && spec.nmax > 0 && spec.nmin > spec.nmax {
+            bail!("churn bounds nmin={} > nmax={}", spec.nmin, spec.nmax);
+        }
+        Ok(spec)
+    }
+
+    /// Fill unset bounds from the run's initial node count and validate
+    /// `1 ≤ nmin ≤ n0 ≤ nmax`. `nmin` defaults to min(2, n0), `nmax`
+    /// to n0 (a fixed-capacity roster unless the user opens headroom).
+    pub fn resolve(mut self, n0: usize) -> Result<ChurnSpec> {
+        if self.nmax == 0 {
+            self.nmax = n0;
+        }
+        if self.nmin == 0 {
+            self.nmin = 2.min(n0);
+        }
+        if !(1 <= self.nmin && self.nmin <= n0 && n0 <= self.nmax) {
+            bail!(
+                "churn bounds must satisfy 1 <= nmin <= nodes <= nmax, \
+                 got nmin={} nodes={n0} nmax={}",
+                self.nmin,
+                self.nmax
+            );
+        }
+        Ok(self)
+    }
+
+    /// True when no event can ever fire — the static degenerate plan.
+    pub fn is_zero(&self) -> bool {
+        self.join == 0.0 && self.leave == 0.0
+    }
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f64> {
+    let rate: f64 = v.trim().parse()?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("churn rate `{key}={rate}` outside [0, 1]");
+    }
+    Ok(rate)
+}
+
+fn parse_count(key: &str, v: &str) -> Result<usize> {
+    let n: usize = v.trim().parse()?;
+    if n == 0 {
+        bail!("churn bound `{key}` must be >= 1");
+    }
+    Ok(n)
+}
+
+/// Realized membership events of one step, in stable ids (sorted).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StepChurn {
+    /// Parked ids that join this step (warm-started before the round).
+    pub joins: Vec<u32>,
+    /// Active ids that leave this step (gone before the round).
+    pub leaves: Vec<u32>,
+}
+
+impl StepChurn {
+    pub fn is_empty(&self) -> bool {
+        self.joins.is_empty() && self.leaves.is_empty()
+    }
+}
+
+/// Domain-separation tags: one independent stream family per event kind.
+const TAG_JOIN: u64 = 0xe1a5_0a11;
+const TAG_LEAVE: u64 = 0xe1a5_0ff5;
+
+/// A deterministic membership schedule over steps.
+#[derive(Debug, Clone)]
+pub struct ChurnPlan {
+    pub spec: ChurnSpec,
+}
+
+impl ChurnPlan {
+    pub fn new(spec: ChurnSpec) -> ChurnPlan {
+        ChurnPlan { spec }
+    }
+
+    /// One Bernoulli draw on the (tag, step, id) stream — the shared
+    /// counter-keyed discipline ([`Pcg64::counter_keyed`], the same
+    /// helper `sim::FaultPlan` and the codec streams draw from).
+    fn draw(&self, tag: u64, step: usize, id: u64, rate: f64) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        Pcg64::counter_keyed(self.spec.seed, tag, step as u64, id).f64() < rate
+    }
+
+    /// Does active node `id` want to leave at `step`?
+    pub fn wants_leave(&self, step: usize, id: u32) -> bool {
+        self.draw(TAG_LEAVE, step, id as u64, self.spec.leave)
+    }
+
+    /// Does parked id `id` want to join at `step`?
+    pub fn wants_join(&self, step: usize, id: u32) -> bool {
+        self.draw(TAG_JOIN, step, id as u64, self.spec.join)
+    }
+
+    /// Realized events at `step` for the current roster: per-id wishes
+    /// capped deterministically (lowest id first) to the `[nmin, nmax]`
+    /// bounds. Step 0 is always empty — the initial roster trains at
+    /// least one round before anything moves.
+    pub fn step_churn(&self, step: usize, roster: &Roster) -> StepChurn {
+        if step == 0 || self.spec.is_zero() {
+            return StepChurn::default();
+        }
+        let mut leaves: Vec<u32> = roster
+            .active()
+            .iter()
+            .copied()
+            .filter(|&id| self.wants_leave(step, id))
+            .collect();
+        leaves.truncate(roster.n().saturating_sub(self.spec.nmin));
+        let after = roster.n() - leaves.len();
+        let mut joins: Vec<u32> = (0..self.spec.nmax as u32)
+            .filter(|&id| !roster.is_active(id))
+            .filter(|&id| self.wants_join(step, id))
+            .collect();
+        joins.truncate(self.spec.nmax - after);
+        StepChurn { joins, leaves }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> ChurnSpec {
+        ChurnSpec::parse(s, 1).unwrap()
+    }
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let s = spec("join=0.02,leave=0.05,nmin=8,nmax=64,seed=7");
+        assert_eq!(s.join, 0.02);
+        assert_eq!(s.leave, 0.05);
+        assert_eq!(s.nmin, 8);
+        assert_eq!(s.nmax, 64);
+        assert_eq!(s.seed, 7);
+        assert!(!s.is_zero());
+        let d = spec("");
+        assert!(d.is_zero());
+        assert_eq!(d.seed, 1, "seed defaults to the run seed");
+        assert!(spec("true").is_zero(), "bare --churn parses as defaults");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ChurnSpec::parse("join=1.5", 0).is_err());
+        assert!(ChurnSpec::parse("leave=-0.1", 0).is_err());
+        assert!(ChurnSpec::parse("nmin=0", 0).is_err());
+        assert!(ChurnSpec::parse("warp=0.1", 0).is_err());
+        assert!(ChurnSpec::parse("join", 0).is_err());
+        assert!(ChurnSpec::parse("nmin=9,nmax=4", 0).is_err());
+    }
+
+    #[test]
+    fn resolve_fills_bounds_and_validates() {
+        let s = spec("join=0.1").resolve(8).unwrap();
+        assert_eq!(s.nmin, 2);
+        assert_eq!(s.nmax, 8);
+        let s = spec("join=0.1,nmax=16").resolve(8).unwrap();
+        assert_eq!(s.nmax, 16);
+        assert!(spec("nmin=9").resolve(8).is_err(), "nmin above n0");
+        assert!(spec("nmax=4").resolve(8).is_err(), "nmax below n0");
+        let one = spec("").resolve(1).unwrap();
+        assert_eq!(one.nmin, 1);
+    }
+
+    #[test]
+    fn schedule_replays_identically_and_step0_is_quiet() {
+        let plan = ChurnPlan::new(spec("join=0.3,leave=0.3,nmin=2,nmax=12").resolve(6).unwrap());
+        let roster = Roster::new(6, 12);
+        assert!(plan.step_churn(0, &roster).is_empty(), "step 0 must be quiet");
+        for step in [1usize, 2, 17, 999] {
+            let a = plan.step_churn(step, &roster);
+            let b = plan.step_churn(step, &roster);
+            assert_eq!(a, b, "step {step}");
+        }
+        let zero = ChurnPlan::new(spec("").resolve(6).unwrap());
+        for step in 0..50 {
+            assert!(zero.step_churn(step, &roster).is_empty());
+        }
+    }
+
+    #[test]
+    fn bounds_hold_over_a_long_schedule() {
+        let sp = spec("join=0.4,leave=0.4,nmin=3,nmax=10,seed=5").resolve(6).unwrap();
+        let plan = ChurnPlan::new(sp);
+        let mut roster = Roster::new(6, 10);
+        let (mut joins, mut leaves) = (0usize, 0usize);
+        for step in 0..300 {
+            let ev = plan.step_churn(step, &roster);
+            for &j in &ev.joins {
+                assert!(!roster.is_active(j), "step {step}: joiner {j} already active");
+            }
+            for &l in &ev.leaves {
+                assert!(roster.is_active(l), "step {step}: leaver {l} not active");
+            }
+            joins += ev.joins.len();
+            leaves += ev.leaves.len();
+            roster.apply(&ev);
+            assert!(
+                (sp.nmin..=sp.nmax).contains(&roster.n()),
+                "step {step}: roster size {} outside [{}, {}]",
+                roster.n(),
+                sp.nmin,
+                sp.nmax
+            );
+        }
+        assert!(joins > 0 && leaves > 0, "rates 0.4 never realized an event");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let roster = Roster::new(8, 16);
+        let mk = |seed: u64| {
+            let sp = ChurnSpec { join: 0.5, leave: 0.5, nmin: 2, nmax: 16, seed };
+            let plan = ChurnPlan::new(sp);
+            (1..20).map(|k| plan.step_churn(k, &roster)).collect::<Vec<_>>()
+        };
+        assert_ne!(mk(1), mk(2));
+    }
+}

@@ -1,0 +1,650 @@
+//! Versioned, checksummed trainer snapshots (DESIGN.md §9).
+//!
+//! A [`Snapshot`] captures the COMPLETE cross-step mutable state of a
+//! [`crate::coordinator::Trainer`]: per-node params, momentum and aux
+//! buffers; per-shard batch cursors and RNG counters; codec
+//! error-feedback residuals; the fault engine's publish cache, async
+//! ring history and cumulative stats; and the active roster. Restoring
+//! it into a freshly constructed trainer of the SAME configuration and
+//! continuing is bitwise identical to the uninterrupted run
+//! (`rust/tests/elastic.rs` pins this across every optimizer × codec ×
+//! fault combination).
+//!
+//! ## Wire format (version 1, little-endian)
+//!
+//! ```text
+//! magic "DLSNAP01" | version u32 | payload_len u64 | fnv1a64 u64 | payload
+//! ```
+//!
+//! The checksum covers the payload only; readers verify it BEFORE
+//! parsing, so a flipped byte fails loudly instead of resuming from
+//! silently corrupt state. Strings are u32-length-prefixed UTF-8,
+//! vectors u32-length-prefixed, and f32 lanes are raw LE bit patterns
+//! (bit-exact round trip — the whole point).
+//!
+//! The [`SnapshotMeta`] header names the run the snapshot belongs to
+//! (optimizer, topology, every spec string, seed, sizes, the
+//! optimizer's aux-buffer labels); resume refuses on any mismatch — a
+//! checkpoint is only bitwise-resumable into the exact configuration
+//! that wrote it.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synth::ShardCursor;
+use crate::optim::NodeState;
+use crate::sim::FaultStats;
+
+use super::membership::ChurnStats;
+
+/// File magic; the trailing "01" is the major layout generation (bump
+/// together with [`VERSION`] on incompatible changes).
+pub const MAGIC: &[u8; 8] = b"DLSNAP01";
+/// Format version written (and the only one read).
+pub const VERSION: u32 = 1;
+
+/// Identity of the run a snapshot belongs to.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SnapshotMeta {
+    pub optimizer: String,
+    pub topology: String,
+    /// The literal spec strings — byte equality is the compat check.
+    pub codec: String,
+    pub faults: String,
+    pub async_mode: String,
+    pub churn: String,
+    pub seed: u64,
+    /// Initial active node count (`Config::nodes`).
+    pub nodes: u32,
+    /// Stable-id capacity (= churn nmax; = nodes when not elastic).
+    pub capacity: u32,
+    /// Flat parameter dimension.
+    pub dim: u32,
+    /// Workload identity (`Workload::name`) — two architectures can
+    /// share a flat dim, so the dim check alone cannot catch resuming
+    /// into a different model/dataset.
+    pub model: String,
+    /// Comma-joined aux-buffer labels of the optimizer (layout check).
+    pub aux_labels: String,
+    /// Canonical fingerprint of every trajectory-determining hyper
+    /// parameter (lr, momentum, schedule, batch shape, lazy-W, SlowMo
+    /// knobs, …): resuming with a different lr or schedule would
+    /// silently diverge from the uninterrupted run, so it refuses
+    /// instead.
+    pub hyper: String,
+}
+
+/// Fault-engine state carried by a checkpoint.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultState {
+    /// The previous round's publish cache (None = cold).
+    pub cache: Option<Vec<Vec<f32>>>,
+    /// Cumulative fault accounting at the checkpoint.
+    pub stats: FaultStats,
+    /// Async per-slot ring history: (ring newest→oldest, staged).
+    pub rings: Vec<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>)>,
+}
+
+/// The complete cross-step mutable state of a trainer.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub meta: SnapshotMeta,
+    /// Next step the resumed run executes (steps 0..step are done).
+    pub step: u64,
+    /// Whether any membership change has happened (the resumed run
+    /// keeps the time-varying guard engaged if so).
+    pub churned: bool,
+    /// Step at which the current topology realization was built (the
+    /// last resize step; 0 before any resize) — seed-dependent kinds
+    /// (erdos) need it to rebuild the exact graph.
+    pub topo_step: u64,
+    /// Cumulative membership accounting at the checkpoint.
+    pub churn_stats: ChurnStats,
+    /// Active stable ids, sorted ascending (dense order).
+    pub active: Vec<u32>,
+    /// Per-node optimizer state in dense order (x, momentum, aux).
+    pub states: Vec<NodeState>,
+    /// Per-STABLE-id shard cursors, `capacity` entries (None =
+    /// stateless gradient engine).
+    pub cursors: Vec<Option<ShardCursor>>,
+    /// Codec EF residuals `[slot][dense node][dim]` (None = no codec
+    /// state attached to the run).
+    pub codec_residuals: Option<Vec<Vec<Vec<f32>>>>,
+    /// Fault-engine state (None = no fault engine attached).
+    pub faults: Option<FaultState>,
+}
+
+// ---------------------------------------------------------------- bytes
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn boolean(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn rows(&mut self, rows: &[Vec<f32>]) {
+        self.u32(rows.len() as u32);
+        for r in rows {
+            self.f32s(r);
+        }
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.i.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(e) => {
+                let s = &self.b[self.i..e];
+                self.i = e;
+                Ok(s)
+            }
+            None => bail!("snapshot truncated at byte {}", self.i),
+        }
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn boolean(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("bad bool byte {v} at offset {}", self.i - 1),
+        }
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        Ok(std::str::from_utf8(b)?.to_string())
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let b = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let b = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn rows(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.u32()? as usize;
+        let mut rows = Vec::with_capacity(self.cap(n, 4));
+        for _ in 0..n {
+            rows.push(self.f32s()?);
+        }
+        Ok(rows)
+    }
+    /// Sanity-capped capacity hint for a count read from the payload:
+    /// every element still needs at least `min_bytes` more payload, so
+    /// a forged/garbage count can never force a huge up-front
+    /// allocation — parsing simply fails with Err on the missing bytes
+    /// (fnv1a64 is integrity, not authentication).
+    fn cap(&self, n: usize, min_bytes: usize) -> usize {
+        n.min((self.b.len() - self.i) / min_bytes.max(1))
+    }
+    fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("snapshot has {} trailing bytes", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+impl Snapshot {
+    /// Serialize to the checksummed wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = W::default();
+        // -- meta
+        w.string(&self.meta.optimizer);
+        w.string(&self.meta.topology);
+        w.string(&self.meta.codec);
+        w.string(&self.meta.faults);
+        w.string(&self.meta.async_mode);
+        w.string(&self.meta.churn);
+        w.u64(self.meta.seed);
+        w.u32(self.meta.nodes);
+        w.u32(self.meta.capacity);
+        w.u32(self.meta.dim);
+        w.string(&self.meta.model);
+        w.string(&self.meta.aux_labels);
+        w.string(&self.meta.hyper);
+        // -- cursor position
+        w.u64(self.step);
+        w.boolean(self.churned);
+        w.u64(self.topo_step);
+        w.u64(self.churn_stats.joins as u64);
+        w.u64(self.churn_stats.leaves as u64);
+        w.u64(self.churn_stats.resizes as u64);
+        w.u32s(&self.active);
+        // -- per-node optimizer state
+        w.u32(self.states.len() as u32);
+        for st in &self.states {
+            w.f32s(&st.x);
+            w.f32s(&st.m);
+            w.u32(st.aux.len() as u32);
+            for a in &st.aux {
+                w.f32s(a);
+            }
+        }
+        // -- per-stable-id shard cursors
+        w.u32(self.cursors.len() as u32);
+        for c in &self.cursors {
+            match c {
+                None => w.boolean(false),
+                Some(c) => {
+                    w.boolean(true);
+                    w.u64(c.cursor);
+                    w.u32s(&c.order);
+                    for &part in &c.rng {
+                        w.u64(part);
+                    }
+                }
+            }
+        }
+        // -- codec EF residuals
+        match &self.codec_residuals {
+            None => w.boolean(false),
+            Some(slots) => {
+                w.boolean(true);
+                w.u32(slots.len() as u32);
+                for slot in slots {
+                    w.rows(slot);
+                }
+            }
+        }
+        // -- fault engine
+        match &self.faults {
+            None => w.boolean(false),
+            Some(f) => {
+                w.boolean(true);
+                match &f.cache {
+                    None => w.boolean(false),
+                    Some(cache) => {
+                        w.boolean(true);
+                        w.rows(cache);
+                    }
+                }
+                let s = &f.stats;
+                for v in [
+                    s.steps,
+                    s.nominal_edges,
+                    s.realized_edges,
+                    s.masked_edges,
+                    s.stale_messages,
+                    s.async_stale_messages,
+                    s.dropped_node_steps,
+                    s.straggler_node_steps,
+                ] {
+                    w.u64(v as u64);
+                }
+                w.u32(f.rings.len() as u32);
+                for (ring, staged) in &f.rings {
+                    w.u32(ring.len() as u32);
+                    for entry in ring {
+                        w.rows(entry);
+                    }
+                    w.rows(staged);
+                }
+            }
+        }
+        // -- frame: magic | version | len | checksum | payload
+        let payload = w.buf;
+        let mut out = Vec::with_capacity(payload.len() + 28);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse and verify the checksummed wire format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot> {
+        let mut r = R { b: bytes, i: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC.as_slice() {
+            bail!("not a DecentLaM snapshot (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("snapshot version {version} unsupported (this build reads {VERSION})");
+        }
+        let len = r.u64()? as usize;
+        let want = r.u64()?;
+        let payload = r.take(len)?;
+        r.done()?;
+        let got = fnv1a64(payload);
+        if got != want {
+            bail!("snapshot checksum mismatch: stored {want:#018x}, computed {got:#018x}");
+        }
+        let mut r = R { b: payload, i: 0 };
+        let meta = SnapshotMeta {
+            optimizer: r.string()?,
+            topology: r.string()?,
+            codec: r.string()?,
+            faults: r.string()?,
+            async_mode: r.string()?,
+            churn: r.string()?,
+            seed: r.u64()?,
+            nodes: r.u32()?,
+            capacity: r.u32()?,
+            dim: r.u32()?,
+            model: r.string()?,
+            aux_labels: r.string()?,
+            hyper: r.string()?,
+        };
+        let step = r.u64()?;
+        let churned = r.boolean()?;
+        let topo_step = r.u64()?;
+        let churn_stats = ChurnStats {
+            joins: r.u64()? as usize,
+            leaves: r.u64()? as usize,
+            resizes: r.u64()? as usize,
+        };
+        let active = r.u32s()?;
+        let n_states = r.u32()? as usize;
+        let mut states = Vec::with_capacity(r.cap(n_states, 12));
+        for _ in 0..n_states {
+            let x = r.f32s()?;
+            let m = r.f32s()?;
+            let n_aux = r.u32()? as usize;
+            let mut aux = Vec::with_capacity(r.cap(n_aux, 4));
+            for _ in 0..n_aux {
+                aux.push(r.f32s()?);
+            }
+            states.push(NodeState { x, m, aux });
+        }
+        let n_cursors = r.u32()? as usize;
+        let mut cursors = Vec::with_capacity(r.cap(n_cursors, 1));
+        for _ in 0..n_cursors {
+            if r.boolean()? {
+                let cursor = r.u64()?;
+                let order = r.u32s()?;
+                let mut rng = [0u64; 4];
+                for part in rng.iter_mut() {
+                    *part = r.u64()?;
+                }
+                cursors.push(Some(ShardCursor { cursor, order, rng }));
+            } else {
+                cursors.push(None);
+            }
+        }
+        let codec_residuals = if r.boolean()? {
+            let n_slots = r.u32()? as usize;
+            let mut slots = Vec::with_capacity(r.cap(n_slots, 4));
+            for _ in 0..n_slots {
+                slots.push(r.rows()?);
+            }
+            Some(slots)
+        } else {
+            None
+        };
+        let faults = if r.boolean()? {
+            let cache = if r.boolean()? { Some(r.rows()?) } else { None };
+            let mut raw = [0u64; 8];
+            for v in raw.iter_mut() {
+                *v = r.u64()?;
+            }
+            let stats = FaultStats {
+                steps: raw[0] as usize,
+                nominal_edges: raw[1] as usize,
+                realized_edges: raw[2] as usize,
+                masked_edges: raw[3] as usize,
+                stale_messages: raw[4] as usize,
+                async_stale_messages: raw[5] as usize,
+                dropped_node_steps: raw[6] as usize,
+                straggler_node_steps: raw[7] as usize,
+            };
+            let n_slots = r.u32()? as usize;
+            let mut rings = Vec::with_capacity(r.cap(n_slots, 8));
+            for _ in 0..n_slots {
+                let depth = r.u32()? as usize;
+                let mut ring = Vec::with_capacity(r.cap(depth, 4));
+                for _ in 0..depth {
+                    ring.push(r.rows()?);
+                }
+                let staged = r.rows()?;
+                rings.push((ring, staged));
+            }
+            Some(FaultState { cache, stats, rings })
+        } else {
+            None
+        };
+        r.done()?;
+        Ok(Snapshot {
+            meta,
+            step,
+            churned,
+            topo_step,
+            churn_stats,
+            active,
+            states,
+            cursors,
+            codec_residuals,
+            faults,
+        })
+    }
+
+    /// Write the snapshot to a file — atomically: a crash mid-write
+    /// must never destroy the previous checkpoint at `path`, so the
+    /// bytes go to a sibling temp file first and rename over the
+    /// target (same directory ⇒ same filesystem ⇒ atomic on POSIX).
+    /// The temp name APPENDS ".tmp" (never replaces an extension), so
+    /// a target that itself ends in ".tmp" still stages elsewhere and
+    /// distinct targets never share a staging file.
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .ok_or_else(|| anyhow::anyhow!("snapshot path {} has no file name", path.display()))?;
+        tmp_name.push(".tmp");
+        let tmp = path.with_file_name(tmp_name);
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing snapshot {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("committing snapshot {}", path.display()))
+    }
+
+    /// Read and verify a snapshot file.
+    pub fn read_file(path: &Path) -> Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        Snapshot::from_bytes(&bytes)
+            .with_context(|| format!("parsing snapshot {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rich_snapshot() -> Snapshot {
+        Snapshot {
+            meta: SnapshotMeta {
+                optimizer: "decentlam".into(),
+                topology: "ring".into(),
+                codec: "int8,ef=true,seed=5".into(),
+                faults: "drop=0.1,seed=9".into(),
+                async_mode: String::new(),
+                churn: "join=0.05,leave=0.05,nmin=2,nmax=6,seed=3".into(),
+                seed: 11,
+                nodes: 4,
+                capacity: 6,
+                dim: 3,
+                model: "native-mlp".into(),
+                aux_labels: "x_prev,prev_update".into(),
+                hyper: "lr=0.08;momentum=0.9;schedule=Constant".into(),
+            },
+            step: 17,
+            churned: true,
+            topo_step: 9,
+            churn_stats: ChurnStats { joins: 3, leaves: 1, resizes: 2 },
+            active: vec![0, 2, 3, 5],
+            states: vec![
+                NodeState {
+                    x: vec![1.0, -2.5, f32::MIN_POSITIVE],
+                    m: vec![0.5, 0.0, -0.0],
+                    aux: vec![vec![9.0, 8.0, 7.0], vec![0.0, 0.1, 0.2]],
+                },
+                NodeState { x: vec![0.0; 3], m: vec![0.0; 3], aux: vec![] },
+            ],
+            cursors: vec![
+                Some(ShardCursor { cursor: 5, order: vec![2, 0, 1], rng: [1, 2, 3, 4] }),
+                None,
+                Some(ShardCursor { cursor: 0, order: vec![0], rng: [9, 9, 9, 9] }),
+            ],
+            codec_residuals: Some(vec![vec![vec![0.25, -0.5, 0.125]; 4]]),
+            faults: Some(FaultState {
+                cache: Some(vec![vec![1.0, 2.0, 3.0]; 4]),
+                stats: FaultStats {
+                    steps: 17,
+                    nominal_edges: 68,
+                    realized_edges: 60,
+                    masked_edges: 8,
+                    stale_messages: 3,
+                    async_stale_messages: 0,
+                    dropped_node_steps: 2,
+                    straggler_node_steps: 1,
+                },
+                rings: vec![(vec![vec![vec![5.0, 6.0, 7.0]; 4]], vec![vec![8.0, 9.0, 10.0]; 4])],
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let snap = rich_snapshot();
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.meta, snap.meta);
+        assert_eq!(back.step, snap.step);
+        assert_eq!(back.churned, snap.churned);
+        assert_eq!(back.topo_step, snap.topo_step);
+        assert_eq!(back.churn_stats, snap.churn_stats);
+        assert_eq!(back.active, snap.active);
+        assert_eq!(back.cursors, snap.cursors);
+        assert_eq!(back.codec_residuals, snap.codec_residuals);
+        assert_eq!(back.faults, snap.faults);
+        assert_eq!(back.states.len(), snap.states.len());
+        for (a, b) in back.states.iter().zip(&snap.states) {
+            // Bit-level equality (covers -0.0 and subnormals, which
+            // `==` would blur).
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.x), bits(&b.x));
+            assert_eq!(bits(&a.m), bits(&b.m));
+            assert_eq!(a.aux.len(), b.aux.len());
+            for (aa, bb) in a.aux.iter().zip(&b.aux) {
+                assert_eq!(bits(aa), bits(bb));
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_fail_loudly() {
+        let bytes = rich_snapshot().to_bytes();
+        // Flip one payload byte: checksum must catch it.
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(Snapshot::from_bytes(&bad).is_err(), "flipped byte accepted");
+        // Truncate: must not panic, must error.
+        for cut in [0usize, 4, 7, 8, 20, bytes.len() - 1] {
+            assert!(Snapshot::from_bytes(&bytes[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // Trailing garbage after the framed payload is rejected.
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(Snapshot::from_bytes(&padded).is_err());
+        // Bad magic / version.
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert!(Snapshot::from_bytes(&wrong).is_err());
+        let mut vers = bytes;
+        vers[8] = 99;
+        assert!(Snapshot::from_bytes(&vers).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("decentlam_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("snap_{}.bin", std::process::id()));
+        let snap = rich_snapshot();
+        snap.write_file(&path).unwrap();
+        let back = Snapshot::read_file(&path).unwrap();
+        assert_eq!(back.meta, snap.meta);
+        assert_eq!(back.active, snap.active);
+        std::fs::remove_file(&path).ok();
+        assert!(Snapshot::read_file(&path).is_err(), "missing file must error");
+    }
+
+    #[test]
+    fn minimal_snapshot_roundtrips() {
+        let snap = Snapshot {
+            meta: SnapshotMeta::default(),
+            step: 0,
+            churned: false,
+            topo_step: 0,
+            churn_stats: ChurnStats::default(),
+            active: vec![0],
+            states: vec![NodeState { x: vec![], m: vec![], aux: vec![] }],
+            cursors: vec![None],
+            codec_residuals: None,
+            faults: None,
+        };
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert!(back.codec_residuals.is_none());
+        assert!(back.faults.is_none());
+        assert_eq!(back.cursors, vec![None]);
+    }
+}

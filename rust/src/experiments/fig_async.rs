@@ -316,9 +316,7 @@ pub fn smoke(args: &Args) -> Result<()> {
             );
             Ok(Trainer::new(cfg, wl)?.run().losses)
         };
-        let a = run(0)?;
-        anyhow::ensure!(a == run(0)?, "async rerun was not byte-identical");
-        anyhow::ensure!(a == run(1)?, "async parallel != serial");
+        super::smoke::assert_replay_and_par_eq("heterogeneous async cell", run)?;
         println!("smoke 2/3 OK: heterogeneous async deterministic, parallel == serial");
     }
 

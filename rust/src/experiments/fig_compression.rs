@@ -231,11 +231,8 @@ pub fn smoke(args: &Args) -> Result<()> {
     );
     anyhow::ensure!(wire_fp32 == wire_fp32_codec, "fp32 codec changed byte accounting");
 
-    let (int8_a, int8_loss, wire_int8) = run("int8", 0)?;
-    let (int8_b, _, _) = run("int8", 0)?;
-    anyhow::ensure!(int8_a == int8_b, "int8 rerun was not byte-identical");
-    let (int8_serial, _, _) = run("int8", 1)?;
-    anyhow::ensure!(int8_a == int8_serial, "int8 parallel != serial");
+    let (_, int8_loss, wire_int8) =
+        super::smoke::assert_replay_and_par_eq("int8 cell", |threads| run("int8", threads))?;
 
     let ratio = wire_fp32 / wire_int8;
     anyhow::ensure!(ratio >= 3.9, "int8 wire cut {ratio:.3}x < 3.9x");

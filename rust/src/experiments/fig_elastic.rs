@@ -1,0 +1,417 @@
+//! Elastic-membership sweep: churn rate vs final eval loss for DmSGD
+//! vs DecentLaM vs PmSGD (the elastic layer's headline figure; no
+//! paper analog — this extends §7 to the dynamic-fleet regimes of
+//! "From promise to practice", arXiv 2410.11998).
+//!
+//! For each (method, churn rate) cell, train in the heterogeneous
+//! regime with a seeded [`crate::elastic::ChurnPlan`] joining/leaving
+//! nodes mid-run: every join injects a warm-started model averaged
+//! from Dirichlet-heterogeneous neighbors — fresh inconsistency that
+//! raw momentum can amplify (cf. Momentum Tracking, arXiv 2209.15505)
+//! but DecentLaM's bias-corrected momentum should absorb. Reported per
+//! cell: final eval loss of the average model, accuracy, consensus,
+//! realized joins/leaves and the final roster size.
+//!
+//! Everything is seeded (data, topology, churn schedule), so two runs
+//! of the same opts produce identical tables byte for byte. The
+//! `--smoke` mode is the CI acceptance gate of the elastic subsystem:
+//! zero-churn bitwise == fixed-roster trainer, a mid-run
+//! checkpoint/resume round-trip (through the checksummed file format)
+//! reproduces the uninterrupted run bitwise, parallel == serial under
+//! active churn, and reruns are byte-identical.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::elastic::Snapshot;
+use crate::grad::mlp;
+use crate::util::cli::Args;
+use crate::util::config::{Config, LrSchedule};
+use crate::util::table::{pct, sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Initial active nodes n0.
+    pub nodes: usize,
+    /// Stable-id capacity (churn nmax): the workload carries one shard
+    /// per stable id, so joiners bring their own data.
+    pub capacity: usize,
+    /// Roster floor (churn nmin).
+    pub nmin: usize,
+    pub steps: usize,
+    pub topology: String,
+    /// Methods to compare (Table 3 names).
+    pub methods: Vec<String>,
+    /// Symmetric churn rates swept across columns (join = leave = r).
+    pub churn_rates: Vec<f64>,
+    pub total_batch: usize,
+    pub arch: String,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            nodes: 12,
+            capacity: 16,
+            nmin: 6,
+            steps: 160,
+            topology: "ring".into(),
+            methods: vec!["dmsgd".into(), "decentlam".into(), "pmsgd".into()],
+            churn_rates: vec![0.0, 0.02, 0.05],
+            total_batch: 1536,
+            arch: "mlp-xs".into(),
+            seed: 7,
+        }
+    }
+}
+
+impl Opts {
+    /// Shared CLI flags for the `fig-elastic` subcommand and
+    /// `examples/elastic_churn.rs`.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.nodes = args.get_usize("nodes", self.nodes)?;
+        self.capacity = args.get_usize("capacity", self.capacity)?;
+        self.nmin = args.get_usize("nmin", self.nmin)?;
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        if let Some(r) = args.get("rate") {
+            self.churn_rates =
+                vec![r.parse().map_err(|e| anyhow::anyhow!("--rate: {e}"))?];
+        }
+        if let Some(t) = args.get("topology") {
+            self.topology = t.into();
+        }
+        Ok(())
+    }
+
+    fn churn_string(&self, rate: f64) -> String {
+        format!(
+            "join={rate},leave={rate},nmin={},nmax={},seed={}",
+            self.nmin, self.capacity, self.seed
+        )
+    }
+}
+
+/// One trained cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub rate: f64,
+    /// Roster size when the run ended.
+    pub final_nodes: usize,
+    /// Realized membership events over the run.
+    pub joins: usize,
+    pub leaves: usize,
+    /// Eval loss of the network-average model.
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    pub consensus: f64,
+}
+
+fn cell_data(opts: &Opts) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes: opts.capacity,
+        samples_per_node: 192,
+        eval_samples: 512,
+        dirichlet_alpha: 0.1, // strongly heterogeneous: bias regime
+        seed: opts.seed,
+        ..Default::default()
+    })
+}
+
+fn cell_config(opts: &Opts, method: &str, rate: f64, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = method.into();
+    cfg.nodes = opts.nodes;
+    cfg.steps = steps;
+    cfg.topology = opts.topology.clone();
+    cfg.total_batch = opts.total_batch;
+    cfg.micro_batch = 32;
+    cfg.lr = 0.08;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.seed = opts.seed;
+    cfg.churn = opts.churn_string(rate);
+    cfg
+}
+
+fn cell_workload(
+    opts: &Opts,
+    data: &ClassificationData,
+    cfg: &Config,
+) -> Result<crate::grad::Workload> {
+    Ok(mlp::workload(
+        mlp::MlpArch::family(&opts.arch)?,
+        data.clone(),
+        cfg.micro_batch,
+        opts.seed,
+    ))
+}
+
+fn cell(opts: &Opts, data: &ClassificationData, method: &str, rate: f64) -> Result<Row> {
+    let cfg = cell_config(opts, method, rate, opts.steps);
+    let wl = cell_workload(opts, data, &cfg)?;
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    let xbar = t.average_model();
+    let eval_loss = t.workload.eval.loss(&xbar).unwrap_or(f64::NAN);
+    let stats = t.churn_stats().copied().unwrap_or_default();
+    Ok(Row {
+        method: method.into(),
+        rate,
+        final_nodes: t.active_nodes(),
+        joins: stats.joins,
+        leaves: stats.leaves,
+        eval_loss,
+        accuracy: report.final_accuracy,
+        consensus: report.final_consensus,
+    })
+}
+
+pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
+    let data = cell_data(opts);
+    let mut rows = Vec::new();
+    for &rate in &opts.churn_rates {
+        for method in &opts.methods {
+            rows.push(cell(opts, &data, method, rate)?);
+        }
+    }
+    let mut table = Table::new(
+        &format!(
+            "elastic churn sweep — {} n={}..{} (floor {}), {} steps, rates {:?} (seed {})",
+            opts.topology,
+            opts.nodes,
+            opts.capacity,
+            opts.nmin,
+            opts.steps,
+            opts.churn_rates,
+            opts.seed
+        ),
+        &["method", "rate", "final n", "joins", "leaves", "consensus", "eval loss", "acc"],
+    );
+    for row in &rows {
+        table.row(vec![
+            row.method.clone(),
+            format!("{}", row.rate),
+            row.final_nodes.to_string(),
+            row.joins.to_string(),
+            row.leaves.to_string(),
+            sig(row.consensus, 3),
+            sig(row.eval_loss, 4),
+            pct(row.accuracy),
+        ]);
+    }
+    Ok((rows, table))
+}
+
+/// Absolute eval-loss degradation of `method` at each churn rate
+/// relative to its own churn-free cell: `loss(r) − loss(0)`. Empty
+/// when the sweep has no rate-0 baseline — callers must not fabricate
+/// a verdict from a baseline-less sweep.
+pub fn degradation(rows: &[Row], method: &str) -> Vec<(f64, f64)> {
+    let Some(base) = rows
+        .iter()
+        .find(|r| r.method == method && r.rate == 0.0)
+        .map(|r| r.eval_loss)
+    else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter(|r| r.method == method)
+        .map(|r| (r.rate, r.eval_loss - base))
+        .collect()
+}
+
+/// CI smoke: the acceptance gate of the elastic subsystem. Asserts
+/// (1) a zero-churn config is bitwise identical to the fixed-roster
+/// trainer, (2) a mid-run checkpoint/resume — round-tripped through
+/// the checksummed snapshot FILE — reproduces the uninterrupted run
+/// bitwise, (3) runs under active churn are deterministic across
+/// reruns and parallel == serial, (4) the sweep renders byte-
+/// identically across reruns. Exits nonzero on any violation.
+pub fn smoke(args: &Args) -> Result<()> {
+    let mut opts = Opts {
+        nodes: 8,
+        capacity: 12,
+        nmin: 4,
+        steps: 40,
+        churn_rates: vec![0.0, 0.15],
+        total_batch: 768,
+        ..Default::default()
+    };
+    opts.apply_args(args)?;
+    let churn_rate = opts.churn_rates.iter().cloned().fold(0.0, f64::max);
+    anyhow::ensure!(churn_rate > 0.0, "smoke needs an active-churn cell to gate on");
+
+    // (1) zero churn == fixed roster, bit for bit. The roster is pinned
+    // at n (nmin = nmax = n = capacity) so both runs see the same
+    // workload shards.
+    {
+        let pinned = Opts { capacity: opts.nodes, nmin: opts.nodes, ..opts.clone() };
+        let data = cell_data(&pinned);
+        let run = |churn: bool| -> Result<Vec<f64>> {
+            let mut cfg = cell_config(&pinned, "decentlam", 0.0, pinned.steps);
+            if !churn {
+                cfg.churn = String::new();
+            }
+            let wl = cell_workload(&pinned, &data, &cfg)?;
+            Ok(Trainer::new(cfg, wl)?.run().losses)
+        };
+        anyhow::ensure!(
+            run(true)? == run(false)?,
+            "zero-churn run diverged from the fixed-roster trainer"
+        );
+        println!(
+            "smoke 1/4 OK: zero-churn bitwise == fixed-roster trainer ({} steps)",
+            pinned.steps
+        );
+    }
+
+    let data = cell_data(&opts);
+
+    // (2) checkpoint at the midpoint, resume from the FILE, continue:
+    // every per-step loss and the final model must match the
+    // uninterrupted run bit for bit.
+    {
+        let cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps);
+        let mut full = Trainer::new(cfg.clone(), cell_workload(&opts, &data, &cfg)?)?;
+        let mut ref_losses = Vec::new();
+        for k in 0..opts.steps {
+            ref_losses.push(full.step(k));
+        }
+        let mid = opts.steps / 2;
+        let mut first = Trainer::new(cfg.clone(), cell_workload(&opts, &data, &cfg)?)?;
+        for (k, want) in ref_losses.iter().take(mid).enumerate() {
+            anyhow::ensure!(first.step(k) == *want, "pre-checkpoint prefix diverged at {k}");
+        }
+        let path = std::env::temp_dir()
+            .join(format!("decentlam_elastic_smoke_{}.snap", std::process::id()));
+        first.checkpoint_to(&path)?;
+        let snap = Snapshot::read_file(&path)?;
+        std::fs::remove_file(&path).ok();
+        let mut resumed = Trainer::resume(cfg.clone(), cell_workload(&opts, &data, &cfg)?, &snap)?;
+        for (k, want) in ref_losses.iter().enumerate().skip(mid) {
+            anyhow::ensure!(
+                resumed.step(k) == *want,
+                "checkpoint/resume diverged from the uninterrupted run at step {k}"
+            );
+        }
+        let full_bits: Vec<u32> = full.average_model().iter().map(|v| v.to_bits()).collect();
+        let res_bits: Vec<u32> = resumed.average_model().iter().map(|v| v.to_bits()).collect();
+        anyhow::ensure!(full_bits == res_bits, "final average model differs after resume");
+        anyhow::ensure!(full.active_ids() == resumed.active_ids(), "rosters differ after resume");
+        println!(
+            "smoke 2/4 OK: mid-run checkpoint/resume (via file) bitwise == uninterrupted \
+             (checkpoint at step {mid}, roster ended at n={})",
+            full.active_nodes()
+        );
+    }
+
+    // (3) determinism + parallel == serial under ACTIVE churn; the cell
+    // must actually realize membership events or the gate is vacuous.
+    {
+        let (losses, stats) =
+            super::smoke::assert_replay_and_par_eq("active-churn cell", |threads| {
+                let mut cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps);
+                cfg.threads = threads;
+                let wl = cell_workload(&opts, &data, &cfg)?;
+                let mut t = Trainer::new(cfg, wl)?;
+                let losses = t.run().losses;
+                let stats = *t.churn_stats().expect("churn cell must carry churn stats");
+                Ok((losses, stats))
+            })?;
+        anyhow::ensure!(
+            stats.joins + stats.leaves > 0,
+            "rate={churn_rate} never realized a membership event — the gate is vacuous"
+        );
+        anyhow::ensure!(losses.iter().all(|l| l.is_finite()), "non-finite loss under churn");
+        println!(
+            "smoke 3/4 OK: active churn deterministic, parallel == serial \
+             ({} joins, {} leaves over {} steps)",
+            stats.joins, stats.leaves, opts.steps
+        );
+    }
+
+    // (4) the sweep itself renders byte-identically.
+    let table = {
+        let sweep = Opts { steps: 30, ..opts.clone() };
+        super::smoke::assert_deterministic("elastic sweep", || {
+            Ok(run(&sweep)?.1.render())
+        })?
+    };
+    println!("{table}");
+    println!("smoke 4/4 OK: sweep output byte-identical across reruns");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shrunk() -> Opts {
+        Opts {
+            nodes: 6,
+            capacity: 8,
+            nmin: 3,
+            steps: 40,
+            methods: vec!["dmsgd".into(), "decentlam".into()],
+            churn_rates: vec![0.0, 0.1],
+            total_batch: 384,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shrunk_sweep_has_sane_shape() {
+        let opts = shrunk();
+        let (rows, table) = run(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.eval_loss.is_finite() && r.consensus.is_finite()));
+        let get = |m: &str, rate: f64| {
+            rows.iter().find(|r| r.method == m && r.rate == rate).unwrap()
+        };
+        // Churn-free cells never move the roster.
+        assert_eq!(get("dmsgd", 0.0).final_nodes, opts.nodes);
+        assert_eq!(get("dmsgd", 0.0).joins + get("dmsgd", 0.0).leaves, 0);
+        // The active cell realizes events within bounds.
+        let active = get("decentlam", 0.1);
+        assert!(active.joins + active.leaves > 0, "rate=0.1 never churned");
+        assert!((opts.nmin..=opts.capacity).contains(&active.final_nodes));
+        // Gossip methods share the same churn schedule (same seed).
+        assert_eq!(get("dmsgd", 0.1).joins, get("decentlam", 0.1).joins);
+        assert_eq!(get("dmsgd", 0.1).leaves, get("decentlam", 0.1).leaves);
+        assert!(table.render().contains("decentlam"));
+    }
+
+    #[test]
+    fn sweep_output_is_deterministic() {
+        let mut opts = shrunk();
+        opts.steps = 15;
+        opts.methods = vec!["decentlam".into()];
+        let (_, a) = run(&opts).unwrap();
+        let (_, b) = run(&opts).unwrap();
+        assert_eq!(a.render(), b.render(), "same opts must render byte-identically");
+    }
+
+    #[test]
+    fn degradation_is_relative_to_churn_free() {
+        let mk = |method: &str, rate: f64, loss: f64| Row {
+            method: method.into(),
+            rate,
+            final_nodes: 8,
+            joins: 0,
+            leaves: 0,
+            eval_loss: loss,
+            accuracy: 0.0,
+            consensus: 0.0,
+        };
+        let rows = vec![mk("m", 0.0, 1.0), mk("m", 0.05, 1.5)];
+        let d = degradation(&rows, "m");
+        assert_eq!(d, vec![(0.0, 0.0), (0.05, 0.5)]);
+        assert!(degradation(&rows[1..], "m").is_empty(), "no baseline -> no verdict");
+        assert!(degradation(&rows, "other").is_empty());
+    }
+}

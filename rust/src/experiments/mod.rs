@@ -19,16 +19,22 @@
 //! Beyond the paper: [`fig_faults`] sweeps the DecentLaM-vs-DmSGD bias
 //! gap under fault injection (sim layer, DESIGN.md §6),
 //! [`fig_compression`] sweeps loss vs wire bytes across the gossip
-//! payload codecs (codec layer, DESIGN.md §7), and [`fig_async`] sweeps
+//! payload codecs (codec layer, DESIGN.md §7), [`fig_async`] sweeps
 //! time-to-target-loss against heterogeneous node clocks under bounded
-//! staleness (clock layer, DESIGN.md §8).
+//! staleness (clock layer, DESIGN.md §8), and [`fig_elastic`] sweeps
+//! churn rate vs final loss over an elastic roster with seeded
+//! join/leave events (elastic layer, DESIGN.md §9). The [`smoke`]
+//! helpers hold the determinism scaffolding every `--smoke` CI gate
+//! shares.
 
 pub mod fig2_3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig_async;
 pub mod fig_compression;
+pub mod fig_elastic;
 pub mod fig_faults;
+pub mod smoke;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,71 @@
+//! Shared CI-smoke scaffolding.
+//!
+//! Every subsystem's `--smoke` gate repeats the same two determinism
+//! claims — byte-identical reruns, and parallel == serial — before its
+//! subsystem-specific assertions. This module states them once;
+//! `fig_compression`, `fig_async` and `fig_elastic` (and any future
+//! gate) call in instead of re-rolling the scaffolding.
+
+use anyhow::Result;
+
+/// Run `run(threads)` three times — twice parallel (`threads = 0`),
+/// once serial (`threads = 1`) — and assert the result is
+/// byte-identical across reruns AND between parallel and serial
+/// execution. Returns the first result for further gating.
+pub fn assert_replay_and_par_eq<T, F>(label: &str, mut run: F) -> Result<T>
+where
+    T: PartialEq + std::fmt::Debug,
+    F: FnMut(usize) -> Result<T>,
+{
+    let a = run(0)?;
+    let b = run(0)?;
+    anyhow::ensure!(a == b, "{label}: rerun was not byte-identical");
+    let c = run(1)?;
+    anyhow::ensure!(a == c, "{label}: parallel != serial");
+    Ok(a)
+}
+
+/// Run twice and assert byte-identical output (rendered tables, CSV
+/// blobs, …). Returns the first result.
+pub fn assert_deterministic<T, F>(label: &str, mut run: F) -> Result<T>
+where
+    T: PartialEq + std::fmt::Debug,
+    F: FnMut() -> Result<T>,
+{
+    let a = run()?;
+    let b = run()?;
+    anyhow::ensure!(a == b, "{label}: output was not byte-identical across reruns");
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_gate_passes_deterministic_and_catches_drift() {
+        let ok = assert_replay_and_par_eq("ok", |_| Ok(vec![1.0f64, 2.0]));
+        assert_eq!(ok.unwrap(), vec![1.0, 2.0]);
+        // Thread-dependent result: parallel != serial must fail.
+        let bad = assert_replay_and_par_eq("bad", |threads| Ok(threads));
+        assert!(bad.is_err());
+        // Call-dependent result: rerun must fail.
+        let mut calls = 0usize;
+        let drift = assert_replay_and_par_eq("drift", |_| {
+            calls += 1;
+            Ok(calls)
+        });
+        assert!(drift.is_err());
+    }
+
+    #[test]
+    fn deterministic_gate() {
+        assert_eq!(assert_deterministic("ok", || Ok("x")).unwrap(), "x");
+        let mut calls = 0usize;
+        assert!(assert_deterministic("drift", || {
+            calls += 1;
+            Ok(calls)
+        })
+        .is_err());
+    }
+}

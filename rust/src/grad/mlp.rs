@@ -7,7 +7,7 @@
 //! cross-checked against the PJRT artifact in `rust/tests/integration.rs`
 //! and against finite differences here.
 
-use crate::data::synth::{ClassificationData, NodeShard};
+use crate::data::synth::{ClassificationData, NodeShard, ShardCursor};
 use crate::util::rng::Pcg64;
 
 use super::{Evaluator, NodeGrad, Workload};
@@ -260,6 +260,14 @@ impl NodeGrad for MlpNodeGrad {
             *v *= inv;
         }
         loss / accum as f64
+    }
+
+    fn export_cursor(&self) -> Option<ShardCursor> {
+        Some(self.shard.export_cursor())
+    }
+
+    fn restore_cursor(&mut self, cursor: &ShardCursor) -> anyhow::Result<()> {
+        self.shard.restore_cursor(cursor)
     }
 }
 

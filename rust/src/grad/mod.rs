@@ -18,11 +18,34 @@ pub mod mlp;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+use crate::data::synth::ShardCursor;
+
 /// Per-node gradient provider. `grad_accum` computes the mean gradient
 /// over `accum` micro-batches at `x` (the large-batch engine) and
 /// returns the mean loss.
 pub trait NodeGrad: Send {
     fn grad_accum(&mut self, x: &[f32], accum: usize, out: &mut [f32]) -> f64;
+
+    /// Cross-step mutable sampling state (epoch cursor + RNG counters)
+    /// for bitwise checkpoint/resume (DESIGN.md §9). `None` means the
+    /// engine is stateless between steps — exact full-batch gradients
+    /// (linreg) need nothing restored. Engines with sampling state MUST
+    /// override both hooks or resumed runs drift off the uninterrupted
+    /// batch sequence.
+    fn export_cursor(&self) -> Option<ShardCursor> {
+        None
+    }
+
+    /// Restore a cursor captured by [`NodeGrad::export_cursor`]. The
+    /// default REFUSES: the trainer only calls this on engines whose
+    /// `export_cursor` returned `Some`, so reaching the default means
+    /// an engine exports state it cannot restore — silently accepting
+    /// would drift the resumed run off the batch sequence.
+    fn restore_cursor(&mut self, _cursor: &ShardCursor) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "gradient engine exports a cursor but does not implement restore_cursor"
+        )
+    }
 }
 
 /// Held-out evaluation on the current (average) model.

@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::data::corpus::{Corpus, CorpusShard};
-use crate::data::synth::{ClassificationData, NodeShard};
+use crate::data::synth::{ClassificationData, NodeShard, ShardCursor};
 use crate::runtime::{Manifest, ModelInfo, RuntimeHandle, Tensor};
 
 use super::{Evaluator, NodeGrad, Workload};
@@ -45,6 +45,14 @@ impl NodeGrad for PjrtMlpNodeGrad {
         let inv = 1.0 / accum as f32;
         out.iter_mut().for_each(|v| *v *= inv);
         loss / accum as f64
+    }
+
+    fn export_cursor(&self) -> Option<ShardCursor> {
+        Some(self.shard.export_cursor())
+    }
+
+    fn restore_cursor(&mut self, cursor: &ShardCursor) -> anyhow::Result<()> {
+        self.shard.restore_cursor(cursor)
     }
 }
 
@@ -180,6 +188,21 @@ impl NodeGrad for PjrtLmNodeGrad {
         let inv = 1.0 / accum as f32;
         out.iter_mut().for_each(|v| *v *= inv);
         loss / accum as f64
+    }
+
+    fn export_cursor(&self) -> Option<ShardCursor> {
+        // The corpus shard's only cross-step state is the window RNG;
+        // reuse the cursor container with an empty epoch order.
+        Some(ShardCursor { cursor: 0, order: Vec::new(), rng: self.shard.export_rng() })
+    }
+
+    fn restore_cursor(&mut self, cursor: &ShardCursor) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cursor.order.is_empty() && cursor.cursor == 0,
+            "corpus-shard cursor carries unexpected epoch state"
+        );
+        self.shard.restore_rng(cursor.rng);
+        Ok(())
     }
 }
 

@@ -8,9 +8,9 @@
 //!   topologies + Metropolis–Hastings mixing weights ([`topology`]), the
 //!   ten optimizer update rules ([`optim`]), multi-node training driver
 //!   ([`coordinator`]), communication cost model ([`comm`]), gradient
-//!   engines ([`grad`]), fault-injection simulation ([`sim`]), synthetic
-//!   workloads ([`data`]) and the paper's experiment harness
-//!   ([`experiments`]).
+//!   engines ([`grad`]), fault-injection simulation ([`sim`]), elastic
+//!   membership + checkpointing ([`elastic`]), synthetic workloads
+//!   ([`data`]) and the paper's experiment harness ([`experiments`]).
 //! - **Layer 2 / Layer 1 (python/, build time only)** — JAX models and
 //!   Pallas kernels, AOT-lowered to HLO-text artifacts that `runtime`
 //!   loads and executes through the PJRT CPU client (`xla` crate).
@@ -23,6 +23,7 @@
 pub mod comm;
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod experiments;
 pub mod grad;
 pub mod optim;

@@ -206,6 +206,32 @@ fn dispatch(args: &Args) -> Result<()> {
                 }
             }
         }
+        "fig-elastic" => {
+            if args.get_bool("smoke") {
+                exp::fig_elastic::smoke(args)?;
+                return Ok(());
+            }
+            let mut opts = exp::fig_elastic::Opts::default();
+            if quick {
+                opts.nodes = 8;
+                opts.capacity = 10;
+                opts.nmin = 4;
+                opts.steps = 60;
+                opts.churn_rates = vec![0.0, 0.05];
+            }
+            opts.apply_args(args)?;
+            let (rows, table) = exp::fig_elastic::run(&opts)?;
+            println!("{}", table.render());
+            for method in &opts.methods {
+                let deg: Vec<String> = exp::fig_elastic::degradation(&rows, method)
+                    .iter()
+                    .map(|(r, d)| format!("rate={r}: {d:+.4}"))
+                    .collect();
+                if !deg.is_empty() {
+                    println!("{method} eval-loss degradation vs churn-free: {}", deg.join("  "));
+                }
+            }
+        }
         "fig-faults" => {
             let mut opts = exp::fig_faults::Opts::default();
             if quick {
@@ -237,6 +263,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  fig-faults   DecentLaM vs DmSGD under fault injection\n  \
                  fig-compression   loss vs wire bytes per payload codec (--smoke = CI gate)\n  \
                  fig-async    time-to-target-loss vs clock heterogeneity (--smoke = CI gate)\n  \
+                 fig-elastic  churn rate vs loss over an elastic roster (--smoke = CI gate)\n  \
                  train        one training run (all Config flags apply)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
@@ -246,7 +273,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  --optimizer X, --batch B, --beta B, --lr G, --topology T,\n  \
                  --faults drop=0.1,straggle=0.05,seed=7,\n  \
                  --codec int8,ef=true,seed=7 (fp32|fp16|int8|topk,k=0.05),\n  \
-                 --async tau=2,spread=4,jitter=0.2,seed=7"
+                 --async tau=2,spread=4,jitter=0.2,seed=7,\n  \
+                 --churn join=0.02,leave=0.02,nmin=8,nmax=64,seed=7"
             );
         }
     }
@@ -256,7 +284,16 @@ fn dispatch(args: &Args) -> Result<()> {
 /// Generic single training run over the native MLP workload.
 fn train(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
-    let data = exp::synth_imagenet(cfg.nodes, cfg.seed);
+    // Elastic runs shard data over the whole stable-id capacity (nmax)
+    // so joiners bring their own data; `nodes` stays the initial count.
+    let capacity = if cfg.churn.trim().is_empty() {
+        cfg.nodes
+    } else {
+        decentlam::elastic::ChurnSpec::parse(&cfg.churn, cfg.seed)?
+            .resolve(cfg.nodes)?
+            .nmax
+    };
+    let data = exp::synth_imagenet(capacity, cfg.seed);
     let wl = exp::mlp_workload_named(
         if cfg.model.starts_with("native") { "mlp-s" } else { &cfg.model },
         data,
@@ -264,7 +301,7 @@ fn train(args: &Args) -> Result<()> {
         cfg.seed,
     )?;
     println!(
-        "train: optimizer={} topology={} nodes={} total_batch={} steps={}{}{}",
+        "train: optimizer={} topology={} nodes={} total_batch={} steps={}{}{}{}",
         cfg.optimizer,
         cfg.topology,
         cfg.nodes,
@@ -279,6 +316,11 @@ fn train(args: &Args) -> Result<()> {
             String::new()
         } else {
             format!(" codec=[{}]", cfg.codec)
+        },
+        if cfg.churn.is_empty() {
+            String::new()
+        } else {
+            format!(" churn=[{}] capacity={capacity}", cfg.churn)
         }
     );
     let eval_every = if cfg.eval_every == 0 { cfg.steps / 10 } else { cfg.eval_every };
@@ -339,6 +381,17 @@ fn train(args: &Args) -> Result<()> {
             a.mean_staleness,
             a.max_staleness,
             a.total_wait_s
+        );
+    }
+    if let Some(s) = t.churn_stats() {
+        println!(
+            "churn: {} joins / {} leaves over {} resizes; roster ended at n={} \
+             (ids {:?})",
+            s.joins,
+            s.leaves,
+            s.resizes,
+            t.active_nodes(),
+            t.active_ids()
         );
     }
     Ok(())

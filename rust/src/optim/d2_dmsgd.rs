@@ -28,6 +28,19 @@ impl Optimizer for D2Dmsgd {
         2 // [x_prev, m_prev]
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        &["x_prev", "prev_update"]
+    }
+
+    fn warm_start(&self, st: &mut NodeState) {
+        // A joiner has no history: with m = 0, previous update = 0 and
+        // x_prev = x, its first D² combination collapses to the DmSGD
+        // half-step x − γm — the same fallback the step-0 branch takes.
+        st.m.iter_mut().for_each(|v| *v = 0.0);
+        st.aux[1].iter_mut().for_each(|v| *v = 0.0);
+        st.aux[0].copy_from_slice(&st.x);
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::Neighbor { payloads: 1 }
     }

@@ -83,6 +83,13 @@ impl Optimizer for DecentLam {
         "decentlam"
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        // Complete per-node state is (x, m): the correction term is
+        // recomputed from (x − Σw z)/γ every round, never stored — a
+        // warm-started joiner needs nothing beyond x and zeroed m.
+        &[]
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         // Same wire traffic as DSGD/DmSGD: one parameter-sized payload.
         CommPattern::Neighbor { payloads: 1 }

@@ -15,6 +15,11 @@ impl Optimizer for Dmsgd {
         "dmsgd"
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        // Complete per-node state is (x, m); no aux buffers.
+        &[]
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::Neighbor { payloads: 1 }
     }

@@ -15,6 +15,11 @@ impl Optimizer for Dsgd {
         "dsgd"
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        // Momentum-free: complete per-node state is x (m stays zero).
+        &[]
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::Neighbor { payloads: 1 }
     }

@@ -137,6 +137,14 @@ impl Scratch {
             mixed: (0..n).map(|_| vec![0.0; d]).collect(),
         }
     }
+
+    /// Resize to `n` nodes (elastic membership resizes, DESIGN.md §9):
+    /// surplus buffers drop, new ones allocate zeroed. Contents are
+    /// per-round transient, so nothing needs migrating.
+    pub fn resize(&mut self, n: usize, d: usize) {
+        self.publish.resize_with(n, || vec![0.0; d]);
+        self.mixed.resize_with(n, || vec![0.0; d]);
+    }
 }
 
 /// Communication pattern of one round, consumed by the Fig. 6 cost model.
@@ -156,6 +164,26 @@ pub trait Optimizer: Send {
     /// Number of auxiliary D-sized buffers each node needs.
     fn aux_count(&self) -> usize {
         0
+    }
+    /// State-export schema: labels of the aux buffers in
+    /// `NodeState::aux` order (exactly `aux_count()` entries). The
+    /// snapshot writer records them and resume validates the layout, so
+    /// a checkpoint can never be silently reinterpreted by an optimizer
+    /// with a different aux meaning (DESIGN.md §9). Every optimizer
+    /// declares this explicitly — an empty slice is the statement that
+    /// its complete per-node state is `(x, m)`.
+    fn aux_labels(&self) -> &'static [&'static str];
+    /// Initialize the optimizer buffers of a freshly joined node whose
+    /// params were just warm-started from its neighbors (elastic
+    /// membership, DESIGN.md §9). Default: momentum and every aux
+    /// buffer zeroed. Optimizers whose aux anchors on the iterate
+    /// override (SlowMo's anchor, D²'s previous iterate) — a zero
+    /// anchor there would fling the joiner toward the origin.
+    fn warm_start(&self, st: &mut NodeState) {
+        st.m.iter_mut().for_each(|v| *v = 0.0);
+        for a in st.aux.iter_mut() {
+            a.iter_mut().for_each(|v| *v = 0.0);
+        }
     }
     fn comm_pattern(&self) -> CommPattern;
     /// Execute one round: update every node's state in place given the
@@ -321,5 +349,47 @@ mod tests {
             assert_eq!(o.name(), name);
         }
         assert!(build("adamw", 0, 0.0).is_err());
+    }
+
+    #[test]
+    fn aux_labels_match_aux_counts() {
+        // The state-export schema must name exactly the aux buffers a
+        // node carries — the snapshot layout check depends on it.
+        for name in ALL.iter().chain([&"dsgd"]) {
+            let o = build(name, 12, 0.7).unwrap();
+            assert_eq!(
+                o.aux_labels().len(),
+                o.aux_count(),
+                "{name}: aux_labels/aux_count mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_zeroes_momentum_and_anchors_on_x() {
+        for name in ALL.iter().chain([&"dsgd"]) {
+            let o = build(name, 12, 0.7).unwrap();
+            let mut st = NodeState::new(vec![1.5f32, -2.0, 0.5], o.aux_count());
+            st.m = vec![9.0; 3];
+            for a in st.aux.iter_mut() {
+                a.copy_from_slice(&[7.0, 7.0, 7.0]);
+            }
+            o.warm_start(&mut st);
+            assert_eq!(st.x, vec![1.5, -2.0, 0.5], "{name}: warm_start must not touch x");
+            assert!(st.m.iter().all(|&v| v == 0.0), "{name}: momentum not zeroed");
+            match *name {
+                "slowmo" => {
+                    assert!(st.aux[0].iter().all(|&v| v == 0.0));
+                    assert_eq!(st.aux[1], st.x, "slowmo anchor must be x");
+                }
+                "d2-dmsgd" => {
+                    assert_eq!(st.aux[0], st.x, "d2 x_prev must be x");
+                    assert!(st.aux[1].iter().all(|&v| v == 0.0));
+                }
+                _ => {
+                    assert!(st.aux.iter().all(|a| a.iter().all(|&v| v == 0.0)), "{name}");
+                }
+            }
+        }
     }
 }

@@ -37,6 +37,12 @@ impl Optimizer for Pmsgd {
         }
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        // Complete per-node state is (x, m) for both the plain and the
+        // LARS variant (trust ratios are recomputed per round).
+        &[]
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::AllReduce
     }

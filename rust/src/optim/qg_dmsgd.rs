@@ -20,6 +20,12 @@ impl Optimizer for QgDmsgd {
         "qg-dmsgd"
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        // Complete per-node state is (x, m̂) — the quasi-global
+        // momentum lives in `NodeState::m`; no aux buffers.
+        &[]
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::Neighbor { payloads: 1 }
     }

@@ -33,6 +33,20 @@ impl Optimizer for SlowMo {
         2 // [u, anchor]
     }
 
+    fn aux_labels(&self) -> &'static [&'static str] {
+        &["slow_momentum", "anchor"]
+    }
+
+    fn warm_start(&self, st: &mut NodeState) {
+        // A joiner starts a fresh slow cycle: fast momentum and slow
+        // momentum u at zero, anchor at the warm-started iterate (the
+        // default zero anchor would make the next sync step pull the
+        // joiner toward the origin via (anchor − x̄)/γ).
+        st.m.iter_mut().for_each(|v| *v = 0.0);
+        st.aux[0].iter_mut().for_each(|v| *v = 0.0);
+        st.aux[1].copy_from_slice(&st.x);
+    }
+
     fn comm_pattern(&self) -> CommPattern {
         CommPattern::NeighborPlusPeriodicAllReduce { payloads: 1, period: self.period }
     }

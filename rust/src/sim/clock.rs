@@ -157,7 +157,6 @@ impl AsyncSpec {
 /// Domain-separation tags (same pattern as the fault plan's).
 const TAG_SPEED: u64 = 0xc10c_5eed;
 const TAG_JITTER: u64 = 0xc10c_717e;
-const STEP_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
 
 /// Seeded per-(node, step) virtual compute times. Every draw comes from
 /// its own counter-keyed PCG64 stream, so clocks are replayable and
@@ -188,8 +187,9 @@ impl NodeClocks {
         if self.spec.jitter <= 0.0 {
             return 1.0;
         }
-        let seed = self.spec.seed.wrapping_add((step as u64).wrapping_mul(STEP_MIX)) ^ TAG_JITTER;
-        (self.spec.jitter * Pcg64::new(seed, node as u64).normal()).exp()
+        let mut rng =
+            Pcg64::counter_keyed(self.spec.seed, TAG_JITTER, step as u64, node as u64);
+        (self.spec.jitter * rng.normal()).exp()
     }
 
     /// Virtual seconds node `node` spends computing local step `step`.

@@ -141,6 +141,12 @@ pub struct FaultyEngine {
     async_age: Vec<u16>,
     /// Per-row flag for the async resolver path.
     row_has_async: Vec<bool>,
+    /// Optional dense→stable id remap for the plan's streams (elastic
+    /// membership, DESIGN.md §9): fault draws key on `ids[i]` instead
+    /// of the dense row, so the schedule follows physical nodes across
+    /// roster resizes. None = identity (the fixed-roster fast path,
+    /// bit-identical to the pre-elastic engine).
+    ids: Option<Vec<u32>>,
     slots: Mutex<SlotCaches>,
     stats: FaultStats,
 }
@@ -161,9 +167,82 @@ impl FaultyEngine {
             ring_needed: false,
             async_age: Vec::new(),
             row_has_async: Vec::new(),
+            ids: None,
             slots: Mutex::new(SlotCaches::default()),
             stats: FaultStats::default(),
         }
+    }
+
+    /// Install (or clear) the dense→stable id remap for the fault
+    /// plan's streams. Length must match the nominal engine's node
+    /// count at the next `begin_step`.
+    pub fn set_ids(&mut self, ids: Option<Vec<u32>>) {
+        self.ids = ids;
+    }
+
+    /// Drop the publish cache. Elastic resizes call this: a roster
+    /// change invalidates the per-dense-row history, so the first round
+    /// after a resize serves fresh messages while the cache re-warms —
+    /// the same rule as the cold-start warmup.
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+        self.cache_warm = false;
+    }
+
+    /// The previous round's publish cache for checkpointing (None when
+    /// cold — before the first `record_publish` or right after a
+    /// resize).
+    pub fn export_cache(&self) -> Option<Vec<Vec<f32>>> {
+        if self.cache_warm {
+            Some(self.cache.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Restore a cache captured by [`FaultyEngine::export_cache`].
+    pub fn restore_cache(&mut self, cache: Option<Vec<Vec<f32>>>) {
+        match cache {
+            Some(c) => {
+                self.cache = c;
+                self.cache_warm = true;
+            }
+            None => self.clear_cache(),
+        }
+    }
+
+    /// Overwrite the cumulative fault accounting (checkpoint resume —
+    /// stats keep counting from where the saved run left off).
+    pub fn restore_stats(&mut self, stats: FaultStats) {
+        self.stats = stats;
+    }
+
+    /// Per-exchange-slot async ring history for checkpointing:
+    /// `(ring newest→oldest, staged)` per slot. Empty when the rings
+    /// never engaged (synchronous runs, all-fresh schedules).
+    pub fn export_rings(&self) -> Vec<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>)> {
+        let s = self.slots.lock().unwrap();
+        s.rings
+            .iter()
+            .zip(&s.staged)
+            .map(|(ring, staged)| (ring.iter().cloned().collect(), staged.clone()))
+            .collect()
+    }
+
+    /// Restore ring history captured by [`FaultyEngine::export_rings`].
+    /// The ring depth itself is derived from the attached schedule
+    /// (`set_async`), not from the snapshot.
+    pub fn restore_rings(&mut self, slots: Vec<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>)>) {
+        let s = self.slots.get_mut().unwrap();
+        s.rings.clear();
+        s.staged.clear();
+        for (ring, staged) in slots {
+            s.rings.push(ring.into_iter().collect());
+            s.staged.push(staged);
+        }
+        s.spare.clear();
+        s.seen = 0;
+        s.cur_slot = 0;
     }
 
     /// Attach a bounded-staleness schedule from the discrete-event
@@ -257,7 +336,15 @@ impl FaultyEngine {
         let sched = self.async_sched.as_ref();
         let n = nominal.n();
         self.n = n;
-        let faults = self.plan.node_faults(step, n);
+        // Stable-id view of the roster: fault draws key on `sid(i)`, so
+        // an elastic resize repacks the dense rows without perturbing
+        // any physical node's schedule. Identity when no remap is set.
+        let ids = self.ids.clone();
+        if let Some(v) = &ids {
+            assert_eq!(v.len(), n, "fault-plan id remap out of sync with the roster");
+        }
+        let sid = |i: usize| -> usize { ids.as_ref().map_or(i, |v| v[i] as usize) };
+        let faults = self.plan.node_faults_mapped(step, n, ids.as_deref());
         self.row_ptr.clear();
         self.entries.clear();
         self.stale.clear();
@@ -302,7 +389,7 @@ impl FaultyEngine {
                 };
                 let mut masked = faults.dropped[i]
                     || faults.dropped[ju]
-                    || self.plan.link_failed(step, i, ju);
+                    || self.plan.link_failed(step, sid(i), sid(ju));
                 if !self.stale_capable && sched.is_none() {
                     // No faithful stale replay: the deadline-missed
                     // message is lost. Symmetric predicate (either
@@ -313,7 +400,7 @@ impl FaultyEngine {
                     masked = masked
                         || faults.straggler[i]
                         || faults.straggler[ju]
-                        || self.plan.link_stale(step, i, ju);
+                        || self.plan.link_stale(step, sid(i), sid(ju));
                 }
                 if masked {
                     returned += w as f64;
@@ -322,7 +409,7 @@ impl FaultyEngine {
                 }
                 let fault_stale = (self.stale_capable || sched.is_some())
                     && if sched.is_some() { async_warm } else { warm }
-                    && (faults.straggler[ju] || self.plan.link_stale(step, i, ju));
+                    && (faults.straggler[ju] || self.plan.link_stale(step, sid(i), sid(ju)));
                 self.entries.push((j, w));
                 realized_dir += 1;
                 if sched.is_some() {
@@ -778,6 +865,67 @@ mod tests {
         f.mix_node(0, &fresh_p, &mut out);
         let want_p = expect(&fresh_p, &params);
         assert!((out[0] - want_p).abs() < 1e-6, "slot 1: {} vs {want_p}", out[0]);
+    }
+
+    #[test]
+    fn identity_id_remap_is_bitwise_inert_and_stable_ids_follow_nodes() {
+        let topo = Topology::build(Kind::Ring, 6);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        // Identity remap must realize exactly the same rows as no remap.
+        let mut plain = engine("drop=0.4,link=0.3,seed=3");
+        let mut mapped = engine("drop=0.4,link=0.3,seed=3");
+        mapped.set_ids(Some((0..6).collect()));
+        for step in 0..8 {
+            plain.begin_step(step, &nominal);
+            mapped.begin_step(step, &nominal);
+            for i in 0..6 {
+                assert_eq!(plain.row(i), mapped.row(i), "step {step} row {i}");
+            }
+        }
+        // A non-identity remap draws the REMAPPED node's schedule: with
+        // drop=1 scoped by comparing two engines whose row 0 maps to
+        // different stable ids, the realizations must differ somewhere
+        // over a few steps.
+        let mut a = engine("drop=0.5,seed=3");
+        a.set_ids(Some(vec![0, 1, 2, 3, 4, 5]));
+        let mut b = engine("drop=0.5,seed=3");
+        b.set_ids(Some(vec![6, 7, 8, 9, 10, 11]));
+        let mut differed = false;
+        for step in 0..12 {
+            a.begin_step(step, &nominal);
+            b.begin_step(step, &nominal);
+            differed |= (0..6).any(|i| a.row(i) != b.row(i));
+        }
+        assert!(differed, "distinct stable ids never changed a realization");
+    }
+
+    #[test]
+    fn cache_export_restore_roundtrip() {
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = engine("stale=1");
+        assert!(f.export_cache().is_none(), "cold cache exports None");
+        let published: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32]).collect();
+        f.record_publish(&published);
+        let cache = f.export_cache().expect("warm cache exports Some");
+        assert_eq!(cache, published);
+        f.clear_cache();
+        assert!(f.export_cache().is_none());
+        f.restore_cache(Some(cache));
+        f.begin_step(1, &nominal);
+        // Restored cache serves stale entries exactly as before.
+        let fresh: Vec<Vec<f32>> = (0..4).map(|i| vec![10.0 + i as f32]).collect();
+        let mut out = vec![0.0f32];
+        f.mix_node(0, &fresh, &mut out);
+        let want: f32 = f
+            .row(0)
+            .iter()
+            .map(|&(j, w)| {
+                let v = if j == 0 { fresh[0][0] } else { published[j as usize][0] };
+                w * v
+            })
+            .sum();
+        assert!((out[0] - want).abs() < 1e-6);
     }
 
     #[test]

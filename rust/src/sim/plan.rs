@@ -127,24 +127,40 @@ impl FaultPlan {
         if rate >= 1.0 {
             return true;
         }
-        let seed = self
-            .spec
-            .seed
-            .wrapping_add((step as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
-            ^ tag;
-        Pcg64::new(seed, entity).f64() < rate
+        Pcg64::counter_keyed(self.spec.seed, tag, step as u64, entity).f64() < rate
     }
 
-    /// Node dropout / straggler flags at `step`.
-    pub fn node_faults(&self, step: usize, n: usize) -> StepFaults {
+    /// Does node `id` drop out at `step`? Keyed by STABLE id — elastic
+    /// rosters remap dense rows to stable ids before drawing, so the
+    /// schedule follows physical nodes across membership resizes
+    /// (DESIGN.md §9).
+    pub fn node_dropped(&self, step: usize, id: usize) -> bool {
+        self.draw(TAG_DROP, step, id as u64, self.spec.drop)
+    }
+
+    /// Does node `id` straggle at `step`? Stable-id keyed like
+    /// [`FaultPlan::node_dropped`].
+    pub fn node_straggles(&self, step: usize, id: usize) -> bool {
+        self.draw(TAG_STRAGGLE, step, id as u64, self.spec.straggle)
+    }
+
+    /// Node dropout / straggler flags at `step` for `n` dense rows,
+    /// drawn on `ids[i]` when a stable-id remap is given (elastic
+    /// rosters) and on the dense index itself otherwise. The single
+    /// source of the per-node draw loop — `FaultyEngine::begin_step`
+    /// and the identity-roster [`FaultPlan::node_faults`] both call it.
+    pub fn node_faults_mapped(&self, step: usize, n: usize, ids: Option<&[u32]>) -> StepFaults {
+        let sid = |i: usize| ids.map_or(i, |v| v[i] as usize);
         StepFaults {
-            dropped: (0..n)
-                .map(|i| self.draw(TAG_DROP, step, i as u64, self.spec.drop))
-                .collect(),
-            straggler: (0..n)
-                .map(|i| self.draw(TAG_STRAGGLE, step, i as u64, self.spec.straggle))
-                .collect(),
+            dropped: (0..n).map(|i| self.node_dropped(step, sid(i))).collect(),
+            straggler: (0..n).map(|i| self.node_straggles(step, sid(i))).collect(),
         }
+    }
+
+    /// Node dropout / straggler flags at `step` for the identity roster
+    /// (dense index = stable id).
+    pub fn node_faults(&self, step: usize, n: usize) -> StepFaults {
+        self.node_faults_mapped(step, n, None)
     }
 
     /// Does the undirected edge {i, j} fail at `step`? Symmetric in
@@ -240,6 +256,25 @@ mod tests {
         assert!(f.dropped.iter().all(|&d| !d));
         let always = FaultPlan::new(FaultSpec { drop: 1.0, ..Default::default() });
         assert!(always.node_faults(3, 8).dropped.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn mapped_draws_match_identity_and_follow_stable_ids() {
+        let plan = FaultPlan::new(FaultSpec {
+            drop: 0.5,
+            straggle: 0.5,
+            seed: 3,
+            ..Default::default()
+        });
+        let identity: Vec<u32> = (0..16).collect();
+        let a = plan.node_faults(4, 16);
+        let b = plan.node_faults_mapped(4, 16, Some(&identity));
+        assert_eq!(a.dropped, b.dropped, "identity remap must not change draws");
+        assert_eq!(a.straggler, b.straggler);
+        // A shifted remap draws the REMAPPED nodes' schedules.
+        let shifted: Vec<u32> = (16..32).collect();
+        let c = plan.node_faults_mapped(4, 16, Some(&shifted));
+        assert_ne!(a.dropped, c.dropped, "shifted stable ids must draw other streams");
     }
 
     #[test]

@@ -110,6 +110,14 @@ pub struct Config {
     /// payloads up to `tau` rounds stale; requires a static topology.
     /// The clock seed defaults to `seed` when the spec omits `seed=`.
     pub async_mode: String,
+    /// Elastic-membership spec, e.g. `join=0.02,leave=0.02,nmin=8,
+    /// nmax=64,seed=7` (empty = fixed roster; see
+    /// `elastic::ChurnSpec::parse`). Nodes join/leave mid-run on a
+    /// seeded schedule; the workload must supply `nmax` shards and
+    /// `nodes` is the initial active count. Requires a static topology
+    /// and synchronous execution. The churn seed defaults to `seed`
+    /// when the spec omits `seed=`.
+    pub churn: String,
 }
 
 impl Default for Config {
@@ -139,6 +147,7 @@ impl Default for Config {
             faults: String::new(),
             codec: String::new(),
             async_mode: String::new(),
+            churn: String::new(),
         }
     }
 }
@@ -230,6 +239,13 @@ impl Config {
                 // `--async` parses as "true" = all defaults.
                 crate::sim::AsyncSpec::parse(v, 0)?;
                 self.async_mode = v.into();
+            }
+            "churn" => {
+                // Eager validation like the other spec flags; bound
+                // resolution against the run's node count happens in
+                // Trainer::new, where n is known.
+                crate::elastic::ChurnSpec::parse(v, 0)?;
+                self.churn = v.into();
             }
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
@@ -372,6 +388,17 @@ mod tests {
         assert!(c.apply_kv("async", "tau=99").is_err());
         assert!(c.apply_kv("async", "spread=0.1").is_err());
         assert!(c.apply_kv("async", "gremlins=1").is_err());
+    }
+
+    #[test]
+    fn churn_key_validated_eagerly() {
+        let mut c = Config::default();
+        c.apply_kv("churn", "join=0.02,leave=0.02,nmin=8,nmax=64,seed=7").unwrap();
+        assert_eq!(c.churn, "join=0.02,leave=0.02,nmin=8,nmax=64,seed=7");
+        c.apply_kv("churn", "true").unwrap(); // bare --churn: defaults
+        assert!(c.apply_kv("churn", "join=2").is_err());
+        assert!(c.apply_kv("churn", "nmin=0").is_err());
+        assert!(c.apply_kv("churn", "gremlins=1").is_err());
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Elastic-membership and checkpoint/resume property suites
+//! (DESIGN.md §9).
+//!
+//! The load-bearing claims:
+//!
+//! * **Resume equivalence** — save → restore → continue is bitwise
+//!   identical to an uninterrupted run, across every optimizer ×
+//!   {raw fp32, int8+EF codec} × {fault-free, drop=0.1}, through the
+//!   checksummed snapshot byte format.
+//! * **Mixing invariants under churn** — after every join/leave
+//!   resize, the rebuilt Metropolis–Hastings weights have unit row
+//!   sums and are exactly symmetric, and the roster stays inside its
+//!   bounds.
+//!
+//! Nightly (`--include-ignored`) additionally runs a larger chained
+//! checkpoint round-trip with churn + faults + codec all active.
+
+use decentlam::comm::CommEngine;
+use decentlam::coordinator::Trainer;
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::elastic::Snapshot;
+use decentlam::grad::mlp;
+use decentlam::optim;
+use decentlam::util::config::{Config, LrSchedule};
+
+fn data(nodes: usize, samples: usize) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: samples,
+        eval_samples: 64,
+        dirichlet_alpha: 0.5,
+        seed: 3,
+        ..Default::default()
+    })
+}
+
+fn workload(data: &ClassificationData, micro_batch: usize) -> decentlam::grad::Workload {
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data.clone(), micro_batch, 3)
+}
+
+fn base_cfg(optimizer: &str, nodes: usize, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = nodes;
+    cfg.steps = steps;
+    cfg.total_batch = nodes * 16;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.02;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.topology = "ring".into();
+    cfg.seed = 3;
+    // Short SlowMo period so its all-reduce + buffer reset crosses the
+    // checkpoint boundary in the 6-step runs below.
+    cfg.slowmo_period = 3;
+    cfg
+}
+
+fn model_bits(t: &Trainer) -> Vec<u32> {
+    t.average_model().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Drive `cfg` for `steps` steps uninterrupted; also run it with a
+/// checkpoint → byte round-trip → resume at `cut`, and assert every
+/// post-cut loss and the final model match bit for bit.
+fn assert_resume_equivalent(cfg: &Config, data: &ClassificationData, cut: usize, label: &str) {
+    let steps = cfg.steps;
+    let mut full = Trainer::new(cfg.clone(), workload(data, cfg.micro_batch)).unwrap();
+    let mut ref_losses = Vec::new();
+    for k in 0..steps {
+        ref_losses.push(full.step(k));
+    }
+    assert!(ref_losses.iter().all(|l| l.is_finite()), "{label}: non-finite reference");
+
+    let mut first = Trainer::new(cfg.clone(), workload(data, cfg.micro_batch)).unwrap();
+    for (k, want) in ref_losses.iter().take(cut).enumerate() {
+        assert_eq!(first.step(k), *want, "{label}: prefix diverged at step {k}");
+    }
+    let bytes = first.checkpoint().to_bytes();
+    let snap = Snapshot::from_bytes(&bytes).expect("snapshot bytes must round-trip");
+    let mut resumed =
+        Trainer::resume(cfg.clone(), workload(data, cfg.micro_batch), &snap).unwrap();
+    for (k, want) in ref_losses.iter().enumerate().skip(cut) {
+        assert_eq!(resumed.step(k), *want, "{label}: resumed run diverged at step {k}");
+    }
+    assert_eq!(
+        model_bits(&full),
+        model_bits(&resumed),
+        "{label}: final average model differs after resume"
+    );
+    match (full.fault_stats(), resumed.fault_stats()) {
+        (Some(a), Some(b)) => assert_eq!(a, b, "{label}: fault stats diverged"),
+        (None, None) => {}
+        _ => panic!("{label}: fault-engine presence diverged across resume"),
+    }
+}
+
+#[test]
+fn resume_equivalence_across_all_optimizers_codecs_and_faults() {
+    // The satellite matrix: every optimizer × {fp32, int8+EF} ×
+    // {fault-free, drop=0.1}, checkpoint at the midpoint of 6 steps.
+    let d = data(4, 64);
+    for name in optim::ALL.iter().chain([&"dsgd"]) {
+        for codec in ["", "int8,ef=true,seed=5"] {
+            for faults in ["", "drop=0.1,seed=9"] {
+                let mut cfg = base_cfg(name, 4, 6);
+                cfg.codec = codec.into();
+                cfg.faults = faults.into();
+                let label = format!("{name} codec=[{codec}] faults=[{faults}]");
+                assert_resume_equivalent(&cfg, &d, 3, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_equivalence_with_stale_replay_cache() {
+    // Stragglers exercise the publish cache: the snapshot must carry
+    // last round's published payloads or the first resumed round would
+    // replay the wrong bytes.
+    let d = data(4, 64);
+    for codec in ["", "int8,ef=true,seed=5"] {
+        let mut cfg = base_cfg("decentlam", 4, 8);
+        cfg.codec = codec.into();
+        cfg.faults = "straggle=0.4,seed=6".into();
+        assert_resume_equivalent(&cfg, &d, 4, &format!("straggle codec=[{codec}]"));
+    }
+}
+
+#[test]
+fn resume_equivalence_under_async_ring_history() {
+    // Bounded staleness serves payloads from per-slot ring caches; the
+    // snapshot carries the rings, so a resumed run replays the exact
+    // same aged payloads. da-dmsgd exercises two exchange slots.
+    let d = data(4, 64);
+    for name in ["decentlam", "da-dmsgd"] {
+        let mut cfg = base_cfg(name, 4, 8);
+        cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+        assert_resume_equivalent(&cfg, &d, 4, &format!("{name} async"));
+    }
+}
+
+#[test]
+fn resume_equivalence_under_active_churn() {
+    let d = data(6, 64);
+    for name in ["decentlam", "dmsgd", "pmsgd"] {
+        let mut cfg = base_cfg(name, 4, 10);
+        cfg.churn = "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8".into();
+        assert_resume_equivalent(&cfg, &d, 5, &format!("{name} churn"));
+    }
+}
+
+#[test]
+fn mh_invariants_hold_after_every_resize() {
+    let d = data(8, 48);
+    let mut cfg = base_cfg("decentlam", 5, 30);
+    cfg.churn = "join=0.3,leave=0.3,nmin=2,nmax=8,seed=4".into();
+    let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
+    let mut sizes = std::collections::BTreeSet::new();
+    for k in 0..30 {
+        let loss = t.step(k);
+        assert!(loss.is_finite(), "step {k}");
+        let m = t.active_nodes();
+        sizes.insert(m);
+        assert!((2..=8).contains(&m), "step {k}: roster size {m} out of bounds");
+        assert_eq!(t.comm.n(), m, "step {k}: comm engine out of sync with roster");
+        // Row sums: symmetric doubly stochastic at every size.
+        assert!(
+            t.comm.row_sum_error() < 1e-5,
+            "step {k}: row-sum error {} at n={m}",
+            t.comm.row_sum_error()
+        );
+        // Exact symmetry: w_ij present <=> w_ji present with the same
+        // bits (the MH rule computes both sides identically).
+        for i in 0..m {
+            for &(j, w) in t.comm.row(i) {
+                let j = j as usize;
+                if j == i {
+                    continue;
+                }
+                let back = t.comm.row(j).iter().find(|&&(jj, _)| jj as usize == i);
+                match back {
+                    Some(&(_, wb)) => assert_eq!(
+                        w.to_bits(),
+                        wb.to_bits(),
+                        "step {k}: w[{i}][{j}] asymmetric at n={m}"
+                    ),
+                    None => panic!("step {k}: edge ({i},{j}) missing its mirror at n={m}"),
+                }
+            }
+        }
+    }
+    let stats = t.churn_stats().unwrap();
+    assert!(stats.resizes > 0, "join=leave=0.3 never resized");
+    assert!(sizes.len() > 1, "roster size never changed: {sizes:?}");
+}
+
+#[test]
+fn roster_evolution_is_deterministic() {
+    let d = data(6, 48);
+    let run = || {
+        let mut cfg = base_cfg("dmsgd", 4, 20);
+        cfg.churn = "join=0.25,leave=0.25,nmin=2,nmax=6,seed=11".into();
+        let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
+        let mut trace = Vec::new();
+        for k in 0..20 {
+            t.step(k);
+            trace.push(t.active_ids());
+        }
+        trace
+    };
+    assert_eq!(run(), run(), "roster evolution must replay identically");
+}
+
+#[test]
+fn join_only_churn_grows_the_fleet_with_finite_training() {
+    let d = data(6, 48);
+    let mut cfg = base_cfg("decentlam", 2, 30);
+    cfg.churn = "join=0.3,leave=0,nmin=2,nmax=6,seed=2".into();
+    let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
+    let report = t.run();
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let stats = t.churn_stats().unwrap();
+    assert!(stats.joins > 0, "join=0.3 with 4 parked ids never joined");
+    assert_eq!(stats.leaves, 0);
+    assert!(t.active_nodes() > 2, "fleet never grew past the initial roster");
+}
+
+/// Nightly: a larger chained round-trip — churn + faults + codec all
+/// active, checkpoint twice (the second from an already-resumed run),
+/// every segment bitwise identical to the uninterrupted reference.
+#[test]
+#[ignore]
+fn nightly_chained_checkpoints_compose_with_churn_faults_and_codec() {
+    let d = data(12, 96);
+    let mut cfg = base_cfg("decentlam", 8, 60);
+    cfg.total_batch = 8 * 16;
+    cfg.churn = "join=0.1,leave=0.1,nmin=4,nmax=12,seed=13".into();
+    cfg.faults = "drop=0.1,straggle=0.2,seed=7".into();
+    cfg.codec = "int8,ef=true,seed=5".into();
+
+    let mut full = Trainer::new(cfg.clone(), workload(&d, 16)).unwrap();
+    let mut ref_losses = Vec::new();
+    for k in 0..60 {
+        ref_losses.push(full.step(k));
+    }
+
+    // Segment 1: 0..20, checkpoint.
+    let mut a = Trainer::new(cfg.clone(), workload(&d, 16)).unwrap();
+    for (k, want) in ref_losses.iter().take(20).enumerate() {
+        assert_eq!(a.step(k), *want, "segment 1 diverged at {k}");
+    }
+    let snap1 = Snapshot::from_bytes(&a.checkpoint().to_bytes()).unwrap();
+    // Segment 2: resume, 20..40, checkpoint again FROM THE RESUMED run.
+    let mut b = Trainer::resume(cfg.clone(), workload(&d, 16), &snap1).unwrap();
+    for (k, want) in ref_losses.iter().enumerate().take(40).skip(20) {
+        assert_eq!(b.step(k), *want, "segment 2 diverged at {k}");
+    }
+    let snap2 = Snapshot::from_bytes(&b.checkpoint().to_bytes()).unwrap();
+    // Segment 3: resume the resumed checkpoint, 40..60.
+    let mut c = Trainer::resume(cfg, workload(&d, 16), &snap2).unwrap();
+    for (k, want) in ref_losses.iter().enumerate().skip(40) {
+        assert_eq!(c.step(k), *want, "segment 3 diverged at {k}");
+    }
+    assert_eq!(model_bits(&full), model_bits(&c), "chained resume final model differs");
+    assert_eq!(full.fault_stats().unwrap(), c.fault_stats().unwrap());
+    assert_eq!(full.churn_stats().unwrap(), c.churn_stats().unwrap());
+}
