@@ -109,7 +109,7 @@ fn smoke(args: &Args) -> anyhow::Result<()> {
         cfg.momentum = 0.9;
         cfg.schedule = LrSchedule::Constant;
         cfg.seed = 3;
-        cfg.faults = faults.into();
+        cfg.apply_kv("faults", faults)?;
         let mut t = Trainer::new(cfg, workload)?;
         let report = t.run();
         let bad = report.losses.iter().any(|l| !l.is_finite());

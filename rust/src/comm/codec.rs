@@ -34,6 +34,7 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::executor::NodeExecutor;
+use crate::util::kvspec::KvSpec;
 use crate::util::rng::Pcg64;
 
 /// Which codec, parsed from the CLI form.
@@ -58,13 +59,17 @@ pub struct CodecSpec {
     pub k: f64,
     /// Seed of the stochastic-rounding streams.
     pub seed: u64,
+    /// True when `seed=` was NOT explicit — the seed should follow the
+    /// run seed (resolved later via [`CodecSpec::with_run_seed`]).
+    pub seed_from_run: bool,
 }
 
-impl CodecSpec {
-    /// Parse `kind[,key=value,...]` with keys `ef`, `k`, `seed`.
-    pub fn parse(s: &str, default_seed: u64) -> Result<CodecSpec> {
-        let mut parts = s.split(',').map(str::trim).filter(|p| !p.is_empty());
-        let kind = match parts.next() {
+impl KvSpec for CodecSpec {
+    const NAME: &'static str = "codec";
+    const HAS_HEAD: bool = true;
+
+    fn begin(head: Option<&str>, default_seed: u64) -> Result<CodecSpec> {
+        let kind = match head {
             Some("fp32") | Some("none") => CodecKind::Fp32,
             Some("fp16") => CodecKind::Fp16,
             Some("int8") => CodecKind::Int8,
@@ -72,46 +77,83 @@ impl CodecSpec {
             Some(other) => bail!("unknown codec `{other}` (fp32|fp16|int8|topk)"),
             None => bail!("empty codec spec"),
         };
-        let mut spec = CodecSpec {
+        Ok(CodecSpec {
             kind,
             ef: matches!(kind, CodecKind::Int8 | CodecKind::TopK),
             k: 0.05,
             seed: default_seed,
-        };
-        for part in parts {
-            let Some((key, v)) = part.split_once('=') else {
-                bail!("codec spec entry `{part}` is not key=value");
-            };
-            // Keys that the chosen codec would silently ignore are
-            // rejected — eager validation means a misconfiguration
-            // (e.g. `int8,k=0.01` expecting sparsification) fails at
-            // the CLI instead of running with a different meaning.
-            match key.trim() {
-                "ef" => {
-                    if kind == CodecKind::Fp32 {
-                        bail!("`ef` does not apply to fp32 (lossless identity codec)");
-                    }
-                    spec.ef = v.trim().parse()?;
+            seed_from_run: true,
+        })
+    }
+
+    // Keys that the chosen codec would silently ignore are rejected —
+    // eager validation means a misconfiguration (e.g. `int8,k=0.01`
+    // expecting sparsification) fails at the CLI instead of running
+    // with a different meaning.
+    fn set_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "ef" => {
+                if self.kind == CodecKind::Fp32 {
+                    bail!("`ef` does not apply to fp32 (lossless identity codec)");
                 }
-                "k" => {
-                    if kind != CodecKind::TopK {
-                        bail!("`k` only applies to the topk codec");
-                    }
-                    spec.k = v.trim().parse()?;
-                    if !(spec.k > 0.0 && spec.k <= 1.0) {
-                        bail!("topk fraction `k={}` outside (0, 1]", spec.k);
-                    }
-                }
-                "seed" => {
-                    if kind != CodecKind::Int8 {
-                        bail!("`seed` only applies to int8 (the one stochastic codec)");
-                    }
-                    spec.seed = v.trim().parse()?;
-                }
-                other => bail!("unknown codec key `{other}` (ef|k|seed)"),
+                self.ef = v.trim().parse()?;
             }
+            "k" => {
+                if self.kind != CodecKind::TopK {
+                    bail!("`k` only applies to the topk codec");
+                }
+                self.k = v.trim().parse()?;
+                if !(self.k > 0.0 && self.k <= 1.0) {
+                    bail!("topk fraction `k={}` outside (0, 1]", self.k);
+                }
+            }
+            "seed" => {
+                if self.kind != CodecKind::Int8 {
+                    bail!("`seed` only applies to int8 (the one stochastic codec)");
+                }
+                self.seed = v.trim().parse()?;
+                self.seed_from_run = false;
+            }
+            other => bail!("unknown codec key `{other}` (ef|k|seed)"),
         }
-        Ok(spec)
+        Ok(())
+    }
+
+    fn to_spec_string(&self) -> String {
+        // Emit only keys legal for the kind, so the string reparses.
+        match self.kind {
+            CodecKind::Fp32 => "fp32".to_string(),
+            CodecKind::Fp16 => format!("fp16,ef={}", self.ef),
+            CodecKind::Int8 => {
+                let mut s = format!("int8,ef={}", self.ef);
+                if !self.seed_from_run {
+                    s.push_str(&format!(",seed={}", self.seed));
+                }
+                s
+            }
+            CodecKind::TopK => format!("topk,ef={},k={}", self.ef, self.k),
+        }
+    }
+}
+
+impl CodecSpec {
+    /// Parse `kind[,key=value,...]` with keys `ef`, `k`, `seed`.
+    pub fn parse(s: &str, default_seed: u64) -> Result<CodecSpec> {
+        <CodecSpec as KvSpec>::parse(s, default_seed)
+    }
+
+    /// Canonical spec string; reparses (default_seed 0) to an equal spec.
+    pub fn to_spec_string(&self) -> String {
+        <CodecSpec as KvSpec>::to_spec_string(self)
+    }
+
+    /// Resolve seed inheritance: adopt `run_seed` unless `seed=` was
+    /// explicit in the spec string.
+    pub fn with_run_seed(mut self, run_seed: u64) -> CodecSpec {
+        if self.seed_from_run {
+            self.seed = run_seed;
+        }
+        self
     }
 
     /// Instantiate the codec this spec names.
@@ -682,6 +724,37 @@ mod tests {
         assert!(CodecSpec::parse("fp32,ef=true", 0).is_err());
         assert!(CodecSpec::parse("fp16,seed=7", 0).is_err());
         assert!(CodecSpec::parse("topk,seed=7", 0).is_err());
+    }
+
+    #[test]
+    fn exact_error_strings_are_pinned() {
+        let e = CodecSpec::parse("zfp", 0).unwrap_err().to_string();
+        assert_eq!(e, "unknown codec `zfp` (fp32|fp16|int8|topk)");
+        let e = CodecSpec::parse("", 0).unwrap_err().to_string();
+        assert_eq!(e, "empty codec spec");
+        let e = CodecSpec::parse("int8,k=0.01", 0).unwrap_err().to_string();
+        assert_eq!(e, "`k` only applies to the topk codec");
+        let e = CodecSpec::parse("int8,ef", 0).unwrap_err().to_string();
+        assert_eq!(e, "codec spec entry `ef` is not key=value");
+        let e = CodecSpec::parse("topk,k=1.5", 0).unwrap_err().to_string();
+        assert_eq!(e, "topk fraction `k=1.5` outside (0, 1]");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in ["fp32", "none", "fp16", "fp16,ef=true", "int8", "int8,ef=false,seed=5", "topk,k=0.1,ef=false"] {
+            let a = CodecSpec::parse(s, 0).unwrap();
+            let b = CodecSpec::parse(&a.to_spec_string(), 0).unwrap();
+            assert_eq!(a, b, "round trip of `{s}` via `{}`", a.to_spec_string());
+        }
+    }
+
+    #[test]
+    fn run_seed_resolution_respects_explicit_seed() {
+        let inherit = CodecSpec::parse("int8", 0).unwrap().with_run_seed(42);
+        assert_eq!(inherit.seed, 42);
+        let explicit = CodecSpec::parse("int8,seed=7", 0).unwrap().with_run_seed(42);
+        assert_eq!(explicit.seed, 7);
     }
 
     #[test]

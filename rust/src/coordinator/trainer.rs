@@ -67,15 +67,15 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::comm::codec::{CodecSpec, CodecState};
+use crate::comm::codec::CodecState;
 use crate::comm::cost::{CommCost, PayloadBytes};
 use crate::comm::CommEngine;
 use crate::data::synth::ShardCursor;
 use crate::elastic::snapshot::{FaultState, Snapshot, SnapshotMeta};
-use crate::elastic::{ChurnPlan, ChurnSpec, ChurnStats, Roster, StepChurn};
+use crate::elastic::{ChurnPlan, ChurnStats, Roster, StepChurn};
 use crate::grad::{NodeGrad, Workload};
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
-use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport, AsyncSpec};
+use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
@@ -172,31 +172,27 @@ const PARALLEL_UPDATE_MIN_ITEMS: usize = 1 << 17;
 
 impl Trainer {
     pub fn new(cfg: Config, workload: Workload) -> Result<Trainer> {
+        // Cross-field invariants live in ONE place (churn ⇒ static
+        // topology + synchronous rounds, slowmo ⇏ async, known
+        // topology/optimizer names) — the scenario runner validates the
+        // same way without building a trainer.
+        cfg.validate()?;
         let kind = Kind::parse(&cfg.topology)?;
         let n = cfg.nodes;
         // Elastic membership: resolve the churn bounds against the
         // run's initial node count. The stable-id space is 0..nmax and
         // the workload must supply one shard per stable id; `nodes`
         // stays the INITIAL active count.
-        let elastic = if cfg.churn.trim().is_empty() {
-            None
-        } else {
-            let spec = ChurnSpec::parse(&cfg.churn, cfg.seed)?.resolve(n)?;
-            anyhow::ensure!(
-                !kind.time_varying(),
-                "--churn requires a static topology; `{}` changes neighbors per step",
-                cfg.topology
-            );
-            anyhow::ensure!(
-                cfg.async_mode.trim().is_empty(),
-                "--churn models synchronous rounds over an elastic roster; composing \
-                 with --async (churn-aware schedules) is an open item — see ROADMAP.md"
-            );
-            Some(Elastic {
-                plan: ChurnPlan::new(spec),
-                roster: Roster::new(n, spec.nmax),
-                stats: ChurnStats::default(),
-            })
+        let elastic = match cfg.churn {
+            None => None,
+            Some(spec) => {
+                let spec = spec.with_run_seed(cfg.seed).resolve(n)?;
+                Some(Elastic {
+                    plan: ChurnPlan::new(spec),
+                    roster: Roster::new(n, spec.nmax),
+                    stats: ChurnStats::default(),
+                })
+            }
         };
         let capacity = elastic.as_ref().map(|el| el.roster.capacity()).unwrap_or(n);
         anyhow::ensure!(
@@ -222,16 +218,16 @@ impl Trainer {
             comm.make_lazy();
         }
         let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
-        let mut faults = if cfg.faults.trim().is_empty() {
-            None
-        } else {
-            // Validate the spec for every optimizer, but only attach an
-            // engine when the optimizer actually mixes through the comm
-            // engine — pure all-reduce baselines (PmSGD) model a
-            // centralized fabric outside the decentralized fault model,
-            // and attaching one would report faults that never touched
-            // training (`fault_stats()` stays None for them).
-            let spec = FaultSpec::parse(&cfg.faults, cfg.seed)?;
+        let mut faults = match cfg.faults {
+            None => None,
+            // Attach an engine only when the optimizer actually mixes
+            // through the comm engine — pure all-reduce baselines
+            // (PmSGD) model a centralized fabric outside the
+            // decentralized fault model, and attaching one would report
+            // faults that never touched training (`fault_stats()` stays
+            // None for them).
+            Some(spec) => {
+            let spec = spec.with_run_seed(cfg.seed);
             match optimizer.comm_pattern() {
                 optim::CommPattern::AllReduce => None,
                 pattern => {
@@ -252,21 +248,23 @@ impl Trainer {
                     Some(engine)
                 }
             }
+            }
         };
         let d = workload.dim;
-        let codec = if cfg.codec.trim().is_empty() {
-            None
-        } else {
+        let codec = match &cfg.codec {
+            None => None,
             // Codec seed defaults to the run seed (like --faults). Pure
             // all-reduce optimizers (PmSGD) never touch the gossip wire
-            // the codec compresses — validate the spec but attach no
-            // state, so `codec_name()`/`payload_bytes()` never report a
+            // the codec compresses — attach no state for them, so
+            // `codec_name()`/`payload_bytes()` never report a
             // compression that cannot happen (same honesty rule as the
             // fault engine above).
-            let spec = CodecSpec::parse(&cfg.codec, cfg.seed)?;
-            match optimizer.comm_pattern() {
-                optim::CommPattern::AllReduce => None,
-                _ => Some(Mutex::new(CodecState::new(&spec, n, d))),
+            Some(spec) => {
+                let spec = spec.clone().with_run_seed(cfg.seed);
+                match optimizer.comm_pattern() {
+                    optim::CommPattern::AllReduce => None,
+                    _ => Some(Mutex::new(CodecState::new(&spec, n, d))),
+                }
             }
         };
         // Asynchronous execution: run the discrete-event clock sim over
@@ -279,10 +277,10 @@ impl Trainer {
         // firing nodes in event order). Gossip legs charge the codec's
         // ENCODED payload width, so compression shortens simulated
         // exchanges too.
-        let async_report = if cfg.async_mode.trim().is_empty() {
-            None
-        } else {
-            let spec = AsyncSpec::parse(&cfg.async_mode, cfg.seed)?;
+        let async_report = match &cfg.async_mode {
+            None => None,
+            Some(spec) => {
+            let spec = spec.clone().with_run_seed(cfg.seed);
             match optimizer.comm_pattern() {
                 optim::CommPattern::AllReduce => {
                     // Barrier-synchronous baseline: each simulated round
@@ -322,6 +320,7 @@ impl Trainer {
                     engine.set_async(sched);
                     Some(report)
                 }
+            }
             }
         };
         // Elastic runs key every fault stream on stable ids from the
@@ -662,40 +661,24 @@ impl Trainer {
         self.elastic.as_ref().map(|el| &el.stats)
     }
 
-    /// Run manifest (compact JSON): every reproducibility-relevant
-    /// config knob, so an experiment artifact alone suffices to replay
-    /// the run. Also embedded in every [`TrainReport`].
+    /// Run manifest (compact JSON): the canonical
+    /// [`Config::to_manifest`] form plus run-derived identity, so an
+    /// experiment artifact alone suffices to replay the run — feed the
+    /// `config` object back through `--config` / `Config::load`. Also
+    /// embedded in every [`TrainReport`] and pinned (by sha256) in
+    /// scenario manifests.
     pub fn manifest_json(&self) -> String {
         Value::obj(vec![
-            // The seed is a STRING: u64 seeds above 2^53 would lose
-            // precision through the f64 JSON number path, silently
-            // breaking the exact-replay contract.
-            ("seed", Value::Str(self.cfg.seed.to_string())),
-            ("topology", Value::Str(self.cfg.topology.clone())),
-            ("optimizer", Value::Str(self.cfg.optimizer.clone())),
-            ("nodes", Value::Num(self.cfg.nodes as f64)),
-            ("active_nodes", Value::Num(self.states.len() as f64)),
-            ("steps", Value::Num(self.cfg.steps as f64)),
-            ("total_batch", Value::Num(self.cfg.total_batch as f64)),
-            ("micro_batch", Value::Num(self.cfg.micro_batch as f64)),
-            ("lr", Value::Num(self.cfg.lr)),
-            ("linear_scaling", Value::Bool(self.cfg.linear_scaling)),
-            ("lr_ref_batch", Value::Num(self.cfg.lr_ref_batch as f64)),
-            ("max_lr_scale", Value::Num(self.cfg.max_lr_scale)),
-            ("schedule", Value::Str(format!("{:?}", self.cfg.schedule))),
-            ("momentum", Value::Num(self.cfg.momentum)),
-            ("positive_definite", Value::Bool(self.cfg.positive_definite)),
-            ("slowmo_period", Value::Num(self.cfg.slowmo_period as f64)),
-            ("slowmo_beta", Value::Num(self.cfg.slowmo_beta)),
-            ("dirichlet_alpha", Value::Num(self.cfg.dirichlet_alpha)),
-            ("dim", Value::Num(self.workload.dim as f64)),
-            ("model", Value::Str(self.workload.name.clone())),
-            ("codec", Value::Str(self.cfg.codec.clone())),
-            ("faults", Value::Str(self.cfg.faults.clone())),
-            ("async", Value::Str(self.cfg.async_mode.clone())),
-            ("churn", Value::Str(self.cfg.churn.clone())),
-            ("eval_every", Value::Num(self.cfg.eval_every as f64)),
-            ("threads", Value::Num(self.cfg.threads as f64)),
+            ("version", Value::Str(crate::scenario::MANIFEST_VERSION.to_string())),
+            ("config", self.cfg.to_manifest()),
+            (
+                "run",
+                Value::obj(vec![
+                    ("active_nodes", Value::Num(self.states.len() as f64)),
+                    ("dim", Value::Num(self.workload.dim as f64)),
+                    ("model", Value::Str(self.workload.name.clone())),
+                ]),
+            ),
         ])
         .to_string()
     }
@@ -735,10 +718,14 @@ impl Trainer {
         SnapshotMeta {
             optimizer: self.cfg.optimizer.clone(),
             topology: self.cfg.topology.clone(),
-            codec: self.cfg.codec.clone(),
-            faults: self.cfg.faults.clone(),
-            async_mode: self.cfg.async_mode.clone(),
-            churn: self.cfg.churn.clone(),
+            // Snapshot meta stores the canonical spec STRINGS: the
+            // binary format predates the typed specs, and both the
+            // saving and restoring trainer derive them from the same
+            // parsed Config, so canonicalization cannot desync them.
+            codec: self.cfg.codec.as_ref().map(|s| s.to_spec_string()).unwrap_or_default(),
+            faults: self.cfg.faults.as_ref().map(|s| s.to_spec_string()).unwrap_or_default(),
+            async_mode: self.cfg.async_mode.as_ref().map(|s| s.to_spec_string()).unwrap_or_default(),
+            churn: self.cfg.churn.as_ref().map(|s| s.to_spec_string()).unwrap_or_default(),
             seed: self.cfg.seed,
             nodes: self.cfg.nodes as u32,
             capacity: capacity as u32,
@@ -1126,7 +1113,7 @@ mod tests {
         let mk = || {
             let mut cfg = small_cfg("decentlam", 40);
             cfg.lr = 0.02;
-            cfg.faults = "drop=0.15,straggle=0.1,seed=5".into();
+            cfg.apply_kv("faults", "drop=0.15,straggle=0.1,seed=5").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             let losses = t.run().losses;
             let stats = *t.fault_stats().unwrap();
@@ -1150,7 +1137,7 @@ mod tests {
     fn zero_rate_faults_bitwise_match_fault_free_run() {
         let run = |faults: &str| {
             let mut cfg = small_cfg("dmsgd", 25);
-            cfg.faults = faults.into();
+            cfg.apply_kv("faults", faults).unwrap();
             Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
         };
         assert_eq!(run(""), run("drop=0,link=0,seed=99"));
@@ -1160,7 +1147,7 @@ mod tests {
     fn faults_compose_with_time_varying_topologies() {
         let mut cfg = small_cfg("decentlam", 30);
         cfg.topology = "one-peer-exp".into();
-        cfg.faults = "drop=0.2,link=0.1,seed=2".into();
+        cfg.apply_kv("faults", "drop=0.2,link=0.1,seed=2").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
         let r = t.run();
         assert!(r.losses.iter().all(|l| l.is_finite()));
@@ -1174,15 +1161,15 @@ mod tests {
         // pmsgd never touches the comm engine; a fault spec must not
         // attach an engine that would report phantom fault traffic.
         let mut cfg = small_cfg("pmsgd", 10);
-        cfg.faults = "drop=0.5,seed=4".into();
+        cfg.apply_kv("faults", "drop=0.5,seed=4").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
         let r = t.run();
         assert!(t.fault_stats().is_none());
         assert!(r.losses.iter().all(|l| l.is_finite()));
-        // Still validated: a malformed spec fails even for pmsgd.
+        // Still validated: a malformed spec fails even for pmsgd — at
+        // the config boundary now, before a trainer is ever built.
         let mut bad = small_cfg("pmsgd", 5);
-        bad.faults = "drop=2".into();
-        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+        assert!(bad.apply_kv("faults", "drop=2").is_err());
     }
 
     #[test]
@@ -1191,7 +1178,7 @@ mod tests {
         // cache cannot replay both, so its straggle faults must fall
         // back to edge masking (no stale deliveries, edges lost).
         let mut cfg = small_cfg("da-dmsgd", 20);
-        cfg.faults = "straggle=0.4,seed=8".into();
+        cfg.apply_kv("faults", "straggle=0.4,seed=8").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
         let r = t.run();
         assert!(r.losses.iter().all(|l| l.is_finite()));
@@ -1204,7 +1191,7 @@ mod tests {
     fn fp32_codec_is_bitwise_identical_to_no_codec() {
         let run = |codec: &str| {
             let mut cfg = small_cfg("dmsgd", 25);
-            cfg.codec = codec.into();
+            cfg.apply_kv("codec", codec).unwrap();
             Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
         };
         assert_eq!(run(""), run("fp32"), "identity codec must not change a single bit");
@@ -1216,7 +1203,7 @@ mod tests {
             let run = || {
                 let mut cfg = small_cfg("decentlam", 40);
                 cfg.lr = 0.02;
-                cfg.codec = codec.into();
+                cfg.apply_kv("codec", codec).unwrap();
                 Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
             };
             let a = run();
@@ -1234,7 +1221,7 @@ mod tests {
         let mk = |threads: usize| {
             let mut cfg = small_cfg("dmsgd", 10);
             cfg.threads = threads;
-            cfg.codec = "int8,seed=3".into();
+            cfg.apply_kv("codec", "int8,seed=3").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             t.run().losses
         };
@@ -1250,8 +1237,8 @@ mod tests {
         let run = || {
             let mut cfg = small_cfg("decentlam", 30);
             cfg.lr = 0.02;
-            cfg.codec = "int8,ef=true,seed=4".into();
-            cfg.faults = "straggle=0.3,seed=6".into();
+            cfg.apply_kv("codec", "int8,ef=true,seed=4").unwrap();
+            cfg.apply_kv("faults", "straggle=0.3,seed=6").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             let losses = t.run().losses;
             let stats = *t.fault_stats().unwrap();
@@ -1273,7 +1260,7 @@ mod tests {
         let run = || {
             let mut cfg = small_cfg("da-dmsgd", 25);
             cfg.lr = 0.02;
-            cfg.codec = "int8,ef=true,seed=2".into();
+            cfg.apply_kv("codec", "int8,ef=true,seed=2").unwrap();
             Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
         };
         let a = run();
@@ -1286,7 +1273,7 @@ mod tests {
         let d_of = |t: &Trainer| t.workload.dim;
         let mk = |codec: &str| {
             let mut cfg = small_cfg("decentlam", 1);
-            cfg.codec = codec.into();
+            cfg.apply_kv("codec", codec).unwrap();
             Trainer::new(cfg, mlp_workload(4)).unwrap()
         };
         let raw = mk("");
@@ -1307,17 +1294,17 @@ mod tests {
         // attach state that would report a compression that never
         // happens — mirrors the fault-engine rule.
         let mut cfg = small_cfg("pmsgd", 5);
-        cfg.codec = "int8".into();
+        cfg.apply_kv("codec", "int8").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
         let d = t.workload.dim;
         assert_eq!(t.codec_name(), None);
         assert_eq!(t.payload_bytes().neighbor, 4.0 * d as f64);
         let r = t.run();
         assert!(r.losses.iter().all(|l| l.is_finite()));
-        // Still validated: a malformed spec fails even for pmsgd.
+        // Still validated: a malformed spec fails even for pmsgd — at
+        // the config boundary now, before a trainer is ever built.
         let mut bad = small_cfg("pmsgd", 5);
-        bad.codec = "int8,k=0.5".into();
-        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+        assert!(bad.apply_kv("codec", "int8,k=0.5").is_err());
     }
 
     #[test]
@@ -1331,7 +1318,7 @@ mod tests {
                 let run = |asynch: &str| {
                     let mut cfg = small_cfg(opt, 25);
                     cfg.topology = topology.into();
-                    cfg.async_mode = asynch.into();
+                    cfg.apply_kv("async", asynch).unwrap();
                     Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
                 };
                 assert_eq!(
@@ -1349,7 +1336,7 @@ mod tests {
             let mut cfg = small_cfg("decentlam", 40);
             cfg.lr = 0.02;
             cfg.threads = threads;
-            cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+            cfg.apply_kv("async", "tau=2,spread=6,jitter=0.3,seed=9").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             let losses = t.run().losses;
             let report = t.async_report().unwrap().clone();
@@ -1376,9 +1363,9 @@ mod tests {
         let run = || {
             let mut cfg = small_cfg("decentlam", 30);
             cfg.lr = 0.02;
-            cfg.async_mode = "tau=2,spread=4,jitter=0.2,seed=3".into();
-            cfg.faults = "drop=0.1,straggle=0.2,seed=5".into();
-            cfg.codec = "int8,ef=true,seed=4".into();
+            cfg.apply_kv("async", "tau=2,spread=4,jitter=0.2,seed=3").unwrap();
+            cfg.apply_kv("faults", "drop=0.1,straggle=0.2,seed=5").unwrap();
+            cfg.apply_kv("codec", "int8,ef=true,seed=4").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             let losses = t.run().losses;
             let stats = *t.fault_stats().unwrap();
@@ -1401,7 +1388,7 @@ mod tests {
             let mut cfg = small_cfg("da-dmsgd", 30);
             cfg.lr = 0.02;
             cfg.threads = threads;
-            cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=11".into();
+            cfg.apply_kv("async", "tau=2,spread=6,jitter=0.3,seed=11").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
             let losses = t.run().losses;
             let stats = *t.fault_stats().unwrap();
@@ -1418,7 +1405,7 @@ mod tests {
     #[test]
     fn async_allreduce_baseline_reports_barrier_time_only() {
         let mut cfg = small_cfg("pmsgd", 10);
-        cfg.async_mode = "tau=2,spread=4,jitter=0.2".into();
+        cfg.apply_kv("async", "tau=2,spread=4,jitter=0.2").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(4)).unwrap();
         let r = t.run();
         assert!(r.losses.iter().all(|l| l.is_finite()));
@@ -1434,28 +1421,25 @@ mod tests {
     fn async_rejects_time_varying_topologies_and_slowmo() {
         let mut cfg = small_cfg("decentlam", 5);
         cfg.topology = "bipartite".into();
-        cfg.async_mode = "tau=1".into();
+        cfg.apply_kv("async", "tau=1").unwrap();
         assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
         let mut cfg = small_cfg("slowmo", 5);
-        cfg.async_mode = "tau=1".into();
+        cfg.apply_kv("async", "tau=1").unwrap();
         assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
         let mut bad = small_cfg("decentlam", 5);
-        bad.async_mode = "tau=999".into();
-        assert!(Trainer::new(bad, mlp_workload(4)).is_err());
+        assert!(bad.apply_kv("async", "tau=999").is_err());
     }
 
     #[test]
-    fn bad_codec_spec_rejected_at_construction() {
+    fn bad_codec_spec_rejected_at_config_boundary() {
         let mut cfg = small_cfg("dsgd", 5);
-        cfg.codec = "zfp".into();
-        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+        assert!(cfg.apply_kv("codec", "zfp").is_err());
     }
 
     #[test]
-    fn bad_fault_spec_rejected_at_construction() {
+    fn bad_fault_spec_rejected_at_config_boundary() {
         let mut cfg = small_cfg("dsgd", 5);
-        cfg.faults = "drop=7".into();
-        assert!(Trainer::new(cfg, mlp_workload(4)).is_err());
+        assert!(cfg.apply_kv("faults", "drop=7").is_err());
     }
 
     #[test]
@@ -1469,7 +1453,7 @@ mod tests {
     fn zero_churn_is_bitwise_identical_to_fixed_roster() {
         let run = |churn: &str| {
             let mut cfg = small_cfg("decentlam", 25);
-            cfg.churn = churn.into();
+            cfg.apply_kv("churn", churn).unwrap();
             Trainer::new(cfg, mlp_workload(4)).unwrap().run().losses
         };
         assert_eq!(
@@ -1485,7 +1469,7 @@ mod tests {
             let mut cfg = small_cfg("decentlam", 50);
             cfg.lr = 0.02;
             cfg.threads = threads;
-            cfg.churn = "join=0.15,leave=0.15,nmin=2,nmax=6,seed=3".into();
+            cfg.apply_kv("churn", "join=0.15,leave=0.15,nmin=2,nmax=6,seed=3").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(6)).unwrap();
             let losses = t.run().losses;
             let stats = *t.churn_stats().unwrap();
@@ -1509,9 +1493,9 @@ mod tests {
         let run = || {
             let mut cfg = small_cfg("decentlam", 40);
             cfg.lr = 0.02;
-            cfg.churn = "join=0.1,leave=0.1,nmin=2,nmax=6,seed=5".into();
-            cfg.faults = "drop=0.1,straggle=0.1,seed=7".into();
-            cfg.codec = "int8,ef=true,seed=4".into();
+            cfg.apply_kv("churn", "join=0.1,leave=0.1,nmin=2,nmax=6,seed=5").unwrap();
+            cfg.apply_kv("faults", "drop=0.1,straggle=0.1,seed=7").unwrap();
+            cfg.apply_kv("codec", "int8,ef=true,seed=4").unwrap();
             let mut t = Trainer::new(cfg, mlp_workload(6)).unwrap();
             let losses = t.run().losses;
             (losses, *t.fault_stats().unwrap(), *t.churn_stats().unwrap())
@@ -1529,14 +1513,14 @@ mod tests {
     fn churn_rejects_time_varying_async_and_bad_capacity() {
         let mut cfg = small_cfg("decentlam", 5);
         cfg.topology = "bipartite".into();
-        cfg.churn = "join=0.1,nmax=6".into();
+        cfg.apply_kv("churn", "join=0.1,nmax=6").unwrap();
         assert!(Trainer::new(cfg, mlp_workload(6)).is_err(), "time-varying must be rejected");
         let mut cfg = small_cfg("decentlam", 5);
-        cfg.churn = "join=0.1,nmax=6".into();
-        cfg.async_mode = "tau=1".into();
+        cfg.apply_kv("churn", "join=0.1,nmax=6").unwrap();
+        cfg.apply_kv("async", "tau=1").unwrap();
         assert!(Trainer::new(cfg, mlp_workload(6)).is_err(), "async must be rejected");
         let mut cfg = small_cfg("decentlam", 5);
-        cfg.churn = "join=0.1,nmax=6".into();
+        cfg.apply_kv("churn", "join=0.1,nmax=6").unwrap();
         assert!(
             Trainer::new(cfg, mlp_workload(4)).is_err(),
             "workload must supply nmax shards"
@@ -1546,7 +1530,7 @@ mod tests {
     #[test]
     fn checkpoint_resume_is_bitwise_mid_run() {
         let mut cfg = small_cfg("decentlam", 12);
-        cfg.churn = "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8".into();
+        cfg.apply_kv("churn", "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8").unwrap();
         // Uninterrupted reference.
         let mut full = Trainer::new(cfg.clone(), mlp_workload(6)).unwrap();
         let mut ref_losses = Vec::new();
@@ -1618,23 +1602,32 @@ mod tests {
     #[test]
     fn manifest_is_valid_json_with_run_identity() {
         let mut cfg = small_cfg("decentlam", 3);
-        cfg.codec = "int8,seed=3".into();
-        cfg.churn = "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2".into();
+        cfg.apply_kv("codec", "int8,seed=3").unwrap();
+        cfg.apply_kv("churn", "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2").unwrap();
         let mut t = Trainer::new(cfg, mlp_workload(5)).unwrap();
         let report = t.run();
         let v = crate::util::json::Value::parse(&report.manifest).unwrap();
-        assert_eq!(v.get("optimizer").unwrap().as_str().unwrap(), "decentlam");
-        assert_eq!(v.get("topology").unwrap().as_str().unwrap(), "ring");
-        assert_eq!(v.get("nodes").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            v.get("version").unwrap().as_str().unwrap(),
+            crate::scenario::MANIFEST_VERSION
+        );
+        let c = v.get("config").unwrap();
+        assert_eq!(c.get("optimizer").unwrap().as_str().unwrap(), "decentlam");
+        assert_eq!(c.get("topology").unwrap().as_str().unwrap(), "ring");
+        assert_eq!(c.get("nodes").unwrap().as_usize().unwrap(), 4);
         // Seeds serialize as strings: u64 must survive above 2^53.
-        assert_eq!(v.get("seed").unwrap().as_str().unwrap(), "1");
-        assert_eq!(v.get("codec").unwrap().as_str().unwrap(), "int8,seed=3");
-        assert!(v.get("churn").unwrap().as_str().unwrap().contains("join=0.1"));
-        assert!(v.get("active_nodes").unwrap().as_usize().unwrap() >= 2);
+        assert_eq!(c.get("seed").unwrap().as_str().unwrap(), "1");
+        assert_eq!(c.get("codec").unwrap().as_str().unwrap(), "int8,seed=3");
+        assert!(c.get("churn").unwrap().as_str().unwrap().contains("join=0.1"));
+        let run = v.get("run").unwrap();
+        assert!(run.get("active_nodes").unwrap().as_usize().unwrap() >= 2);
+        // The embedded config round-trips through the manifest reader.
+        let cur = crate::util::json::Cursor::root(c, "manifest.config");
+        Config::from_manifest(&cur).unwrap();
         // Deterministic: same run, same manifest bytes.
         let mut cfg2 = small_cfg("decentlam", 3);
-        cfg2.codec = "int8,seed=3".into();
-        cfg2.churn = "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2".into();
+        cfg2.apply_kv("codec", "int8,seed=3").unwrap();
+        cfg2.apply_kv("churn", "join=0.1,leave=0.1,nmin=2,nmax=5,seed=2").unwrap();
         let manifest2 = Trainer::new(cfg2, mlp_workload(5)).unwrap().manifest_json();
         assert_eq!(report.manifest, manifest2, "manifest must be deterministic");
     }

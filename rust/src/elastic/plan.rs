@@ -23,6 +23,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::util::kvspec::KvSpec;
 use crate::util::rng::Pcg64;
 
 use super::membership::Roster;
@@ -43,11 +44,59 @@ pub struct ChurnSpec {
     pub nmax: usize,
     /// Seed of the churn schedule (independent of the topology seed).
     pub seed: u64,
+    /// True when `seed=` was NOT explicit — the seed should follow the
+    /// run seed (resolved later via [`ChurnSpec::with_run_seed`]).
+    pub seed_from_run: bool,
 }
 
 impl Default for ChurnSpec {
     fn default() -> Self {
-        ChurnSpec { join: 0.0, leave: 0.0, nmin: 0, nmax: 0, seed: 0 }
+        ChurnSpec { join: 0.0, leave: 0.0, nmin: 0, nmax: 0, seed: 0, seed_from_run: true }
+    }
+}
+
+impl KvSpec for ChurnSpec {
+    const NAME: &'static str = "churn";
+    const BARE_TRUE: bool = true;
+
+    fn begin(_head: Option<&str>, default_seed: u64) -> Result<ChurnSpec> {
+        Ok(ChurnSpec { seed: default_seed, ..Default::default() })
+    }
+
+    fn set_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "join" => self.join = parse_rate(key, v)?,
+            "leave" => self.leave = parse_rate(key, v)?,
+            "nmin" => self.nmin = parse_count(key, v)?,
+            "nmax" => self.nmax = parse_count(key, v)?,
+            "seed" => {
+                self.seed = v.trim().parse()?;
+                self.seed_from_run = false;
+            }
+            other => bail!("unknown churn key `{other}` (join|leave|nmin|nmax|seed)"),
+        }
+        Ok(())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.nmin > 0 && self.nmax > 0 && self.nmin > self.nmax {
+            bail!("churn bounds nmin={} > nmax={}", self.nmin, self.nmax);
+        }
+        Ok(())
+    }
+
+    fn to_spec_string(&self) -> String {
+        let mut s = format!("join={},leave={}", self.join, self.leave);
+        if self.nmin > 0 {
+            s.push_str(&format!(",nmin={}", self.nmin));
+        }
+        if self.nmax > 0 {
+            s.push_str(&format!(",nmax={}", self.nmax));
+        }
+        if !self.seed_from_run {
+            s.push_str(&format!(",seed={}", self.seed));
+        }
+        s
     }
 }
 
@@ -58,27 +107,21 @@ impl ChurnSpec {
     /// [`ChurnSpec::resolve`]. A bare `--churn` (the literal "true")
     /// parses as all defaults, like `--async`.
     pub fn parse(s: &str, default_seed: u64) -> Result<ChurnSpec> {
-        let mut spec = ChurnSpec { seed: default_seed, ..Default::default() };
-        if s.trim() == "true" {
-            return Ok(spec);
+        <ChurnSpec as KvSpec>::parse(s, default_seed)
+    }
+
+    /// Canonical spec string; reparses (default_seed 0) to an equal spec.
+    pub fn to_spec_string(&self) -> String {
+        <ChurnSpec as KvSpec>::to_spec_string(self)
+    }
+
+    /// Resolve seed inheritance: adopt `run_seed` unless `seed=` was
+    /// explicit in the spec string.
+    pub fn with_run_seed(mut self, run_seed: u64) -> ChurnSpec {
+        if self.seed_from_run {
+            self.seed = run_seed;
         }
-        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            let Some((k, v)) = part.split_once('=') else {
-                bail!("churn spec entry `{part}` is not key=value");
-            };
-            match k.trim() {
-                "join" => spec.join = parse_rate(k, v)?,
-                "leave" => spec.leave = parse_rate(k, v)?,
-                "nmin" => spec.nmin = parse_count(k, v)?,
-                "nmax" => spec.nmax = parse_count(k, v)?,
-                "seed" => spec.seed = v.trim().parse()?,
-                other => bail!("unknown churn key `{other}` (join|leave|nmin|nmax|seed)"),
-            }
-        }
-        if spec.nmin > 0 && spec.nmax > 0 && spec.nmin > spec.nmax {
-            bail!("churn bounds nmin={} > nmax={}", spec.nmin, spec.nmax);
-        }
-        Ok(spec)
+        self
     }
 
     /// Fill unset bounds from the run's initial node count and validate
@@ -236,6 +279,35 @@ mod tests {
     }
 
     #[test]
+    fn exact_error_strings_are_pinned() {
+        let e = ChurnSpec::parse("join=2", 0).unwrap_err().to_string();
+        assert_eq!(e, "churn rate `join=2` outside [0, 1]");
+        let e = ChurnSpec::parse("nmin=0", 0).unwrap_err().to_string();
+        assert_eq!(e, "churn bound `nmin` must be >= 1");
+        let e = ChurnSpec::parse("join", 0).unwrap_err().to_string();
+        assert_eq!(e, "churn spec entry `join` is not key=value");
+        let e = ChurnSpec::parse("warp=0.1", 0).unwrap_err().to_string();
+        assert_eq!(e, "unknown churn key `warp` (join|leave|nmin|nmax|seed)");
+        let e = ChurnSpec::parse("nmin=9,nmax=4", 0).unwrap_err().to_string();
+        assert_eq!(e, "churn bounds nmin=9 > nmax=4");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in ["true", "", "join=0.02,leave=0.05,nmin=8,nmax=64,seed=7", "join=0.1,nmax=16"] {
+            let a = ChurnSpec::parse(s, 0).unwrap();
+            let b = ChurnSpec::parse(&a.to_spec_string(), 0).unwrap();
+            assert_eq!(a, b, "round trip of `{s}` via `{}`", a.to_spec_string());
+        }
+    }
+
+    #[test]
+    fn run_seed_resolution_respects_explicit_seed() {
+        assert_eq!(ChurnSpec::parse("join=0.1", 0).unwrap().with_run_seed(42).seed, 42);
+        assert_eq!(ChurnSpec::parse("join=0.1,seed=7", 0).unwrap().with_run_seed(42).seed, 7);
+    }
+
+    #[test]
     fn resolve_fills_bounds_and_validates() {
         let s = spec("join=0.1").resolve(8).unwrap();
         assert_eq!(s.nmin, 2);
@@ -296,7 +368,7 @@ mod tests {
     fn different_seeds_differ() {
         let roster = Roster::new(8, 16);
         let mk = |seed: u64| {
-            let sp = ChurnSpec { join: 0.5, leave: 0.5, nmin: 2, nmax: 16, seed };
+            let sp = ChurnSpec { join: 0.5, leave: 0.5, nmin: 2, nmax: 16, seed, ..Default::default() };
             let plan = ChurnPlan::new(sp);
             (1..20).map(|k| plan.step_churn(k, &roster)).collect::<Vec<_>>()
         };

@@ -128,7 +128,7 @@ fn cell_data(opts: &Opts) -> ClassificationData {
     })
 }
 
-fn cell_config(opts: &Opts, method: &str, spread: f64, steps: usize) -> Config {
+fn cell_config(opts: &Opts, method: &str, spread: f64, steps: usize) -> Result<Config> {
     let mut cfg = Config::default();
     cfg.optimizer = method.into();
     cfg.nodes = opts.nodes;
@@ -142,8 +142,8 @@ fn cell_config(opts: &Opts, method: &str, spread: f64, steps: usize) -> Config {
     cfg.schedule = LrSchedule::Constant;
     cfg.seed = opts.seed;
     cfg.eval_every = (steps / 10).max(1);
-    cfg.async_mode = opts.spec_string(spread);
-    cfg
+    cfg.apply_kv("async", &opts.spec_string(spread))?;
+    Ok(cfg)
 }
 
 fn cell(
@@ -153,7 +153,7 @@ fn cell(
     spread: f64,
     steps: usize,
 ) -> Result<Row> {
-    let cfg = cell_config(opts, method, spread, steps);
+    let cfg = cell_config(opts, method, spread, steps)?;
     let wl = mlp::workload(
         mlp::MlpArch::family(&opts.arch)?,
         data.clone(),
@@ -284,8 +284,8 @@ pub fn smoke(args: &Args) -> Result<()> {
     {
         let steps = 60;
         let run = |asynch: &str| -> Result<Vec<f64>> {
-            let mut cfg = cell_config(&opts, "decentlam", 1.0, steps);
-            cfg.async_mode = asynch.into();
+            let mut cfg = cell_config(&opts, "decentlam", 1.0, steps)?;
+            cfg.apply_kv("async", asynch)?;
             let wl = mlp::workload(
                 mlp::MlpArch::family(&opts.arch)?,
                 data.clone(),
@@ -306,7 +306,7 @@ pub fn smoke(args: &Args) -> Result<()> {
     // (2) determinism + parallel == serial on a heterogeneous cell.
     {
         let run = |threads: usize| -> Result<Vec<f64>> {
-            let mut cfg = cell_config(&opts, "decentlam", gate_spread, 40);
+            let mut cfg = cell_config(&opts, "decentlam", gate_spread, 40)?;
             cfg.threads = threads;
             let wl = mlp::workload(
                 mlp::MlpArch::family(&opts.arch)?,

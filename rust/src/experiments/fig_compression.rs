@@ -103,7 +103,7 @@ fn cell_data(opts: &Opts, n: usize) -> ClassificationData {
     })
 }
 
-fn cell_config(opts: &Opts, n: usize, method: &str, codec: &str) -> Config {
+fn cell_config(opts: &Opts, n: usize, method: &str, codec: &str) -> Result<Config> {
     let mut cfg = Config::default();
     cfg.optimizer = method.into();
     cfg.nodes = n;
@@ -116,8 +116,8 @@ fn cell_config(opts: &Opts, n: usize, method: &str, codec: &str) -> Config {
     cfg.momentum = 0.9;
     cfg.schedule = LrSchedule::Constant;
     cfg.seed = opts.seed;
-    cfg.codec = codec.into();
-    cfg
+    cfg.apply_kv("codec", codec)?;
+    Ok(cfg)
 }
 
 /// Train one cell and report it. `data` is cloned per cell so every
@@ -129,7 +129,7 @@ fn cell(
     method: &str,
     codec: &str,
 ) -> Result<Row> {
-    let cfg = cell_config(opts, n, method, codec);
+    let cfg = cell_config(opts, n, method, codec)?;
     let wl = mlp::workload(
         mlp::MlpArch::family(&opts.arch)?,
         data.clone(),
@@ -203,7 +203,7 @@ pub fn smoke(args: &Args) -> Result<()> {
     let data = cell_data(&opts, nodes);
 
     let run = |codec: &str, threads: usize| -> Result<(Vec<f64>, f64, f64)> {
-        let mut cfg = cell_config(&opts, nodes, "decentlam", codec);
+        let mut cfg = cell_config(&opts, nodes, "decentlam", codec)?;
         cfg.threads = threads;
         let wl = mlp::workload(
             mlp::MlpArch::family(&opts.arch)?,

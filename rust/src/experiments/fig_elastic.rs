@@ -121,7 +121,7 @@ fn cell_data(opts: &Opts) -> ClassificationData {
     })
 }
 
-fn cell_config(opts: &Opts, method: &str, rate: f64, steps: usize) -> Config {
+fn cell_config(opts: &Opts, method: &str, rate: f64, steps: usize) -> Result<Config> {
     let mut cfg = Config::default();
     cfg.optimizer = method.into();
     cfg.nodes = opts.nodes;
@@ -134,8 +134,8 @@ fn cell_config(opts: &Opts, method: &str, rate: f64, steps: usize) -> Config {
     cfg.momentum = 0.9;
     cfg.schedule = LrSchedule::Constant;
     cfg.seed = opts.seed;
-    cfg.churn = opts.churn_string(rate);
-    cfg
+    cfg.apply_kv("churn", &opts.churn_string(rate))?;
+    Ok(cfg)
 }
 
 fn cell_workload(
@@ -152,7 +152,7 @@ fn cell_workload(
 }
 
 fn cell(opts: &Opts, data: &ClassificationData, method: &str, rate: f64) -> Result<Row> {
-    let cfg = cell_config(opts, method, rate, opts.steps);
+    let cfg = cell_config(opts, method, rate, opts.steps)?;
     let wl = cell_workload(opts, data, &cfg)?;
     let mut t = Trainer::new(cfg, wl)?;
     let report = t.run();
@@ -253,9 +253,9 @@ pub fn smoke(args: &Args) -> Result<()> {
         let pinned = Opts { capacity: opts.nodes, nmin: opts.nodes, ..opts.clone() };
         let data = cell_data(&pinned);
         let run = |churn: bool| -> Result<Vec<f64>> {
-            let mut cfg = cell_config(&pinned, "decentlam", 0.0, pinned.steps);
+            let mut cfg = cell_config(&pinned, "decentlam", 0.0, pinned.steps)?;
             if !churn {
-                cfg.churn = String::new();
+                cfg.churn = None;
             }
             let wl = cell_workload(&pinned, &data, &cfg)?;
             Ok(Trainer::new(cfg, wl)?.run().losses)
@@ -276,7 +276,7 @@ pub fn smoke(args: &Args) -> Result<()> {
     // every per-step loss and the final model must match the
     // uninterrupted run bit for bit.
     {
-        let cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps);
+        let cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps)?;
         let mut full = Trainer::new(cfg.clone(), cell_workload(&opts, &data, &cfg)?)?;
         let mut ref_losses = Vec::new();
         for k in 0..opts.steps {
@@ -315,7 +315,7 @@ pub fn smoke(args: &Args) -> Result<()> {
     {
         let (losses, stats) =
             super::smoke::assert_replay_and_par_eq("active-churn cell", |threads| {
-                let mut cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps);
+                let mut cfg = cell_config(&opts, "decentlam", churn_rate, opts.steps)?;
                 cfg.threads = threads;
                 let wl = cell_workload(&opts, &data, &cfg)?;
                 let mut t = Trainer::new(cfg, wl)?;

@@ -125,7 +125,7 @@ pub fn run(opts: &Opts) -> Result<(Vec<Row>, Table)> {
             cfg.momentum = 0.9;
             cfg.schedule = LrSchedule::Constant;
             cfg.seed = opts.seed;
-            cfg.faults = fault_string(opts, drop);
+            cfg.apply_kv("faults", &fault_string(opts, drop))?;
             let wl = mlp::workload(
                 mlp::MlpArch::family(&opts.arch)?,
                 data.clone(),

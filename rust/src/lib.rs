@@ -10,7 +10,8 @@
 //!   ([`coordinator`]), communication cost model ([`comm`]), gradient
 //!   engines ([`grad`]), fault-injection simulation ([`sim`]), elastic
 //!   membership + checkpointing ([`elastic`]), synthetic workloads
-//!   ([`data`]) and the paper's experiment harness ([`experiments`]).
+//!   ([`data`]), the paper's experiment harness ([`experiments`]) and
+//!   the fail-closed scenario manifests + golden corpus ([`scenario`]).
 //! - **Layer 2 / Layer 1 (python/, build time only)** — JAX models and
 //!   Pallas kernels, AOT-lowered to HLO-text artifacts that `runtime`
 //!   loads and executes through the PJRT CPU client (`xla` crate).
@@ -30,6 +31,7 @@ pub mod optim;
 pub mod prop;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod topology;
 pub mod util;

@@ -9,6 +9,7 @@
 //! decentlam fig-faults [--nodes N --straggle R ...]     # fault sweep
 //! decentlam fig-compression [--smoke]                   # codec sweep
 //! decentlam train [--optimizer X --batch B ...]         # one run
+//! decentlam run-scenarios [DIR --tier smoke|full|all]   # golden corpus
 //! decentlam ablate-pd | ablate-atc | ablate-rho         # design ablations
 //! decentlam topo [--nodes N]                            # topology report
 //! ```
@@ -251,6 +252,25 @@ fn dispatch(args: &Args) -> Result<()> {
             }
         }
         "train" => train(args)?,
+        "run-scenarios" => {
+            let dir = args.positional.get(1).map(|s| s.as_str()).unwrap_or("scenarios");
+            let opts = decentlam::scenario::RunOpts {
+                tier: decentlam::scenario::TierFilter::parse(args.get_str("tier", "all"))?,
+                filter: args.get("filter").map(|s| s.to_string()),
+                pin: args.get_bool("pin"),
+            };
+            let summary = decentlam::scenario::run_corpus(std::path::Path::new(dir), &opts)?;
+            println!("{}", summary.table().render());
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, summary.to_json().to_pretty_string())?;
+                println!("wrote {path}");
+            }
+            anyhow::ensure!(
+                summary.failed() == 0,
+                "{} scenario(s) failed — see table above",
+                summary.failed()
+            );
+        }
         "topo" => topo_report(args)?,
         "ablate-pd" => ablate_pd(args)?,
         "ablate-atc" => ablate_atc(args)?,
@@ -265,6 +285,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  fig-async    time-to-target-loss vs clock heterogeneity (--smoke = CI gate)\n  \
                  fig-elastic  churn rate vs loss over an elastic roster (--smoke = CI gate)\n  \
                  train        one training run (all Config flags apply)\n  \
+                 run-scenarios [DIR]   run the scenario corpus (--tier smoke|full|all,\n               \
+                 --filter SUBSTR, --json FILE, --pin)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
                  ablate-atc   ATC vs AWC partial-averaging ablation\n  \
@@ -286,12 +308,9 @@ fn train(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
     // Elastic runs shard data over the whole stable-id capacity (nmax)
     // so joiners bring their own data; `nodes` stays the initial count.
-    let capacity = if cfg.churn.trim().is_empty() {
-        cfg.nodes
-    } else {
-        decentlam::elastic::ChurnSpec::parse(&cfg.churn, cfg.seed)?
-            .resolve(cfg.nodes)?
-            .nmax
+    let capacity = match cfg.churn {
+        None => cfg.nodes,
+        Some(spec) => spec.with_run_seed(cfg.seed).resolve(cfg.nodes)?.nmax,
     };
     let data = exp::synth_imagenet(capacity, cfg.seed);
     let wl = exp::mlp_workload_named(
@@ -307,21 +326,18 @@ fn train(args: &Args) -> Result<()> {
         cfg.nodes,
         cfg.total_batch,
         cfg.steps,
-        if cfg.faults.is_empty() {
-            String::new()
-        } else {
-            format!(" faults=[{}]", cfg.faults)
-        },
-        if cfg.codec.is_empty() {
-            String::new()
-        } else {
-            format!(" codec=[{}]", cfg.codec)
-        },
-        if cfg.churn.is_empty() {
-            String::new()
-        } else {
-            format!(" churn=[{}] capacity={capacity}", cfg.churn)
-        }
+        cfg.faults
+            .as_ref()
+            .map(|s| format!(" faults=[{}]", s.to_spec_string()))
+            .unwrap_or_default(),
+        cfg.codec
+            .as_ref()
+            .map(|s| format!(" codec=[{}]", s.to_spec_string()))
+            .unwrap_or_default(),
+        cfg.churn
+            .as_ref()
+            .map(|s| format!(" churn=[{}] capacity={capacity}", s.to_spec_string()))
+            .unwrap_or_default()
     );
     let eval_every = if cfg.eval_every == 0 { cfg.steps / 10 } else { cfg.eval_every };
     let mut cfg = cfg;
@@ -349,7 +365,7 @@ fn train(args: &Args) -> Result<()> {
             s.dropped_node_steps,
             s.straggler_node_steps
         ),
-        None if !t.cfg.faults.is_empty() => println!(
+        None if t.cfg.faults.is_some() => println!(
             "faults: n/a — {}'s all-reduce traffic bypasses the decentralized fault model",
             t.cfg.optimizer
         ),
@@ -365,7 +381,7 @@ fn train(args: &Args) -> Result<()> {
                 payload.allreduce
             );
         }
-        None if !t.cfg.codec.is_empty() => println!(
+        None if t.cfg.codec.is_some() => println!(
             "codec: n/a — {}'s all-reduce traffic bypasses the gossip codec path",
             t.cfg.optimizer
         ),

@@ -1,0 +1,330 @@
+//! Scenario manifest schema + fail-closed parser.
+//!
+//! ```json
+//! {
+//!   "version": "DLSCEN01",
+//!   "name": "ring-decentlam-int8",
+//!   "description": "int8+EF gossip on a ring descends and replays",
+//!   "tier": "smoke",
+//!   "config": { ... Config manifest object (util::config) ... },
+//!   "expect": {
+//!     "eval-loss": {"value": 1.83, "tol": 0.05},
+//!     "wire-bytes-per-iter": {"value": 41504.0, "tol": 0.0},
+//!     "run-sha256": "replay"
+//!   }
+//! }
+//! ```
+//!
+//! Rejected-combo scenarios swap `expect` for the EXACT error string
+//! the config boundary must produce:
+//!
+//! ```json
+//!   "expect": {"reject": "scenario.config.faults: fault rate `drop=2` outside [0, 1]"}
+//! ```
+//!
+//! The config section itself parses through
+//! [`Config::from_manifest`] + [`Config::validate`] — the same
+//! fail-closed path `--config` files and the CLI use — so a scenario
+//! can never drift from what the trainer actually accepts.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::config::Config;
+use crate::util::json::{Cursor, Value};
+
+use super::MANIFEST_VERSION;
+
+/// Corpus tier: `smoke` runs on every PR, `full` only nightly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Smoke,
+    Full,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// A pinned scalar expectation: `|actual - value| <= tol`. A pin
+/// without `value` asserts only that the run produces a finite number —
+/// the authoring state before `run-scenarios --pin` fills values in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pinned {
+    pub value: Option<f64>,
+    pub tol: f64,
+}
+
+/// Bitwise digest pin over the run (manifest bytes + every per-step
+/// loss + final accuracy/consensus/eval-loss bits).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShaPin {
+    /// Execute the scenario twice and require identical digests — the
+    /// self-verifying determinism pin (no stored hex to go stale).
+    Replay,
+    /// Exact digest, 64 lowercase hex chars (written by `--pin`).
+    Hex(String),
+}
+
+/// Expected outputs of a runnable scenario.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RunExpect {
+    pub eval_loss: Option<Pinned>,
+    pub wire_bytes_per_iter: Option<Pinned>,
+    pub run_sha256: Option<ShaPin>,
+}
+
+/// What the scenario claims: it runs and matches pins, or the config
+/// boundary rejects it with exactly this error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expect {
+    Run(RunExpect),
+    Reject { error: String },
+}
+
+/// The config section's parse outcome. Rejection is captured (not
+/// propagated) so rejected-combo scenarios can pin the error string.
+#[derive(Debug, Clone)]
+pub enum ScenarioConfig {
+    Valid(Config),
+    /// `format!("{e:#}")` of the boundary error — the full context
+    /// chain, path-prefixed (e.g. ``scenario.config.faults: fault rate
+    /// `drop=2` outside [0, 1]``).
+    Rejected(String),
+}
+
+/// One parsed scenario manifest.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub tier: Tier,
+    pub config: ScenarioConfig,
+    pub expect: Expect,
+}
+
+impl Scenario {
+    /// Parse a manifest document, fail-closed. Errors on anything
+    /// outside the schema; config-section errors are CAPTURED into
+    /// [`ScenarioConfig::Rejected`] (the runner decides whether that
+    /// rejection was expected).
+    pub fn parse(v: &Value) -> Result<Scenario> {
+        let c = Cursor::root(v, "scenario");
+        c.deny_unknown(&["version", "name", "description", "tier", "config", "expect"])?;
+        let version = c.get("version")?.as_str()?;
+        if version != MANIFEST_VERSION {
+            bail!(
+                "scenario.version: unsupported manifest version `{version}` \
+                 (this build reads {MANIFEST_VERSION})"
+            );
+        }
+        let name = c.get("name")?.as_str()?.to_string();
+        let description = c.get("description")?.as_str()?.to_string();
+        let tier = match c.get("tier")?.as_str()? {
+            "smoke" => Tier::Smoke,
+            "full" => Tier::Full,
+            other => bail!("scenario.tier: unknown tier `{other}` (smoke|full)"),
+        };
+        let expect = parse_expect(&c.get("expect")?)?;
+        let cfg_cursor = c.get("config")?;
+        let config = match Config::from_manifest(&cfg_cursor).and_then(|cfg| {
+            // Cross-field invariants carry the config path too, so the
+            // pinned rejection string localizes the failure.
+            cfg.validate().with_context(|| cfg_cursor.path().to_string())?;
+            Ok(cfg)
+        }) {
+            Ok(cfg) => ScenarioConfig::Valid(cfg),
+            Err(e) => ScenarioConfig::Rejected(format!("{e:#}")),
+        };
+        Ok(Scenario { name, description, tier, config, expect })
+    }
+
+    /// Parse from manifest text (JSON).
+    pub fn parse_str(text: &str) -> Result<Scenario> {
+        Scenario::parse(&Value::parse(text)?)
+    }
+}
+
+fn parse_pinned(x: &Cursor) -> Result<Pinned> {
+    x.deny_unknown(&["value", "tol"])?;
+    let value = x.opt("value").map(|v| v.as_f64()).transpose()?;
+    let tol = x.opt("tol").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0);
+    if !(tol >= 0.0) {
+        bail!("{}: tolerance {tol} must be >= 0", x.path());
+    }
+    Ok(Pinned { value, tol })
+}
+
+fn parse_expect(x: &Cursor) -> Result<Expect> {
+    if x.opt("reject").is_some() {
+        x.deny_unknown(&["reject"])?;
+        return Ok(Expect::Reject { error: x.get("reject")?.as_str()?.to_string() });
+    }
+    x.deny_unknown(&["eval-loss", "wire-bytes-per-iter", "run-sha256"])?;
+    let run_sha256 = match x.opt("run-sha256") {
+        None => None,
+        Some(s) => {
+            let pin = s.as_str()?;
+            if pin == "replay" {
+                Some(ShaPin::Replay)
+            } else if pin.len() == 64
+                && pin.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+            {
+                Some(ShaPin::Hex(pin.to_string()))
+            } else {
+                bail!(
+                    "{}: expected \"replay\" or 64 lowercase hex chars, got `{pin}`",
+                    s.path()
+                );
+            }
+        }
+    };
+    Ok(Expect::Run(RunExpect {
+        eval_loss: x.opt("eval-loss").map(|p| parse_pinned(&p)).transpose()?,
+        wire_bytes_per_iter: x
+            .opt("wire-bytes-per-iter")
+            .map(|p| parse_pinned(&p))
+            .transpose()?,
+        run_sha256,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(expect: &str) -> String {
+        format!(
+            r#"{{
+              "version": "DLSCEN01",
+              "name": "t",
+              "description": "d",
+              "tier": "smoke",
+              "config": {{"nodes": 4, "topology": "ring", "steps": 10}},
+              "expect": {expect}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_a_minimal_runnable_scenario() {
+        let s = Scenario::parse_str(&minimal(r#"{"run-sha256": "replay"}"#)).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.tier, Tier::Smoke);
+        match &s.config {
+            ScenarioConfig::Valid(cfg) => {
+                assert_eq!(cfg.nodes, 4);
+                assert_eq!(cfg.topology, "ring");
+                assert_eq!(cfg.steps, 10);
+            }
+            ScenarioConfig::Rejected(e) => panic!("unexpected rejection: {e}"),
+        }
+        assert_eq!(
+            s.expect,
+            Expect::Run(RunExpect { run_sha256: Some(ShaPin::Replay), ..Default::default() })
+        );
+    }
+
+    #[test]
+    fn unknown_fields_are_hard_errors_naming_the_field() {
+        let text = minimal(r#"{"run-sha256": "replay"}"#).replace("\"tier\"", "\"teir\"");
+        let e = format!("{:#}", Scenario::parse_str(&text).unwrap_err());
+        assert_eq!(
+            e,
+            "scenario: unknown field `teir` \
+             (allowed: version, name, description, tier, config, expect)"
+        );
+        let text = minimal(r#"{"run-sha265": "replay"}"#);
+        let e = format!("{:#}", Scenario::parse_str(&text).unwrap_err());
+        assert_eq!(
+            e,
+            "scenario.expect: unknown field `run-sha265` \
+             (allowed: eval-loss, wire-bytes-per-iter, run-sha256)"
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let text = minimal(r#"{}"#).replace("DLSCEN01", "DLSCEN02");
+        let e = format!("{:#}", Scenario::parse_str(&text).unwrap_err());
+        assert_eq!(
+            e,
+            "scenario.version: unsupported manifest version `DLSCEN02` \
+             (this build reads DLSCEN01)"
+        );
+    }
+
+    #[test]
+    fn pins_parse_with_value_tol_and_sha_forms() {
+        let s = Scenario::parse_str(&minimal(
+            r#"{"eval-loss": {"value": 1.5, "tol": 0.1}, "wire-bytes-per-iter": {"tol": 0.0}}"#,
+        ))
+        .unwrap();
+        let Expect::Run(exp) = &s.expect else { panic!("expected Run") };
+        assert_eq!(exp.eval_loss, Some(Pinned { value: Some(1.5), tol: 0.1 }));
+        assert_eq!(exp.wire_bytes_per_iter, Some(Pinned { value: None, tol: 0.0 }));
+        assert_eq!(exp.run_sha256, None);
+
+        let hex = "a".repeat(64);
+        let s =
+            Scenario::parse_str(&minimal(&format!(r#"{{"run-sha256": "{hex}"}}"#))).unwrap();
+        let Expect::Run(exp) = &s.expect else { panic!("expected Run") };
+        assert_eq!(exp.run_sha256, Some(ShaPin::Hex(hex)));
+
+        let e = format!(
+            "{:#}",
+            Scenario::parse_str(&minimal(r#"{"run-sha256": "DEADBEEF"}"#)).unwrap_err()
+        );
+        assert_eq!(
+            e,
+            "scenario.expect.run-sha256: expected \"replay\" or 64 lowercase hex chars, \
+             got `DEADBEEF`"
+        );
+    }
+
+    #[test]
+    fn config_errors_are_captured_with_their_path() {
+        let text = minimal(r#"{"reject": "x"}"#)
+            .replace(r#""topology": "ring""#, r#""topology": "ring", "faults": "drop=2""#);
+        let s = Scenario::parse_str(&text).unwrap();
+        match &s.config {
+            ScenarioConfig::Rejected(e) => assert_eq!(
+                e,
+                "scenario.config.faults: fault rate `drop=2` outside [0, 1]"
+            ),
+            ScenarioConfig::Valid(_) => panic!("drop=2 must reject"),
+        }
+    }
+
+    #[test]
+    fn cross_field_invariants_reject_at_parse_time() {
+        let text = minimal(r#"{"reject": "x"}"#).replace(
+            r#""topology": "ring""#,
+            r#""topology": "ring", "churn": "true", "async": "true""#,
+        );
+        let s = Scenario::parse_str(&text).unwrap();
+        match &s.config {
+            ScenarioConfig::Rejected(e) => assert_eq!(
+                e,
+                "scenario.config: --churn models synchronous rounds over an elastic \
+                 roster; composing with --async (churn-aware schedules) is an open \
+                 item — see ROADMAP.md"
+            ),
+            ScenarioConfig::Valid(_) => panic!("churn+async must reject"),
+        }
+    }
+
+    #[test]
+    fn reject_expectation_is_exclusive() {
+        let e = format!(
+            "{:#}",
+            Scenario::parse_str(&minimal(r#"{"reject": "x", "run-sha256": "replay"}"#))
+                .unwrap_err()
+        );
+        assert_eq!(e, "scenario.expect: unknown field `run-sha256` (allowed: reject)");
+    }
+}

@@ -1,0 +1,35 @@
+//! Scenario registry (DESIGN.md §10): versioned, fail-closed JSON
+//! manifests that pin a complete run — topology × optimizer × faults ×
+//! codec × async × churn × lr schedule — TOGETHER with its expected
+//! outputs, plus a batch runner over the checked-in `scenarios/`
+//! corpus.
+//!
+//! A scenario manifest is the executable form of a claim this repo
+//! makes: "this composition trains to this eval loss, ships this many
+//! wire bytes, and replays bit for bit" — or "this composition is
+//! rejected with exactly this error". The corpus is the regression
+//! surface for cross-subsystem behavior that unit tests cover only
+//! piecewise; `decentlam run-scenarios scenarios/` re-verifies every
+//! claim and CI gates on it (smoke tier per PR, everything nightly).
+//!
+//! Fail-closed throughout: an unknown field anywhere in a manifest is a
+//! hard parse error naming the offending path ([`crate::util::json::Cursor`]),
+//! the `version` field must match [`MANIFEST_VERSION`], and cross-field
+//! config invariants ([`crate::util::config::Config::validate`]) are
+//! checked at parse time — a rejected-combo scenario pins the EXACT
+//! error string, so error-message drift fails the corpus.
+//!
+//! Module layout: [`manifest`] parses `Scenario` values; [`runner`]
+//! executes them against a small fixed synthetic workload and checks
+//! the pins ([`Pinned`] tolerances, [`ShaPin`] bitwise digests).
+
+mod manifest;
+mod runner;
+
+pub use manifest::{Expect, Pinned, RunExpect, Scenario, ScenarioConfig, ShaPin, Tier};
+pub use runner::{run_corpus, run_scenario, CorpusSummary, Outcome, RunOpts, Status, TierFilter};
+
+/// Manifest format version. Bumped on any breaking change to the
+/// scenario schema; readers reject every other value ("DL" scenario,
+/// revision 01).
+pub const MANIFEST_VERSION: &str = "DLSCEN01";

@@ -1,0 +1,545 @@
+//! Execute scenarios and check their pins; batch-run a corpus
+//! directory with a summary table + JSON artifact.
+//!
+//! Every scenario runs the SAME tiny synthetic workload family (96
+//! samples/node, 256 eval samples, the config's Dirichlet alpha and
+//! seed) so pinned numbers depend only on the manifest — and stay fast
+//! enough for the smoke tier to run inside debug-build `cargo test`.
+//! `native-*` model names map to `mlp-xs` here; corpus manifests name
+//! an `mlp-*` arch explicitly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::{wire_bytes_per_iter, CommStats};
+use crate::coordinator::Trainer;
+use crate::data::synth::{ClassificationData, SynthSpec};
+use crate::grad::mlp;
+use crate::util::config::Config;
+use crate::util::json::Value;
+use crate::util::sha256::Sha256;
+use crate::util::table::Table;
+
+use super::{Expect, Pinned, Scenario, ScenarioConfig, ShaPin, Tier, MANIFEST_VERSION};
+
+/// Which tiers a corpus run admits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierFilter {
+    Smoke,
+    Full,
+    All,
+}
+
+impl TierFilter {
+    pub fn parse(s: &str) -> Result<TierFilter> {
+        match s {
+            "smoke" => Ok(TierFilter::Smoke),
+            "full" => Ok(TierFilter::Full),
+            "all" => Ok(TierFilter::All),
+            other => bail!("unknown tier filter `{other}` (smoke|full|all)"),
+        }
+    }
+
+    fn admits(self, tier: Tier) -> bool {
+        match self {
+            TierFilter::All => true,
+            TierFilter::Smoke => tier == Tier::Smoke,
+            TierFilter::Full => tier == Tier::Full,
+        }
+    }
+}
+
+/// Corpus-run options.
+pub struct RunOpts {
+    pub tier: TierFilter,
+    /// Only scenarios whose name contains this substring.
+    pub filter: Option<String>,
+    /// Rewrite each executed manifest with its measured pins (fills
+    /// `value` fields and hex digests; updates `reject` strings).
+    pub pin: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts { tier: TierFilter::All, filter: None, pin: false }
+    }
+}
+
+/// One scenario's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Status {
+    /// Ran and every pin held.
+    Pass,
+    /// Rejected at the config boundary with exactly the pinned error.
+    RejectedAsPinned,
+    /// Anything else; the string says what broke.
+    Fail(String),
+}
+
+/// Result of one scenario run (also a row of the summary artifact).
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub name: String,
+    pub tier: Tier,
+    pub status: Status,
+    /// Measured values (None for rejected/failed-before-run scenarios).
+    pub eval_loss: Option<f64>,
+    pub wire_bytes_per_iter: Option<f64>,
+    pub run_sha256: Option<String>,
+}
+
+/// Everything one execution of a valid config produces.
+struct Executed {
+    eval_loss: Option<f64>,
+    wire_bytes: f64,
+    digest: String,
+}
+
+/// Build the fixed scenario workload and train. Deterministic in the
+/// config alone: data, init, and every schedule derive from `cfg.seed`.
+fn execute(cfg: &Config) -> Result<Executed> {
+    // Elastic runs shard over the full stable-id capacity (nmax).
+    let capacity = match cfg.churn {
+        None => cfg.nodes,
+        Some(spec) => spec.with_run_seed(cfg.seed).resolve(cfg.nodes)?.nmax,
+    };
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes: capacity,
+        samples_per_node: 96,
+        eval_samples: 256,
+        dirichlet_alpha: cfg.dirichlet_alpha,
+        margin: 2.0,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let arch = if cfg.model.starts_with("native") { "mlp-xs" } else { cfg.model.as_str() };
+    let wl = mlp::workload(mlp::MlpArch::family(arch)?, data, cfg.micro_batch, cfg.seed);
+    let mut t = Trainer::new(cfg.clone(), wl)?;
+    let report = t.run();
+    let xbar = t.average_model();
+    let eval_loss = t.workload.eval.loss(&xbar);
+    let wire_bytes = wire_bytes_per_iter(
+        t.comm_pattern(),
+        &CommStats::of_engine(&t.comm),
+        t.payload_bytes(),
+    );
+    // Digest = run manifest + the full loss trajectory + final metrics,
+    // all at the bit level: two digests agree iff the runs agree.
+    let mut h = Sha256::new();
+    h.update(report.manifest.as_bytes());
+    for l in &report.losses {
+        h.update(&l.to_bits().to_be_bytes());
+    }
+    h.update(&report.final_accuracy.to_bits().to_be_bytes());
+    h.update(&report.final_consensus.to_bits().to_be_bytes());
+    if let Some(el) = eval_loss {
+        h.update(&el.to_bits().to_be_bytes());
+    }
+    Ok(Executed { eval_loss, wire_bytes, digest: h.finish_hex() })
+}
+
+fn check_pin(key: &str, pin: &Pinned, actual: Option<f64>, fails: &mut Vec<String>) {
+    match (pin.value, actual) {
+        (_, None) => fails.push(format!("{key}: run produced no value")),
+        (None, Some(a)) => {
+            if !a.is_finite() {
+                fails.push(format!("{key}: non-finite value {a}"));
+            }
+        }
+        (Some(want), Some(a)) => {
+            // NaN fails closed: the comparison below is false for NaN.
+            if !((a - want).abs() <= pin.tol) {
+                fails.push(format!(
+                    "{key}: measured {a} vs pinned {want} ± {} (off by {})",
+                    pin.tol,
+                    (a - want).abs()
+                ));
+            }
+        }
+    }
+}
+
+/// Run one scenario and check its expectations. Never errors — every
+/// failure mode lands in [`Status::Fail`] so a corpus run always
+/// reports per-scenario verdicts.
+pub fn run_scenario(s: &Scenario) -> Outcome {
+    let mut out = Outcome {
+        name: s.name.clone(),
+        tier: s.tier,
+        status: Status::Pass,
+        eval_loss: None,
+        wire_bytes_per_iter: None,
+        run_sha256: None,
+    };
+    match (&s.config, &s.expect) {
+        (ScenarioConfig::Rejected(got), Expect::Reject { error: want }) => {
+            if got != want {
+                out.status = Status::Fail(format!(
+                    "rejection message drifted:\n  pinned: {want}\n  actual: {got}"
+                ));
+            } else {
+                out.status = Status::RejectedAsPinned;
+            }
+        }
+        (ScenarioConfig::Rejected(got), Expect::Run(_)) => {
+            out.status = Status::Fail(format!("config rejected: {got}"));
+        }
+        (ScenarioConfig::Valid(_), Expect::Reject { error: want }) => {
+            out.status = Status::Fail(format!(
+                "config unexpectedly valid (expected rejection: {want})"
+            ));
+        }
+        (ScenarioConfig::Valid(cfg), Expect::Run(exp)) => {
+            let first = match execute(cfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    out.status = Status::Fail(format!("run failed: {e:#}"));
+                    return out;
+                }
+            };
+            out.eval_loss = first.eval_loss;
+            out.wire_bytes_per_iter = Some(first.wire_bytes);
+            out.run_sha256 = Some(first.digest.clone());
+            let mut fails = Vec::new();
+            if let Some(pin) = &exp.eval_loss {
+                check_pin("eval-loss", pin, first.eval_loss, &mut fails);
+            }
+            if let Some(pin) = &exp.wire_bytes_per_iter {
+                check_pin("wire-bytes-per-iter", pin, Some(first.wire_bytes), &mut fails);
+            }
+            match &exp.run_sha256 {
+                None => {}
+                Some(ShaPin::Hex(want)) => {
+                    if *want != first.digest {
+                        fails.push(format!(
+                            "run-sha256: digest {} != pinned {want}",
+                            first.digest
+                        ));
+                    }
+                }
+                Some(ShaPin::Replay) => match execute(cfg) {
+                    Err(e) => fails.push(format!("replay failed: {e:#}")),
+                    Ok(second) => {
+                        if second.digest != first.digest {
+                            fails.push(format!(
+                                "run-sha256: replay diverged ({} then {})",
+                                first.digest, second.digest
+                            ));
+                        }
+                    }
+                },
+            }
+            if !fails.is_empty() {
+                out.status = Status::Fail(fails.join("; "));
+            }
+        }
+    }
+    out
+}
+
+/// Corpus run summary: per-scenario outcomes + counters.
+pub struct CorpusSummary {
+    pub outcomes: Vec<Outcome>,
+    pub skipped: usize,
+}
+
+impl CorpusSummary {
+    pub fn failed(&self) -> usize {
+        self.outcomes.iter().filter(|o| matches!(o.status, Status::Fail(_))).count()
+    }
+
+    /// Human summary table (one row per executed scenario).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "scenario corpus — {} run, {} skipped, {} failed",
+                self.outcomes.len(),
+                self.skipped,
+                self.failed()
+            ),
+            &["scenario", "tier", "status", "eval loss", "wire B/iter", "detail"],
+        );
+        for o in &self.outcomes {
+            let (status, detail) = match &o.status {
+                Status::Pass => ("pass".to_string(), String::new()),
+                Status::RejectedAsPinned => ("rejected".to_string(), "as pinned".into()),
+                Status::Fail(why) => {
+                    ("FAIL".to_string(), why.lines().next().unwrap_or("").to_string())
+                }
+            };
+            t.row(vec![
+                o.name.clone(),
+                o.tier.name().to_string(),
+                status,
+                o.eval_loss.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+                o.wire_bytes_per_iter
+                    .map(|v| format!("{v:.0}"))
+                    .unwrap_or_else(|| "-".into()),
+                detail,
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable artifact (uploaded by the CI scenario job).
+    pub fn to_json(&self) -> Value {
+        let scenarios = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let mut pairs = vec![
+                    ("name", Value::Str(o.name.clone())),
+                    ("tier", Value::Str(o.tier.name().to_string())),
+                    (
+                        "status",
+                        Value::Str(match &o.status {
+                            Status::Pass => "pass".into(),
+                            Status::RejectedAsPinned => "rejected-as-pinned".into(),
+                            Status::Fail(why) => format!("fail: {why}"),
+                        }),
+                    ),
+                ];
+                if let Some(v) = o.eval_loss {
+                    pairs.push(("eval-loss", Value::Num(v)));
+                }
+                if let Some(v) = o.wire_bytes_per_iter {
+                    pairs.push(("wire-bytes-per-iter", Value::Num(v)));
+                }
+                if let Some(d) = &o.run_sha256 {
+                    pairs.push(("run-sha256", Value::Str(d.clone())));
+                }
+                Value::obj(pairs)
+            })
+            .collect();
+        Value::obj(vec![
+            ("version", Value::Str(MANIFEST_VERSION.to_string())),
+            ("run", Value::Num(self.outcomes.len() as f64)),
+            ("skipped", Value::Num(self.skipped as f64)),
+            ("failed", Value::Num(self.failed() as f64)),
+            ("scenarios", Value::Arr(scenarios)),
+        ])
+    }
+}
+
+/// Sorted `*.json` manifests under `dir`.
+fn corpus_paths(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading corpus dir {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    Ok(paths)
+}
+
+/// Batch-run every manifest in a directory (sorted, fail-closed: a
+/// manifest that does not parse aborts the whole run — the corpus
+/// itself must always be loadable). Returns per-scenario outcomes;
+/// check [`CorpusSummary::failed`] to gate.
+pub fn run_corpus(dir: &Path, opts: &RunOpts) -> Result<CorpusSummary> {
+    let paths = corpus_paths(dir)?;
+    ensure!(!paths.is_empty(), "no scenario manifests (*.json) under {}", dir.display());
+    let mut outcomes = Vec::new();
+    let mut skipped = 0usize;
+    for path in &paths {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let s = Scenario::parse(&v).with_context(|| format!("parsing {}", path.display()))?;
+        // The file name is the scenario name — keeps the corpus
+        // greppable and the glob-to-scenario mapping bijective.
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+        ensure!(
+            stem == s.name,
+            "{}: scenario name `{}` must match the file stem `{stem}`",
+            path.display(),
+            s.name
+        );
+        let name_hit =
+            opts.filter.as_deref().map(|f| s.name.contains(f)).unwrap_or(true);
+        if !opts.tier.admits(s.tier) || !name_hit {
+            skipped += 1;
+            continue;
+        }
+        let outcome = run_scenario(&s);
+        if opts.pin {
+            let pinned = repin(&v, &s, &outcome)?;
+            std::fs::write(path, pinned.to_pretty_string())
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        outcomes.push(outcome);
+    }
+    Ok(CorpusSummary { outcomes, skipped })
+}
+
+/// `--pin`: rewrite a manifest's `expect` section from measured
+/// outputs. Fills `value` on present pins (keeping their tolerances),
+/// replaces hex digests, and updates pinned rejection strings; the pin
+/// STRUCTURE (which keys exist, replay-vs-hex) is authored by hand and
+/// preserved.
+fn repin(original: &Value, s: &Scenario, outcome: &Outcome) -> Result<Value> {
+    let new_expect = match (&s.expect, &s.config) {
+        (Expect::Reject { .. }, ScenarioConfig::Rejected(got)) => {
+            Value::obj(vec![("reject", Value::Str(got.clone()))])
+        }
+        (Expect::Run(exp), _) => {
+            let mut pairs = Vec::new();
+            if let Some(pin) = &exp.eval_loss {
+                if let Some(measured) = outcome.eval_loss {
+                    pairs.push((
+                        "eval-loss",
+                        Value::obj(vec![
+                            ("value", Value::Num(measured)),
+                            ("tol", Value::Num(pin.tol)),
+                        ]),
+                    ));
+                }
+            }
+            if let Some(pin) = &exp.wire_bytes_per_iter {
+                if let Some(measured) = outcome.wire_bytes_per_iter {
+                    pairs.push((
+                        "wire-bytes-per-iter",
+                        Value::obj(vec![
+                            ("value", Value::Num(measured)),
+                            ("tol", Value::Num(pin.tol)),
+                        ]),
+                    ));
+                }
+            }
+            match (&exp.run_sha256, &outcome.run_sha256) {
+                (Some(ShaPin::Replay), _) => {
+                    pairs.push(("run-sha256", Value::Str("replay".into())))
+                }
+                (Some(ShaPin::Hex(_)), Some(digest)) => {
+                    pairs.push(("run-sha256", Value::Str(digest.clone())))
+                }
+                _ => {}
+            }
+            Value::obj(pairs)
+        }
+        // Expected a rejection but the config was valid: nothing
+        // measured to pin; leave the manifest as written.
+        (Expect::Reject { .. }, ScenarioConfig::Valid(_)) => return Ok(original.clone()),
+    };
+    let mut v = original.clone();
+    let Value::Obj(top) = &mut v else { bail!("manifest is not an object") };
+    top.insert("expect".to_string(), new_expect);
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn scenario(config: &str, expect: &str) -> Scenario {
+        Scenario::parse_str(&format!(
+            r#"{{
+              "version": "DLSCEN01",
+              "name": "t",
+              "description": "d",
+              "tier": "smoke",
+              "config": {config},
+              "expect": {expect}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    const TINY: &str = r#"{
+        "nodes": 4, "topology": "ring", "optimizer": "decentlam",
+        "model": "mlp-xs", "steps": 8, "total-batch": 64, "micro-batch": 16,
+        "lr": 0.05, "linear-scaling": false, "schedule": "constant",
+        "eval-every": 0, "threads": 1
+    }"#;
+
+    #[test]
+    fn check_pin_tolerance_and_finiteness() {
+        let mut fails = Vec::new();
+        check_pin("k", &Pinned { value: Some(1.0), tol: 0.1 }, Some(1.05), &mut fails);
+        check_pin("k", &Pinned { value: None, tol: 0.0 }, Some(0.5), &mut fails);
+        assert!(fails.is_empty(), "{fails:?}");
+        check_pin("k", &Pinned { value: Some(1.0), tol: 0.1 }, Some(1.2), &mut fails);
+        check_pin("k", &Pinned { value: Some(1.0), tol: 0.1 }, Some(f64::NAN), &mut fails);
+        check_pin("k", &Pinned { value: None, tol: 0.0 }, Some(f64::INFINITY), &mut fails);
+        check_pin("k", &Pinned { value: Some(1.0), tol: 0.1 }, None, &mut fails);
+        assert_eq!(fails.len(), 4, "{fails:?}");
+    }
+
+    #[test]
+    fn tiny_scenario_runs_replays_and_reports_measurements() {
+        let s = scenario(TINY, r#"{"run-sha256": "replay"}"#);
+        let out = run_scenario(&s);
+        assert_eq!(out.status, Status::Pass, "{:?}", out.status);
+        assert!(out.eval_loss.unwrap().is_finite());
+        assert!(out.wire_bytes_per_iter.unwrap() > 0.0);
+        assert_eq!(out.run_sha256.as_ref().unwrap().len(), 64);
+        // The digest is a stable function of the manifest: a fresh
+        // parse + run reproduces it (this is what a Hex pin asserts).
+        let again = run_scenario(&scenario(TINY, r#"{"run-sha256": "replay"}"#));
+        assert_eq!(out.run_sha256, again.run_sha256);
+    }
+
+    #[test]
+    fn wrong_hex_pin_fails_with_both_digests() {
+        let hex = "0".repeat(64);
+        let s = scenario(TINY, &format!(r#"{{"run-sha256": "{hex}"}}"#));
+        let out = run_scenario(&s);
+        let Status::Fail(why) = &out.status else { panic!("expected Fail") };
+        assert!(why.contains("run-sha256"), "{why}");
+        assert!(why.contains(&hex), "{why}");
+    }
+
+    #[test]
+    fn pinned_rejection_passes_and_drift_fails() {
+        let bad_cfg = r#"{"nodes": 4, "topology": "ring", "faults": "drop=2"}"#;
+        let pinned =
+            r#"{"reject": "scenario.config.faults: fault rate `drop=2` outside [0, 1]"}"#;
+        let out = run_scenario(&scenario(bad_cfg, pinned));
+        assert_eq!(out.status, Status::RejectedAsPinned);
+
+        let drifted = r#"{"reject": "some other message"}"#;
+        let out = run_scenario(&scenario(bad_cfg, drifted));
+        assert!(matches!(&out.status, Status::Fail(w) if w.contains("drifted")));
+
+        // A rejection pin on a VALID config is a corpus bug.
+        let out = run_scenario(&scenario(TINY, drifted));
+        assert!(matches!(&out.status, Status::Fail(w) if w.contains("unexpectedly valid")));
+    }
+
+    #[test]
+    fn eval_loss_pin_gates_within_tolerance() {
+        let s = scenario(TINY, r#"{}"#);
+        let measured = run_scenario(&s).eval_loss.unwrap();
+        let pin = format!(r#"{{"eval-loss": {{"value": {measured}, "tol": 1e-9}}}}"#);
+        assert_eq!(run_scenario(&scenario(TINY, &pin)).status, Status::Pass);
+        let off = format!(r#"{{"eval-loss": {{"value": {}, "tol": 1e-9}}}}"#, measured + 1.0);
+        assert!(matches!(run_scenario(&scenario(TINY, &off)).status, Status::Fail(_)));
+    }
+
+    #[test]
+    fn repin_fills_values_and_keeps_structure() {
+        let text = format!(
+            r#"{{
+              "version": "DLSCEN01", "name": "t", "description": "d",
+              "tier": "smoke", "config": {TINY},
+              "expect": {{"eval-loss": {{"tol": 0.05}}, "run-sha256": "replay"}}
+            }}"#
+        );
+        let v = Value::parse(&text).unwrap();
+        let s = Scenario::parse(&v).unwrap();
+        let out = run_scenario(&s);
+        let pinned = repin(&v, &s, &out).unwrap();
+        let re = Scenario::parse(&pinned).unwrap();
+        let Expect::Run(exp) = &re.expect else { panic!("expected Run") };
+        let pin = exp.eval_loss.as_ref().unwrap();
+        assert_eq!(pin.value, out.eval_loss);
+        assert_eq!(pin.tol, 0.05);
+        assert_eq!(exp.run_sha256, Some(ShaPin::Replay));
+        // And the repinned manifest now self-verifies.
+        assert_eq!(run_scenario(&re).status, Status::Pass);
+    }
+}

@@ -58,6 +58,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::cost::{neighbor_exchange_deg_s, LinkSpec};
 use crate::comm::engine::CommEngine;
+use crate::util::kvspec::KvSpec;
 use crate::util::rng::Pcg64;
 
 /// Hard cap on the staleness window: each unit of τ costs one n×d ring
@@ -82,11 +83,84 @@ pub struct AsyncSpec {
     pub bw_gbps: f64,
     /// Seed of the clock draws (independent of data/topology seeds).
     pub seed: u64,
+    /// True when `seed=` was NOT explicit — the seed should follow the
+    /// run seed (resolved later via [`AsyncSpec::with_run_seed`]).
+    pub seed_from_run: bool,
 }
 
 impl Default for AsyncSpec {
     fn default() -> Self {
-        AsyncSpec { tau: 1, spread: 1.0, jitter: 0.0, compute_ms: 10.0, bw_gbps: 25.0, seed: 0 }
+        AsyncSpec {
+            tau: 1,
+            spread: 1.0,
+            jitter: 0.0,
+            compute_ms: 10.0,
+            bw_gbps: 25.0,
+            seed: 0,
+            seed_from_run: true,
+        }
+    }
+}
+
+impl KvSpec for AsyncSpec {
+    const NAME: &'static str = "async";
+    const BARE_TRUE: bool = true;
+
+    fn begin(_head: Option<&str>, default_seed: u64) -> Result<AsyncSpec> {
+        Ok(AsyncSpec { seed: default_seed, ..Default::default() })
+    }
+
+    fn set_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        let v = v.trim();
+        match key {
+            "tau" => {
+                self.tau = v.parse()?;
+                if self.tau > MAX_TAU {
+                    bail!("async tau={} above the cap {MAX_TAU}", self.tau);
+                }
+            }
+            "spread" => {
+                self.spread = v.parse()?;
+                if !(1.0..=1e6).contains(&self.spread) {
+                    bail!("async spread={} outside [1, 1e6]", self.spread);
+                }
+            }
+            "jitter" => {
+                self.jitter = v.parse()?;
+                if !(0.0..=4.0).contains(&self.jitter) {
+                    bail!("async jitter={} outside [0, 4]", self.jitter);
+                }
+            }
+            "compute" => {
+                self.compute_ms = v.parse()?;
+                if !self.compute_ms.is_finite() || self.compute_ms <= 0.0 {
+                    bail!("async compute={} must be > 0 ms", self.compute_ms);
+                }
+            }
+            "bw" => {
+                self.bw_gbps = v.parse()?;
+                if !self.bw_gbps.is_finite() || self.bw_gbps <= 0.0 {
+                    bail!("async bw={} must be > 0 Gbps", self.bw_gbps);
+                }
+            }
+            "seed" => {
+                self.seed = v.parse()?;
+                self.seed_from_run = false;
+            }
+            other => bail!("unknown async key `{other}` (tau|spread|jitter|compute|bw|seed)"),
+        }
+        Ok(())
+    }
+
+    fn to_spec_string(&self) -> String {
+        let mut s = format!(
+            "tau={},spread={},jitter={},compute={},bw={}",
+            self.tau, self.spread, self.jitter, self.compute_ms, self.bw_gbps
+        );
+        if !self.seed_from_run {
+            s.push_str(&format!(",seed={}", self.seed));
+        }
+        s
     }
 }
 
@@ -96,51 +170,21 @@ impl AsyncSpec {
     /// (ms > 0), `bw` (Gbps > 0), `seed`. Omitted keys default; a bare
     /// `--async` (the parser passes `true`) means all defaults.
     pub fn parse(s: &str, default_seed: u64) -> Result<AsyncSpec> {
-        let mut spec = AsyncSpec { seed: default_seed, ..Default::default() };
-        if s.trim() == "true" {
-            return Ok(spec);
+        <AsyncSpec as KvSpec>::parse(s, default_seed)
+    }
+
+    /// Canonical spec string; reparses (default_seed 0) to an equal spec.
+    pub fn to_spec_string(&self) -> String {
+        <AsyncSpec as KvSpec>::to_spec_string(self)
+    }
+
+    /// Resolve seed inheritance: adopt `run_seed` unless `seed=` was
+    /// explicit in the spec string.
+    pub fn with_run_seed(mut self, run_seed: u64) -> AsyncSpec {
+        if self.seed_from_run {
+            self.seed = run_seed;
         }
-        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            let Some((k, v)) = part.split_once('=') else {
-                bail!("async spec entry `{part}` is not key=value");
-            };
-            let v = v.trim();
-            match k.trim() {
-                "tau" => {
-                    spec.tau = v.parse()?;
-                    if spec.tau > MAX_TAU {
-                        bail!("async tau={} above the cap {MAX_TAU}", spec.tau);
-                    }
-                }
-                "spread" => {
-                    spec.spread = v.parse()?;
-                    if !(1.0..=1e6).contains(&spec.spread) {
-                        bail!("async spread={} outside [1, 1e6]", spec.spread);
-                    }
-                }
-                "jitter" => {
-                    spec.jitter = v.parse()?;
-                    if !(0.0..=4.0).contains(&spec.jitter) {
-                        bail!("async jitter={} outside [0, 4]", spec.jitter);
-                    }
-                }
-                "compute" => {
-                    spec.compute_ms = v.parse()?;
-                    if !spec.compute_ms.is_finite() || spec.compute_ms <= 0.0 {
-                        bail!("async compute={} must be > 0 ms", spec.compute_ms);
-                    }
-                }
-                "bw" => {
-                    spec.bw_gbps = v.parse()?;
-                    if !spec.bw_gbps.is_finite() || spec.bw_gbps <= 0.0 {
-                        bail!("async bw={} must be > 0 Gbps", spec.bw_gbps);
-                    }
-                }
-                "seed" => spec.seed = v.parse()?,
-                other => bail!("unknown async key `{other}` (tau|spread|jitter|compute|bw|seed)"),
-            }
-        }
-        Ok(spec)
+        self
     }
 
     /// Uniform clocks: every compute draw is exactly `compute_ms`.
@@ -559,6 +603,33 @@ mod tests {
         assert!(AsyncSpec::parse("jitter=-1", 0).is_err());
         assert!(AsyncSpec::parse("warp=1", 0).is_err());
         assert!(AsyncSpec::parse("tau", 0).is_err());
+    }
+
+    #[test]
+    fn exact_error_strings_are_pinned() {
+        let e = AsyncSpec::parse("tau=99", 0).unwrap_err().to_string();
+        assert_eq!(e, "async tau=99 above the cap 32");
+        let e = AsyncSpec::parse("tau", 0).unwrap_err().to_string();
+        assert_eq!(e, "async spec entry `tau` is not key=value");
+        let e = AsyncSpec::parse("warp=1", 0).unwrap_err().to_string();
+        assert_eq!(e, "unknown async key `warp` (tau|spread|jitter|compute|bw|seed)");
+        let e = AsyncSpec::parse("spread=0.5", 0).unwrap_err().to_string();
+        assert_eq!(e, "async spread=0.5 outside [1, 1e6]");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in ["true", "", "tau=3,spread=4,jitter=0.2,seed=9", "compute=2.5,bw=10"] {
+            let a = AsyncSpec::parse(s, 0).unwrap();
+            let b = AsyncSpec::parse(&a.to_spec_string(), 0).unwrap();
+            assert_eq!(a, b, "round trip of `{s}` via `{}`", a.to_spec_string());
+        }
+    }
+
+    #[test]
+    fn run_seed_resolution_respects_explicit_seed() {
+        assert_eq!(AsyncSpec::parse("tau=2", 0).unwrap().with_run_seed(42).seed, 42);
+        assert_eq!(AsyncSpec::parse("tau=2,seed=7", 0).unwrap().with_run_seed(42).seed, 7);
     }
 
     #[test]

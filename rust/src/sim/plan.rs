@@ -18,6 +18,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::util::kvspec::KvSpec;
 use crate::util::rng::Pcg64;
 
 /// Per-step fault rates plus the schedule seed.
@@ -36,11 +37,55 @@ pub struct FaultSpec {
     pub stale: f64,
     /// Seed of the fault schedule (independent of the topology seed).
     pub seed: u64,
+    /// True when `seed=` was NOT explicit — the seed should follow the
+    /// run seed (resolved later via [`FaultSpec::with_run_seed`]).
+    pub seed_from_run: bool,
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        FaultSpec { drop: 0.0, link: 0.0, straggle: 0.0, stale: 0.0, seed: 0 }
+        FaultSpec {
+            drop: 0.0,
+            link: 0.0,
+            straggle: 0.0,
+            stale: 0.0,
+            seed: 0,
+            seed_from_run: true,
+        }
+    }
+}
+
+impl KvSpec for FaultSpec {
+    const NAME: &'static str = "fault";
+
+    fn begin(_head: Option<&str>, default_seed: u64) -> Result<FaultSpec> {
+        Ok(FaultSpec { seed: default_seed, ..Default::default() })
+    }
+
+    fn set_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "drop" => self.drop = parse_rate(key, v)?,
+            "link" => self.link = parse_rate(key, v)?,
+            "straggle" => self.straggle = parse_rate(key, v)?,
+            "stale" => self.stale = parse_rate(key, v)?,
+            "seed" => {
+                self.seed = v.trim().parse()?;
+                self.seed_from_run = false;
+            }
+            other => bail!("unknown fault key `{other}` (drop|link|straggle|stale|seed)"),
+        }
+        Ok(())
+    }
+
+    fn to_spec_string(&self) -> String {
+        let mut s = format!(
+            "drop={},link={},straggle={},stale={}",
+            self.drop, self.link, self.straggle, self.stale
+        );
+        if !self.seed_from_run {
+            s.push_str(&format!(",seed={}", self.seed));
+        }
+        s
     }
 }
 
@@ -49,21 +94,21 @@ impl FaultSpec {
     /// `drop`, `link`, `straggle`, `stale` (rates in [0,1]) and `seed`.
     /// Omitted keys default to 0 / `default_seed`.
     pub fn parse(s: &str, default_seed: u64) -> Result<FaultSpec> {
-        let mut spec = FaultSpec { seed: default_seed, ..Default::default() };
-        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            let Some((k, v)) = part.split_once('=') else {
-                bail!("fault spec entry `{part}` is not key=value");
-            };
-            match k.trim() {
-                "drop" => spec.drop = parse_rate(k, v)?,
-                "link" => spec.link = parse_rate(k, v)?,
-                "straggle" => spec.straggle = parse_rate(k, v)?,
-                "stale" => spec.stale = parse_rate(k, v)?,
-                "seed" => spec.seed = v.trim().parse()?,
-                other => bail!("unknown fault key `{other}` (drop|link|straggle|stale|seed)"),
-            }
+        <FaultSpec as KvSpec>::parse(s, default_seed)
+    }
+
+    /// Canonical spec string; reparses (default_seed 0) to an equal spec.
+    pub fn to_spec_string(&self) -> String {
+        <FaultSpec as KvSpec>::to_spec_string(self)
+    }
+
+    /// Resolve seed inheritance: adopt `run_seed` unless `seed=` was
+    /// explicit in the spec string.
+    pub fn with_run_seed(mut self, run_seed: u64) -> FaultSpec {
+        if self.seed_from_run {
+            self.seed = run_seed;
         }
-        Ok(spec)
+        self
     }
 
     /// True when every rate is zero — the fault-free degenerate plan.
@@ -206,6 +251,33 @@ mod tests {
         assert!(FaultSpec::parse("warp=0.1", 0).is_err());
         assert!(FaultSpec::parse("drop", 0).is_err());
         assert!(FaultSpec::parse("link=-0.2", 0).is_err());
+    }
+
+    #[test]
+    fn exact_error_strings_are_pinned() {
+        let e = FaultSpec::parse("drop=2", 0).unwrap_err().to_string();
+        assert_eq!(e, "fault rate `drop=2` outside [0, 1]");
+        let e = FaultSpec::parse("drop", 0).unwrap_err().to_string();
+        assert_eq!(e, "fault spec entry `drop` is not key=value");
+        let e = FaultSpec::parse("warp=0.1", 0).unwrap_err().to_string();
+        assert_eq!(e, "unknown fault key `warp` (drop|link|straggle|stale|seed)");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in ["", "drop=0.1,straggle=0.05,seed=7", "link=0.25,stale=1"] {
+            let a = FaultSpec::parse(s, 0).unwrap();
+            let b = FaultSpec::parse(&a.to_spec_string(), 0).unwrap();
+            assert_eq!(a, b, "round trip of `{s}` via `{}`", a.to_spec_string());
+        }
+    }
+
+    #[test]
+    fn run_seed_resolution_respects_explicit_seed() {
+        let inherit = FaultSpec::parse("drop=0.1", 0).unwrap().with_run_seed(42);
+        assert_eq!(inherit.seed, 42);
+        let explicit = FaultSpec::parse("drop=0.1,seed=7", 0).unwrap().with_run_seed(42);
+        assert_eq!(explicit.seed, 7);
     }
 
     #[test]

@@ -1,13 +1,33 @@
-//! Experiment configuration: typed struct + JSON file loading + CLI
-//! overrides (`--key value`). Every launcher entry point (`decentlam`
-//! binary, examples, benches) builds one of these.
+//! Experiment configuration: typed struct + manifest (JSON) loading +
+//! CLI overrides (`--key value`). Every launcher entry point
+//! (`decentlam` binary, examples, benches) builds one of these.
+//!
+//! The manifest is the canonical config surface (DESIGN.md §10):
+//! [`Config::from_manifest`] parses a fail-closed JSON object (unknown
+//! keys are hard errors, every error names its path) and
+//! [`Config::to_manifest`] emits the canonical form that reparses to an
+//! equal `Config` — the round trip `Config -> to_manifest ->
+//! from_manifest == Config` is pinned by tests across every optimizer
+//! and spec. CLI flags are a thin translation layer over the same
+//! per-key dispatch ([`Config::apply_kv`]).
+//!
+//! The four subsystem specs (`--faults`, `--codec`, `--async`,
+//! `--churn`) are TYPED fields here, parsed exactly once at the
+//! boundary (`apply_kv` / `from_manifest`) through the shared
+//! [`crate::util::kvspec::KvSpec`] grammar — downstream code never
+//! re-parses strings. Their seeds stay "inherit the run seed" until
+//! [`crate::coordinator::Trainer`] resolves them via `with_run_seed`.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::codec::CodecSpec;
+use crate::elastic::ChurnSpec;
+use crate::sim::{AsyncSpec, FaultSpec};
 
 use super::cli::Args;
-use super::json::Value;
+use super::json::{Cursor, Value};
 
 /// Learning-rate schedule, following the paper's §7.1 protocol.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,7 +69,7 @@ impl LrSchedule {
 }
 
 /// One experiment run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Config {
     /// Number of computing nodes n.
     pub nodes: usize,
@@ -96,28 +116,27 @@ pub struct Config {
     /// Worker threads for the gradient/exchange/update phases
     /// (0 = one per hardware thread, 1 = serial).
     pub threads: usize,
-    /// Fault-injection spec, e.g. `drop=0.1,straggle=0.05,seed=7`
-    /// (empty = fault-free; see `sim::FaultSpec::parse`). The fault
+    /// Fault injection, parsed from `drop=0.1,straggle=0.05,seed=7`
+    /// (None = fault-free; see [`FaultSpec`]). The fault seed defaults
+    /// to `seed` when the spec omits `seed=` (resolved in the trainer).
+    pub faults: Option<FaultSpec>,
+    /// Gossip payload codec, parsed from `int8,ef=true,seed=7` or
+    /// `topk,k=0.05` (None = raw fp32; see [`CodecSpec`]). The codec
     /// seed defaults to `seed` when the spec omits `seed=`.
-    pub faults: String,
-    /// Gossip payload codec, e.g. `int8,ef=true,seed=7` or `topk,k=0.05`
-    /// (empty = raw fp32; see `comm::codec::CodecSpec::parse`). The
-    /// codec seed defaults to `seed` when the spec omits `seed=`.
-    pub codec: String,
-    /// Asynchronous execution spec, e.g. `tau=2,spread=4,jitter=0.2`
-    /// (empty = synchronous rounds; see `sim::clock::AsyncSpec::parse`).
-    /// Nodes run on heterogeneous simulated clocks and mix neighbor
-    /// payloads up to `tau` rounds stale; requires a static topology.
-    /// The clock seed defaults to `seed` when the spec omits `seed=`.
-    pub async_mode: String,
-    /// Elastic-membership spec, e.g. `join=0.02,leave=0.02,nmin=8,
-    /// nmax=64,seed=7` (empty = fixed roster; see
-    /// `elastic::ChurnSpec::parse`). Nodes join/leave mid-run on a
-    /// seeded schedule; the workload must supply `nmax` shards and
-    /// `nodes` is the initial active count. Requires a static topology
-    /// and synchronous execution. The churn seed defaults to `seed`
-    /// when the spec omits `seed=`.
-    pub churn: String,
+    pub codec: Option<CodecSpec>,
+    /// Asynchronous execution, parsed from `tau=2,spread=4,jitter=0.2`
+    /// (None = synchronous rounds; see [`AsyncSpec`]). Nodes run on
+    /// heterogeneous simulated clocks and mix neighbor payloads up to
+    /// `tau` rounds stale; requires a static topology. The clock seed
+    /// defaults to `seed` when the spec omits `seed=`.
+    pub async_mode: Option<AsyncSpec>,
+    /// Elastic membership, parsed from `join=0.02,leave=0.02,nmin=8,
+    /// nmax=64,seed=7` (None = fixed roster; see [`ChurnSpec`]). Nodes
+    /// join/leave mid-run on a seeded schedule; the workload must
+    /// supply `nmax` shards and `nodes` is the initial active count.
+    /// Requires a static topology and synchronous execution. The churn
+    /// seed defaults to `seed` when the spec omits `seed=`.
+    pub churn: Option<ChurnSpec>,
 }
 
 impl Default for Config {
@@ -144,10 +163,10 @@ impl Default for Config {
             positive_definite: false,
             eval_every: 0,
             threads: 0,
-            faults: String::new(),
-            codec: String::new(),
-            async_mode: String::new(),
-            churn: String::new(),
+            faults: None,
+            codec: None,
+            async_mode: None,
+            churn: None,
         }
     }
 }
@@ -221,60 +240,203 @@ impl Config {
             "positive-definite" | "pd" => self.positive_definite = v.parse()?,
             "eval-every" => self.eval_every = v.parse()?,
             "threads" => self.threads = v.parse()?,
-            "faults" => {
-                // Validate eagerly so a typo fails at the CLI, not
-                // deep inside Trainer::new (seed resolution happens
-                // there, where the run seed is known).
-                crate::sim::FaultSpec::parse(v, 0)?;
-                self.faults = v.into();
-            }
-            "codec" => {
-                // Same eager validation as --faults: typos fail at the
-                // CLI; seed resolution happens in Trainer::new.
-                crate::comm::codec::CodecSpec::parse(v, 0)?;
-                self.codec = v.into();
-            }
-            "async" => {
-                // Eager validation like --faults/--codec. A bare
-                // `--async` parses as "true" = all defaults.
-                crate::sim::AsyncSpec::parse(v, 0)?;
-                self.async_mode = v.into();
-            }
-            "churn" => {
-                // Eager validation like the other spec flags; bound
-                // resolution against the run's node count happens in
-                // Trainer::new, where n is known.
-                crate::elastic::ChurnSpec::parse(v, 0)?;
-                self.churn = v.into();
-            }
+            // The four subsystem specs parse into their TYPED fields
+            // right here, with default_seed 0 — "inherit the run seed"
+            // is carried by the spec's own seed_from_run flag and
+            // resolved in Trainer::new, where the run seed is final.
+            // An empty value clears the spec (subsystem off).
+            "faults" => self.faults = opt_spec(v, FaultSpec::parse)?,
+            "codec" => self.codec = opt_spec(v, CodecSpec::parse)?,
+            "async" => self.async_mode = opt_spec(v, AsyncSpec::parse)?,
+            "churn" => self.churn = opt_spec(v, ChurnSpec::parse)?,
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
     }
 
-    /// Load overrides from a JSON config file, then CLI args on top.
+    /// Cross-field invariants, validated eagerly (the scenario runner
+    /// and `Trainer::new` both call this; error strings are pinned by
+    /// the rejected-combo corpus). Field-local validity is already
+    /// guaranteed by the typed spec fields.
+    pub fn validate(&self) -> Result<()> {
+        let kind = crate::topology::Kind::parse(&self.topology)?;
+        let optimizer =
+            crate::optim::build(&self.optimizer, self.slowmo_period, self.slowmo_beta)?;
+        if let Some(churn) = self.churn {
+            // Churn models synchronous rounds over an elastic roster on
+            // a fixed neighbor structure (DESIGN.md §9).
+            ensure!(
+                !kind.time_varying(),
+                "--churn requires a static topology; `{}` changes neighbors per step",
+                self.topology
+            );
+            ensure!(
+                self.async_mode.is_none(),
+                "--churn models synchronous rounds over an elastic roster; composing \
+                 with --async (churn-aware schedules) is an open item — see ROADMAP.md"
+            );
+            churn.resolve(self.nodes)?;
+        }
+        if self.async_mode.is_some() {
+            match optimizer.comm_pattern() {
+                crate::optim::CommPattern::NeighborPlusPeriodicAllReduce { .. } => {
+                    bail!(
+                        "--async models pure gossip rounds; `{}`'s periodic all-reduce \
+                         is a global barrier (run pmsgd for the barrier baseline)",
+                        self.optimizer
+                    );
+                }
+                crate::optim::CommPattern::Neighbor { .. } => {
+                    ensure!(
+                        !kind.time_varying(),
+                        "--async requires a static topology; `{}` changes neighbors per step",
+                        self.topology
+                    );
+                }
+                crate::optim::CommPattern::AllReduce => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical manifest form: a flat JSON object with dashed keys
+    /// (the `apply_kv` names), a structured `schedule`, and the spec
+    /// fields as their canonical spec strings (present only when on).
+    /// Reparses via [`Config::from_manifest`] to an equal `Config`.
+    pub fn to_manifest(&self) -> Value {
+        let schedule = match &self.schedule {
+            LrSchedule::Constant => Value::obj(vec![("kind", Value::Str("constant".into()))]),
+            LrSchedule::WarmupStep { warmup_steps, milestones } => Value::obj(vec![
+                ("kind", Value::Str("warmup-step".into())),
+                ("warmup-steps", Value::Num(*warmup_steps as f64)),
+                (
+                    "milestones",
+                    Value::Arr(milestones.iter().map(|&m| Value::Num(m as f64)).collect()),
+                ),
+            ]),
+            LrSchedule::WarmupCosine { warmup_steps, total_steps } => Value::obj(vec![
+                ("kind", Value::Str("warmup-cosine".into())),
+                ("warmup-steps", Value::Num(*warmup_steps as f64)),
+                ("total-steps", Value::Num(*total_steps as f64)),
+            ]),
+        };
+        let mut pairs = vec![
+            ("nodes", Value::Num(self.nodes as f64)),
+            ("topology", Value::Str(self.topology.clone())),
+            ("optimizer", Value::Str(self.optimizer.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("total-batch", Value::Num(self.total_batch as f64)),
+            ("micro-batch", Value::Num(self.micro_batch as f64)),
+            ("steps", Value::Num(self.steps as f64)),
+            ("lr", Value::Num(self.lr)),
+            ("linear-scaling", Value::Bool(self.linear_scaling)),
+            ("lr-ref-batch", Value::Num(self.lr_ref_batch as f64)),
+            ("max-lr-scale", Value::Num(self.max_lr_scale)),
+            ("momentum", Value::Num(self.momentum)),
+            ("schedule", schedule),
+            ("dirichlet-alpha", Value::Num(self.dirichlet_alpha)),
+            // Seed as a string: u64 seeds can exceed f64's exact
+            // integer range, and JSON numbers here are f64.
+            ("seed", Value::Str(format!("{}", self.seed))),
+            ("artifacts", Value::Str(self.artifacts.clone())),
+            ("slowmo-period", Value::Num(self.slowmo_period as f64)),
+            ("slowmo-beta", Value::Num(self.slowmo_beta)),
+            ("positive-definite", Value::Bool(self.positive_definite)),
+            ("eval-every", Value::Num(self.eval_every as f64)),
+            ("threads", Value::Num(self.threads as f64)),
+        ];
+        if let Some(s) = &self.faults {
+            pairs.push(("faults", Value::Str(s.to_spec_string())));
+        }
+        if let Some(s) = &self.codec {
+            pairs.push(("codec", Value::Str(s.to_spec_string())));
+        }
+        if let Some(s) = &self.async_mode {
+            pairs.push(("async", Value::Str(s.to_spec_string())));
+        }
+        if let Some(s) = &self.churn {
+            pairs.push(("churn", Value::Str(s.to_spec_string())));
+        }
+        Value::obj(pairs)
+    }
+
+    /// Parse a manifest object, fail-closed: unknown keys are hard
+    /// errors, every error names the offending path. Accepts the
+    /// `apply_kv` aliases (`opt`, `batch`, `beta`, `alpha`, `pd`) and
+    /// both schedule forms — the structured object [`Config::to_manifest`]
+    /// emits, or the CLI's derive-from-steps string form.
+    pub fn from_manifest(c: &Cursor) -> Result<Config> {
+        let mut cfg = Config::default();
+        // Steps first: the string-form `schedule` derives its warmup
+        // and milestones from it, whatever the key order.
+        if let Some(x) = c.opt("steps") {
+            cfg.steps = x.as_usize()?;
+        }
+        for (key, x) in c.entries()? {
+            match key {
+                "steps" => {}
+                "nodes" => cfg.nodes = x.as_usize()?,
+                "topology" => cfg.topology = x.as_str()?.to_string(),
+                "optimizer" | "opt" => cfg.optimizer = x.as_str()?.to_string(),
+                "model" => cfg.model = x.as_str()?.to_string(),
+                "total-batch" | "batch" => cfg.total_batch = x.as_usize()?,
+                "micro-batch" => cfg.micro_batch = x.as_usize()?,
+                "lr" => cfg.lr = x.as_f64()?,
+                "linear-scaling" => cfg.linear_scaling = x.as_bool()?,
+                "lr-ref-batch" => cfg.lr_ref_batch = x.as_usize()?,
+                "max-lr-scale" => cfg.max_lr_scale = x.as_f64()?,
+                "momentum" | "beta" => cfg.momentum = x.as_f64()?,
+                "schedule" => cfg.schedule = schedule_from_manifest(&x, cfg.steps)?,
+                "alpha" | "dirichlet-alpha" => cfg.dirichlet_alpha = x.as_f64()?,
+                // Seed: canonical string form (exact u64) or a number.
+                "seed" => {
+                    cfg.seed = match x.value() {
+                        Value::Str(s) => s
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("{}: {e}", x.path()))?,
+                        _ => x.as_u64()?,
+                    }
+                }
+                "artifacts" => cfg.artifacts = x.as_str()?.to_string(),
+                "slowmo-period" => cfg.slowmo_period = x.as_usize()?,
+                "slowmo-beta" => cfg.slowmo_beta = x.as_f64()?,
+                "positive-definite" | "pd" => cfg.positive_definite = x.as_bool()?,
+                "eval-every" => cfg.eval_every = x.as_usize()?,
+                "threads" => cfg.threads = x.as_usize()?,
+                "faults" => {
+                    cfg.faults =
+                        opt_spec(x.as_str()?, FaultSpec::parse).with_context(|| x.path().to_string())?
+                }
+                "codec" => {
+                    cfg.codec =
+                        opt_spec(x.as_str()?, CodecSpec::parse).with_context(|| x.path().to_string())?
+                }
+                "async" => {
+                    cfg.async_mode =
+                        opt_spec(x.as_str()?, AsyncSpec::parse).with_context(|| x.path().to_string())?
+                }
+                "churn" => {
+                    cfg.churn =
+                        opt_spec(x.as_str()?, ChurnSpec::parse).with_context(|| x.path().to_string())?
+                }
+                "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {
+                    bail!("{}: `{key}` is a CLI-only flag, not a config field", c.path());
+                }
+                other => bail!("{}: unknown config key `{other}`", c.path()),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load a JSON config file — the manifest path, fail-closed:
+    /// unknown top-level keys are rejected (they were silently ignored
+    /// before the scenario registry; see DESIGN.md §10).
     pub fn load(path: &Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let v = Value::parse(&text)?;
-        let mut cfg = Config::default();
-        for (k, val) in v.as_obj()? {
-            let s = match val {
-                Value::Str(s) => s.clone(),
-                Value::Num(x) => {
-                    if x.fract() == 0.0 {
-                        format!("{}", *x as i64)
-                    } else {
-                        format!("{x}")
-                    }
-                }
-                Value::Bool(b) => format!("{b}"),
-                _ => bail!("config key `{k}` must be scalar"),
-            };
-            cfg.apply_kv(k, &s)?;
-        }
-        Ok(cfg)
+        Config::from_manifest(&Cursor::root(&v, "config"))
     }
 
     /// Build from CLI (optionally `--config file.json` first).
@@ -285,6 +447,63 @@ impl Config {
         };
         cfg.apply_args(args)?;
         Ok(cfg)
+    }
+}
+
+/// Parse one spec field: empty/whitespace = subsystem off, otherwise
+/// the spec's kv grammar with default_seed 0 (run-seed inheritance is
+/// the spec's own `seed_from_run` flag).
+fn opt_spec<T>(v: &str, parse: fn(&str, u64) -> Result<T>) -> Result<Option<T>> {
+    if v.trim().is_empty() {
+        return Ok(None);
+    }
+    parse(v, 0).map(Some)
+}
+
+/// Both schedule forms: the CLI string (`constant` | `warmup-step` |
+/// `warmup-cosine`, parameters derived from `steps`) and the structured
+/// object `to_manifest` emits (parameters explicit, fail-closed).
+fn schedule_from_manifest(x: &Cursor, steps: usize) -> Result<LrSchedule> {
+    if let Ok(name) = x.value().as_str() {
+        return match name {
+            "constant" => Ok(LrSchedule::Constant),
+            "warmup-step" => Ok(LrSchedule::WarmupStep {
+                warmup_steps: steps / 20,
+                milestones: vec![steps / 3, 2 * steps / 3],
+            }),
+            "warmup-cosine" => {
+                Ok(LrSchedule::WarmupCosine { warmup_steps: steps / 6, total_steps: steps })
+            }
+            other => bail!("{}: unknown schedule `{other}`", x.path()),
+        };
+    }
+    let kind = x.get("kind")?;
+    match kind.as_str()? {
+        "constant" => {
+            x.deny_unknown(&["kind"])?;
+            Ok(LrSchedule::Constant)
+        }
+        "warmup-step" => {
+            x.deny_unknown(&["kind", "warmup-steps", "milestones"])?;
+            let milestones = x
+                .get("milestones")?
+                .items()?
+                .iter()
+                .map(|m| m.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(LrSchedule::WarmupStep {
+                warmup_steps: x.get("warmup-steps")?.as_usize()?,
+                milestones,
+            })
+        }
+        "warmup-cosine" => {
+            x.deny_unknown(&["kind", "warmup-steps", "total-steps"])?;
+            Ok(LrSchedule::WarmupCosine {
+                warmup_steps: x.get("warmup-steps")?.as_usize()?,
+                total_steps: x.get("total-steps")?.as_usize()?,
+            })
+        }
+        other => bail!("{}: unknown schedule `{other}`", kind.path()),
     }
 }
 
@@ -363,28 +582,40 @@ mod tests {
     fn faults_key_validated_eagerly() {
         let mut c = Config::default();
         c.apply_kv("faults", "drop=0.1,straggle=0.05,seed=7").unwrap();
-        assert_eq!(c.faults, "drop=0.1,straggle=0.05,seed=7");
+        let s = c.faults.unwrap();
+        assert_eq!(s.drop, 0.1);
+        assert_eq!(s.straggle, 0.05);
+        assert_eq!(s.seed, 7);
         assert!(c.apply_kv("faults", "drop=2.0").is_err());
         assert!(c.apply_kv("faults", "gremlins=0.1").is_err());
+        c.apply_kv("faults", "").unwrap();
+        assert!(c.faults.is_none(), "empty value clears the spec");
     }
 
     #[test]
     fn codec_key_validated_eagerly() {
         let mut c = Config::default();
         c.apply_kv("codec", "int8,ef=true,seed=3").unwrap();
-        assert_eq!(c.codec, "int8,ef=true,seed=3");
+        let s = c.codec.clone().unwrap();
+        assert!(s.ef);
+        assert_eq!(s.seed, 3);
         c.apply_kv("codec", "topk,k=0.05").unwrap();
         assert!(c.apply_kv("codec", "zfp").is_err());
         assert!(c.apply_kv("codec", "topk,k=2").is_err());
         assert!(c.apply_kv("codec", "int8,gremlins=1").is_err());
+        c.apply_kv("codec", "").unwrap();
+        assert!(c.codec.is_none(), "empty value clears the spec");
     }
 
     #[test]
     fn async_key_validated_eagerly() {
         let mut c = Config::default();
         c.apply_kv("async", "tau=2,spread=4,jitter=0.2,seed=7").unwrap();
-        assert_eq!(c.async_mode, "tau=2,spread=4,jitter=0.2,seed=7");
+        let s = c.async_mode.clone().unwrap();
+        assert_eq!(s.tau, 2);
+        assert_eq!(s.seed, 7);
         c.apply_kv("async", "true").unwrap(); // bare --async: defaults
+        assert_eq!(c.async_mode.clone().unwrap().tau, 1);
         assert!(c.apply_kv("async", "tau=99").is_err());
         assert!(c.apply_kv("async", "spread=0.1").is_err());
         assert!(c.apply_kv("async", "gremlins=1").is_err());
@@ -394,8 +625,12 @@ mod tests {
     fn churn_key_validated_eagerly() {
         let mut c = Config::default();
         c.apply_kv("churn", "join=0.02,leave=0.02,nmin=8,nmax=64,seed=7").unwrap();
-        assert_eq!(c.churn, "join=0.02,leave=0.02,nmin=8,nmax=64,seed=7");
+        let s = c.churn.unwrap();
+        assert_eq!(s.join, 0.02);
+        assert_eq!(s.nmax, 64);
+        assert_eq!(s.seed, 7);
         c.apply_kv("churn", "true").unwrap(); // bare --churn: defaults
+        assert!(c.churn.unwrap().is_zero());
         assert!(c.apply_kv("churn", "join=2").is_err());
         assert!(c.apply_kv("churn", "nmin=0").is_err());
         assert!(c.apply_kv("churn", "gremlins=1").is_err());
@@ -411,5 +646,74 @@ mod tests {
         assert_eq!(cfg.nodes, 16);
         assert_eq!(cfg.optimizer, "dmsgd");
         assert!((cfg.lr - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_rejects_unknown_and_cli_only_keys() {
+        let dir = std::env::temp_dir().join("decentlam_cfg_test_failclosed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"nodes": 8, "warp_drive": 1}"#).unwrap();
+        let e = format!("{:#}", Config::load(&p).unwrap_err());
+        assert!(
+            e.contains("config: unknown config key `warp_drive`"),
+            "error must name the key, got: {e}"
+        );
+        std::fs::write(&p, r#"{"out": "results.json"}"#).unwrap();
+        let e = format!("{:#}", Config::load(&p).unwrap_err());
+        assert!(
+            e.contains("config: `out` is a CLI-only flag, not a config field"),
+            "got: {e}"
+        );
+    }
+
+    #[test]
+    fn manifest_round_trips_defaults_and_composed_specs() {
+        let mut cfg = Config::default();
+        cfg.apply_kv("faults", "drop=0.1,seed=7").unwrap();
+        cfg.apply_kv("codec", "topk,k=0.1").unwrap();
+        cfg.apply_kv("schedule", "warmup-cosine").unwrap();
+        cfg.seed = u64::MAX - 3; // beyond f64's exact range: string path
+        for c in [Config::default(), cfg] {
+            let m = c.to_manifest();
+            let back = Config::from_manifest(&Cursor::root(&m, "config")).unwrap();
+            assert_eq!(back, c, "manifest round trip:\n{}", m.to_pretty_string());
+        }
+    }
+
+    #[test]
+    fn manifest_spec_errors_carry_the_path() {
+        let v = Value::parse(r#"{"faults": "drop=2"}"#).unwrap();
+        let e = format!(
+            "{:#}",
+            Config::from_manifest(&Cursor::root(&v, "scenario.config")).unwrap_err()
+        );
+        assert_eq!(e, "scenario.config.faults: fault rate `drop=2` outside [0, 1]");
+    }
+
+    #[test]
+    fn validate_pins_cross_field_invariants() {
+        let mut c = Config::default();
+        assert!(c.validate().is_ok());
+        c.apply_kv("churn", "join=0.1").unwrap();
+        c.apply_kv("topology", "one-peer-exp").unwrap();
+        let e = c.validate().unwrap_err().to_string();
+        assert_eq!(
+            e,
+            "--churn requires a static topology; `one-peer-exp` changes neighbors per step"
+        );
+        c.apply_kv("topology", "ring").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_kv("async", "tau=1").unwrap();
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.starts_with("--churn models synchronous rounds"), "got: {e}");
+        c.apply_kv("churn", "").unwrap();
+        c.apply_kv("optimizer", "slowmo").unwrap();
+        let e = c.validate().unwrap_err().to_string();
+        assert_eq!(
+            e,
+            "--async models pure gossip rounds; `slowmo`'s periodic all-reduce \
+             is a global barrier (run pmsgd for the barrier baseline)"
+        );
     }
 }

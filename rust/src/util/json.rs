@@ -68,6 +68,23 @@ impl Value {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
+    /// Strict unsigned integer: the number must be integral,
+    /// non-negative, and below 2^53 (exactly representable in f64).
+    pub fn as_u64(&self) -> Result<u64> {
+        let x = self.as_f64()?;
+        if x.fract() != 0.0 || x < 0.0 || x >= 9007199254740992.0 {
+            bail!("not an unsigned integer (got {x})");
+        }
+        Ok(x as u64)
+    }
+
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -110,6 +127,59 @@ impl Value {
         s
     }
 
+    /// Serialize with 2-space indentation — the format of the checked-in
+    /// scenario manifests, so `--pin` rewrites diff cleanly.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Value::Arr(v) if !v.is_empty() => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    x.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push(']');
+            }
+            Value::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),
@@ -145,6 +215,120 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+/// A [`Value`] paired with its path from the document root, so every
+/// error names the offending key (`scenario.config.faults: fault rate
+/// \`drop=2\` outside [0, 1]`) instead of just the type.
+///
+/// Fail-closed manifest parsing is built on three Cursor habits:
+/// navigate with [`Cursor::get`]/[`Cursor::opt`] (paths extend
+/// automatically), read leaves with the typed accessors (errors are
+/// prefixed with the path), and finish every object with
+/// [`Cursor::deny_unknown`] so a typo'd field is a hard error naming
+/// the field.
+#[derive(Clone)]
+pub struct Cursor<'a> {
+    value: &'a Value,
+    path: String,
+}
+
+impl<'a> Cursor<'a> {
+    /// Root cursor; `name` is the path prefix for all errors
+    /// (e.g. `"scenario"` or `"config"`).
+    pub fn root(value: &'a Value, name: &str) -> Cursor<'a> {
+        Cursor { value, path: name.to_string() }
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn value(&self) -> &'a Value {
+        self.value
+    }
+
+    fn err(&self, e: anyhow::Error) -> anyhow::Error {
+        anyhow!("{}: {e}", self.path)
+    }
+
+    /// Required key; missing or non-object errors carry the path.
+    pub fn get(&self, key: &str) -> Result<Cursor<'a>> {
+        match self.value {
+            Value::Obj(m) => m
+                .get(key)
+                .map(|v| Cursor { value: v, path: format!("{}.{key}", self.path) })
+                .ok_or_else(|| anyhow!("{}: missing key `{key}`", self.path)),
+            _ => bail!("{}: not an object (looking up `{key}`)", self.path),
+        }
+    }
+
+    /// Optional key (`None` when absent or when the node is not an object).
+    pub fn opt(&self, key: &str) -> Option<Cursor<'a>> {
+        match self.value {
+            Value::Obj(m) => m
+                .get(key)
+                .map(|v| Cursor { value: v, path: format!("{}.{key}", self.path) }),
+            _ => None,
+        }
+    }
+
+    /// Iterate an object's entries as `(key, child cursor)` pairs.
+    pub fn entries(&self) -> Result<Vec<(&'a str, Cursor<'a>)>> {
+        let m = self.value.as_obj().map_err(|e| self.err(e))?;
+        Ok(m.iter()
+            .map(|(k, v)| {
+                (k.as_str(), Cursor { value: v, path: format!("{}.{k}", self.path) })
+            })
+            .collect())
+    }
+
+    /// Iterate an array's elements as indexed cursors (`path[i]`).
+    pub fn items(&self) -> Result<Vec<Cursor<'a>>> {
+        let v = self.value.as_arr().map_err(|e| self.err(e))?;
+        Ok(v.iter()
+            .enumerate()
+            .map(|(i, x)| Cursor { value: x, path: format!("{}[{i}]", self.path) })
+            .collect())
+    }
+
+    /// Fail-closed: error on any key outside `allowed`, naming both the
+    /// stray field and the allowed set.
+    pub fn deny_unknown(&self, allowed: &[&str]) -> Result<()> {
+        let m = self.value.as_obj().map_err(|e| self.err(e))?;
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "{}: unknown field `{k}` (allowed: {})",
+                    self.path,
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---- typed leaf accessors (path-prefixed errors) ---------------------
+
+    pub fn as_f64(&self) -> Result<f64> {
+        self.value.as_f64().map_err(|e| self.err(e))
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        self.value.as_u64().map_err(|e| self.err(e))
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        self.value.as_bool().map_err(|e| self.err(e))
+    }
+
+    pub fn as_str(&self) -> Result<&'a str> {
+        self.value.as_str().map_err(|e| self.err(e))
     }
 }
 
@@ -382,5 +566,58 @@ mod tests {
     fn deterministic_object_order() {
         let v = Value::obj(vec![("zebra", Value::Num(1.0)), ("alpha", Value::Num(2.0))]);
         assert!(v.to_string().starts_with("{\"alpha\""));
+    }
+
+    #[test]
+    fn strict_u64_and_bool() {
+        assert_eq!(Value::Num(42.0).as_u64().unwrap(), 42);
+        assert!(Value::Num(1.5).as_u64().is_err());
+        assert!(Value::Num(-1.0).as_u64().is_err());
+        assert!(Value::Num(9.1e15).as_u64().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+        assert!(Value::Num(1.0).as_bool().is_err());
+    }
+
+    #[test]
+    fn cursor_paths_name_the_offending_key() {
+        let v = Value::parse(r#"{"config":{"faults":{"drop":"x"},"lr":0.1}}"#).unwrap();
+        let root = Cursor::root(&v, "scenario");
+        let drop = root.get("config").unwrap().get("faults").unwrap().get("drop").unwrap();
+        assert_eq!(drop.path(), "scenario.config.faults.drop");
+        let e = drop.as_f64().unwrap_err().to_string();
+        assert_eq!(e, "scenario.config.faults.drop: not a number");
+        let e = root.get("config").unwrap().get("nope").unwrap_err().to_string();
+        assert_eq!(e, "scenario.config: missing key `nope`");
+    }
+
+    #[test]
+    fn cursor_denies_unknown_fields_by_name() {
+        let v = Value::parse(r#"{"nodes":4,"typo_field":1}"#).unwrap();
+        let c = Cursor::root(&v, "config");
+        let e = c.deny_unknown(&["nodes", "lr"]).unwrap_err().to_string();
+        assert_eq!(e, "config: unknown field `typo_field` (allowed: nodes, lr)");
+        assert!(c.deny_unknown(&["nodes", "typo_field"]).is_ok());
+    }
+
+    #[test]
+    fn cursor_entries_and_items_extend_paths() {
+        let v = Value::parse(r#"{"a":[10,20]}"#).unwrap();
+        let c = Cursor::root(&v, "m");
+        let items = c.get("a").unwrap().items().unwrap();
+        assert_eq!(items[1].path(), "m.a[1]");
+        assert_eq!(items[1].as_u64().unwrap(), 20);
+        let entries = c.entries().unwrap();
+        assert_eq!(entries[0].0, "a");
+        assert_eq!(entries[0].1.path(), "m.a");
+    }
+
+    #[test]
+    fn pretty_print_round_trips_and_is_indented() {
+        let v = Value::parse(r#"{"a":[1,2],"b":{"c":true},"d":[],"e":{}}"#).unwrap();
+        let pretty = v.to_pretty_string();
+        assert!(pretty.contains("\n  \"a\": [\n    1,\n    2\n  ]"));
+        assert!(pretty.contains("\"d\": []"));
+        assert!(pretty.contains("\"e\": {}"));
+        assert_eq!(Value::parse(&pretty).unwrap(), v);
     }
 }

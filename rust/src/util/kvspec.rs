@@ -1,0 +1,162 @@
+//! The shared grammar of the comma-separated spec flags.
+//!
+//! `--faults drop=0.1,seed=7`, `--codec int8,ef=true`, `--async
+//! tau=2,spread=4` and `--churn join=0.02,nmax=64` all speak the same
+//! little language: comma-separated parts, each `key=value`, whitespace
+//! tolerated everywhere, empty parts skipped. Before this module each
+//! spec hand-rolled its own copy of that loop; the [`KvSpec`] trait
+//! keeps ONE grammar implementation (`KvSpec::parse`) and leaves each
+//! spec exactly three jobs: construct its defaults ([`KvSpec::begin`]),
+//! accept one key ([`KvSpec::set_kv`]), and validate cross-key
+//! invariants at the end ([`KvSpec::finish`]).
+//!
+//! Two grammar variations are expressed as associated consts so the
+//! flags keep their historical shapes bit for bit:
+//!
+//! * [`KvSpec::BARE_TRUE`] — `--async` / `--churn` with no value reach
+//!   the parser as the literal `"true"` (the CLI's bare-flag rule) and
+//!   mean "enabled, all defaults";
+//! * [`KvSpec::HAS_HEAD`] — `--codec` leads with a positional kind
+//!   token (`int8,ef=true`), which `begin` receives before any
+//!   `key=value` part.
+//!
+//! Every spec also serializes back through
+//! [`KvSpec::to_spec_string`]: a canonical spec string that reparses to
+//! an equal value (`parse(to_spec_string(s), 0) == s` — pinned by each
+//! spec's round-trip tests). That closure property is what lets
+//! `Config::to_manifest` / `Config::from_manifest` treat the spec
+//! string as the manifest representation of the typed spec.
+//!
+//! Seed inheritance: every spec has a seed that defaults to the run
+//! seed when the user omits `seed=`. The specs record that choice in a
+//! `seed_from_run` flag set by their `set_kv`; config-boundary parsing
+//! always passes `default_seed = 0`, and the trainer resolves the run
+//! seed later via each spec's `with_run_seed`. `to_spec_string` only
+//! emits `seed=` when it was explicit, so inherited seeds stay
+//! inherited across a manifest round trip.
+
+use anyhow::{bail, Result};
+
+/// A spec type parsed from the shared `key=val,key=val` grammar.
+pub trait KvSpec: Sized {
+    /// Spec family name used in grammar errors
+    /// (`"{NAME} spec entry `x` is not key=value"`).
+    const NAME: &'static str;
+
+    /// Accept the literal `"true"` (a bare CLI flag) as "all defaults".
+    const BARE_TRUE: bool = false;
+
+    /// The first comma part is a positional head token, not `key=value`.
+    const HAS_HEAD: bool = false;
+
+    /// Construct the spec before any `key=value` is applied. `head` is
+    /// the positional leading token when [`KvSpec::HAS_HEAD`] is set
+    /// (`None` = the spec string had no parts at all); specs without a
+    /// head always receive `None`.
+    fn begin(head: Option<&str>, default_seed: u64) -> Result<Self>;
+
+    /// Apply one `key=value` part. `key` arrives trimmed; `value` is
+    /// passed verbatim (trim it if the key wants that).
+    fn set_kv(&mut self, key: &str, value: &str) -> Result<()>;
+
+    /// Cross-key invariants, checked after the last part.
+    fn finish(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Canonical spec string: reparses (with `default_seed = 0`) to an
+    /// equal spec.
+    fn to_spec_string(&self) -> String;
+
+    /// THE grammar: split on commas, trim, skip empty parts, apply
+    /// `key=value` parts in order (after the optional head token).
+    fn parse(s: &str, default_seed: u64) -> Result<Self> {
+        if Self::BARE_TRUE && s.trim() == "true" {
+            return Self::begin(None, default_seed);
+        }
+        let mut parts = s.split(',').map(str::trim).filter(|p| !p.is_empty());
+        let mut spec = if Self::HAS_HEAD {
+            Self::begin(parts.next(), default_seed)?
+        } else {
+            Self::begin(None, default_seed)?
+        };
+        for part in parts {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("{} spec entry `{part}` is not key=value", Self::NAME);
+            };
+            spec.set_kv(k.trim(), v)?;
+        }
+        spec.finish()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy spec exercising the grammar plumbing in isolation.
+    #[derive(Debug, PartialEq)]
+    struct Toy {
+        head: Option<String>,
+        a: usize,
+        seed: u64,
+    }
+
+    impl KvSpec for Toy {
+        const NAME: &'static str = "toy";
+        const BARE_TRUE: bool = true;
+        const HAS_HEAD: bool = true;
+
+        fn begin(head: Option<&str>, default_seed: u64) -> Result<Self> {
+            Ok(Toy { head: head.map(str::to_string), a: 1, seed: default_seed })
+        }
+
+        fn set_kv(&mut self, key: &str, value: &str) -> Result<()> {
+            match key {
+                "a" => self.a = value.trim().parse()?,
+                "seed" => self.seed = value.trim().parse()?,
+                other => bail!("unknown toy key `{other}` (a|seed)"),
+            }
+            Ok(())
+        }
+
+        fn finish(&self) -> Result<()> {
+            if self.a == 0 {
+                bail!("toy a must be >= 1");
+            }
+            Ok(())
+        }
+
+        fn to_spec_string(&self) -> String {
+            format!("{},a={}", self.head.as_deref().unwrap_or(""), self.a)
+        }
+    }
+
+    #[test]
+    fn grammar_splits_trims_and_skips_empty_parts() {
+        let t = Toy::parse(" kind , a = 3 ,, seed=9 ", 1).unwrap();
+        assert_eq!(t.head.as_deref(), Some("kind"));
+        assert_eq!(t.a, 3);
+        assert_eq!(t.seed, 9);
+    }
+
+    #[test]
+    fn bare_true_is_all_defaults() {
+        let t = Toy::parse("true", 7).unwrap();
+        assert_eq!(t, Toy { head: None, a: 1, seed: 7 });
+    }
+
+    #[test]
+    fn errors_name_the_spec_family() {
+        let e = Toy::parse("kind,notkv", 0).unwrap_err().to_string();
+        assert_eq!(e, "toy spec entry `notkv` is not key=value");
+        assert!(Toy::parse("kind,b=1", 0).is_err());
+    }
+
+    #[test]
+    fn finish_validates_cross_key_invariants() {
+        assert!(Toy::parse("kind,a=0", 0).is_err());
+        assert!(Toy::parse("kind,a=2", 0).is_ok());
+    }
+}

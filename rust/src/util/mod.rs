@@ -5,6 +5,8 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod json;
+pub mod kvspec;
 pub mod math;
 pub mod rng;
+pub mod sha256;
 pub mod table;

@@ -61,7 +61,7 @@ fn async_uniform_tau0_bitwise_equals_sync_across_optimizers() {
             let run = |asynch: &str| {
                 let mut c = cfg(opt, 6, 20);
                 c.topology = topology.into();
-                c.async_mode = asynch.into();
+                c.apply_kv("async", asynch).unwrap();
                 Trainer::new(c, workload(6, 5)).unwrap().run().losses
             };
             assert_eq!(
@@ -79,7 +79,7 @@ fn async_uniform_regular_graph_is_fresh_even_with_positive_tau() {
     // slack nothing uses, so the run stays bitwise synchronous.
     let run = |asynch: &str| {
         let mut c = cfg("decentlam", 8, 20);
-        c.async_mode = asynch.into();
+        c.apply_kv("async", asynch).unwrap();
         Trainer::new(c, workload(8, 5)).unwrap().run().losses
     };
     assert_eq!(run(""), run("tau=2,spread=1,jitter=0"));
@@ -137,7 +137,7 @@ fn schedule_and_training_replay_across_thread_counts() {
     let run = |threads: usize| {
         let mut c = cfg("decentlam", 8, 30);
         c.threads = threads;
-        c.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+        c.apply_kv("async", "tau=2,spread=6,jitter=0.3,seed=9").unwrap();
         Trainer::new(c, workload(8, 5)).unwrap().run().losses
     };
     let serial = run(1);
@@ -203,7 +203,7 @@ fn staleness_is_bounded_by_tau_and_history() {
 fn async_run_descends_and_reports_staleness() {
     let mut c = cfg("decentlam", 8, 60);
     c.lr = 0.02;
-    c.async_mode = "tau=2,spread=6,jitter=0.2,seed=4".into();
+    c.apply_kv("async", "tau=2,spread=6,jitter=0.2,seed=4").unwrap();
     let mut t = Trainer::new(c, workload(8, 5)).unwrap();
     let report = t.run();
     assert!(report.losses.iter().all(|l| l.is_finite()));
@@ -227,9 +227,9 @@ fn async_composes_with_faults_and_codecs_deterministically() {
     let run = || {
         let mut c = cfg("decentlam", 8, 40);
         c.lr = 0.02;
-        c.async_mode = "tau=2,spread=4,jitter=0.2,seed=6".into();
-        c.faults = "drop=0.1,straggle=0.15,seed=8".into();
-        c.codec = "int8,ef=true,seed=2".into();
+        c.apply_kv("async", "tau=2,spread=4,jitter=0.2,seed=6").unwrap();
+        c.apply_kv("faults", "drop=0.1,straggle=0.15,seed=8").unwrap();
+        c.apply_kv("codec", "int8,ef=true,seed=2").unwrap();
         let mut t = Trainer::new(c, workload(8, 5)).unwrap();
         let losses = t.run().losses;
         let stats = *t.fault_stats().unwrap();
@@ -257,8 +257,8 @@ fn fault_stales_replay_even_at_tau_zero() {
     let run = |faults: &str| {
         let mut c = cfg("decentlam", 8, 30);
         c.lr = 0.02;
-        c.async_mode = "tau=0,spread=4,jitter=0.2,seed=6".into();
-        c.faults = faults.into();
+        c.apply_kv("async", "tau=0,spread=4,jitter=0.2,seed=6").unwrap();
+        c.apply_kv("faults", faults).unwrap();
         let mut t = Trainer::new(c, workload(8, 5)).unwrap();
         let losses = t.run().losses;
         let stats = *t.fault_stats().unwrap();
@@ -284,7 +284,7 @@ fn multi_payload_async_replays_per_slot_history() {
         let mut c = cfg("da-dmsgd", 8, 30);
         c.lr = 0.02;
         c.threads = threads;
-        c.async_mode = "tau=2,spread=6,jitter=0.3,seed=7".into();
+        c.apply_kv("async", "tau=2,spread=6,jitter=0.3,seed=7").unwrap();
         let mut t = Trainer::new(c, workload(8, 5)).unwrap();
         let losses = t.run().losses;
         let stats = *t.fault_stats().unwrap();
@@ -305,15 +305,15 @@ fn async_guard_rails_reject_unsupported_shapes() {
     // Time-varying topologies have no static event graph.
     let mut c = cfg("decentlam", 6, 5);
     c.topology = "one-peer-exp".into();
-    c.async_mode = "tau=1".into();
+    c.apply_kv("async", "tau=1").unwrap();
     assert!(Trainer::new(c, workload(6, 5)).is_err());
     // SlowMo's periodic all-reduce is a global barrier.
     let mut c = cfg("slowmo", 6, 5);
-    c.async_mode = "tau=1".into();
+    c.apply_kv("async", "tau=1").unwrap();
     assert!(Trainer::new(c, workload(6, 5)).is_err());
     // PmSGD runs as the barrier baseline: report only, no staleness.
     let mut c = cfg("pmsgd", 6, 8);
-    c.async_mode = "tau=2,spread=4,jitter=0.1".into();
+    c.apply_kv("async", "tau=2,spread=4,jitter=0.1").unwrap();
     let mut t = Trainer::new(c, workload(6, 5)).unwrap();
     let r = t.run();
     assert!(r.losses.iter().all(|l| l.is_finite()));

@@ -105,8 +105,8 @@ fn resume_equivalence_across_all_optimizers_codecs_and_faults() {
         for codec in ["", "int8,ef=true,seed=5"] {
             for faults in ["", "drop=0.1,seed=9"] {
                 let mut cfg = base_cfg(name, 4, 6);
-                cfg.codec = codec.into();
-                cfg.faults = faults.into();
+                cfg.apply_kv("codec", codec).unwrap();
+                cfg.apply_kv("faults", faults).unwrap();
                 let label = format!("{name} codec=[{codec}] faults=[{faults}]");
                 assert_resume_equivalent(&cfg, &d, 3, &label);
             }
@@ -122,8 +122,8 @@ fn resume_equivalence_with_stale_replay_cache() {
     let d = data(4, 64);
     for codec in ["", "int8,ef=true,seed=5"] {
         let mut cfg = base_cfg("decentlam", 4, 8);
-        cfg.codec = codec.into();
-        cfg.faults = "straggle=0.4,seed=6".into();
+        cfg.apply_kv("codec", codec).unwrap();
+        cfg.apply_kv("faults", "straggle=0.4,seed=6").unwrap();
         assert_resume_equivalent(&cfg, &d, 4, &format!("straggle codec=[{codec}]"));
     }
 }
@@ -136,7 +136,7 @@ fn resume_equivalence_under_async_ring_history() {
     let d = data(4, 64);
     for name in ["decentlam", "da-dmsgd"] {
         let mut cfg = base_cfg(name, 4, 8);
-        cfg.async_mode = "tau=2,spread=6,jitter=0.3,seed=9".into();
+        cfg.apply_kv("async", "tau=2,spread=6,jitter=0.3,seed=9").unwrap();
         assert_resume_equivalent(&cfg, &d, 4, &format!("{name} async"));
     }
 }
@@ -146,7 +146,7 @@ fn resume_equivalence_under_active_churn() {
     let d = data(6, 64);
     for name in ["decentlam", "dmsgd", "pmsgd"] {
         let mut cfg = base_cfg(name, 4, 10);
-        cfg.churn = "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8".into();
+        cfg.apply_kv("churn", "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8").unwrap();
         assert_resume_equivalent(&cfg, &d, 5, &format!("{name} churn"));
     }
 }
@@ -155,7 +155,7 @@ fn resume_equivalence_under_active_churn() {
 fn mh_invariants_hold_after_every_resize() {
     let d = data(8, 48);
     let mut cfg = base_cfg("decentlam", 5, 30);
-    cfg.churn = "join=0.3,leave=0.3,nmin=2,nmax=8,seed=4".into();
+    cfg.apply_kv("churn", "join=0.3,leave=0.3,nmin=2,nmax=8,seed=4").unwrap();
     let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
     let mut sizes = std::collections::BTreeSet::new();
     for k in 0..30 {
@@ -201,7 +201,7 @@ fn roster_evolution_is_deterministic() {
     let d = data(6, 48);
     let run = || {
         let mut cfg = base_cfg("dmsgd", 4, 20);
-        cfg.churn = "join=0.25,leave=0.25,nmin=2,nmax=6,seed=11".into();
+        cfg.apply_kv("churn", "join=0.25,leave=0.25,nmin=2,nmax=6,seed=11").unwrap();
         let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
         let mut trace = Vec::new();
         for k in 0..20 {
@@ -217,7 +217,7 @@ fn roster_evolution_is_deterministic() {
 fn join_only_churn_grows_the_fleet_with_finite_training() {
     let d = data(6, 48);
     let mut cfg = base_cfg("decentlam", 2, 30);
-    cfg.churn = "join=0.3,leave=0,nmin=2,nmax=6,seed=2".into();
+    cfg.apply_kv("churn", "join=0.3,leave=0,nmin=2,nmax=6,seed=2").unwrap();
     let mut t = Trainer::new(cfg, workload(&d, 16)).unwrap();
     let report = t.run();
     assert!(report.losses.iter().all(|l| l.is_finite()));
@@ -236,9 +236,9 @@ fn nightly_chained_checkpoints_compose_with_churn_faults_and_codec() {
     let d = data(12, 96);
     let mut cfg = base_cfg("decentlam", 8, 60);
     cfg.total_batch = 8 * 16;
-    cfg.churn = "join=0.1,leave=0.1,nmin=4,nmax=12,seed=13".into();
-    cfg.faults = "drop=0.1,straggle=0.2,seed=7".into();
-    cfg.codec = "int8,ef=true,seed=5".into();
+    cfg.apply_kv("churn", "join=0.1,leave=0.1,nmin=4,nmax=12,seed=13").unwrap();
+    cfg.apply_kv("faults", "drop=0.1,straggle=0.2,seed=7").unwrap();
+    cfg.apply_kv("codec", "int8,ef=true,seed=5").unwrap();
 
     let mut full = Trainer::new(cfg.clone(), workload(&d, 16)).unwrap();
     let mut ref_losses = Vec::new();

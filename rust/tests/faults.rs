@@ -32,6 +32,7 @@ fn random_spec(rng: &mut Pcg64) -> FaultSpec {
         straggle: rng.f64() * 0.6,
         stale: rng.f64() * 0.6,
         seed: rng.next_u64(),
+        ..Default::default()
     }
 }
 
@@ -276,7 +277,7 @@ fn scenario_cfg(s: &Scenario) -> Config {
     cfg.momentum = 0.9;
     cfg.schedule = LrSchedule::Constant;
     cfg.seed = 5;
-    cfg.faults = s.faults.into();
+    cfg.apply_kv("faults", s.faults).unwrap();
     cfg
 }
 

@@ -1,0 +1,145 @@
+//! Scenario registry integration tests (DESIGN.md §10): manifest
+//! round-trips across every optimizer, CLI/manifest parity (the
+//! zero-behavior-change pin for the config redesign), and the
+//! checked-in `scenarios/` corpus.
+
+use std::path::{Path, PathBuf};
+
+use decentlam::coordinator::Trainer;
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::mlp;
+use decentlam::optim;
+use decentlam::scenario::{run_corpus, RunOpts, Status, TierFilter};
+use decentlam::util::cli::Args;
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::json::Cursor;
+
+fn corpus_dir() -> PathBuf {
+    // tests run with CWD = rust/; the corpus lives at the repo root.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("scenarios")
+}
+
+fn roundtrip(cfg: &Config) -> Config {
+    let v = cfg.to_manifest();
+    Config::from_manifest(&Cursor::root(&v, "config"))
+        .unwrap_or_else(|e| panic!("reparsing own manifest failed: {e:#}\n{}", v.to_string()))
+}
+
+#[test]
+fn manifest_roundtrips_for_every_optimizer_and_spec_combo() {
+    for name in optim::ALL.iter().chain([&"dsgd"]) {
+        let mut cfg = Config::default();
+        cfg.optimizer = name.to_string();
+        cfg.steps = 20;
+        assert_eq!(roundtrip(&cfg), cfg, "{name}: plain config");
+        // All four subsystem specs at once. Round-tripping is purely a
+        // (de)serialization property — whether the combination RUNS is
+        // validate()'s job, exercised by the rejected-combo corpus.
+        cfg.apply_kv("faults", "drop=0.1,straggle=0.05,stale=0.5,seed=9").unwrap();
+        cfg.apply_kv("codec", "int8,ef=true,seed=11").unwrap();
+        cfg.apply_kv("async", "tau=2,spread=4,jitter=0.2").unwrap();
+        cfg.apply_kv("churn", "join=0.02,leave=0.02,nmin=2,nmax=16,seed=3").unwrap();
+        assert_eq!(roundtrip(&cfg), cfg, "{name}: all specs composed");
+        // Clearing a spec drops it from the manifest again.
+        cfg.apply_kv("codec", "").unwrap();
+        assert!(cfg.codec.is_none());
+        assert_eq!(roundtrip(&cfg), cfg, "{name}: cleared codec");
+    }
+}
+
+#[test]
+fn every_schedule_form_roundtrips_structurally() {
+    for schedule in [
+        LrSchedule::Constant,
+        LrSchedule::WarmupStep { warmup_steps: 5, milestones: vec![40, 80] },
+        LrSchedule::WarmupCosine { warmup_steps: 10, total_steps: 120 },
+    ] {
+        let mut cfg = Config::default();
+        cfg.schedule = schedule;
+        assert_eq!(roundtrip(&cfg), cfg);
+    }
+}
+
+#[test]
+fn seed_survives_beyond_f64_integer_range() {
+    let mut cfg = Config::default();
+    cfg.seed = u64::MAX - 1; // not representable exactly as f64
+    assert_eq!(roundtrip(&cfg).seed, cfg.seed);
+}
+
+/// The zero-CLI-behavior-change pin: a config built from flags and the
+/// same config round-tripped through its manifest drive bitwise
+/// identical runs (same `TrainReport.manifest`, same loss trajectory).
+#[test]
+fn flag_built_and_manifest_built_configs_run_identically() {
+    let argv = [
+        "--nodes", "4", "--topology", "ring", "--optimizer", "decentlam",
+        "--model", "mlp-xs", "--steps", "6", "--batch", "64", "--micro-batch", "16",
+        "--lr", "0.05", "--linear-scaling", "false", "--schedule", "constant",
+        "--threads", "1", "--seed", "7", "--faults", "drop=0.1,seed=3",
+        "--codec", "int8,ef=true",
+    ];
+    let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    let flag_cfg = Config::from_args(&args).unwrap();
+    let man_cfg = roundtrip(&flag_cfg);
+    assert_eq!(man_cfg, flag_cfg);
+
+    let run = |cfg: &Config| {
+        let data = ClassificationData::generate(&SynthSpec {
+            nodes: cfg.nodes,
+            samples_per_node: 64,
+            eval_samples: 64,
+            seed: cfg.seed,
+            ..Default::default()
+        });
+        let wl =
+            mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, cfg.micro_batch, cfg.seed);
+        let mut t = Trainer::new(cfg.clone(), wl).unwrap();
+        let r = t.run();
+        (r.manifest, r.losses)
+    };
+    let (manifest_a, losses_a) = run(&flag_cfg);
+    let (manifest_b, losses_b) = run(&man_cfg);
+    assert_eq!(manifest_a, manifest_b);
+    assert_eq!(losses_a, losses_b);
+}
+
+/// The PR gate: every smoke-tier scenario in the checked-in corpus
+/// passes (runnable ones descend + replay, rejected ones pin their
+/// exact boundary error).
+#[test]
+fn smoke_corpus_passes() {
+    let opts = RunOpts { tier: TierFilter::Smoke, ..Default::default() };
+    let summary = run_corpus(&corpus_dir(), &opts).unwrap();
+    assert!(!summary.outcomes.is_empty(), "smoke tier selected nothing");
+    for o in &summary.outcomes {
+        if let Status::Fail(why) = &o.status {
+            panic!("scenario `{}` failed: {why}\n{}", o.name, summary.table().render());
+        }
+    }
+    // The corpus must keep exercising both claim kinds.
+    assert!(summary.outcomes.iter().any(|o| o.status == Status::Pass));
+    assert!(summary.outcomes.iter().any(|o| o.status == Status::RejectedAsPinned));
+}
+
+/// Nightly tier — run with `cargo test -- --ignored`.
+#[test]
+#[ignore = "full tier is the nightly corpus gate (longer runs)"]
+fn full_corpus_passes() {
+    let summary = run_corpus(&corpus_dir(), &RunOpts::default()).unwrap();
+    assert_eq!(summary.failed(), 0, "\n{}", summary.table().render());
+}
+
+#[test]
+fn corpus_filter_and_tier_skip_counting() {
+    let opts = RunOpts {
+        tier: TierFilter::Smoke,
+        filter: Some("reject-".to_string()),
+        pin: false,
+    };
+    let summary = run_corpus(&corpus_dir(), &opts).unwrap();
+    assert!(summary.outcomes.iter().all(|o| o.name.starts_with("reject-")));
+    assert!(summary.skipped > 0, "filter should skip the runnable scenarios");
+    let json = summary.to_json().to_string();
+    assert!(json.contains("rejected-as-pinned"), "{json}");
+}
