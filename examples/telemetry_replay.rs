@@ -1,0 +1,138 @@
+//! Telemetry bus + offline replay demo (DESIGN.md §11): a faults×churn
+//! DecentLaM run streams its typed JSONL events to disk, then the
+//! stream alone — no trainer state — reconstructs the run's summary
+//! exactly, tolerates a crash-truncated tail, and proves byte-identical
+//! determinism across two invocations.
+//!
+//! ```bash
+//! cargo run --release --example telemetry_replay
+//! cargo run --release --example telemetry_replay -- --nodes 8 --steps 60
+//! cargo run --release --example telemetry_replay -- --out run.jsonl
+//! # then inspect offline:  cargo run --release -- replay run.jsonl
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use decentlam::coordinator::{TrainReport, Trainer};
+use decentlam::telemetry::{replay_path, replay_str};
+use decentlam::util::cli::Args;
+use decentlam::util::config::Config;
+
+fn build_cfg(nodes: usize, steps: usize, out: &Path) -> anyhow::Result<Config> {
+    let mut cfg = Config::default();
+    for (k, v) in [
+        ("nodes", nodes.to_string()),
+        ("topology", "ring".into()),
+        ("optimizer", "decentlam".into()),
+        ("model", "mlp-xs".into()),
+        ("steps", steps.to_string()),
+        ("total-batch", (8 * nodes).to_string()),
+        ("micro-batch", "8".into()),
+        ("lr", "0.05".into()),
+        ("linear-scaling", "false".into()),
+        ("schedule", "constant".into()),
+        ("eval-every", (steps / 4).max(1).to_string()),
+        ("threads", "1".into()),
+        ("seed", "7".into()),
+        // Both realization layers at once: seeded node drops AND an
+        // elastic roster — the stream carries fault and churn events.
+        ("faults", "drop=0.1,seed=3".into()),
+        (
+            "churn",
+            format!("join=0.05,leave=0.05,nmin={},nmax={},seed=5", nodes / 2, nodes + 4),
+        ),
+        ("telemetry", out.to_string_lossy().into_owned()),
+    ] {
+        cfg.apply_kv(k, &v)?;
+    }
+    Ok(cfg)
+}
+
+fn run_once(nodes: usize, steps: usize, out: &Path) -> anyhow::Result<TrainReport> {
+    let cfg = build_cfg(nodes, steps, out)?;
+    // Elastic runs shard data over the whole stable-id capacity (nmax).
+    let capacity = match cfg.churn {
+        None => cfg.nodes,
+        Some(spec) => spec.with_run_seed(cfg.seed).resolve(cfg.nodes)?.nmax,
+    };
+    let data = decentlam::experiments::synth_imagenet(capacity, cfg.seed);
+    let wl =
+        decentlam::experiments::mlp_workload_named("mlp-xs", data, cfg.micro_batch, cfg.seed)?;
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    anyhow::ensure!(t.telemetry_error().is_none(), "telemetry stream went inert");
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let nodes = args.get_usize("nodes", 8)?;
+    let steps = args.get_usize("steps", 40)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join("decentlam_telemetry_replay.jsonl"));
+
+    println!("== live run (ring{nodes}, decentlam, drop=0.1 + elastic churn, {steps} steps)");
+    let live = run_once(nodes, steps, &out)?;
+    println!(
+        "live:   final loss {:.6}, acc {:.4}, {:.0} realized wire B/iter",
+        live.losses.last().copied().unwrap_or(f64::NAN),
+        live.final_accuracy,
+        live.wire_bytes_per_iter
+    );
+
+    println!("\n== offline replay of {}", out.display());
+    let r = replay_path(&out)?;
+    println!(
+        "replay: {} events — {} step, {} eval, {} churn lines; \
+         final loss {:.6}, acc {:.4}, {:.0} wire B/iter",
+        r.events,
+        r.report.losses.len(),
+        r.report.evals.len(),
+        r.churn_events,
+        r.report.losses.last().copied().unwrap_or(f64::NAN),
+        r.report.final_accuracy,
+        r.report.wire_bytes_per_iter
+    );
+    if let Some(f) = &r.fault_totals {
+        println!(
+            "replay: fault totals — {} masked edges, {} dropped node-steps",
+            f.masked_edges, f.dropped_node_steps
+        );
+    }
+    r.matches_report(&live)?;
+    println!("replayed summary matches the live report bit for bit");
+
+    // Crash tolerance: chop the stream mid-final-line, as a dying
+    // writer would. The replay drops the torn tail and still yields a
+    // usable partial summary — while anything malformed EARLIER in the
+    // stream stays a hard error.
+    println!("\n== crash-truncated tail");
+    let text = std::fs::read_to_string(&out)?;
+    let cut = &text[..text.len() - 17];
+    let partial = replay_str(cut)?;
+    anyhow::ensure!(partial.truncated && !partial.complete, "expected a truncated stream");
+    println!(
+        "truncated replay: {} events salvaged, {} losses, incomplete as expected",
+        partial.events,
+        partial.report.losses.len()
+    );
+
+    // Determinism: a second identical run must produce the same bytes.
+    println!("\n== determinism");
+    let out2 = out.with_extension("second.jsonl");
+    let live2 = run_once(nodes, steps, &out2)?;
+    anyhow::ensure!(
+        std::fs::read(&out)? == std::fs::read(&out2)?,
+        "two identical runs produced different telemetry bytes"
+    );
+    anyhow::ensure!(
+        live.losses == live2.losses,
+        "two identical runs produced different losses"
+    );
+    std::fs::remove_file(&out2).ok();
+    println!("two identical runs → byte-identical telemetry streams");
+    println!("\nstream kept at {} (inspect with `decentlam replay`)", out.display());
+    Ok(())
+}

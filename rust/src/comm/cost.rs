@@ -127,9 +127,14 @@ impl PayloadBytes {
 /// model ([`CommCost::neighbor_exchange_s`] applies it at the
 /// bottleneck degree; the discrete-event clock sim in `sim::clock`
 /// charges each node its own degree). Single source of truth for the
-/// formula.
+/// formula. An isolated node (degree 0 — possible after heavy fault
+/// masking or churn down to a cut vertex) exchanges nothing and costs
+/// nothing: no latency, no transfer.
 pub fn neighbor_exchange_deg_s(link: &LinkSpec, degree: usize, bytes: f64) -> f64 {
-    let deg = degree.max(1) as f64;
+    if degree == 0 {
+        return 0.0;
+    }
+    let deg = degree as f64;
     link.latency_s() + (1.0 + NEIGHBOR_SERIAL * (deg - 1.0)) * link.transfer_s(bytes)
 }
 
@@ -308,6 +313,55 @@ mod tests {
             payload,
         );
         assert!((sm - (nb + ar / 8.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn isolated_node_exchange_costs_zero() {
+        // Degree 0 = nothing on the wire: no latency, no transfer. The
+        // old `degree.max(1)` clamp charged an isolated node a full
+        // latency + payload transfer.
+        for link in [LinkSpec::tcp_10gbps(), LinkSpec::tcp_25gbps()] {
+            assert_eq!(neighbor_exchange_deg_s(&link, 0, 1e8), 0.0);
+            // Degree >= 1 is untouched by the fix.
+            let one = neighbor_exchange_deg_s(&link, 1, 1e6);
+            assert!((one - (link.latency_s() + link.transfer_s(1e6))).abs() < 1e-15);
+        }
+        let c = CommCost::new(LinkSpec::tcp_25gbps());
+        let isolated = CommStats { n: 4, edges: 0, max_degree: 0 };
+        assert_eq!(c.neighbor_exchange_s(&isolated, 1e8), 0.0);
+        assert_eq!(
+            c.per_iter_comm_s(
+                CommPattern::Neighbor { payloads: 2 },
+                &isolated,
+                PayloadBytes::uniform(1e8)
+            ),
+            0.0
+        );
+    }
+
+    #[test]
+    fn drop_plan_isolating_every_node_realizes_zero_cost() {
+        // Regression for the degree.max(1) clamp: a drop-plan that
+        // isolates nodes must realize a degree-0 graph whose neighbor
+        // exchange costs 0 — both in CommCost and (via the same
+        // neighbor_exchange_deg_s) in the sim::clock event sim.
+        use crate::sim::{FaultPlan, FaultSpec, FaultyEngine};
+        let topo = Topology::build(Kind::Ring, 4);
+        let nominal = SparseWeights::metropolis_hastings(&topo);
+        let mut f = FaultyEngine::new(FaultPlan::new(FaultSpec::parse("drop=1", 7).unwrap()));
+        f.begin_step(0, &nominal);
+        let s = CommStats::of_engine(&f);
+        assert_eq!(s, CommStats { n: 4, edges: 0, max_degree: 0 });
+        let c = CommCost::new(LinkSpec::tcp_25gbps());
+        assert_eq!(c.neighbor_exchange_s(&s, 1e6), 0.0);
+        assert_eq!(
+            wire_bytes_per_iter(
+                CommPattern::Neighbor { payloads: 1 },
+                &s,
+                PayloadBytes::uniform(1e6)
+            ),
+            0.0
+        );
     }
 
     #[test]

@@ -68,7 +68,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::comm::codec::CodecState;
-use crate::comm::cost::{CommCost, PayloadBytes};
+use crate::comm::cost::{wire_bytes_per_iter, CommCost, CommStats, PayloadBytes};
 use crate::comm::CommEngine;
 use crate::data::synth::ShardCursor;
 use crate::elastic::snapshot::{FaultState, Snapshot, SnapshotMeta};
@@ -77,6 +77,7 @@ use crate::grad::{NodeGrad, Workload};
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
 use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
+use crate::telemetry::{Event, TelemetrySink};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::config::Config;
 use crate::util::json::Value;
@@ -107,6 +108,15 @@ pub struct TrainReport {
     pub grad_seconds: f64,
     pub update_seconds: f64,
     pub steps: usize,
+    /// REALIZED wire bytes summed over the executed steps: per-step
+    /// edge counts (after fault masks and membership resizes) × the
+    /// configured payload widths — not one nominal snapshot × steps.
+    pub wire_bytes_total: f64,
+    /// `wire_bytes_total / executed steps` (0 when no step ran). Equals
+    /// the nominal analytic value exactly on static fault-free runs:
+    /// every step realizes the same graph and (total·w)/total == w in
+    /// IEEE f64.
+    pub wire_bytes_per_iter: f64,
 }
 
 /// Multi-node trainer.
@@ -155,6 +165,15 @@ pub struct Trainer {
     /// time-varying guard from the first resize on (a resize makes the
     /// realized W time-varying exactly like a fault mask does).
     churned: bool,
+    /// Realized wire-byte accounting: per-step sums over the engine's
+    /// REALIZED edge counts (fault masks and resizes change the graph
+    /// step to step, so one nominal snapshot × steps misstates traffic).
+    wire_bytes_total: f64,
+    wire_steps: usize,
+    /// Telemetry stream (None = off; `--telemetry out.jsonl`). With it
+    /// unset the step loop is bitwise identical to the pre-telemetry
+    /// trainer (DESIGN.md §11).
+    telemetry: Option<TelemetrySink>,
 }
 
 /// Elastic-membership state: the seeded event schedule, the live
@@ -340,7 +359,7 @@ impl Trainer {
         } else {
             NodeExecutor::serial()
         };
-        Ok(Trainer {
+        let mut t = Trainer {
             cfg,
             workload,
             kind,
@@ -361,7 +380,31 @@ impl Trainer {
             next_step: 0,
             topo_step: 0,
             churned: false,
-        })
+            wire_bytes_total: 0.0,
+            wire_steps: 0,
+            telemetry: None,
+        };
+        // Telemetry stream (DESIGN.md §11): open the sink and write the
+        // run envelope up front, so even a crashed run leaves a stream
+        // whose manifest identifies it. Creation failures are loud —
+        // the user asked for a stream and no work is lost yet; runtime
+        // IO errors later never abort training (sink goes inert).
+        if let Some(path) = t.cfg.telemetry.clone() {
+            let sink = TelemetrySink::create(Path::new(&path))?;
+            sink.emit(&Event::RunStart { manifest: t.manifest_json() });
+            if let Some(ar) = &t.async_report {
+                sink.emit(&Event::Async {
+                    steps: ar.step_done_s.len(),
+                    makespan_s: ar.makespan_s,
+                    total_wait_s: ar.total_wait_s,
+                    mean_staleness: ar.mean_staleness,
+                    max_staleness: ar.max_staleness as usize,
+                    stale_fraction: ar.stale_fraction,
+                });
+            }
+            t.telemetry = Some(sink);
+        }
+        Ok(t)
     }
 
     /// The network-average model x̄.
@@ -401,7 +444,19 @@ impl Trainer {
         let ev = self.elastic.as_ref().map(|el| el.plan.step_churn(k, &el.roster));
         if let Some(ev) = ev {
             if !ev.is_empty() {
+                // `apply_churn` consumes the event; keep the id lists
+                // only when a stream wants them.
+                let emitted =
+                    self.telemetry.is_some().then(|| (ev.joins.clone(), ev.leaves.clone()));
                 self.apply_churn(k, ev);
+                if let (Some(sink), Some((joins, leaves))) = (&self.telemetry, emitted) {
+                    sink.emit(&Event::Churn {
+                        step: k,
+                        joins,
+                        leaves,
+                        nodes: self.states.len(),
+                    });
+                }
             }
         }
         let accum = self.cfg.accum_steps();
@@ -434,6 +489,13 @@ impl Trainer {
         // time-varying guards (DecentLaM's disagreement clip). An
         // all-fresh async schedule (uniform clocks / tau=0) engages
         // nothing, preserving bitwise equality with synchronous runs.
+        // Cumulative fault counters BEFORE this step realizes, so the
+        // stream can carry per-step deltas (only read when both a
+        // stream and an engine exist).
+        let fault_before = match (&self.telemetry, &self.faults) {
+            (Some(_), Some(f)) => Some(*f.stats()),
+            _ => None,
+        };
         let faults_active = match &mut self.faults {
             Some(f) => {
                 f.begin_step(k, &self.comm);
@@ -448,6 +510,12 @@ impl Trainer {
         if let Some(c) = &self.codec {
             c.lock().unwrap().begin_step(k);
         }
+        // This step's REALIZED wire traffic: the engine's post-mask
+        // edge counts (satellite fix — a nominal snapshot × steps
+        // overstates faulty/churned runs) at the configured payload
+        // widths.
+        let step_wire =
+            wire_bytes_per_iter(self.optimizer.comm_pattern(), &CommStats::of_engine(comm), self.payload_bytes());
         let ctx = RoundCtx {
             comm,
             exec: self.update_exec,
@@ -482,6 +550,39 @@ impl Trainer {
                     None => f.record_publish(&self.scratch.publish),
                 }
             }
+        }
+        self.wire_bytes_total += step_wire;
+        self.wire_steps += 1;
+        if let Some(sink) = &self.telemetry {
+            if let (Some(before), Some(f)) = (fault_before, &self.faults) {
+                let now = *f.stats();
+                let masked = now.masked_edges - before.masked_edges;
+                let stale = now.stale_messages - before.stale_messages;
+                let async_stale = now.async_stale_messages - before.async_stale_messages;
+                let dropped = now.dropped_node_steps - before.dropped_node_steps;
+                let straggled = now.straggler_node_steps - before.straggler_node_steps;
+                // Only steps where something was actually realized make
+                // a line; an all-quiet engine stays silent.
+                if masked + stale + async_stale + dropped + straggled > 0 {
+                    sink.emit(&Event::Fault {
+                        step: k,
+                        nominal_edges: now.nominal_edges - before.nominal_edges,
+                        realized_edges: now.realized_edges - before.realized_edges,
+                        masked_edges: masked,
+                        stale_messages: stale,
+                        async_stale_messages: async_stale,
+                        dropped_node_steps: dropped,
+                        straggler_node_steps: straggled,
+                    });
+                }
+            }
+            sink.emit(&Event::Step {
+                step: k,
+                loss,
+                lr: lr as f64,
+                consensus: self.consensus_distance(),
+                wire_bytes: step_wire,
+            });
         }
         self.next_step = k + 1;
         loss
@@ -774,7 +875,14 @@ impl Trainer {
 
     /// [`Trainer::checkpoint`] straight to a checksummed file.
     pub fn checkpoint_to(&self, path: &Path) -> Result<()> {
-        self.checkpoint().write_file(path)
+        self.checkpoint().write_file(path)?;
+        if let Some(sink) = &self.telemetry {
+            sink.emit(&Event::Checkpoint { step: self.next_step });
+            // A checkpoint marks a resumable cut; leave the stream
+            // durable up to the same cut.
+            sink.flush();
+        }
+        Ok(())
     }
 
     /// Restore a snapshot into this (freshly constructed) trainer.
@@ -944,6 +1052,27 @@ impl Trainer {
         self.async_report.as_ref()
     }
 
+    /// Cumulative REALIZED wire bytes over the steps this trainer has
+    /// executed (per-step post-mask edge counts × payload widths).
+    pub fn wire_bytes_total(&self) -> f64 {
+        self.wire_bytes_total
+    }
+
+    /// Mean realized wire bytes per executed step (0 before any step).
+    pub fn wire_bytes_per_iter(&self) -> f64 {
+        if self.wire_steps == 0 {
+            0.0
+        } else {
+            self.wire_bytes_total / self.wire_steps as f64
+        }
+    }
+
+    /// First telemetry IO error, if the stream went inert mid-run
+    /// (None = no stream, or a healthy one).
+    pub fn telemetry_error(&self) -> Option<String> {
+        self.telemetry.as_ref().and_then(|s| s.error())
+    }
+
     /// Run the full schedule (or, after [`Trainer::restore`], the
     /// remaining steps), reporting losses/evals.
     pub fn run(&mut self) -> TrainReport {
@@ -967,11 +1096,20 @@ impl Trainer {
                 let t1 = Instant::now();
                 let xbar = self.average_model();
                 let acc = self.workload.eval.accuracy(&xbar);
-                if acc.is_finite() {
-                    report.evals.push((k + 1, acc));
+                let accuracy = acc.is_finite().then_some(acc);
+                let eval_loss = self.workload.eval.loss(&xbar);
+                if let Some(a) = accuracy {
+                    report.evals.push((k + 1, a));
                 }
-                if let Some(el) = self.workload.eval.loss(&xbar) {
+                if let Some(el) = eval_loss {
                     report.eval_losses.push((k + 1, el));
+                }
+                // Stream exactly what the report records — an eval
+                // producing neither signal makes no line.
+                if accuracy.is_some() || eval_loss.is_some() {
+                    if let Some(sink) = &self.telemetry {
+                        sink.emit(&Event::Eval { step: k + 1, accuracy, eval_loss });
+                    }
                 }
                 upd_s += t1.elapsed().as_secs_f64();
             }
@@ -981,6 +1119,17 @@ impl Trainer {
         report.final_consensus = self.consensus_distance();
         report.grad_seconds = grad_s;
         report.update_seconds = upd_s;
+        report.wire_bytes_total = self.wire_bytes_total;
+        report.wire_bytes_per_iter = self.wire_bytes_per_iter();
+        if let Some(sink) = &self.telemetry {
+            sink.emit(&Event::RunEnd {
+                steps: report.steps,
+                final_accuracy: report.final_accuracy,
+                final_consensus: report.final_consensus,
+                wire_bytes_total: self.wire_bytes_total,
+            });
+            sink.flush();
+        }
         report
     }
 }

@@ -33,6 +33,7 @@ pub mod prop;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 

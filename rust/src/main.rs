@@ -252,12 +252,20 @@ fn dispatch(args: &Args) -> Result<()> {
             }
         }
         "train" => train(args)?,
+        "replay" => {
+            let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+                anyhow::anyhow!("usage: decentlam replay RUN.jsonl (a --telemetry stream)")
+            })?;
+            let r = decentlam::telemetry::replay_path(std::path::Path::new(path))?;
+            print_replay(&r);
+        }
         "run-scenarios" => {
             let dir = args.positional.get(1).map(|s| s.as_str()).unwrap_or("scenarios");
             let opts = decentlam::scenario::RunOpts {
                 tier: decentlam::scenario::TierFilter::parse(args.get_str("tier", "all"))?,
                 filter: args.get("filter").map(|s| s.to_string()),
                 pin: args.get_bool("pin"),
+                telemetry: args.get("telemetry").map(std::path::PathBuf::from),
             };
             let summary = decentlam::scenario::run_corpus(std::path::Path::new(dir), &opts)?;
             println!("{}", summary.table().render());
@@ -284,9 +292,12 @@ fn dispatch(args: &Args) -> Result<()> {
                  fig-compression   loss vs wire bytes per payload codec (--smoke = CI gate)\n  \
                  fig-async    time-to-target-loss vs clock heterogeneity (--smoke = CI gate)\n  \
                  fig-elastic  churn rate vs loss over an elastic roster (--smoke = CI gate)\n  \
-                 train        one training run (all Config flags apply)\n  \
+                 train        one training run (all Config flags apply; --telemetry RUN.jsonl\n               \
+                 streams typed step/eval/fault/churn events, DESIGN.md §11)\n  \
+                 replay FILE  reconstruct a run summary from a --telemetry stream offline\n  \
                  run-scenarios [DIR]   run the scenario corpus (--tier smoke|full|all,\n               \
-                 --filter SUBSTR, --json FILE, --pin)\n  \
+                 --filter SUBSTR, --json FILE, --pin, --telemetry DIR tees + verifies\n               \
+                 per-scenario streams)\n  \
                  topo         topology / spectral report\n  \
                  ablate-pd    positive-definite (lazy) W ablation\n  \
                  ablate-atc   ATC vs AWC partial-averaging ablation\n  \
@@ -410,7 +421,70 @@ fn train(args: &Args) -> Result<()> {
             t.active_ids()
         );
     }
+    if t.cfg.telemetry.is_some() {
+        match t.telemetry_error() {
+            Some(e) => eprintln!("warning: telemetry stream truncated — {e}"),
+            None => println!(
+                "telemetry: streamed to {} ({:.0} realized wire B/iter)",
+                t.cfg.telemetry.as_deref().unwrap_or(""),
+                t.wire_bytes_per_iter()
+            ),
+        }
+    }
     Ok(())
+}
+
+/// Deterministic text summary of a replayed telemetry stream (the
+/// `replay` subcommand): everything here derives from the stream bytes
+/// alone, so two replays of the same file print identically.
+fn print_replay(r: &decentlam::telemetry::Replay) {
+    let rep = &r.report;
+    println!(
+        "replay: {} events — {}{}",
+        r.events,
+        if r.complete { "complete run" } else { "INCOMPLETE (no run-end)" },
+        if r.truncated { ", truncated tail dropped" } else { "" }
+    );
+    println!("manifest: {}", rep.manifest);
+    if let Some(ev) = &r.async_event {
+        println!("async: {}", ev.to_line());
+    }
+    println!(
+        "steps: {} (final loss {})",
+        rep.steps,
+        rep.losses.last().map(|l| format!("{l:.6}")).unwrap_or_else(|| "-".into())
+    );
+    for (k, acc) in &rep.evals {
+        println!("step {k:>6}  val acc {acc:.4}");
+    }
+    if r.complete {
+        println!(
+            "final: acc={:.4} consensus={:.3e}",
+            rep.final_accuracy, rep.final_consensus
+        );
+    }
+    println!(
+        "wire: {:.0} B total, {:.0} B/iter (realized)",
+        rep.wire_bytes_total, rep.wire_bytes_per_iter
+    );
+    if let Some(f) = &r.fault_totals {
+        println!(
+            "faults: {} steps realized faults — {} masked edges, {} stale msgs \
+             ({} async), {} dropped / {} straggler node-steps",
+            f.steps,
+            f.masked_edges,
+            f.stale_messages,
+            f.async_stale_messages,
+            f.dropped_node_steps,
+            f.straggler_node_steps
+        );
+    }
+    if r.churn_events > 0 {
+        println!("churn: {} membership events", r.churn_events);
+    }
+    if !r.checkpoints.is_empty() {
+        println!("checkpoints at steps {:?}", r.checkpoints);
+    }
 }
 
 /// Topology / spectral-gap report.

@@ -27,7 +27,10 @@ mod manifest;
 mod runner;
 
 pub use manifest::{Expect, Pinned, RunExpect, Scenario, ScenarioConfig, ShaPin, Tier};
-pub use runner::{run_corpus, run_scenario, CorpusSummary, Outcome, RunOpts, Status, TierFilter};
+pub use runner::{
+    run_corpus, run_scenario, run_scenario_tee, CorpusSummary, Outcome, RunOpts, Status,
+    TierFilter,
+};
 
 /// Manifest format version. Bumped on any breaking change to the
 /// scenario schema; readers reject every other value ("DL" scenario,

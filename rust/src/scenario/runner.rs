@@ -12,7 +12,6 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::comm::{wire_bytes_per_iter, CommStats};
 use crate::coordinator::Trainer;
 use crate::data::synth::{ClassificationData, SynthSpec};
 use crate::grad::mlp;
@@ -58,11 +57,15 @@ pub struct RunOpts {
     /// Rewrite each executed manifest with its measured pins (fills
     /// `value` fields and hex digests; updates `reject` strings).
     pub pin: bool,
+    /// Tee each executed scenario's telemetry stream to
+    /// `<dir>/<name>.jsonl` and verify the offline replay reconstructs
+    /// the live report exactly (DESIGN.md §11).
+    pub telemetry: Option<PathBuf>,
 }
 
 impl Default for RunOpts {
     fn default() -> Self {
-        RunOpts { tier: TierFilter::All, filter: None, pin: false }
+        RunOpts { tier: TierFilter::All, filter: None, pin: false, telemetry: None }
     }
 }
 
@@ -98,7 +101,7 @@ struct Executed {
 
 /// Build the fixed scenario workload and train. Deterministic in the
 /// config alone: data, init, and every schedule derive from `cfg.seed`.
-fn execute(cfg: &Config) -> Result<Executed> {
+fn execute(cfg: &Config, telemetry: Option<&Path>) -> Result<Executed> {
     // Elastic runs shard over the full stable-id capacity (nmax).
     let capacity = match cfg.churn {
         None => cfg.nodes,
@@ -115,15 +118,31 @@ fn execute(cfg: &Config) -> Result<Executed> {
     });
     let arch = if cfg.model.starts_with("native") { "mlp-xs" } else { cfg.model.as_str() };
     let wl = mlp::workload(mlp::MlpArch::family(arch)?, data, cfg.micro_batch, cfg.seed);
-    let mut t = Trainer::new(cfg.clone(), wl)?;
+    // The tee path is CLI-only plumbing: it never enters the manifest,
+    // so the digest below is unchanged with telemetry on or off.
+    let mut cfg = cfg.clone();
+    if let Some(path) = telemetry {
+        cfg.telemetry = Some(path.to_string_lossy().into_owned());
+    }
+    let mut t = Trainer::new(cfg, wl)?;
     let report = t.run();
+    if let Some(path) = telemetry {
+        // Fail-closed tee: the stream must replay back to the live
+        // report exactly, every time — a scenario run with a broken
+        // stream is a failed scenario.
+        let replayed = crate::telemetry::replay_path(path)?;
+        replayed
+            .matches_report(&report)
+            .with_context(|| format!("telemetry replay of {}", path.display()))?;
+    }
     let xbar = t.average_model();
     let eval_loss = t.workload.eval.loss(&xbar);
-    let wire_bytes = wire_bytes_per_iter(
-        t.comm_pattern(),
-        &CommStats::of_engine(&t.comm),
-        t.payload_bytes(),
-    );
+    // REALIZED per-iter traffic from the run itself (satellite fix):
+    // fault masks and membership resizes change the per-step edge
+    // counts, so one end-of-run nominal snapshot × steps misstates
+    // them. Static fault-free runs realize the same graph every step
+    // and keep their exact analytic pins.
+    let wire_bytes = report.wire_bytes_per_iter;
     // Digest = run manifest + the full loss trajectory + final metrics,
     // all at the bit level: two digests agree iff the runs agree.
     let mut h = Sha256::new();
@@ -164,6 +183,13 @@ fn check_pin(key: &str, pin: &Pinned, actual: Option<f64>, fails: &mut Vec<Strin
 /// failure mode lands in [`Status::Fail`] so a corpus run always
 /// reports per-scenario verdicts.
 pub fn run_scenario(s: &Scenario) -> Outcome {
+    run_scenario_tee(s, None)
+}
+
+/// [`run_scenario`] with an optional telemetry tee: when set, the run
+/// streams to `telemetry` and the offline replay is verified against
+/// the live report (a broken stream fails the scenario).
+pub fn run_scenario_tee(s: &Scenario, telemetry: Option<&Path>) -> Outcome {
     let mut out = Outcome {
         name: s.name.clone(),
         tier: s.tier,
@@ -191,7 +217,7 @@ pub fn run_scenario(s: &Scenario) -> Outcome {
             ));
         }
         (ScenarioConfig::Valid(cfg), Expect::Run(exp)) => {
-            let first = match execute(cfg) {
+            let first = match execute(cfg, telemetry) {
                 Ok(r) => r,
                 Err(e) => {
                     out.status = Status::Fail(format!("run failed: {e:#}"));
@@ -218,7 +244,10 @@ pub fn run_scenario(s: &Scenario) -> Outcome {
                         ));
                     }
                 }
-                Some(ShaPin::Replay) => match execute(cfg) {
+                // The replay leg re-streams to the same tee path; the
+                // two runs are deterministic, so the file ends up
+                // byte-identical either way.
+                Some(ShaPin::Replay) => match execute(cfg, telemetry) {
                     Err(e) => fails.push(format!("replay failed: {e:#}")),
                     Ok(second) => {
                         if second.digest != first.digest {
@@ -364,7 +393,15 @@ pub fn run_corpus(dir: &Path, opts: &RunOpts) -> Result<CorpusSummary> {
             skipped += 1;
             continue;
         }
-        let outcome = run_scenario(&s);
+        let tee = match &opts.telemetry {
+            None => None,
+            Some(dir) => {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating telemetry dir {}", dir.display()))?;
+                Some(dir.join(format!("{}.jsonl", s.name)))
+            }
+        };
+        let outcome = run_scenario_tee(&s, tee.as_deref());
         if opts.pin {
             let pinned = repin(&v, &s, &outcome)?;
             std::fs::write(path, pinned.to_pretty_string())
@@ -518,6 +555,24 @@ mod tests {
         assert_eq!(run_scenario(&scenario(TINY, &pin)).status, Status::Pass);
         let off = format!(r#"{{"eval-loss": {{"value": {}, "tol": 1e-9}}}}"#, measured + 1.0);
         assert!(matches!(run_scenario(&scenario(TINY, &off)).status, Status::Fail(_)));
+    }
+
+    #[test]
+    fn telemetry_tee_streams_replays_and_matches_the_live_run() {
+        let dir = std::env::temp_dir()
+            .join(format!("decentlam_runner_tee_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let s = scenario(TINY, r#"{}"#);
+        let out = run_scenario_tee(&s, Some(&path));
+        assert_eq!(out.status, Status::Pass, "{:?}", out.status);
+        let r = crate::telemetry::replay_path(&path).unwrap();
+        assert!(r.complete && !r.truncated);
+        assert_eq!(r.report.losses.len(), 8);
+        assert_eq!(Some(r.report.wire_bytes_per_iter), out.wire_bytes_per_iter);
+        // The tee never perturbs the run: same digest with and without.
+        assert_eq!(run_scenario(&s).run_sha256, out.run_sha256);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

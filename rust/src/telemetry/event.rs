@@ -1,0 +1,422 @@
+//! The typed telemetry event schema (DESIGN.md §11).
+//!
+//! One event = one compact JSON object = one stream line. Keys are
+//! emitted in sorted order (the [`Value::obj`] BTreeMap), numbers print
+//! through the shortest-round-trip `f64` form, and non-finite values
+//! map to JSON `null` (read back as NaN) — so serialization is
+//! deterministic and [`Event::parse_line`] ∘ [`Event::to_line`] is the
+//! identity on every emitted line, byte for byte.
+//!
+//! Parsing is fail-closed like every other manifest reader in this
+//! repo: unknown event names, unknown fields and type mismatches are
+//! hard errors naming the path. Version pinning lives on the
+//! `run-start` envelope: readers reject any stream whose version is not
+//! [`STREAM_VERSION`].
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{Cursor, Value};
+
+use super::STREAM_VERSION;
+
+/// One telemetry event. Field units and emission rules:
+///
+/// * ordering within a step: `churn` (roster change at the top of the
+///   step) → `fault` (this step's realizations, omitted when nothing
+///   was realized) → `step`;
+/// * `eval` mirrors the trainer's report rule exactly: `accuracy` only
+///   when finite, `eval-loss` only when the evaluator provides one, no
+///   event when neither exists;
+/// * `async` is emitted once, right after `run-start`, when the run
+///   executes against the discrete-event clock sim;
+/// * `run-end` closes the stream — its totals must equal the sum of the
+///   per-step values (the replay parser verifies this bit for bit).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Stream envelope: the run manifest as its compact-JSON string
+    /// (byte-identical to `TrainReport.manifest`).
+    RunStart { manifest: String },
+    /// Timing + staleness summary of an `--async` run.
+    Async {
+        steps: usize,
+        makespan_s: f64,
+        total_wait_s: f64,
+        mean_staleness: f64,
+        max_staleness: usize,
+        stale_fraction: f64,
+    },
+    /// One training step: mean loss, learning rate, consensus distance
+    /// (1/n)Σ‖x_i − x̄‖², and this step's REALIZED wire bytes.
+    Step { step: usize, loss: f64, lr: f64, consensus: f64, wire_bytes: f64 },
+    /// Periodic evaluation of the network-average model.
+    Eval { step: usize, accuracy: Option<f64>, eval_loss: Option<f64> },
+    /// This step's fault realizations (per-step deltas of the engine's
+    /// cumulative [`crate::sim::FaultStats`]); only emitted when some
+    /// count is nonzero.
+    Fault {
+        step: usize,
+        nominal_edges: usize,
+        realized_edges: usize,
+        masked_edges: usize,
+        stale_messages: usize,
+        async_stale_messages: usize,
+        dropped_node_steps: usize,
+        straggler_node_steps: usize,
+    },
+    /// A membership change: stable ids joining/leaving this step and
+    /// the resulting active node count.
+    Churn { step: usize, joins: Vec<u32>, leaves: Vec<u32>, nodes: usize },
+    /// A checkpoint written at this step cursor.
+    Checkpoint { step: usize },
+    /// Stream close: the run's final metrics and wire-byte total.
+    RunEnd { steps: usize, final_accuracy: f64, final_consensus: f64, wire_bytes_total: f64 },
+}
+
+/// Finite numbers serialize as numbers; NaN/±∞ (which the hand-rolled
+/// JSON writer cannot represent) map to `null` and read back as NaN.
+fn num(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+fn count(x: usize) -> Value {
+    Value::Num(x as f64)
+}
+
+fn f64_or_null(c: &Cursor) -> Result<f64> {
+    match c.value() {
+        Value::Null => Ok(f64::NAN),
+        _ => c.as_f64(),
+    }
+}
+
+fn ids(c: &Cursor) -> Result<Vec<u32>> {
+    c.items()?
+        .iter()
+        .map(|x| {
+            let v = x.as_u64()?;
+            u32::try_from(v)
+                .map_err(|_| anyhow::anyhow!("{}: node id {v} exceeds u32", x.path()))
+        })
+        .collect()
+}
+
+fn id_arr(ids: &[u32]) -> Value {
+    Value::Arr(ids.iter().map(|&i| Value::Num(i as f64)).collect())
+}
+
+impl Event {
+    /// The event's wire name (the `event` discriminator field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run-start",
+            Event::Async { .. } => "async",
+            Event::Step { .. } => "step",
+            Event::Eval { .. } => "eval",
+            Event::Fault { .. } => "fault",
+            Event::Churn { .. } => "churn",
+            Event::Checkpoint { .. } => "checkpoint",
+            Event::RunEnd { .. } => "run-end",
+        }
+    }
+
+    /// Serialize to the canonical JSON object (sorted keys).
+    pub fn to_value(&self) -> Value {
+        let mut pairs = vec![("event", Value::Str(self.name().to_string()))];
+        match self {
+            Event::RunStart { manifest } => {
+                pairs.push(("version", Value::Str(STREAM_VERSION.to_string())));
+                pairs.push(("manifest", Value::Str(manifest.clone())));
+            }
+            Event::Async {
+                steps,
+                makespan_s,
+                total_wait_s,
+                mean_staleness,
+                max_staleness,
+                stale_fraction,
+            } => {
+                pairs.push(("steps", count(*steps)));
+                pairs.push(("makespan-s", num(*makespan_s)));
+                pairs.push(("total-wait-s", num(*total_wait_s)));
+                pairs.push(("mean-staleness", num(*mean_staleness)));
+                pairs.push(("max-staleness", count(*max_staleness)));
+                pairs.push(("stale-fraction", num(*stale_fraction)));
+            }
+            Event::Step { step, loss, lr, consensus, wire_bytes } => {
+                pairs.push(("step", count(*step)));
+                pairs.push(("loss", num(*loss)));
+                pairs.push(("lr", num(*lr)));
+                pairs.push(("consensus", num(*consensus)));
+                pairs.push(("wire-bytes", num(*wire_bytes)));
+            }
+            Event::Eval { step, accuracy, eval_loss } => {
+                pairs.push(("step", count(*step)));
+                if let Some(a) = accuracy {
+                    pairs.push(("accuracy", num(*a)));
+                }
+                if let Some(l) = eval_loss {
+                    pairs.push(("eval-loss", num(*l)));
+                }
+            }
+            Event::Fault {
+                step,
+                nominal_edges,
+                realized_edges,
+                masked_edges,
+                stale_messages,
+                async_stale_messages,
+                dropped_node_steps,
+                straggler_node_steps,
+            } => {
+                pairs.push(("step", count(*step)));
+                pairs.push(("nominal-edges", count(*nominal_edges)));
+                pairs.push(("realized-edges", count(*realized_edges)));
+                pairs.push(("masked-edges", count(*masked_edges)));
+                pairs.push(("stale-messages", count(*stale_messages)));
+                pairs.push(("async-stale-messages", count(*async_stale_messages)));
+                pairs.push(("dropped-node-steps", count(*dropped_node_steps)));
+                pairs.push(("straggler-node-steps", count(*straggler_node_steps)));
+            }
+            Event::Churn { step, joins, leaves, nodes } => {
+                pairs.push(("step", count(*step)));
+                pairs.push(("joins", id_arr(joins)));
+                pairs.push(("leaves", id_arr(leaves)));
+                pairs.push(("nodes", count(*nodes)));
+            }
+            Event::Checkpoint { step } => {
+                pairs.push(("step", count(*step)));
+            }
+            Event::RunEnd { steps, final_accuracy, final_consensus, wire_bytes_total } => {
+                pairs.push(("steps", count(*steps)));
+                pairs.push(("final-accuracy", num(*final_accuracy)));
+                pairs.push(("final-consensus", num(*final_consensus)));
+                pairs.push(("wire-bytes-total", num(*wire_bytes_total)));
+            }
+        }
+        Value::obj(pairs)
+    }
+
+    /// One canonical stream line (compact JSON, no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_value().to_string()
+    }
+
+    /// Parse one event object, fail-closed (unknown events/fields and
+    /// type mismatches are hard errors naming the path).
+    pub fn parse(c: &Cursor) -> Result<Event> {
+        let kind = c.get("event")?.as_str()?;
+        match kind {
+            "run-start" => {
+                c.deny_unknown(&["event", "version", "manifest"])?;
+                let version = c.get("version")?.as_str()?;
+                if version != STREAM_VERSION {
+                    bail!(
+                        "{}: unsupported stream version `{version}` \
+                         (this build reads {STREAM_VERSION})",
+                        c.path()
+                    );
+                }
+                Ok(Event::RunStart { manifest: c.get("manifest")?.as_str()?.to_string() })
+            }
+            "async" => {
+                c.deny_unknown(&[
+                    "event",
+                    "steps",
+                    "makespan-s",
+                    "total-wait-s",
+                    "mean-staleness",
+                    "max-staleness",
+                    "stale-fraction",
+                ])?;
+                Ok(Event::Async {
+                    steps: c.get("steps")?.as_usize()?,
+                    makespan_s: f64_or_null(&c.get("makespan-s")?)?,
+                    total_wait_s: f64_or_null(&c.get("total-wait-s")?)?,
+                    mean_staleness: f64_or_null(&c.get("mean-staleness")?)?,
+                    max_staleness: c.get("max-staleness")?.as_usize()?,
+                    stale_fraction: f64_or_null(&c.get("stale-fraction")?)?,
+                })
+            }
+            "step" => {
+                c.deny_unknown(&["event", "step", "loss", "lr", "consensus", "wire-bytes"])?;
+                Ok(Event::Step {
+                    step: c.get("step")?.as_usize()?,
+                    loss: f64_or_null(&c.get("loss")?)?,
+                    lr: f64_or_null(&c.get("lr")?)?,
+                    consensus: f64_or_null(&c.get("consensus")?)?,
+                    wire_bytes: f64_or_null(&c.get("wire-bytes")?)?,
+                })
+            }
+            "eval" => {
+                c.deny_unknown(&["event", "step", "accuracy", "eval-loss"])?;
+                let accuracy = c.opt("accuracy").map(|x| f64_or_null(&x)).transpose()?;
+                let eval_loss = c.opt("eval-loss").map(|x| f64_or_null(&x)).transpose()?;
+                if accuracy.is_none() && eval_loss.is_none() {
+                    bail!("{}: eval event carries neither accuracy nor eval-loss", c.path());
+                }
+                Ok(Event::Eval { step: c.get("step")?.as_usize()?, accuracy, eval_loss })
+            }
+            "fault" => {
+                c.deny_unknown(&[
+                    "event",
+                    "step",
+                    "nominal-edges",
+                    "realized-edges",
+                    "masked-edges",
+                    "stale-messages",
+                    "async-stale-messages",
+                    "dropped-node-steps",
+                    "straggler-node-steps",
+                ])?;
+                Ok(Event::Fault {
+                    step: c.get("step")?.as_usize()?,
+                    nominal_edges: c.get("nominal-edges")?.as_usize()?,
+                    realized_edges: c.get("realized-edges")?.as_usize()?,
+                    masked_edges: c.get("masked-edges")?.as_usize()?,
+                    stale_messages: c.get("stale-messages")?.as_usize()?,
+                    async_stale_messages: c.get("async-stale-messages")?.as_usize()?,
+                    dropped_node_steps: c.get("dropped-node-steps")?.as_usize()?,
+                    straggler_node_steps: c.get("straggler-node-steps")?.as_usize()?,
+                })
+            }
+            "churn" => {
+                c.deny_unknown(&["event", "step", "joins", "leaves", "nodes"])?;
+                Ok(Event::Churn {
+                    step: c.get("step")?.as_usize()?,
+                    joins: ids(&c.get("joins")?)?,
+                    leaves: ids(&c.get("leaves")?)?,
+                    nodes: c.get("nodes")?.as_usize()?,
+                })
+            }
+            "checkpoint" => {
+                c.deny_unknown(&["event", "step"])?;
+                Ok(Event::Checkpoint { step: c.get("step")?.as_usize()? })
+            }
+            "run-end" => {
+                c.deny_unknown(&[
+                    "event",
+                    "steps",
+                    "final-accuracy",
+                    "final-consensus",
+                    "wire-bytes-total",
+                ])?;
+                Ok(Event::RunEnd {
+                    steps: c.get("steps")?.as_usize()?,
+                    final_accuracy: f64_or_null(&c.get("final-accuracy")?)?,
+                    final_consensus: f64_or_null(&c.get("final-consensus")?)?,
+                    wire_bytes_total: f64_or_null(&c.get("wire-bytes-total")?)?,
+                })
+            }
+            other => bail!("{}: unknown event `{other}`", c.path()),
+        }
+    }
+
+    /// Parse one stream line.
+    pub fn parse_line(line: &str) -> Result<Event> {
+        let v = Value::parse(line)?;
+        Event::parse(&Cursor::root(&v, "event"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Event> {
+        vec![
+            Event::RunStart { manifest: r#"{"config":{"nodes":4}}"#.to_string() },
+            Event::Async {
+                steps: 12,
+                makespan_s: 3.25,
+                total_wait_s: 0.5,
+                mean_staleness: 0.75,
+                max_staleness: 2,
+                stale_fraction: 0.4,
+            },
+            Event::Step { step: 0, loss: 2.3021, lr: 0.05, consensus: 1e-9, wire_bytes: 153920.0 },
+            Event::Eval { step: 4, accuracy: Some(0.5), eval_loss: Some(1.71) },
+            Event::Eval { step: 8, accuracy: None, eval_loss: Some(1.62) },
+            Event::Fault {
+                step: 3,
+                nominal_edges: 4,
+                realized_edges: 2,
+                masked_edges: 2,
+                stale_messages: 1,
+                async_stale_messages: 0,
+                dropped_node_steps: 1,
+                straggler_node_steps: 0,
+            },
+            Event::Churn { step: 5, joins: vec![9], leaves: vec![2, 3], nodes: 7 },
+            Event::Checkpoint { step: 6 },
+            Event::RunEnd {
+                steps: 12,
+                final_accuracy: 0.875,
+                final_consensus: 4.2e-7,
+                wire_bytes_total: 1847040.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_round_trips_through_its_line() {
+        for ev in samples() {
+            let line = ev.to_line();
+            let back = Event::parse_line(&line).unwrap_or_else(|e| panic!("{line}: {e:#}"));
+            assert_eq!(back, ev, "{line}");
+            // Canonical serialization: re-emitting is byte-identical.
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn non_finite_values_round_trip_as_null() {
+        let ev = Event::Step {
+            step: 1,
+            loss: f64::NAN,
+            lr: 0.1,
+            consensus: f64::INFINITY,
+            wire_bytes: 8.0,
+        };
+        let line = ev.to_line();
+        assert!(line.contains(r#""loss":null"#), "{line}");
+        assert!(line.contains(r#""consensus":null"#), "{line}");
+        let Event::Step { loss, consensus, .. } = Event::parse_line(&line).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert!(loss.is_nan() && consensus.is_nan());
+    }
+
+    #[test]
+    fn schema_violations_are_hard_errors_naming_the_path() {
+        let e = format!("{:#}", Event::parse_line(r#"{"event":"warp"}"#).unwrap_err());
+        assert_eq!(e, "event: unknown event `warp`");
+        let e = format!(
+            "{:#}",
+            Event::parse_line(r#"{"event":"checkpoint","step":1,"extra":2}"#).unwrap_err()
+        );
+        assert_eq!(e, "event: unknown field `extra` (allowed: event, step)");
+        let e = format!(
+            "{:#}",
+            Event::parse_line(r#"{"event":"checkpoint","step":"one"}"#).unwrap_err()
+        );
+        assert_eq!(e, "event.step: not a number");
+        let e = format!("{:#}", Event::parse_line(r#"{"event":"eval","step":4}"#).unwrap_err());
+        assert_eq!(e, "event: eval event carries neither accuracy nor eval-loss");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let line = Event::RunStart { manifest: "{}".into() }
+            .to_line()
+            .replace("DLTEL01", "DLTEL99");
+        let e = format!("{:#}", Event::parse_line(&line).unwrap_err());
+        assert_eq!(
+            e,
+            "event: unsupported stream version `DLTEL99` (this build reads DLTEL01)"
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Streaming telemetry bus + offline replay (DESIGN.md §11).
+//!
+//! Long large-batch runs are exactly where momentum-incurred
+//! inconsistency bias accumulates (the paper's core finding), yet a
+//! [`crate::coordinator::TrainReport`] is only visible at the end of a
+//! run. This module streams every signal the trainer produces — per-step
+//! losses, learning rate, consensus distance, realized wire bytes,
+//! fault/churn/staleness realizations, eval points, checkpoints — as a
+//! typed, versioned (`"DLTEL01"`) JSONL event stream:
+//!
+//! * [`event::Event`] — the typed schema: `run-start` / `run-end`
+//!   envelopes carrying the run manifest, `step`, `eval`, `fault`,
+//!   `churn`, `async` and `checkpoint` events, one compact JSON object
+//!   per line with deterministically sorted keys (two identical runs
+//!   produce byte-identical streams);
+//! * [`sink::TelemetrySink`] — a buffered file writer behind a mutex,
+//!   off the step loop's hot path; IO errors never abort training (the
+//!   first one is recorded and the stream simply truncates, which is
+//!   exactly what the replay side tolerates);
+//! * [`replay::Replay`] — the tolerant line-oriented offline parser: a
+//!   truncated final line (a crashed or still-running writer) is
+//!   skipped, while schema violations mid-stream are hard errors naming
+//!   the line. Replaying a complete stream reconstructs the run's
+//!   summary — losses, evals, final metrics, wire bytes — exactly
+//!   ([`replay::Replay::matches_report`] pins bit-level equality
+//!   against the live report).
+//!
+//! The trainer emits only when `Config::telemetry` is set
+//! (`--telemetry out.jsonl`); with it unset the trainer is bitwise
+//! identical to the pre-telemetry code path. The sink path is
+//! observability plumbing, not run identity: it never enters the run
+//! manifest, sha digests or snapshots.
+
+pub mod event;
+pub mod replay;
+pub mod sink;
+
+/// Stream schema version, carried by every `run-start` event. Readers
+/// reject every other version — a schema change is a stream-format
+/// migration, not a quiet reinterpretation (same rule as the scenario
+/// registry's `DLSCEN01`).
+pub const STREAM_VERSION: &str = "DLTEL01";
+
+pub use event::Event;
+pub use replay::{replay_path, replay_str, Replay};
+pub use sink::TelemetrySink;

@@ -1,0 +1,394 @@
+//! Offline replay: reconstruct a run summary from its JSONL stream
+//! (DESIGN.md §11).
+//!
+//! The parser is line-oriented and deliberately asymmetric about
+//! failure:
+//!
+//! * **Tolerant at the tail.** The final line of a stream from a
+//!   crashed (or still-running) writer is routinely truncated mid-JSON
+//!   by the buffered sink. The last line is therefore dropped unless
+//!   terminated by `\n`; a stream that never reached `run-end` yields a
+//!   partial summary with [`Replay::complete`]` == false`.
+//! * **Fail-closed everywhere else.** A malformed or out-of-schema line
+//!   *before* the tail means the file is not a telemetry stream this
+//!   build understands — that is a hard error naming the line number,
+//!   never a skip (silently dropping mid-stream events would corrupt
+//!   the reconstruction while looking successful).
+//!
+//! Internal consistency is checked, not assumed: step events must be
+//! contiguous, `run-start` must come first and `run-end` last, and the
+//! `run-end` wire-byte total must equal the sum of the per-step values
+//! bit for bit. [`Replay::matches_report`] then pins the reconstruction
+//! against a live [`TrainReport`] at bit-level equality.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TrainReport;
+use crate::sim::FaultStats;
+
+use super::Event;
+
+/// A run summary reconstructed purely from a telemetry stream.
+#[derive(Debug, Clone, Default)]
+pub struct Replay {
+    /// The reconstructed summary. `grad_seconds` / `update_seconds`
+    /// stay zero: wall-clock timings are non-deterministic and are
+    /// deliberately not streamed.
+    pub report: TrainReport,
+    /// True iff the stream reached its `run-end` envelope.
+    pub complete: bool,
+    /// True iff a truncated (newline-less) final line was dropped.
+    pub truncated: bool,
+    /// Number of events successfully parsed.
+    pub events: usize,
+    /// Sum of per-step fault realizations, if any `fault` events were
+    /// streamed. `steps` counts fault events (steps with realizations),
+    /// not training steps.
+    pub fault_totals: Option<FaultStats>,
+    /// Number of `churn` events (membership changes).
+    pub churn_events: usize,
+    /// Step cursors at which checkpoints were written.
+    pub checkpoints: Vec<usize>,
+    /// The `async` summary line verbatim, when the run was async.
+    pub async_event: Option<Event>,
+}
+
+/// Bit-exact f64 comparison that treats NaN as equal to NaN — the
+/// stream maps non-finite values to JSON `null` and reads them back as
+/// NaN, so NaN-ness (not the payload) is the preserved property.
+fn same(a: f64, b: f64) -> bool {
+    a == b || (a.is_nan() && b.is_nan())
+}
+
+impl Replay {
+    /// Verify this reconstruction against the live report of the same
+    /// run: manifest bytes, every loss/eval sample, final metrics, step
+    /// and wire-byte totals — all at bit-level (NaN-tolerant) equality.
+    pub fn matches_report(&self, live: &TrainReport) -> Result<()> {
+        if !self.complete {
+            bail!("replayed stream is incomplete (no run-end); cannot certify against a report");
+        }
+        let r = &self.report;
+        if r.manifest != live.manifest {
+            bail!("replayed manifest differs from live report");
+        }
+        if r.steps != live.steps {
+            bail!("replayed steps {} != live {}", r.steps, live.steps);
+        }
+        if r.losses.len() != live.losses.len()
+            || r.losses.iter().zip(&live.losses).any(|(&a, &b)| !same(a, b))
+        {
+            bail!(
+                "replayed losses differ from live report ({} vs {} samples)",
+                r.losses.len(),
+                live.losses.len()
+            );
+        }
+        if r.evals != live.evals {
+            bail!("replayed evals differ from live report");
+        }
+        if r.eval_losses.len() != live.eval_losses.len()
+            || r.eval_losses
+                .iter()
+                .zip(&live.eval_losses)
+                .any(|((sa, a), (sb, b))| sa != sb || !same(*a, *b))
+        {
+            bail!("replayed eval losses differ from live report");
+        }
+        if !same(r.final_accuracy, live.final_accuracy) {
+            bail!(
+                "replayed final accuracy {} != live {}",
+                r.final_accuracy,
+                live.final_accuracy
+            );
+        }
+        if !same(r.final_consensus, live.final_consensus) {
+            bail!(
+                "replayed final consensus {} != live {}",
+                r.final_consensus,
+                live.final_consensus
+            );
+        }
+        if !same(r.wire_bytes_total, live.wire_bytes_total)
+            || !same(r.wire_bytes_per_iter, live.wire_bytes_per_iter)
+        {
+            bail!(
+                "replayed wire bytes {} ({}/iter) != live {} ({}/iter)",
+                r.wire_bytes_total,
+                r.wire_bytes_per_iter,
+                live.wire_bytes_total,
+                live.wire_bytes_per_iter
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Replay a stream from a file.
+pub fn replay_path(path: &Path) -> Result<Replay> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading telemetry stream {}", path.display()))?;
+    replay_str(&text).with_context(|| format!("replaying {}", path.display()))
+}
+
+/// Replay a stream from its text. See the module docs for the
+/// tolerance rules (truncated tail skipped, mid-stream violations
+/// hard-error).
+pub fn replay_str(text: &str) -> Result<Replay> {
+    let mut lines: Vec<&str> = text.split('\n').collect();
+    let mut out = Replay::default();
+    // `split('\n')` leaves "" after a terminated final line; anything
+    // else in last position lacks its newline — a truncated tail from a
+    // crashed writer — and is dropped without parsing.
+    match lines.pop() {
+        Some("") | None => {}
+        Some(_) => out.truncated = true,
+    }
+
+    let mut started = false;
+    let mut ended = false;
+    // Step contiguity: the first step index is free (a resumed run's
+    // stream starts mid-run), every later one must be the successor.
+    let mut next_step: Option<usize> = None;
+    let mut wire_sum = 0.0f64;
+
+    for (i, line) in lines.iter().enumerate() {
+        let ev = Event::parse_line(line).with_context(|| format!("telemetry line {}", i + 1))?;
+        if ended {
+            bail!("telemetry line {}: event after run-end", i + 1);
+        }
+        if !started && !matches!(ev, Event::RunStart { .. }) {
+            bail!("telemetry line {}: stream must begin with run-start", i + 1);
+        }
+        out.events += 1;
+        match ev {
+            Event::RunStart { manifest } => {
+                if started {
+                    bail!("telemetry line {}: duplicate run-start", i + 1);
+                }
+                started = true;
+                out.report.manifest = manifest;
+            }
+            Event::Async { .. } => {
+                if out.async_event.is_some() {
+                    bail!("telemetry line {}: duplicate async summary", i + 1);
+                }
+                out.async_event = Some(ev);
+            }
+            Event::Step { step, loss, wire_bytes, .. } => {
+                if let Some(want) = next_step {
+                    if step != want {
+                        bail!(
+                            "telemetry line {}: step {step} out of order (expected {want})",
+                            i + 1
+                        );
+                    }
+                }
+                next_step = Some(step + 1);
+                out.report.losses.push(loss);
+                wire_sum += wire_bytes;
+            }
+            Event::Eval { step, accuracy, eval_loss } => {
+                if let Some(a) = accuracy {
+                    out.report.evals.push((step, a));
+                }
+                if let Some(l) = eval_loss {
+                    out.report.eval_losses.push((step, l));
+                }
+            }
+            Event::Fault {
+                nominal_edges,
+                realized_edges,
+                masked_edges,
+                stale_messages,
+                async_stale_messages,
+                dropped_node_steps,
+                straggler_node_steps,
+                ..
+            } => {
+                let t = out.fault_totals.get_or_insert_with(FaultStats::default);
+                t.steps += 1;
+                t.nominal_edges += nominal_edges;
+                t.realized_edges += realized_edges;
+                t.masked_edges += masked_edges;
+                t.stale_messages += stale_messages;
+                t.async_stale_messages += async_stale_messages;
+                t.dropped_node_steps += dropped_node_steps;
+                t.straggler_node_steps += straggler_node_steps;
+            }
+            Event::Churn { .. } => out.churn_events += 1,
+            Event::Checkpoint { step } => out.checkpoints.push(step),
+            Event::RunEnd { steps, final_accuracy, final_consensus, wire_bytes_total } => {
+                if wire_bytes_total.to_bits() != wire_sum.to_bits() {
+                    bail!(
+                        "telemetry line {}: run-end wire-bytes-total {wire_bytes_total} \
+                         does not equal the per-step sum {wire_sum}",
+                        i + 1
+                    );
+                }
+                ended = true;
+                out.report.steps = steps;
+                out.report.final_accuracy = final_accuracy;
+                out.report.final_consensus = final_consensus;
+                out.report.wire_bytes_total = wire_bytes_total;
+            }
+        }
+    }
+
+    if !started {
+        bail!("empty telemetry stream (no run-start)");
+    }
+    out.complete = ended;
+    if !ended {
+        // Partial reconstruction from whatever arrived before the cut.
+        out.report.steps = out.report.losses.len();
+        out.report.wire_bytes_total = wire_sum;
+    }
+    out.report.wire_bytes_per_iter = if out.report.losses.is_empty() {
+        0.0
+    } else {
+        out.report.wire_bytes_total / out.report.losses.len() as f64
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(events: &[Event]) -> String {
+        let mut s = String::new();
+        for ev in events {
+            s.push_str(&ev.to_line());
+            s.push('\n');
+        }
+        s
+    }
+
+    fn full_run() -> Vec<Event> {
+        vec![
+            Event::RunStart { manifest: r#"{"config":{"nodes":4}}"#.to_string() },
+            Event::Step { step: 0, loss: 2.5, lr: 0.05, consensus: 0.0, wire_bytes: 100.0 },
+            Event::Fault {
+                step: 1,
+                nominal_edges: 4,
+                realized_edges: 3,
+                masked_edges: 1,
+                stale_messages: 0,
+                async_stale_messages: 0,
+                dropped_node_steps: 0,
+                straggler_node_steps: 1,
+            },
+            Event::Step { step: 1, loss: 2.25, lr: 0.05, consensus: 1e-6, wire_bytes: 75.0 },
+            Event::Eval { step: 2, accuracy: Some(0.5), eval_loss: Some(1.9) },
+            Event::Churn { step: 2, joins: vec![4], leaves: vec![], nodes: 5 },
+            Event::Step { step: 2, loss: 2.0, lr: 0.05, consensus: 2e-6, wire_bytes: 125.0 },
+            Event::Checkpoint { step: 3 },
+            Event::RunEnd {
+                steps: 3,
+                final_accuracy: 0.625,
+                final_consensus: 1.5e-6,
+                wire_bytes_total: 300.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn complete_stream_reconstructs_the_summary() {
+        let r = replay_str(&stream(&full_run())).unwrap();
+        assert!(r.complete && !r.truncated);
+        assert_eq!(r.events, 9);
+        assert_eq!(r.report.manifest, r#"{"config":{"nodes":4}}"#);
+        assert_eq!(r.report.losses, vec![2.5, 2.25, 2.0]);
+        assert_eq!(r.report.evals, vec![(2, 0.5)]);
+        assert_eq!(r.report.eval_losses, vec![(2, 1.9)]);
+        assert_eq!(r.report.steps, 3);
+        assert_eq!(r.report.final_accuracy, 0.625);
+        assert_eq!(r.report.final_consensus, 1.5e-6);
+        assert_eq!(r.report.wire_bytes_total, 300.0);
+        assert_eq!(r.report.wire_bytes_per_iter, 100.0);
+        let f = r.fault_totals.unwrap();
+        assert_eq!((f.steps, f.masked_edges, f.straggler_node_steps), (1, 1, 1));
+        assert_eq!(r.churn_events, 1);
+        assert_eq!(r.checkpoints, vec![3]);
+        assert!(r.async_event.is_none());
+    }
+
+    #[test]
+    fn truncated_final_line_is_dropped_not_fatal() {
+        let mut text = stream(&full_run());
+        // Chop the run-end line in half: the writer died mid-line.
+        text.truncate(text.len() - 25);
+        let r = replay_str(&text).unwrap();
+        assert!(r.truncated && !r.complete);
+        // Partial summary from the steps that made it.
+        assert_eq!(r.report.losses.len(), 3);
+        assert_eq!(r.report.steps, 3);
+        assert_eq!(r.report.wire_bytes_total, 300.0);
+    }
+
+    #[test]
+    fn mid_stream_violations_are_hard_errors_naming_the_line() {
+        // Malformed JSON mid-stream (note trailing newline: not a tail).
+        let text = "not json\n";
+        let e = format!("{:#}", replay_str(text).unwrap_err());
+        assert!(e.starts_with("telemetry line 1:"), "{e}");
+
+        let mut evs = full_run();
+        evs[3] = Event::Step { step: 5, loss: 0.0, lr: 0.0, consensus: 0.0, wire_bytes: 0.0 };
+        let e = format!("{:#}", replay_str(&stream(&evs)).unwrap_err());
+        assert_eq!(e, "telemetry line 4: step 5 out of order (expected 1)");
+
+        let evs = vec![Event::Checkpoint { step: 0 }];
+        let e = format!("{:#}", replay_str(&stream(&evs)).unwrap_err());
+        assert_eq!(e, "telemetry line 1: stream must begin with run-start");
+
+        let mut evs = full_run();
+        evs.push(Event::Checkpoint { step: 9 });
+        let e = format!("{:#}", replay_str(&stream(&evs)).unwrap_err());
+        assert_eq!(e, "telemetry line 10: event after run-end");
+
+        let mut evs = full_run();
+        evs.insert(1, evs[0].clone());
+        let e = format!("{:#}", replay_str(&stream(&evs)).unwrap_err());
+        assert_eq!(e, "telemetry line 2: duplicate run-start");
+
+        let mut evs = full_run();
+        if let Event::RunEnd { wire_bytes_total, .. } = &mut evs[8] {
+            *wire_bytes_total += 1.0;
+        }
+        let e = format!("{:#}", replay_str(&stream(&evs)).unwrap_err());
+        assert!(e.contains("does not equal the per-step sum"), "{e}");
+
+        assert!(replay_str("").is_err());
+        assert!(replay_str("\n").is_err());
+    }
+
+    #[test]
+    fn nan_losses_survive_the_round_trip() {
+        let evs = vec![
+            Event::RunStart { manifest: "{}".to_string() },
+            Event::Step { step: 0, loss: f64::NAN, lr: 0.1, consensus: 0.0, wire_bytes: 0.0 },
+        ];
+        let r = replay_str(&stream(&evs)).unwrap();
+        assert!(r.report.losses[0].is_nan());
+        assert!(!r.complete);
+    }
+
+    #[test]
+    fn matches_report_pins_every_field() {
+        let r = replay_str(&stream(&full_run())).unwrap();
+        let mut live = r.report.clone();
+        r.matches_report(&live).unwrap();
+        live.losses[1] += 1e-9;
+        assert!(r.matches_report(&live).is_err());
+
+        let mut text = stream(&full_run());
+        text.truncate(text.len() - 25);
+        let partial = replay_str(&text).unwrap();
+        let e = format!("{:#}", partial.matches_report(&r.report).unwrap_err());
+        assert!(e.contains("incomplete"), "{e}");
+    }
+}

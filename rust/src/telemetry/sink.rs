@@ -1,0 +1,148 @@
+//! The buffered JSONL writer the trainer emits into (DESIGN.md §11).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Off the hot path.** Lines go through a [`BufWriter`] (64 KiB)
+//!    so a `step` event is a format + memcpy, not a syscall; the OS
+//!    sees large sequential writes at buffer-flush boundaries.
+//! 2. **Never abort training.** Telemetry is observability, not run
+//!    state: an IO error after creation is recorded (first one wins)
+//!    and further emits become no-ops. The stream simply truncates —
+//!    which is exactly the shape the replay parser tolerates — and the
+//!    caller can surface [`TelemetrySink::error`] at end of run.
+//! 3. **Deterministic bytes.** The sink writes [`Event::to_line`]
+//!    output verbatim plus `\n`; all canonicalization (sorted keys,
+//!    shortest-round-trip numbers) lives in the event layer, so two
+//!    identical runs produce byte-identical files.
+//!
+//! Creation errors (bad path, unwritable directory) DO fail loudly —
+//! at that point no training work has been lost, and a user who asked
+//! for `--telemetry` wants to know the file cannot be opened.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::Event;
+
+struct SinkInner {
+    w: BufWriter<File>,
+    /// First IO error, if any; once set the sink is inert.
+    error: Option<String>,
+}
+
+/// A shared handle to one telemetry stream. Interior mutability via a
+/// mutex so emission sites only need `&self` (the trainer holds the
+/// sink alongside mutably-borrowed state during `step`).
+pub struct TelemetrySink {
+    out: Mutex<SinkInner>,
+}
+
+impl TelemetrySink {
+    /// Create (truncate) the stream file, creating parent directories
+    /// as needed.
+    pub fn create(path: &Path) -> Result<TelemetrySink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating telemetry dir {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating telemetry stream {}", path.display()))?;
+        Ok(TelemetrySink {
+            out: Mutex::new(SinkInner { w: BufWriter::with_capacity(64 * 1024, f), error: None }),
+        })
+    }
+
+    /// Append one event line. Best-effort: the first IO failure is
+    /// recorded and the sink goes inert — training never aborts over
+    /// telemetry.
+    pub fn emit(&self, ev: &Event) {
+        let mut inner = self.out.lock().expect("telemetry sink poisoned");
+        if inner.error.is_some() {
+            return;
+        }
+        let mut line = ev.to_line();
+        line.push('\n');
+        if let Err(e) = inner.w.write_all(line.as_bytes()) {
+            inner.error = Some(format!("telemetry write failed: {e}"));
+        }
+    }
+
+    /// Flush buffered lines to the OS (end of run, after a checkpoint).
+    pub fn flush(&self) {
+        let mut inner = self.out.lock().expect("telemetry sink poisoned");
+        if inner.error.is_some() {
+            return;
+        }
+        if let Err(e) = inner.w.flush() {
+            inner.error = Some(format!("telemetry flush failed: {e}"));
+        }
+    }
+
+    /// The first IO error, if the stream went inert mid-run.
+    pub fn error(&self) -> Option<String> {
+        self.out.lock().expect("telemetry sink poisoned").error.clone()
+    }
+}
+
+impl Drop for TelemetrySink {
+    fn drop(&mut self) {
+        // Last-chance flush so a normally-dropped sink leaves a complete
+        // stream even if the caller forgot the explicit end-of-run flush.
+        if let Ok(inner) = self.out.get_mut() {
+            if inner.error.is_none() {
+                let _ = inner.w.flush();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("decentlam_sink_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_one_canonical_line_per_event() {
+        let path = tmp("lines.jsonl");
+        let sink = TelemetrySink::create(&path).unwrap();
+        let a = Event::Checkpoint { step: 3 };
+        let b = Event::Step { step: 3, loss: 1.5, lr: 0.05, consensus: 0.0, wire_bytes: 64.0 };
+        sink.emit(&a);
+        sink.emit(&b);
+        sink.flush();
+        assert!(sink.error().is_none());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, format!("{}\n{}\n", a.to_line(), b.to_line()));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn creates_missing_parent_directories() {
+        let dir = tmp("nested_dir");
+        let path = dir.join("deep").join("run.jsonl");
+        let sink = TelemetrySink::create(&path).unwrap();
+        sink.emit(&Event::Checkpoint { step: 0 });
+        drop(sink); // drop-flush
+        assert!(std::fs::read_to_string(&path).unwrap().ends_with("\"step\":0}\n"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn creation_on_unwritable_path_fails_loudly() {
+        // A path whose parent is a regular file cannot be created.
+        let blocker = tmp("blocker");
+        std::fs::write(&blocker, b"x").unwrap();
+        let err = TelemetrySink::create(&blocker.join("run.jsonl")).unwrap_err();
+        assert!(format!("{err:#}").contains("telemetry"), "{err:#}");
+        std::fs::remove_file(&blocker).unwrap();
+    }
+}

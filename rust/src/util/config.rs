@@ -137,6 +137,12 @@ pub struct Config {
     /// Requires a static topology and synchronous execution. The churn
     /// seed defaults to `seed` when the spec omits `seed=`.
     pub churn: Option<ChurnSpec>,
+    /// Telemetry JSONL sink path (`--telemetry out.jsonl`; None = off).
+    /// Deliberately EXCLUDED from [`Config::to_manifest`]: where a run
+    /// streams its events is observability plumbing, not run identity —
+    /// manifests, sha digests and snapshots stay byte-identical with
+    /// telemetry on or off (DESIGN.md §11).
+    pub telemetry: Option<String>,
 }
 
 impl Default for Config {
@@ -167,6 +173,7 @@ impl Default for Config {
             codec: None,
             async_mode: None,
             churn: None,
+            telemetry: None,
         }
     }
 }
@@ -249,6 +256,11 @@ impl Config {
             "codec" => self.codec = opt_spec(v, CodecSpec::parse)?,
             "async" => self.async_mode = opt_spec(v, AsyncSpec::parse)?,
             "churn" => self.churn = opt_spec(v, ChurnSpec::parse)?,
+            // Observability plumbing, not run identity: settable from
+            // the CLI but never serialized into manifests (empty clears).
+            "telemetry" => {
+                self.telemetry = if v.trim().is_empty() { None } else { Some(v.to_string()) }
+            }
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
         }
@@ -420,7 +432,7 @@ impl Config {
                     cfg.churn =
                         opt_spec(x.as_str()?, ChurnSpec::parse).with_context(|| x.path().to_string())?
                 }
-                "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {
+                "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" | "telemetry" => {
                     bail!("{}: `{key}` is a CLI-only flag, not a config field", c.path());
                 }
                 other => bail!("{}: unknown config key `{other}`", c.path()),
@@ -689,6 +701,25 @@ mod tests {
             Config::from_manifest(&Cursor::root(&v, "scenario.config")).unwrap_err()
         );
         assert_eq!(e, "scenario.config.faults: fault rate `drop=2` outside [0, 1]");
+    }
+
+    #[test]
+    fn telemetry_is_cli_only_and_never_reaches_the_manifest() {
+        let mut c = Config::default();
+        c.apply_kv("telemetry", "out.jsonl").unwrap();
+        assert_eq!(c.telemetry.as_deref(), Some("out.jsonl"));
+        // Run identity is unchanged: the manifest of a telemetry-on
+        // config is byte-identical to the telemetry-off one.
+        let mut off = Config::default();
+        assert_eq!(c.to_manifest().to_string(), off.to_manifest().to_string());
+        c.apply_kv("telemetry", "").unwrap();
+        assert!(c.telemetry.is_none(), "empty value clears the sink");
+        // And manifests must not smuggle it back in.
+        let v = Value::parse(r#"{"telemetry": "out.jsonl"}"#).unwrap();
+        let e = format!("{:#}", Config::from_manifest(&Cursor::root(&v, "config")).unwrap_err());
+        assert_eq!(e, "config: `telemetry` is a CLI-only flag, not a config field");
+        off.apply_kv("telemetry", "x.jsonl").unwrap();
+        assert_ne!(off, Config::default(), "field still participates in Eq");
     }
 
     #[test]

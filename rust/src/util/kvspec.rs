@@ -69,7 +69,10 @@ pub trait KvSpec: Sized {
     fn to_spec_string(&self) -> String;
 
     /// THE grammar: split on commas, trim, skip empty parts, apply
-    /// `key=value` parts in order (after the optional head token).
+    /// `key=value` parts in order (after the optional head token). A
+    /// key given twice is a hard error — last-wins would silently
+    /// discard half of `--faults drop=0.1,drop=0.2`, the opposite of
+    /// the fail-closed manifest philosophy.
     fn parse(s: &str, default_seed: u64) -> Result<Self> {
         if Self::BARE_TRUE && s.trim() == "true" {
             return Self::begin(None, default_seed);
@@ -80,11 +83,17 @@ pub trait KvSpec: Sized {
         } else {
             Self::begin(None, default_seed)?
         };
+        let mut seen: Vec<String> = Vec::new();
         for part in parts {
             let Some((k, v)) = part.split_once('=') else {
                 bail!("{} spec entry `{part}` is not key=value", Self::NAME);
             };
-            spec.set_kv(k.trim(), v)?;
+            let k = k.trim();
+            if seen.iter().any(|s| s == k) {
+                bail!("{} spec key `{k}` given more than once", Self::NAME);
+            }
+            seen.push(k.to_string());
+            spec.set_kv(k, v)?;
         }
         spec.finish()?;
         Ok(spec)
@@ -158,5 +167,16 @@ mod tests {
     fn finish_validates_cross_key_invariants() {
         assert!(Toy::parse("kind,a=0", 0).is_err());
         assert!(Toy::parse("kind,a=2", 0).is_ok());
+    }
+
+    #[test]
+    fn duplicate_keys_are_hard_errors_naming_the_key() {
+        let e = Toy::parse("kind,a=1,a=2", 0).unwrap_err().to_string();
+        assert_eq!(e, "toy spec key `a` given more than once");
+        // Whitespace-padded repeats of the same key still collide …
+        let e = Toy::parse("kind,seed=1, seed =2", 0).unwrap_err().to_string();
+        assert_eq!(e, "toy spec key `seed` given more than once");
+        // … while distinct keys stay fine.
+        assert!(Toy::parse("kind,a=2,seed=5", 0).is_ok());
     }
 }

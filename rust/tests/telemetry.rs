@@ -1,0 +1,235 @@
+//! Telemetry bus + offline replay property suite (DESIGN.md §11),
+//! across the full optimizer roster × realization layers:
+//!
+//! 1. every emitted line round-trips `parse_line ∘ to_line` **byte for
+//!    byte** (canonical serialization);
+//! 2. replaying the stream alone reconstructs the live
+//!    [`TrainReport`] exactly ([`Replay::matches_report`]);
+//! 3. telemetry OFF is bitwise identical to telemetry ON — the stream
+//!    observes the run, never perturbs it;
+//! 4. two identical runs produce byte-identical stream files;
+//! 5. a crash-truncated tail is tolerated; mid-stream corruption is a
+//!    hard error.
+
+use std::path::PathBuf;
+
+use decentlam::coordinator::{TrainReport, Trainer};
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::{mlp, Workload};
+use decentlam::optim;
+use decentlam::telemetry::{replay_path, replay_str, Event};
+use decentlam::util::config::{Config, LrSchedule};
+
+fn workload(capacity: usize, seed: u64) -> Workload {
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes: capacity,
+        samples_per_node: 96,
+        eval_samples: 128,
+        dirichlet_alpha: 0.3,
+        seed,
+        ..Default::default()
+    });
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 16, seed)
+}
+
+fn base_cfg(optimizer: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = 4;
+    cfg.steps = 6;
+    cfg.total_batch = 64;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.05;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.topology = "ring".into();
+    cfg.eval_every = 3;
+    cfg.threads = 1;
+    cfg.seed = 7;
+    cfg
+}
+
+/// The four realization layers the stream must cover. Returns the
+/// configured run + the stable-id capacity its workload needs, or None
+/// when the combination is rejected by design (slowmo's periodic
+/// all-reduce is a barrier `--async` refuses to model).
+fn mode_cfg(optimizer: &str, mode: &str) -> Option<(Config, usize)> {
+    let mut cfg = base_cfg(optimizer);
+    let kv = match mode {
+        "faults" => ("faults", "drop=0.1,straggle=0.1,stale=0.5,seed=3"),
+        "codec" => ("codec", "int8,ef=true,seed=11"),
+        "async" => {
+            if optimizer == "slowmo" {
+                return None;
+            }
+            ("async", "tau=2,spread=4,seed=5")
+        }
+        "churn" => ("churn", "join=0.1,leave=0.1,nmin=2,nmax=6,seed=5"),
+        other => panic!("unknown mode {other}"),
+    };
+    cfg.apply_kv(kv.0, kv.1).unwrap();
+    let capacity = if mode == "churn" { 6 } else { cfg.nodes };
+    Some((cfg, capacity))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("decentlam_telemetry_{}_{name}", std::process::id()))
+}
+
+fn run_with_stream(cfg: &Config, capacity: usize, path: &PathBuf) -> TrainReport {
+    let mut cfg = cfg.clone();
+    cfg.telemetry = Some(path.to_string_lossy().into_owned());
+    let mut t = Trainer::new(cfg, workload(capacity, 7)).unwrap();
+    let report = t.run();
+    assert!(t.telemetry_error().is_none(), "sink went inert: {:?}", t.telemetry_error());
+    report
+}
+
+#[test]
+fn all_optimizers_x_layers_round_trip_replay_and_off_identity() {
+    for opt in optim::ALL.iter().chain([&"dsgd"]) {
+        for mode in ["faults", "codec", "async", "churn"] {
+            let Some((cfg, capacity)) = mode_cfg(opt, mode) else { continue };
+            let path = tmp(&format!("{opt}_{mode}.jsonl"));
+            let live = run_with_stream(&cfg, capacity, &path);
+
+            // (1) Canonical per-line byte round trip.
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(text.ends_with('\n'), "{opt}/{mode}: unterminated stream");
+            for line in text.lines() {
+                let ev = Event::parse_line(line)
+                    .unwrap_or_else(|e| panic!("{opt}/{mode}: {line}: {e:#}"));
+                assert_eq!(ev.to_line(), line, "{opt}/{mode}: non-canonical line");
+            }
+
+            // (2) The stream alone reconstructs the live summary.
+            let r = replay_path(&path).unwrap();
+            assert!(r.complete && !r.truncated, "{opt}/{mode}");
+            r.matches_report(&live)
+                .unwrap_or_else(|e| panic!("{opt}/{mode}: replay mismatch: {e:#}"));
+            assert_eq!(r.report.losses.len(), cfg.steps, "{opt}/{mode}");
+            if mode == "async" {
+                assert!(r.async_event.is_some(), "{opt}/{mode}: async summary missing");
+            }
+
+            // (3) Telemetry off is bitwise identical: the bus observes,
+            // never perturbs.
+            let mut t = Trainer::new(cfg.clone(), workload(capacity, 7)).unwrap();
+            let off = t.run();
+            let bits = |ls: &[f64]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&off.losses), bits(&live.losses), "{opt}/{mode}: losses drifted");
+            assert_eq!(
+                off.final_consensus.to_bits(),
+                live.final_consensus.to_bits(),
+                "{opt}/{mode}"
+            );
+            assert_eq!(
+                off.wire_bytes_total.to_bits(),
+                live.wire_bytes_total.to_bits(),
+                "{opt}/{mode}"
+            );
+            assert_eq!(off.manifest, live.manifest, "{opt}/{mode}: manifest drifted");
+
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+#[test]
+fn fault_runs_stream_their_realizations() {
+    // High rates so the seeded plan realizes faults with near-certainty
+    // (the matrix test above covers the subtle-rate composition).
+    let mut cfg = base_cfg("decentlam");
+    cfg.steps = 10;
+    cfg.apply_kv("faults", "drop=0.3,straggle=0.3,stale=0.5,seed=3").unwrap();
+    let path = tmp("fault_events.jsonl");
+    let live = run_with_stream(&cfg, 4, &path);
+    let r = replay_path(&path).unwrap();
+    r.matches_report(&live).unwrap();
+    // Whatever was realized, the replayed per-step deltas must sum to
+    // an internally consistent total: every nominal edge either carried
+    // a message or was masked.
+    let f = r.fault_totals.expect("no fault events streamed");
+    assert!(f.steps > 0 && f.steps <= cfg.steps);
+    assert_eq!(f.realized_edges + f.masked_edges, f.nominal_edges);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn churn_runs_stream_membership_events() {
+    let mut cfg = base_cfg("decentlam");
+    cfg.steps = 12;
+    cfg.apply_kv("churn", "join=0.4,leave=0.4,nmin=2,nmax=6,seed=5").unwrap();
+    let path = tmp("churn_events.jsonl");
+    let live = run_with_stream(&cfg, 6, &path);
+    let r = replay_path(&path).unwrap();
+    r.matches_report(&live).unwrap();
+    // join=leave=0.4 over 12 steps realizes membership motion with
+    // near-certainty under any seed.
+    assert!(r.churn_events > 0, "no churn events streamed");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn two_identical_runs_write_byte_identical_streams() {
+    let (cfg, capacity) = mode_cfg("decentlam", "faults").unwrap();
+    let a = tmp("bytes_a.jsonl");
+    let b = tmp("bytes_b.jsonl");
+    run_with_stream(&cfg, capacity, &a);
+    run_with_stream(&cfg, capacity, &b);
+    assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+#[test]
+fn truncated_tail_is_tolerated_mid_stream_corruption_is_not() {
+    let (cfg, capacity) = mode_cfg("decentlam", "codec").unwrap();
+    let path = tmp("truncate.jsonl");
+    run_with_stream(&cfg, capacity, &path);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    // Chop the final line mid-JSON at every cut depth a crash could
+    // leave: the torn tail is dropped, the rest replays.
+    let body_end = text[..text.len() - 1].rfind('\n').unwrap() + 1;
+    for cut in [body_end + 1, body_end + 10, text.len() - 2] {
+        let r = replay_str(&text[..cut]).unwrap_or_else(|e| panic!("cut {cut}: {e:#}"));
+        assert!(r.truncated && !r.complete, "cut {cut}");
+        assert_eq!(r.report.losses.len(), cfg.steps, "cut {cut}");
+    }
+    // Even cutting several whole lines back just shortens the summary.
+    let shorter = &text[..text[..body_end - 1].rfind('\n').unwrap() + 1];
+    let r = replay_str(shorter).unwrap();
+    assert!(!r.complete && !r.truncated);
+
+    // But the SAME corruption mid-stream is a hard error naming the line.
+    let mut lines: Vec<&str> = text.lines().collect();
+    let torn = &lines[2][..lines[2].len() - 5];
+    lines[2] = torn;
+    let corrupted = lines.join("\n") + "\n";
+    let e = format!("{:#}", replay_str(&corrupted).unwrap_err());
+    assert!(e.starts_with("telemetry line 3:"), "{e}");
+}
+
+#[test]
+fn checkpoints_are_streamed() {
+    let (cfg, capacity) = mode_cfg("decentlam", "faults").unwrap();
+    let stream = tmp("ckpt.jsonl");
+    let snap = tmp("ckpt.bin");
+    let mut cfg = cfg;
+    cfg.telemetry = Some(stream.to_string_lossy().into_owned());
+    let mut t = Trainer::new(cfg.clone(), workload(capacity, 7)).unwrap();
+    for k in 0..3 {
+        t.step(k);
+    }
+    t.checkpoint_to(&snap).unwrap();
+    drop(t); // flush on drop
+    let r = replay_str(&std::fs::read_to_string(&stream).unwrap()).unwrap();
+    assert!(!r.complete, "no run-end was written");
+    assert_eq!(r.checkpoints, vec![3]);
+    assert_eq!(r.report.losses.len(), 3);
+    std::fs::remove_file(&stream).unwrap();
+    std::fs::remove_file(&snap).unwrap();
+}
