@@ -12,12 +12,12 @@
 //! ```
 
 use std::path::Path;
-use std::time::Instant;
 
 use decentlam::coordinator::Trainer;
 use decentlam::data::corpus::Corpus;
 use decentlam::grad::pjrt;
 use decentlam::runtime::{Manifest, Runtime};
+use decentlam::util::bench::WallTimer;
 use decentlam::util::cli::Args;
 use decentlam::util::config::{Config, LrSchedule};
 
@@ -59,18 +59,18 @@ fn main() -> anyhow::Result<()> {
     cfg.seed = 1;
 
     let mut trainer = Trainer::new(cfg, workload)?;
-    let t0 = Instant::now();
-    let mut last_print = Instant::now();
+    let t0 = WallTimer::start();
+    let mut last_print = WallTimer::start();
     let mut losses = Vec::new();
     for k in 0..steps {
         let loss = trainer.step(k);
         losses.push(loss);
-        if last_print.elapsed().as_secs_f64() > 5.0 || k == 0 || k + 1 == steps {
+        if last_print.elapsed_s() > 5.0 || k == 0 || k + 1 == steps {
             println!(
                 "step {k:>5}/{steps}  train loss {loss:.4}  ({:.2} steps/s)",
-                (k + 1) as f64 / t0.elapsed().as_secs_f64()
+                (k + 1) as f64 / t0.elapsed_s()
             );
-            last_print = Instant::now();
+            last_print.restart();
         }
     }
     let xbar = trainer.average_model();
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     println!("final train loss     : {l1:.4}");
     println!("held-out eval loss   : {eval_loss:.4}");
     println!("consensus distance   : {:.3e}", trainer.consensus_distance());
-    println!("wall time            : {:.1}s", t0.elapsed().as_secs_f64());
+    println!("wall time            : {:.1}s", t0.elapsed_s());
     anyhow::ensure!(l1 < l0, "training failed to descend");
     Ok(())
 }

@@ -63,7 +63,6 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -79,6 +78,7 @@ use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
 use crate::telemetry::{Event, TelemetrySink};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
+use crate::util::bench;
 use crate::util::config::Config;
 use crate::util::json::Value;
 use crate::util::math;
@@ -416,7 +416,7 @@ impl Trainer {
     /// Consensus distance (1/n) Σ ‖x_i − x̄‖².
     pub fn consensus_distance(&self) -> f64 {
         let xbar = self.average_model();
-        self.states.iter().map(|s| math::dist2(&s.x, &xbar)).sum::<f64>()
+        math::sum_f64(self.states.iter().map(|s| math::dist2(&s.x, &xbar)))
             / self.states.len() as f64
     }
 
@@ -475,7 +475,7 @@ impl Trainer {
                     *loss = node.grad_accum(&states[i].x, accum, g);
                 },
             );
-            self.losses.iter().sum::<f64>() / self.losses.len() as f64
+            math::mean_f64(&self.losses)
         };
         // --- exchange + update phase ---
         if self.kind.time_varying() {
@@ -1081,19 +1081,23 @@ impl Trainer {
             manifest: self.manifest_json(),
             ..Default::default()
         };
+        // Wall time is observability-only (rule D02): it flows into the
+        // report's grad/update_seconds and nowhere else — never the
+        // manifest, digests, or the telemetry stream, which all replay
+        // bitwise (pinned by rust/tests/determinism.rs).
         let mut grad_s = 0.0;
         let mut upd_s = 0.0;
         for k in self.next_step..self.cfg.steps {
-            let t0 = Instant::now();
+            let t0 = bench::WallTimer::start();
             let loss = self.step(k);
-            let dt = t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed_s();
             // step() mixes both phases; attribute by re-measuring would
             // double work. Track total and split via a dedicated probe in
             // the benches; here we record total into grad_seconds.
             grad_s += dt;
             report.losses.push(loss);
             if self.cfg.eval_every > 0 && (k + 1) % self.cfg.eval_every == 0 {
-                let t1 = Instant::now();
+                let t1 = bench::WallTimer::start();
                 let xbar = self.average_model();
                 let acc = self.workload.eval.accuracy(&xbar);
                 let accuracy = acc.is_finite().then_some(acc);
@@ -1111,7 +1115,7 @@ impl Trainer {
                         sink.emit(&Event::Eval { step: k + 1, accuracy, eval_loss });
                     }
                 }
-                upd_s += t1.elapsed().as_secs_f64();
+                upd_s += t1.elapsed_s();
             }
         }
         let xbar = self.average_model();

@@ -84,11 +84,8 @@ impl LinRegProblem {
     /// (1/n) Σ_i ‖x_i − x*‖² / ‖x*‖².
     pub fn relative_error(&self, xs: &[Vec<f32>]) -> f64 {
         let denom = crate::util::math::dot(&self.x_star, &self.x_star);
-        let num: f64 = xs
-            .iter()
-            .map(|x| crate::util::math::dist2(x, &self.x_star))
-            .sum::<f64>()
-            / xs.len() as f64;
+        let sq = xs.iter().map(|x| crate::util::math::dist2(x, &self.x_star));
+        let num = crate::util::math::sum_f64(sq) / xs.len() as f64;
         num / denom
     }
 

@@ -288,7 +288,7 @@ mod tests {
         let d = shard.input_dim;
         let mut bx = vec![0.0f32; 4 * d];
         let mut by = vec![0i32; 4];
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for _ in 0..10 {
             shard.next_batch(&mut bx, &mut by);
             for k in 0..4 {

@@ -72,7 +72,7 @@ pub fn run(opts: &Opts) -> Result<(Vec<Curve>, Table)> {
     );
     for c in &curves {
         let tail = &c.losses[c.losses.len().saturating_sub(10)..];
-        let final_loss = tail.iter().sum::<f64>() / tail.len() as f64;
+        let final_loss = crate::util::math::mean_f64(tail);
         let final_acc = c.evals.last().map(|e| e.1).unwrap_or(f64::NAN);
         table.row(vec![
             c.method.clone(),

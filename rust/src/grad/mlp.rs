@@ -385,8 +385,9 @@ impl Evaluator for MlpEvaluator {
             for r in 0..b {
                 let row = &logits[r * c..(r + 1) * c];
                 let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v)) as f64;
-                let lse =
-                    m + row.iter().map(|&v| (v as f64 - m).exp()).sum::<f64>().ln();
+                let exp_sum =
+                    crate::util::math::sum_f64(row.iter().map(|&v| (v as f64 - m).exp()));
+                let lse = m + exp_sum.ln();
                 total += lse - row[self.y[done + r] as usize] as f64;
             }
             done += b;

@@ -13,7 +13,7 @@
 //! serialized protos use 64-bit ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see `python/compile/aot.py`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 
@@ -169,6 +169,7 @@ impl Runtime {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name("pjrt-runtime".into())
+            // lint:allow(D04): one service thread, fed by one mpsc channel in send order
             .spawn(move || service_loop(rx, ready_tx))?;
         ready_rx
             .recv()
@@ -234,7 +235,10 @@ fn service_loop(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
             return;
         }
     };
-    let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    // BTreeMap, not HashMap: iteration order never leaks here today,
+    // but the determinism lint (D01) bans unordered maps outright so
+    // an innocent refactor can't start depending on one.
+    let mut execs: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
     while let Ok(req) = rx.recv() {
         match req {
             Request::Shutdown => break,

@@ -69,14 +69,14 @@ pub fn rho_power(w: &dyn CommEngine, max_iters: usize) -> f64 {
 }
 
 fn center(x: &mut [f64]) {
-    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    let mean = crate::util::math::mean_f64(x);
     for v in x.iter_mut() {
         *v -= mean;
     }
 }
 
 fn norm2(x: &[f64]) -> f64 {
-    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+    crate::util::math::norm2_f64(x)
 }
 
 /// Spectral gap 1 − ρ.

@@ -196,6 +196,34 @@ impl Bench {
     }
 }
 
+/// The single sanctioned wall-clock source outside this module
+/// (determinism rule D02, DESIGN.md §12). Wall time is
+/// observability-only: values read here may feed report-side fields
+/// like `TrainReport::grad_seconds`, but must never reach manifests,
+/// scenario digests, checkpoints, or the telemetry stream — those
+/// replay bitwise, and wall time never does.
+pub struct WallTimer {
+    t0: Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    /// Seconds since construction (or the last [`WallTimer::restart`]).
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Re-arm, returning the seconds elapsed up to this instant.
+    pub fn restart(&mut self) -> f64 {
+        let s = self.elapsed_s();
+        self.t0 = Instant::now();
+        s
+    }
+}
+
 /// Minimal JSON string escaping (case names are ASCII identifiers plus
 /// spaces/=/punctuation; quotes and backslashes are the only hazards).
 fn json_escape(s: &str) -> String {
@@ -259,6 +287,17 @@ mod tests {
         let iters = v.get("alpha d=64").unwrap().get("iters").unwrap().as_usize().unwrap();
         assert!(iters > 0);
         assert!(v.get("beta \"quoted\"").is_ok(), "escaping must round-trip");
+    }
+
+    #[test]
+    fn wall_timer_is_monotone_and_restartable() {
+        let mut t = WallTimer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0 && b >= a);
+        let s = t.restart();
+        assert!(s >= b);
+        assert!(t.elapsed_s() < s + 60.0);
     }
 
     #[test]

@@ -55,6 +55,28 @@ pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
         .sum()
 }
 
+/// Sequential left-to-right f64 sum — the one home for order-sensitive
+/// float reductions outside this module (determinism rule D05,
+/// DESIGN.md §12: reduction order is part of the bitwise-replay
+/// contract, so it lives here and nowhere else).
+pub fn sum_f64(xs: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Mean of a slice via [`sum_f64`] (NaN on empty input).
+pub fn mean_f64(xs: &[f64]) -> f64 {
+    sum_f64(xs.iter().copied()) / xs.len() as f64
+}
+
+/// Euclidean norm of an f64 slice via [`sum_f64`].
+pub fn norm2_f64(x: &[f64]) -> f64 {
+    sum_f64(x.iter().map(|v| v * v)).sqrt()
+}
+
 /// out = Σ_t w_t · x_t, fusing terms pairwise so the destination is
 /// traversed ~(1 + k/2) times instead of (k+1) — the gossip hot path
 /// (`optim::partial_average_all`) is memory-bound and this halves its
@@ -227,6 +249,20 @@ mod tests {
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert!((dist2(&[1.0, 1.0], &[0.0, 0.0]) - 2.0).abs() < 1e-12);
         assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn canonical_f64_reductions() {
+        assert_eq!(sum_f64([1.0, 2.0, 3.0]), 6.0);
+        assert_eq!(mean_f64(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((norm2_f64(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        // Bitwise left-to-right, exactly like a sequential loop.
+        let xs = [1e16, 1.0, -1e16];
+        let mut acc = 0.0f64;
+        for x in xs {
+            acc += x;
+        }
+        assert_eq!(sum_f64(xs).to_bits(), acc.to_bits());
     }
 
     #[test]

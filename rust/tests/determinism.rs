@@ -1,0 +1,138 @@
+//! Dynamic pins for the determinism contract the lint pass (DESIGN.md
+//! §12, `cargo run -p xtask -- lint`) enforces statically:
+//!
+//! 1. the synthetic-data path is rerun-byte-identical — two generates
+//!    from one spec produce bitwise-equal shards and batch streams
+//!    (regression cover for the D01 `HashSet` fix in `data/synth`);
+//! 2. wall-clock readings (rule D02) stay on the report side: they feed
+//!    `TrainReport::{grad,update}_seconds` only, and never reach the
+//!    manifest, the scenario digest inputs, or the telemetry stream —
+//!    all of which must be byte-identical across identical runs on a
+//!    machine whose wall clock obviously is not.
+
+use std::path::PathBuf;
+
+use decentlam::coordinator::{TrainReport, Trainer};
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::{mlp, Workload};
+use decentlam::util::config::{Config, LrSchedule};
+use decentlam::util::sha256::Sha256;
+
+fn spec(seed: u64) -> SynthSpec {
+    SynthSpec {
+        nodes: 4,
+        samples_per_node: 96,
+        eval_samples: 128,
+        dirichlet_alpha: 0.3,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn workload(seed: u64) -> Workload {
+    let data = ClassificationData::generate(&spec(seed));
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 16, seed)
+}
+
+fn cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = "decentlam".into();
+    cfg.nodes = 4;
+    cfg.steps = 6;
+    cfg.total_batch = 64;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.05;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.topology = "ring".into();
+    cfg.eval_every = 3;
+    cfg.threads = 1;
+    cfg.seed = 7;
+    cfg
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("decentlam_determinism_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn synth_generation_is_rerun_byte_identical() {
+    let a = ClassificationData::generate(&spec(11));
+    let b = ClassificationData::generate(&spec(11));
+    assert_eq!(a.shards.len(), b.shards.len());
+    let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    for (sa, sb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(bits(&sa.x), bits(&sb.x), "shard features drifted between reruns");
+        assert_eq!(sa.y, sb.y, "shard labels drifted between reruns");
+    }
+    assert_eq!(bits(&a.eval_x), bits(&b.eval_x), "eval features drifted between reruns");
+    assert_eq!(a.eval_y, b.eval_y, "eval labels drifted between reruns");
+}
+
+#[test]
+fn synth_batch_stream_is_rerun_byte_identical() {
+    let mut a = ClassificationData::generate(&spec(3));
+    let mut b = ClassificationData::generate(&spec(3));
+    let d = a.shards[0].input_dim;
+    let (mut ax, mut ay) = (vec![0.0f32; 4 * d], vec![0i32; 4]);
+    let (mut bx, mut by) = (vec![0.0f32; 4 * d], vec![0i32; 4]);
+    for round in 0..12 {
+        a.shards[0].next_batch(&mut ax, &mut ay);
+        b.shards[0].next_batch(&mut bx, &mut by);
+        let abits: Vec<u32> = ax.iter().map(|v| v.to_bits()).collect();
+        let bbits: Vec<u32> = bx.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(abits, bbits, "batch {round}: feature bytes drifted");
+        assert_eq!(ay, by, "batch {round}: labels drifted");
+    }
+}
+
+/// The digest recipe scenario pins use (`scenario/runner.rs`): manifest
+/// bytes + per-step loss bits + final metric bits. Everything wall time
+/// could pollute, nothing it may feed.
+fn replay_digest(report: &TrainReport, eval_loss: Option<f64>) -> String {
+    let mut h = Sha256::new();
+    h.update(report.manifest.as_bytes());
+    for l in &report.losses {
+        h.update(&l.to_bits().to_be_bytes());
+    }
+    h.update(&report.final_accuracy.to_bits().to_be_bytes());
+    h.update(&report.final_consensus.to_bits().to_be_bytes());
+    if let Some(el) = eval_loss {
+        h.update(&el.to_bits().to_be_bytes());
+    }
+    h.finish_hex()
+}
+
+#[test]
+fn wall_clock_never_reaches_manifest_digest_or_stream() {
+    let run = |name: &str| {
+        let path = tmp(name);
+        let mut c = cfg();
+        c.telemetry = Some(path.to_string_lossy().into_owned());
+        let mut t = Trainer::new(c, workload(7)).unwrap();
+        let report = t.run();
+        assert!(t.telemetry_error().is_none(), "{:?}", t.telemetry_error());
+        drop(t);
+        let stream = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        (report, stream)
+    };
+    let (ra, sa) = run("wall_a.jsonl");
+    let (rb, sb) = run("wall_b.jsonl");
+
+    // Wall time was measured — the report side carries it...
+    assert!(ra.grad_seconds > 0.0, "grad phase took no wall time?");
+    // ...but nothing that replays may contain it: manifests, streams
+    // and digest inputs are byte-identical across runs whose wall
+    // clocks were not.
+    assert_eq!(ra.manifest, rb.manifest, "manifest drifted between identical runs");
+    assert_eq!(sa, sb, "telemetry stream drifted between identical runs");
+    assert_eq!(replay_digest(&ra, None), replay_digest(&rb, None), "digest inputs drifted");
+    // And the serialized surfaces never name the wall-time fields.
+    for (what, text) in [("manifest", &ra.manifest), ("stream", &sa)] {
+        for field in ["grad_seconds", "update_seconds"] {
+            assert!(!text.contains(field), "{what} leaked wall-clock field {field}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The violation ratchet baseline: `xtask/lint-baseline.json`.
+//!
+//! Shape (all keys sorted, counts strictly positive):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "rules": {
+//!     "D07": { "rust/src/util/json.rs": 24 }
+//!   }
+//! }
+//! ```
+//!
+//! Counts may only decrease over time: the lint pass fails when a
+//! (rule, file) pair exceeds its entry, notes when it has fallen below
+//! (run `--update-baseline` to shrink), and `--update-baseline` refuses
+//! to raise any count. Parsing is fail-closed in the house style:
+//! unknown top-level keys, unknown rule ids, or malformed JSON are hard
+//! errors, because a silently ignored baseline would turn the ratchet
+//! off. The parser below covers exactly the subset this file needs
+//! (objects, strings, unsigned integers) — hand-rolled so the xtask
+//! crate stays dependency-free.
+
+use std::collections::BTreeMap;
+
+/// rule id → repo-relative file → allowed violation count.
+pub type Baseline = BTreeMap<String, BTreeMap<String, usize>>;
+
+pub const FORMAT_VERSION: u64 = 1;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("baseline: expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| "baseline: dangling escape".to_string())?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        other => {
+                            return Err(format!(
+                                "baseline: unsupported escape `\\{}`",
+                                other as char
+                            ))
+                        }
+                    }
+                }
+                other => out.push(other as char),
+            }
+        }
+        Err("baseline: unterminated string".into())
+    }
+
+    fn integer(&mut self) -> Result<u64, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("baseline: expected an integer at byte {start}"));
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| "baseline: bad utf8".to_string())?
+            .parse::<u64>()
+            .map_err(|e| format!("baseline: integer out of range: {e}"))
+    }
+
+    /// `{ "key": <parsed by f>, ... }`
+    fn object<T>(
+        &mut self,
+        mut f: impl FnMut(&mut Self, &str) -> Result<T, String>,
+    ) -> Result<Vec<(String, T)>, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = f(self, &key)?;
+            out.push((key, val));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                _ => return Err(format!("baseline: expected `,` or `}}` at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+/// Parse the baseline file; fail closed on anything unexpected.
+pub fn parse(text: &str, known_rules: &[&str]) -> Result<Baseline, String> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut version: Option<u64> = None;
+    let mut rules: Option<Baseline> = None;
+    let top = p.object(|p, key| match key {
+        "version" => {
+            version = Some(p.integer()?);
+            Ok(())
+        }
+        "rules" => {
+            let mut out: Baseline = BTreeMap::new();
+            let entries = p.object(|p, rule| {
+                if !known_rules.contains(&rule) {
+                    return Err(format!("baseline: unknown rule id `{rule}` (fail closed)"));
+                }
+                let files = p.object(|p, _file| p.integer())?;
+                let mut by_file = BTreeMap::new();
+                for (file, count) in files {
+                    if count == 0 {
+                        return Err(format!(
+                            "baseline: zero count for `{file}` — drop the entry instead"
+                        ));
+                    }
+                    if by_file.insert(file.clone(), count as usize).is_some() {
+                        return Err(format!("baseline: duplicate file entry `{file}`"));
+                    }
+                }
+                Ok(by_file)
+            })?;
+            for (rule, by_file) in entries {
+                if out.insert(rule.clone(), by_file).is_some() {
+                    return Err(format!("baseline: duplicate rule entry `{rule}`"));
+                }
+            }
+            rules = Some(out);
+            Ok(())
+        }
+        other => Err(format!("baseline: unknown top-level key `{other}` (fail closed)")),
+    });
+    top?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("baseline: trailing bytes at {}", p.i));
+    }
+    match version {
+        Some(FORMAT_VERSION) => {}
+        Some(v) => return Err(format!("baseline: version {v} != {FORMAT_VERSION}")),
+        None => return Err("baseline: missing `version`".into()),
+    }
+    rules.ok_or_else(|| "baseline: missing `rules`".into())
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render a baseline in the canonical sorted form [`parse`] accepts.
+pub fn render(b: &Baseline) -> String {
+    let mut out = String::from("{\n  \"version\": 1,\n  \"rules\": {");
+    let rules: Vec<_> = b.iter().filter(|(_, files)| !files.is_empty()).collect();
+    for (ri, (rule, files)) in rules.iter().enumerate() {
+        out.push_str(if ri == 0 { "\n" } else { ",\n" });
+        out.push_str(&format!("    \"{}\": {{", escape(rule)));
+        for (fi, (file, count)) in files.iter().enumerate() {
+            out.push_str(if fi == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!("      \"{}\": {count}", escape(file)));
+        }
+        out.push_str("\n    }");
+    }
+    if rules.is_empty() {
+        out.push_str("}\n}\n");
+    } else {
+        out.push_str("\n  }\n}\n");
+    }
+    out
+}

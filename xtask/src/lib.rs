@@ -1,0 +1,11 @@
+//! Repo task runner (`cargo run -p xtask -- <task>`).
+//!
+//! One task so far: `lint`, the determinism auditor enforcing the
+//! bitwise-replay contract statically (rules D01–D07, DESIGN.md §12).
+//! Dependency-free by design — same hermetic philosophy as the vendored
+//! `anyhow` — so it builds in an offline container.
+
+pub mod baseline;
+pub mod lint;
+pub mod rules;
+pub mod scan;

@@ -1,0 +1,220 @@
+//! The determinism lint engine: walk, match, suppress, ratchet.
+//!
+//! Flow: walk the scan roots, mask each file with [`crate::scan`],
+//! match every applicable rule from [`crate::rules`] line by line,
+//! drop violations covered by a well-formed `lint:allow` pragma, then
+//! compare per-(rule, file) counts against the committed ratchet
+//! baseline. A count above its baseline entry is an error (per-site
+//! diagnostics plus a summary when the entry is nonzero); a count below
+//! it is a note inviting `--update-baseline`; malformed or unused
+//! pragmas are always errors, so suppressions cannot rot in place.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::baseline::{self, Baseline};
+use crate::rules::{self, Roots, RULES};
+use crate::scan;
+
+/// Directories walked relative to the repo root (missing ones are
+/// skipped so fixture trees can be partial).
+pub const ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+pub struct Options {
+    /// Repo (or fixture-tree) root.
+    pub root: PathBuf,
+    /// Ratchet baseline path; must exist and parse (fail closed).
+    pub baseline: PathBuf,
+    /// Rewrite the baseline to current counts — shrink-only; any count
+    /// above its entry makes the rewrite refuse.
+    pub update_baseline: bool,
+}
+
+pub struct Outcome {
+    /// Violations, ratchet breaches, pragma problems. Empty == pass.
+    pub errors: Vec<String>,
+    /// Stale-baseline notices; informational only.
+    pub notes: Vec<String>,
+    pub files_scanned: usize,
+    /// Unsuppressed violation counts: rule → repo-relative file → n.
+    pub counts: Baseline,
+    pub baseline_written: bool,
+}
+
+impl Outcome {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, recording repo-relative
+/// paths with `/` separators, children in sorted order.
+fn collect(dir: &Path, rel: &str, out: &mut Vec<String>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut names: Vec<String> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        names.push(entry.file_name().to_string_lossy().into_owned());
+    }
+    names.sort();
+    for name in names {
+        let path = dir.join(&name);
+        let child = format!("{rel}/{name}");
+        if path.is_dir() {
+            collect(&path, &child, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+fn walk(root: &Path) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for r in ROOTS {
+        let dir = root.join(r);
+        if dir.is_dir() {
+            collect(&dir, r, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn applies(rule: &rules::Rule, rel: &str) -> bool {
+    if rule.exempt.contains(&rel) {
+        return false;
+    }
+    match rule.roots {
+        Roots::SrcOnly => rel.starts_with("rust/src/"),
+        Roots::All => true,
+    }
+}
+
+pub fn run(opts: &Options) -> Result<Outcome, String> {
+    let baseline_text = fs::read_to_string(&opts.baseline).map_err(|e| {
+        format!("cannot read ratchet baseline {} (fail closed): {e}", opts.baseline.display())
+    })?;
+    let known = rules::rule_ids();
+    let allowed = baseline::parse(&baseline_text, &known)?;
+
+    let files = walk(&opts.root)?;
+    // rule → file → per-site diagnostic lines (unsuppressed).
+    let mut sites: BTreeMap<String, BTreeMap<String, Vec<String>>> = BTreeMap::new();
+    let mut pragma_errors: Vec<String> = Vec::new();
+    for rel in &files {
+        let path = opts.root.join(rel);
+        let src = fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let sc = scan::scan(&src, &known);
+        let mut used = vec![false; sc.pragmas.len()];
+        for rule in RULES {
+            if !applies(rule, rel) {
+                continue;
+            }
+            for (idx, line) in sc.lines.iter().enumerate() {
+                if rule.skip_cfg_test && line.in_test {
+                    continue;
+                }
+                let msgs = rules::match_line(rule.id, &line.code);
+                if msgs.is_empty() {
+                    continue;
+                }
+                if rule.id == "D06" {
+                    let justified = line.comment.contains("SAFETY:")
+                        || (idx > 0 && sc.lines[idx - 1].comment.contains("SAFETY:"));
+                    if justified {
+                        continue;
+                    }
+                }
+                let mut suppressed = false;
+                for (pi, p) in sc.pragmas.iter().enumerate() {
+                    if p.problem.is_none() && p.rule == rule.id && p.target == Some(line.number) {
+                        used[pi] = true;
+                        suppressed = true;
+                    }
+                }
+                if suppressed {
+                    continue;
+                }
+                let entry =
+                    sites.entry(rule.id.to_string()).or_default().entry(rel.clone()).or_default();
+                for m in msgs {
+                    entry.push(format!("{rel}:{}: {m}", line.number));
+                }
+            }
+        }
+        for (pi, p) in sc.pragmas.iter().enumerate() {
+            if let Some(problem) = &p.problem {
+                pragma_errors.push(format!("{rel}:{}: {problem}", p.line));
+            } else if !used[pi] {
+                pragma_errors.push(format!(
+                    "{rel}:{}: unused lint:allow({}) — no {} violation on the covered line; \
+                     remove the stale pragma",
+                    p.line, p.rule, p.rule
+                ));
+            }
+        }
+    }
+
+    let mut counts: Baseline = BTreeMap::new();
+    for (rule, by_file) in &sites {
+        let m = counts.entry(rule.clone()).or_default();
+        for (file, s) in by_file {
+            m.insert(file.clone(), s.len());
+        }
+    }
+
+    // Ratchet comparison over the union of observed and baselined pairs.
+    let mut errors: Vec<String> = Vec::new();
+    let mut notes: Vec<String> = Vec::new();
+    let empty = BTreeMap::new();
+    for rule in RULES {
+        let id = rule.id;
+        let actual_files = counts.get(id).unwrap_or(&empty);
+        let allowed_files = allowed.get(id).unwrap_or(&empty);
+        let mut all: Vec<&String> = actual_files.keys().chain(allowed_files.keys()).collect();
+        all.sort();
+        all.dedup();
+        for file in all {
+            let actual = actual_files.get(file).copied().unwrap_or(0);
+            let allow = allowed_files.get(file).copied().unwrap_or(0);
+            if actual > allow {
+                if let Some(s) = sites.get(id).and_then(|m| m.get(file)) {
+                    errors.extend(s.iter().cloned());
+                }
+                if allow > 0 {
+                    errors.push(format!(
+                        "{file}: {id} count {actual} exceeds the ratchet baseline ({allow}) — \
+                         the ratchet only goes down"
+                    ));
+                }
+            } else if actual < allow {
+                notes.push(format!(
+                    "note: {file}: {id} baseline {allow} > actual {actual} — run \
+                     `cargo run -p xtask -- lint --update-baseline` to ratchet down"
+                ));
+            }
+        }
+    }
+    errors.extend(pragma_errors);
+
+    let mut baseline_written = false;
+    if opts.update_baseline {
+        if errors.is_empty() {
+            fs::write(&opts.baseline, baseline::render(&counts)).map_err(|e| {
+                format!("cannot write ratchet baseline {}: {e}", opts.baseline.display())
+            })?;
+            baseline_written = true;
+        } else {
+            errors.push(
+                "refusing to rewrite the ratchet baseline while the lint pass is failing — \
+                 the ratchet only goes down; fix the new violations instead"
+                    .to_string(),
+            );
+        }
+    }
+
+    Ok(Outcome { errors, notes, files_scanned: files.len(), counts, baseline_written })
+}

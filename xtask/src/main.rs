@@ -1,0 +1,69 @@
+//! `cargo run -p xtask -- lint [--root DIR] [--baseline FILE]
+//! [--update-baseline]`
+//!
+//! Exit codes: 0 clean, 1 lint errors, 2 usage or IO/parse failure.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::lint;
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: cargo run -p xtask -- lint [--root DIR] [--baseline FILE] [--update-baseline]"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("lint") {
+        return usage();
+    }
+    let mut root: Option<PathBuf> = None;
+    let mut baseline: Option<PathBuf> = None;
+    let mut update_baseline = false;
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--baseline" => match it.next() {
+                Some(v) => baseline = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--update-baseline" => update_baseline = true,
+            _ => return usage(),
+        }
+    }
+    // Default to the workspace root: xtask/.. at build time.
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."));
+    let baseline = baseline.unwrap_or_else(|| root.join("xtask").join("lint-baseline.json"));
+    let opts = lint::Options { root, baseline, update_baseline };
+    match lint::run(&opts) {
+        Ok(out) => {
+            for n in &out.notes {
+                println!("{n}");
+            }
+            for e in &out.errors {
+                eprintln!("error: {e}");
+            }
+            if out.baseline_written {
+                println!("ratchet baseline rewritten: {}", opts.baseline.display());
+            }
+            if out.ok() {
+                println!("determinism lint: clean ({} files scanned)", out.files_scanned);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("determinism lint: {} error(s)", out.errors.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! The determinism rule table (D01–D07) and per-line matchers.
+//!
+//! Every rule is a textual pattern over the masked code view from
+//! [`crate::scan`]; scoping (which roots, which exempt files, whether
+//! `#[cfg(test)]` scopes are skipped) lives here so the engine in
+//! [`crate::lint`] stays generic. DESIGN.md §12 documents each rule's
+//! rationale; the messages below are pinned verbatim by
+//! `xtask/tests/lint.rs`.
+
+/// Which scan roots a rule applies to.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Roots {
+    /// Library code only: `rust/src`.
+    SrcOnly,
+    /// Everything the pass walks: `rust/src`, `rust/tests`,
+    /// `rust/benches`, `examples`.
+    All,
+}
+
+/// One determinism rule.
+pub struct Rule {
+    pub id: &'static str,
+    /// Skip matches inside `#[cfg(test)]` item scopes.
+    pub skip_cfg_test: bool,
+    pub roots: Roots,
+    /// Repo-relative files where the pattern is the sanctioned home.
+    pub exempt: &'static [&'static str],
+}
+
+pub const RULES: &[Rule] = &[
+    // Unordered std collections: iteration order varies run to run
+    // (RandomState seeding), so any observation of it breaks replay.
+    // Applies to test scopes too — assertions that iterate a set are
+    // exactly how the flake reaches CI.
+    Rule { id: "D01", skip_cfg_test: false, roots: Roots::SrcOnly, exempt: &[] },
+    // Wall-clock reads outside the one sanctioned reporting helper.
+    Rule {
+        id: "D02",
+        skip_cfg_test: false,
+        roots: Roots::All,
+        exempt: &["rust/src/util/bench.rs"],
+    },
+    // Ambient (OS- or hasher-seeded) randomness; all draws must come
+    // from counter-keyed `util::rng::Pcg64` streams.
+    Rule { id: "D03", skip_cfg_test: false, roots: Roots::All, exempt: &[] },
+    // Raw thread spawns outside the executor that owns the
+    // parallel==serial contract.
+    Rule {
+        id: "D04",
+        skip_cfg_test: false,
+        roots: Roots::All,
+        exempt: &["rust/src/coordinator/executor.rs"],
+    },
+    // Order-sensitive float iterator reductions outside the shared
+    // kernels (util/math.rs owns reduction order; util/bench.rs reduces
+    // wall-time samples, which never feed replayed state).
+    Rule {
+        id: "D05",
+        skip_cfg_test: true,
+        roots: Roots::SrcOnly,
+        exempt: &["rust/src/util/math.rs", "rust/src/util/bench.rs"],
+    },
+    // `unsafe` without a `// SAFETY:` justification.
+    Rule { id: "D06", skip_cfg_test: false, roots: Roots::All, exempt: &[] },
+    // Panicking extractors on fallible paths in library code; the
+    // existing mass ratchets down via xtask/lint-baseline.json.
+    Rule { id: "D07", skip_cfg_test: true, roots: Roots::SrcOnly, exempt: &[] },
+];
+
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).collect()
+}
+
+pub fn find(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+#[inline]
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Count occurrences of `pat` in `code` whose first and last characters
+/// sit on identifier boundaries (so `Instant` never matches inside
+/// `Instantiate`). Patterns may contain punctuation; only the outer
+/// edges are boundary-checked.
+fn count_bounded(code: &str, pat: &str) -> usize {
+    let (code, pat) = (code.as_bytes(), pat.as_bytes());
+    let mut n = 0usize;
+    let mut i = 0usize;
+    while i + pat.len() <= code.len() {
+        if &code[i..i + pat.len()] == pat {
+            let left_ok = i == 0 || !is_ident(code[i - 1]);
+            let after = i + pat.len();
+            let right_ok = after >= code.len() || !is_ident(code[after]);
+            if left_ok && right_ok {
+                n += 1;
+                i += pat.len();
+                continue;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Count `spawn` call sites: the identifier preceded (modulo spaces) by
+/// `.` or `::` and followed (modulo spaces) by `(`.
+fn count_spawn_calls(code: &str) -> usize {
+    let bytes = code.as_bytes();
+    let mut n = 0usize;
+    let mut i = 0usize;
+    const PAT: &[u8] = b"spawn";
+    while i + PAT.len() <= bytes.len() {
+        if &bytes[i..i + PAT.len()] == PAT
+            && (i == 0 || !is_ident(bytes[i - 1]))
+            && !bytes.get(i + PAT.len()).is_some_and(|&b| is_ident(b))
+        {
+            let mut l = i;
+            while l > 0 && bytes[l - 1] == b' ' {
+                l -= 1;
+            }
+            let called_on = l > 0 && (bytes[l - 1] == b'.' || (l > 1 && &bytes[l - 2..l] == b"::"));
+            let mut r = i + PAT.len();
+            while r < bytes.len() && bytes[r] == b' ' {
+                r += 1;
+            }
+            let invoked = r < bytes.len() && bytes[r] == b'(';
+            if called_on && invoked {
+                n += 1;
+            }
+            i += PAT.len();
+            continue;
+        }
+        i += 1;
+    }
+    n
+}
+
+fn count_plain(code: &str, pat: &str) -> usize {
+    code.matches(pat).count()
+}
+
+/// Match one masked code line against one rule, returning a diagnostic
+/// message per hit. D06 candidates are returned unconditionally; the
+/// engine drops those justified by a `// SAFETY:` comment (it alone
+/// sees the neighboring lines).
+pub fn match_line(id: &str, code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    match id {
+        "D01" => {
+            for name in ["HashMap", "HashSet"] {
+                for _ in 0..count_bounded(code, name) {
+                    out.push(format!(
+                        "D01 unordered collection `{name}` — iteration order is \
+                         nondeterministic and breaks bitwise replay; use BTreeMap/BTreeSet \
+                         or a sorted Vec"
+                    ));
+                }
+            }
+        }
+        "D02" => {
+            for pat in ["Instant::now", "SystemTime::now", "UNIX_EPOCH"] {
+                for _ in 0..count_bounded(code, pat) {
+                    out.push(format!(
+                        "D02 wall-clock read `{pat}` outside util/bench — wall time must \
+                         never reach replayed state; use util::bench::WallTimer for reporting"
+                    ));
+                }
+            }
+        }
+        "D03" => {
+            for pat in [
+                "thread_rng",
+                "from_entropy",
+                "OsRng",
+                "StdRng",
+                "SmallRng",
+                "getrandom",
+                "RandomState",
+                "DefaultHasher",
+            ] {
+                for _ in 0..count_bounded(code, pat) {
+                    out.push(format!(
+                        "D03 ambient randomness `{pat}` — every random draw must come \
+                         from a counter-keyed util::rng::Pcg64 stream"
+                    ));
+                }
+            }
+        }
+        "D04" => {
+            for _ in 0..count_spawn_calls(code) {
+                out.push(
+                    "D04 raw thread spawn outside coordinator::executor — unmanaged \
+                     threads break the parallel==serial contract"
+                        .to_string(),
+                );
+            }
+        }
+        "D05" => {
+            let pats = [".sum::<f32>(", ".sum::<f64>(", ".product::<f32>(", ".product::<f64>("];
+            for pat in pats {
+                for _ in 0..count_plain(code, pat) {
+                    let name = &pat[..pat.len() - 1];
+                    out.push(format!(
+                        "D05 order-sensitive float reduction `{name}()` — reduction order \
+                         must have one home; route through util::math \
+                         (sum_f64/mean_f64/norm2_f64)"
+                    ));
+                }
+            }
+        }
+        "D06" => {
+            for _ in 0..count_bounded(code, "unsafe") {
+                out.push(
+                    "D06 `unsafe` without a `// SAFETY:` comment on the same or \
+                     preceding line"
+                        .to_string(),
+                );
+            }
+        }
+        "D07" => {
+            for (pat, name) in [(".unwrap()", ".unwrap()"), (".expect(", ".expect(..)")] {
+                for _ in 0..count_plain(code, pat) {
+                    out.push(format!(
+                        "D07 `{name}` on a fallible path in library code — return a \
+                         Result instead (existing sites ratchet down via \
+                         xtask/lint-baseline.json)"
+                    ));
+                }
+            }
+        }
+        other => panic!("unknown rule {other}"),
+    }
+    out
+}

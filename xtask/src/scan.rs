@@ -1,0 +1,339 @@
+//! Hand-rolled Rust source scanner for the determinism lint pass.
+//!
+//! Not a parser: a byte-level state machine that produces a *code view*
+//! of a source file — comment and literal contents blanked out with
+//! spaces so line structure survives — plus per-line comment text,
+//! `#[cfg(test)]` item-scope tracking by brace depth, and parsed
+//! `// lint:allow(D0x): <reason>` pragmas. Rule matching then works on
+//! the masked code with plain substring + identifier-boundary checks.
+//! Same hermetic philosophy as the vendored `anyhow`: no syn, no
+//! proc-macro machinery, nothing an offline container can't build.
+//!
+//! Handled literal forms: line comments, nested block comments, string
+//! literals (with `\"` escapes and `\`-newline continuations), byte
+//! strings, raw strings `r"…"`/`r#"…"#` (and `br` variants, any hash
+//! depth), char and byte-char literals including escapes, and the
+//! char-literal/lifetime ambiguity (`'a'` vs `<'a>`).
+//!
+//! Known, documented limits (see DESIGN.md §12): `#[cfg(test)]` is only
+//! recognized on its own line (the rustfmt-enforced house style), and
+//! macro-generated code is scanned as written, not as expanded.
+
+/// One source line of the masked code view.
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comment/literal contents replaced by spaces.
+    pub code: String,
+    /// Concatenated text of every comment fragment on this line.
+    pub comment: String,
+    /// True inside a `#[cfg(test)]` item's brace block (including the
+    /// opening and closing lines).
+    pub in_test: bool,
+}
+
+/// One `lint:allow(...)` pragma found in a comment.
+pub struct Pragma {
+    /// Line the pragma is written on (1-based).
+    pub line: usize,
+    /// The rule id named inside the parentheses (may be unknown).
+    pub rule: String,
+    /// The code line this pragma covers: its own line when the pragma
+    /// trails code, otherwise the next line that contains code.
+    pub target: Option<usize>,
+    /// Why the pragma cannot suppress anything (malformed / unknown
+    /// rule / missing reason); `None` for a well-formed pragma.
+    pub problem: Option<String>,
+}
+
+/// Full scan result for one file.
+pub struct Scan {
+    pub lines: Vec<Line>,
+    pub pragmas: Vec<Pragma>,
+}
+
+#[inline]
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte length of the UTF-8 character starting at `b` (1 for malformed
+/// continuation bytes — good enough for literal-vs-lifetime sniffing).
+#[inline]
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b < 0xE0 {
+        2
+    } else if b < 0xF0 {
+        3
+    } else {
+        4
+    }
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Detect a raw-string opener (`r"`, `r#"`, `br##"` …) at `i`. Returns
+/// `(hash_count, prefix_len)` with `prefix_len` covering everything up
+/// to and including the opening quote.
+fn raw_str_open(src: &[u8], i: usize) -> Option<(u32, usize)> {
+    if i > 0 && (is_ident(src[i - 1]) || src[i - 1] == b'"') {
+        return None;
+    }
+    let mut j = i;
+    if src.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if src.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while src.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if src.get(j) == Some(&b'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Mask a source file: per-line code view + per-line comment text.
+fn mask(src: &[u8]) -> (Vec<String>, Vec<String>) {
+    let mut code: Vec<Vec<u8>> = vec![Vec::new()];
+    let mut comment: Vec<Vec<u8>> = vec![Vec::new()];
+    let mut state = State::Code;
+    let mut i = 0usize;
+    while i < src.len() {
+        let b = src[i];
+        if b == b'\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            code.push(Vec::new());
+            comment.push(Vec::new());
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if b == b'/' && src.get(i + 1) == Some(&b'/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if b == b'/' && src.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if let Some((hashes, len)) = raw_str_open(src, i) {
+                    state = State::RawStr(hashes);
+                    push_spaces(&mut code, len);
+                    i += len;
+                } else if b == b'"' {
+                    state = State::Str;
+                    push_spaces(&mut code, 1);
+                    i += 1;
+                } else if b == b'\'' {
+                    // Char literal vs lifetime. A literal is exactly one
+                    // (possibly escaped) character between quotes;
+                    // anything else (`'a`, `'static`, `'_`) is a
+                    // lifetime and only the quote itself is consumed.
+                    if src.get(i + 1) == Some(&b'\\') {
+                        let mut j = i + 3; // skip the escaped byte
+                        while j < src.len() && src[j] != b'\'' && src[j] != b'\n' {
+                            j += 1;
+                        }
+                        let end = if j < src.len() && src[j] == b'\'' { j + 1 } else { j };
+                        push_spaces(&mut code, end - i);
+                        i = end;
+                    } else {
+                        let clen = src.get(i + 1).map(|&c| utf8_len(c)).unwrap_or(1);
+                        if src.get(i + 1 + clen) == Some(&b'\'') {
+                            push_spaces(&mut code, clen + 2);
+                            i += clen + 2;
+                        } else {
+                            push_spaces(&mut code, 1);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.last_mut().expect("line buffer").push(b);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.last_mut().expect("line buffer").push(b);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if b == b'/' && src.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if b == b'*' && src.get(i + 1) == Some(&b'/') {
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.last_mut().expect("line buffer").push(b);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    if src.get(i + 1) == Some(&b'\n') {
+                        i += 1; // leave the newline to the top handler
+                    } else {
+                        push_spaces(&mut code, 2);
+                        i += 2;
+                    }
+                } else if b == b'"' {
+                    state = State::Code;
+                    push_spaces(&mut code, 1);
+                    i += 1;
+                } else {
+                    push_spaces(&mut code, 1);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if b == b'"' {
+                    let h = hashes as usize;
+                    let closed = (1..=h).all(|k| src.get(i + k) == Some(&b'#'));
+                    if closed {
+                        state = State::Code;
+                        push_spaces(&mut code, 1 + h);
+                        i += 1 + h;
+                        continue;
+                    }
+                }
+                push_spaces(&mut code, 1);
+                i += 1;
+            }
+        }
+    }
+    let to_string = |v: Vec<Vec<u8>>| {
+        v.into_iter().map(|l| String::from_utf8_lossy(&l).into_owned()).collect()
+    };
+    (to_string(code), to_string(comment))
+}
+
+fn push_spaces(code: &mut [Vec<u8>], n: usize) {
+    let last = code.last_mut().expect("line buffer");
+    for _ in 0..n {
+        last.push(b' ');
+    }
+}
+
+/// Track `#[cfg(test)]` item scopes over the masked code lines: the
+/// attribute on its own line arms a latch; the next `{` opens the test
+/// block (a `;` first — attribute on a braceless item — disarms it),
+/// and the block closes when brace depth returns to its opening level.
+fn mark_test_scopes(code: &[String]) -> Vec<bool> {
+    let mut out = vec![false; code.len()];
+    let mut depth = 0usize;
+    let mut awaiting = false;
+    let mut test_open: Option<usize> = None;
+    for (idx, line) in code.iter().enumerate() {
+        let started_in_test = test_open.is_some();
+        let mut activated = false;
+        if line.trim() == "#[cfg(test)]" {
+            awaiting = test_open.is_none();
+        } else {
+            for b in line.bytes() {
+                match b {
+                    b'{' => {
+                        if awaiting {
+                            test_open = Some(depth);
+                            awaiting = false;
+                            activated = true;
+                        }
+                        depth += 1;
+                    }
+                    b'}' => {
+                        depth = depth.saturating_sub(1);
+                        if test_open.is_some_and(|open| depth <= open) {
+                            test_open = None;
+                        }
+                    }
+                    b';' => {
+                        if awaiting && test_open.is_none() {
+                            awaiting = false;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out[idx] = started_in_test || activated;
+    }
+    out
+}
+
+/// Extract every `lint:allow(...)` pragma from one line's comment text.
+fn parse_pragmas(line_no: usize, comment: &str, known: &[&str], out: &mut Vec<Pragma>) {
+    const NEEDLE: &str = "lint:allow(";
+    let mut at = 0usize;
+    while let Some(pos) = comment[at..].find(NEEDLE) {
+        let rest = &comment[at + pos + NEEDLE.len()..];
+        at += pos + NEEDLE.len();
+        let Some(close) = rest.find(')') else {
+            out.push(Pragma {
+                line: line_no,
+                rule: String::new(),
+                target: None,
+                problem: Some("lint:allow( without a closing parenthesis".into()),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let after = &rest[close + 1..];
+        let problem = if !known.contains(&rule.as_str()) {
+            Some(format!("lint:allow({rule}) names an unknown rule (known: D01..D07)"))
+        } else if !after.starts_with(':') || after[1..].trim().is_empty() {
+            Some(format!(
+                "lint:allow({rule}) is missing its mandatory reason — \
+                 write `// lint:allow({rule}): <why this is sound>`"
+            ))
+        } else {
+            None
+        };
+        out.push(Pragma { line: line_no, rule, target: None, problem });
+    }
+}
+
+/// Scan one source file into its code view, test-scope map and pragmas.
+pub fn scan(source: &str, known_rules: &[&str]) -> Scan {
+    let (code, comment) = mask(source.as_bytes());
+    let in_test = mark_test_scopes(&code);
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut pending: Vec<usize> = Vec::new(); // indices awaiting a target
+    let mut lines = Vec::with_capacity(code.len());
+    for (idx, (code, comment)) in code.into_iter().zip(comment).enumerate() {
+        let number = idx + 1;
+        let before = pragmas.len();
+        parse_pragmas(number, &comment, known_rules, &mut pragmas);
+        let has_code = !code.trim().is_empty();
+        if has_code {
+            // Standalone pragmas above this line cover it; pragmas
+            // written on a code line cover that same line.
+            for p in pending.drain(..) {
+                pragmas[p].target = Some(number);
+            }
+            for p in pragmas.iter_mut().skip(before) {
+                p.target = Some(number);
+            }
+        } else {
+            pending.extend(before..pragmas.len());
+        }
+        lines.push(Line { number, code, comment, in_test: in_test[idx] });
+    }
+    // Pragmas at EOF with no code after them cover nothing and will be
+    // reported as unused.
+    Scan { lines, pragmas }
+}

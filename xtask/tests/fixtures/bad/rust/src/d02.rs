@@ -1,0 +1,4 @@
+pub fn now_s() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,4 @@
+pub fn ambient_seed() -> u64 {
+    let h = std::collections::hash_map::DefaultHasher::new();
+    std::hash::Hasher::finish(&h)
+}

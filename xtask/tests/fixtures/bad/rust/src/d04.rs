@@ -1,0 +1,3 @@
+pub fn fire_and_forget() {
+    std::thread::spawn(|| {});
+}

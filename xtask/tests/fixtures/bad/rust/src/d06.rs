@@ -1,0 +1,3 @@
+pub fn deref(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,3 @@
+pub fn parse_port(s: &str) -> u32 {
+    s.parse().unwrap()
+}

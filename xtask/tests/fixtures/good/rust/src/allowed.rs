@@ -1,0 +1,9 @@
+pub fn helper() {
+    // lint:allow(D04): fixture stands in for a sanctioned helper thread
+    std::thread::spawn(|| {});
+}
+
+pub fn timed() -> f64 {
+    let t = std::time::Instant::now(); // lint:allow(D02): report-only timing in a fixture
+    t.elapsed().as_secs_f64()
+}

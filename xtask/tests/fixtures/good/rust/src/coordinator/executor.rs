@@ -1,0 +1,3 @@
+pub fn run_managed(f: impl FnOnce() + Send + 'static) {
+    std::thread::spawn(f);
+}

@@ -1,0 +1,13 @@
+//! Mentions HashMap, Instant::now and unsafe in doc comments only.
+
+pub const DOC: &str = "HashMap Instant::now thread_rng .sum::<f64>( unsafe .unwrap() spawn(";
+
+pub const RAW: &str = r#"HashMap "quoted" unsafe .unwrap()"#;
+
+/* block comment: HashMap /* nested: SystemTime::now */ .unwrap() */
+pub fn lifetimes<'a>(x: &'a str, _y: &'a str) -> &'a str {
+    let marker = 'H';
+    let escaped = '\'';
+    let _ = (marker, escaped);
+    x
+}

@@ -1,0 +1,8 @@
+pub fn deref(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads
+    unsafe { *p }
+}
+
+pub fn deref_trailing(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: caller guarantees p is valid for reads
+}

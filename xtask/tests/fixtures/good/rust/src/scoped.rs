@@ -1,0 +1,15 @@
+pub fn double(x: u32) -> u32 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reductions_and_unwraps_are_fine_in_tests() {
+        let xs = [1.0f64, 2.0];
+        let s = xs.iter().sum::<f64>();
+        assert!(s > 2.9);
+        let v: Option<u32> = Some(1);
+        v.unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+pub fn sample() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn mean_wall(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

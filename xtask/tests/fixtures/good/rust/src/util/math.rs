@@ -1,0 +1,3 @@
+pub fn sum_f64(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}

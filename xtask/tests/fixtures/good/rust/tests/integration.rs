@@ -1,0 +1,6 @@
+#[test]
+fn reductions_and_unwraps_allowed_under_tests_root() {
+    let xs = [1.0f64];
+    assert!(xs.iter().sum::<f64>() > 0.0);
+    "1".parse::<u32>().unwrap();
+}

@@ -1,0 +1,15 @@
+pub fn stale() -> u32 {
+    // lint:allow(D04): nothing on the next line actually spawns
+    let x = 1;
+    x
+}
+
+pub fn missing_reason() {
+    // lint:allow(D04)
+    std::thread::spawn(|| {});
+}
+
+pub fn unknown_rule() {
+    // lint:allow(D99): not a rule at all
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,358 @@
+//! Fixture-driven tests for the determinism lint pass: exact diagnostic
+//! strings (rule id, file, line), known-good files, pragma/unused-allow
+//! semantics, ratchet behavior, and the scanner's literal handling.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use xtask::lint::{run, Options, Outcome};
+use xtask::rules::rule_ids;
+use xtask::scan::scan;
+
+fn fixture(path: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(path)
+}
+
+fn lint_fixture(root: &str) -> Outcome {
+    run(&Options {
+        root: fixture(root),
+        baseline: fixture("empty-baseline.json"),
+        update_baseline: false,
+    })
+    .unwrap()
+}
+
+fn assert_has(out: &Outcome, expected: &str) {
+    assert!(
+        out.errors.iter().any(|e| e == expected),
+        "missing diagnostic:\n  want: {expected}\n  got:\n{}",
+        out.errors.join("\n")
+    );
+}
+
+// ---------------------------------------------------------------- bad corpus
+
+#[test]
+fn bad_corpus_pins_exact_diagnostics() {
+    let out = lint_fixture("bad");
+    let d01 = "D01 unordered collection `HashMap` — iteration order is nondeterministic and \
+               breaks bitwise replay; use BTreeMap/BTreeSet or a sorted Vec";
+    assert_has(&out, &format!("rust/src/d01.rs:1: {d01}"));
+    assert_has(&out, &format!("rust/src/d01.rs:3: {d01}"));
+    assert_has(&out, &format!("rust/src/d01.rs:4: {d01}"));
+    assert_has(
+        &out,
+        "rust/src/d02.rs:2: D02 wall-clock read `Instant::now` outside util/bench — wall time \
+         must never reach replayed state; use util::bench::WallTimer for reporting",
+    );
+    assert_has(
+        &out,
+        "rust/src/d03.rs:2: D03 ambient randomness `DefaultHasher` — every random draw must \
+         come from a counter-keyed util::rng::Pcg64 stream",
+    );
+    assert_has(
+        &out,
+        "rust/src/d04.rs:2: D04 raw thread spawn outside coordinator::executor — unmanaged \
+         threads break the parallel==serial contract",
+    );
+    assert_has(
+        &out,
+        "rust/src/d05.rs:2: D05 order-sensitive float reduction `.sum::<f64>()` — reduction \
+         order must have one home; route through util::math (sum_f64/mean_f64/norm2_f64)",
+    );
+    assert_has(
+        &out,
+        "rust/src/d06.rs:2: D06 `unsafe` without a `// SAFETY:` comment on the same or \
+         preceding line",
+    );
+    assert_has(
+        &out,
+        "rust/src/d07.rs:2: D07 `.unwrap()` on a fallible path in library code — return a \
+         Result instead (existing sites ratchet down via xtask/lint-baseline.json)",
+    );
+    assert_eq!(out.errors.len(), 9, "unexpected extras:\n{}", out.errors.join("\n"));
+    assert_eq!(out.counts["D01"]["rust/src/d01.rs"], 3);
+    assert!(out.notes.is_empty());
+}
+
+// ---------------------------------------------------------------- good corpus
+
+#[test]
+fn good_corpus_is_clean() {
+    let out = lint_fixture("good");
+    assert!(out.ok(), "good corpus must pass:\n{}", out.errors.join("\n"));
+    assert!(out.notes.is_empty(), "{:?}", out.notes);
+    assert_eq!(out.files_scanned, 8);
+    assert!(out.counts.is_empty(), "{:?}", out.counts);
+}
+
+// ------------------------------------------------------------ pragma semantics
+
+#[test]
+fn pragma_semantics_are_enforced() {
+    let out = lint_fixture("pragmas");
+    assert_has(
+        &out,
+        "rust/src/pragmas.rs:2: unused lint:allow(D04) — no D04 violation on the covered \
+         line; remove the stale pragma",
+    );
+    assert_has(
+        &out,
+        "rust/src/pragmas.rs:8: lint:allow(D04) is missing its mandatory reason — write \
+         `// lint:allow(D04): <why this is sound>`",
+    );
+    assert_has(
+        &out,
+        "rust/src/pragmas.rs:13: lint:allow(D99) names an unknown rule (known: D01..D07)",
+    );
+    let d04 = "D04 raw thread spawn outside coordinator::executor — unmanaged threads break \
+               the parallel==serial contract";
+    assert_has(&out, &format!("rust/src/pragmas.rs:9: {d04}"));
+    assert_has(&out, &format!("rust/src/pragmas.rs:14: {d04}"));
+    assert_eq!(out.errors.len(), 5, "{}", out.errors.join("\n"));
+}
+
+// ---------------------------------------------------------------- the ratchet
+
+const APP: &str = "pub fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    \
+                   a.unwrap() + b.unwrap()\n}\n";
+
+fn tmp_tree(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("xtask_lint_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("rust").join("src")).unwrap();
+    dir
+}
+
+fn put(dir: &std::path::Path, rel: &str, text: &str) {
+    let p = dir.join(rel);
+    std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+    std::fs::write(p, text).unwrap();
+}
+
+fn d07_baseline(file: &str, n: usize) -> String {
+    let mut by_file = BTreeMap::new();
+    by_file.insert(file.to_string(), n);
+    let mut b = BTreeMap::new();
+    b.insert("D07".to_string(), by_file);
+    xtask::baseline::render(&b)
+}
+
+fn opts(dir: &std::path::Path, update: bool) -> Options {
+    Options {
+        root: dir.to_path_buf(),
+        baseline: dir.join("baseline.json"),
+        update_baseline: update,
+    }
+}
+
+#[test]
+fn ratchet_at_par_passes_silently() {
+    let dir = tmp_tree("at_par");
+    put(&dir, "rust/src/app.rs", APP);
+    put(&dir, "baseline.json", &d07_baseline("rust/src/app.rs", 2));
+    let out = run(&opts(&dir, false)).unwrap();
+    assert!(out.ok(), "{}", out.errors.join("\n"));
+    assert!(out.notes.is_empty(), "{:?}", out.notes);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn ratchet_exceeded_fails_with_sites_and_summary() {
+    let dir = tmp_tree("exceeded");
+    put(&dir, "rust/src/app.rs", APP);
+    put(&dir, "baseline.json", &d07_baseline("rust/src/app.rs", 1));
+    let out = run(&opts(&dir, false)).unwrap();
+    assert_has(
+        &out,
+        "rust/src/app.rs: D07 count 2 exceeds the ratchet baseline (1) — the ratchet only \
+         goes down",
+    );
+    // Both sites are reported so the offender is findable either way.
+    let d07 = "D07 `.unwrap()` on a fallible path in library code — return a Result instead \
+               (existing sites ratchet down via xtask/lint-baseline.json)";
+    assert_has(&out, &format!("rust/src/app.rs:2: {d07}"));
+    assert_eq!(out.errors.len(), 3, "{}", out.errors.join("\n"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn ratchet_below_baseline_notes_the_slack() {
+    let dir = tmp_tree("stale");
+    put(&dir, "rust/src/app.rs", APP);
+    put(&dir, "baseline.json", &d07_baseline("rust/src/app.rs", 3));
+    let out = run(&opts(&dir, false)).unwrap();
+    assert!(out.ok(), "{}", out.errors.join("\n"));
+    assert_eq!(
+        out.notes,
+        vec![
+            "note: rust/src/app.rs: D07 baseline 3 > actual 2 — run \
+             `cargo run -p xtask -- lint --update-baseline` to ratchet down"
+                .to_string()
+        ]
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn update_baseline_shrinks_and_only_shrinks() {
+    let dir = tmp_tree("update");
+    put(&dir, "rust/src/app.rs", APP);
+    put(&dir, "baseline.json", &d07_baseline("rust/src/app.rs", 3));
+    let out = run(&opts(&dir, true)).unwrap();
+    assert!(out.ok() && out.baseline_written);
+    let rewritten = std::fs::read_to_string(dir.join("baseline.json")).unwrap();
+    let parsed = xtask::baseline::parse(&rewritten, &rule_ids()).unwrap();
+    assert_eq!(parsed["D07"]["rust/src/app.rs"], 2);
+    // The rewritten baseline is exactly at par: a second pass is silent.
+    let again = run(&opts(&dir, false)).unwrap();
+    assert!(again.ok() && again.notes.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn update_baseline_refuses_to_raise_the_ratchet() {
+    let dir = tmp_tree("refuse");
+    put(&dir, "rust/src/app.rs", APP);
+    let before = d07_baseline("rust/src/app.rs", 1);
+    put(&dir, "baseline.json", &before);
+    let out = run(&opts(&dir, true)).unwrap();
+    assert!(!out.ok() && !out.baseline_written);
+    assert_has(
+        &out,
+        "refusing to rewrite the ratchet baseline while the lint pass is failing — the \
+         ratchet only goes down; fix the new violations instead",
+    );
+    assert_eq!(std::fs::read_to_string(dir.join("baseline.json")).unwrap(), before);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn baseline_is_fail_closed() {
+    let dir = tmp_tree("fail_closed");
+    put(&dir, "rust/src/app.rs", "pub fn ok() {}\n");
+    // Missing baseline file.
+    let e = run(&opts(&dir, false)).unwrap_err();
+    assert!(e.contains("fail closed"), "{e}");
+    // Unknown rule id.
+    put(&dir, "baseline.json", "{\"version\": 1, \"rules\": {\"D42\": {\"a.rs\": 1}}}");
+    let e = run(&opts(&dir, false)).unwrap_err();
+    assert!(e.contains("unknown rule id"), "{e}");
+    // Wrong format version.
+    put(&dir, "baseline.json", "{\"version\": 2, \"rules\": {}}");
+    let e = run(&opts(&dir, false)).unwrap_err();
+    assert!(e.contains("version 2 != 1"), "{e}");
+    // Unknown top-level key.
+    put(&dir, "baseline.json", "{\"version\": 1, \"rules\": {}, \"extra\": {}}");
+    let e = run(&opts(&dir, false)).unwrap_err();
+    assert!(e.contains("unknown top-level key"), "{e}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn introducing_a_synthetic_violation_flips_a_clean_tree() {
+    let dir = tmp_tree("flip");
+    put(&dir, "rust/src/clean.rs", "pub fn ok(x: u32) -> u32 {\n    x + 1\n}\n");
+    put(&dir, "baseline.json", &xtask::baseline::render(&BTreeMap::new()));
+    assert!(run(&opts(&dir, false)).unwrap().ok());
+    let snippets = [
+        "use std::collections::HashSet;\n",
+        "pub fn t() -> std::time::SystemTime {\n    std::time::SystemTime::now()\n}\n",
+        "pub fn r() {\n    let _ = rand::thread_rng();\n}\n",
+        "pub fn s() {\n    std::thread::spawn(|| {});\n}\n",
+        "pub fn p(xs: &[f32]) -> f32 {\n    xs.iter().product::<f32>()\n}\n",
+        "pub fn u(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        "pub fn w(s: &str) -> u32 {\n    s.parse().expect(\"fixture\")\n}\n",
+    ];
+    for (i, snippet) in snippets.iter().enumerate() {
+        put(&dir, "rust/src/synthetic.rs", snippet);
+        let out = run(&opts(&dir, false)).unwrap();
+        assert_eq!(out.errors.len(), 1, "snippet {i}:\n{}", out.errors.join("\n"));
+        let want = format!("D0{}", i + 1);
+        assert!(out.errors[0].contains(&want), "snippet {i}: {}", out.errors[0]);
+        std::fs::remove_file(dir.join("rust/src/synthetic.rs")).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ------------------------------------------------------------- the real tree
+
+#[test]
+fn real_tree_is_clean_under_the_committed_baseline() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let out = run(&Options {
+        root: root.clone(),
+        baseline: root.join("xtask").join("lint-baseline.json"),
+        update_baseline: false,
+    })
+    .unwrap();
+    assert!(
+        out.errors.is_empty(),
+        "determinism lint must pass on the tree:\n{}",
+        out.errors.join("\n")
+    );
+    // D01–D06 roll out at zero: only D07 may carry ratcheted debt.
+    for id in ["D01", "D02", "D03", "D04", "D05", "D06"] {
+        assert!(out.counts.get(id).is_none(), "{id} must be at zero: {:?}", out.counts.get(id));
+    }
+}
+
+// ------------------------------------------------------------ scanner details
+
+fn code_lines(src: &str) -> Vec<String> {
+    scan(src, &rule_ids()).lines.into_iter().map(|l| l.code).collect()
+}
+
+#[test]
+fn masking_blanks_strings_and_comments() {
+    let src = "let a = \"HashMap\"; // unsafe HashMap\nlet b = 1; /* .unwrap() */\n";
+    for (i, code) in code_lines(src).iter().enumerate() {
+        for pat in ["HashMap", "unsafe", ".unwrap()"] {
+            assert!(!code.contains(pat), "line {i}: {code:?}");
+        }
+    }
+}
+
+#[test]
+fn masking_handles_raw_strings_and_nested_block_comments() {
+    let lines = code_lines("let r = r#\"Instant::now \"x\" HashSet\"#;\nlet n = 2;\n");
+    assert!(!lines[0].contains("Instant") && !lines[0].contains("HashSet"), "{:?}", lines[0]);
+    assert!(lines[1].contains("let n = 2;"));
+    let lines = code_lines("/* a /* nested SystemTime::now */ b */ let x = 1;\n");
+    assert_eq!(lines[0].trim(), "let x = 1;");
+}
+
+#[test]
+fn masking_distinguishes_char_literals_from_lifetimes() {
+    let lines = code_lines("fn f<'a>(x: &'a str) -> &'a str {\n    let c = 'H';\n    x\n}\n");
+    assert!(lines[0].contains("<'a>") && lines[0].contains("&'a str"), "{:?}", lines[0]);
+    assert!(!lines[1].contains('H'), "{:?}", lines[1]);
+    assert!(lines[1].contains("let c ="), "{:?}", lines[1]);
+}
+
+#[test]
+fn masking_follows_string_continuations_across_lines() {
+    let lines = code_lines("let s = \"a\\\n   HashMap more\";\nlet t = 3;\n");
+    assert!(!lines[1].contains("HashMap"), "{:?}", lines[1]);
+    assert!(lines[2].contains("let t = 3;"), "{:?}", lines[2]);
+}
+
+#[test]
+fn cfg_test_scopes_are_tracked_by_brace_depth() {
+    let src = "pub fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\npub fn c() {}\n";
+    let flags: Vec<bool> = scan(src, &rule_ids()).lines.iter().map(|l| l.in_test).collect();
+    assert_eq!(flags, vec![false, false, true, true, true, false]);
+    // The attribute on a braceless item arms nothing once `;` lands.
+    let src = "#[cfg(test)]\nuse foo::bar;\nmod real {\n    fn d() {}\n}\n";
+    let flags: Vec<bool> = scan(src, &rule_ids()).lines.iter().map(|l| l.in_test).collect();
+    assert_eq!(flags, vec![false, false, false, false, false]);
+}
+
+#[test]
+fn standalone_pragmas_attach_to_the_next_code_line() {
+    let src = "// lint:allow(D07): covers the line after the gap\n\nlet v = x.unwrap();\n";
+    let sc = scan(src, &rule_ids());
+    assert_eq!(sc.pragmas.len(), 1);
+    assert_eq!(sc.pragmas[0].target, Some(3));
+    assert!(sc.pragmas[0].problem.is_none());
+}

@@ -1,0 +1,371 @@
+#!/usr/bin/env python3
+"""Bootstrap/refresh xtask/lint-baseline.json without a Rust toolchain.
+
+A line-for-line mirror of the xtask scanner (xtask/src/scan.rs) and rule
+table (xtask/src/rules.rs): masks comments/strings/chars, tracks
+#[cfg(test)] scopes by brace depth, honors `// lint:allow(D0x): reason`
+pragmas, and counts per-(rule, file) violations. D01–D06 must come out
+at zero (the script fails and lists them otherwise); D07's remaining
+mass becomes the ratchet baseline.
+
+The real linter treats baseline entries above the actual count as
+passing notes, so a mirror overcount is harmless; an undercount fails
+the driver's `cargo run -p xtask -- lint` — which is exactly the bug
+report we'd want.
+
+Usage: python3 xtask/tools/gen_baseline.py [repo_root]
+"""
+
+import sys
+from pathlib import Path
+
+ROOTS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+
+RULES = {
+    "D01": dict(skip_test=False, src_only=True, exempt=[]),
+    "D02": dict(skip_test=False, src_only=False, exempt=["rust/src/util/bench.rs"]),
+    "D03": dict(skip_test=False, src_only=False, exempt=[]),
+    "D04": dict(skip_test=False, src_only=False, exempt=["rust/src/coordinator/executor.rs"]),
+    "D05": dict(
+        skip_test=True,
+        src_only=True,
+        exempt=["rust/src/util/math.rs", "rust/src/util/bench.rs"],
+    ),
+    "D06": dict(skip_test=False, src_only=False, exempt=[]),
+    "D07": dict(skip_test=True, src_only=True, exempt=[]),
+}
+
+
+def is_ident(b):
+    return (48 <= b <= 57) or (65 <= b <= 90) or (97 <= b <= 122) or b == 95
+
+
+def utf8_len(b):
+    if b < 0x80:
+        return 1
+    if b < 0xE0:
+        return 2
+    if b < 0xF0:
+        return 3
+    return 4
+
+
+def raw_str_open(src, i):
+    if i > 0 and (is_ident(src[i - 1]) or src[i - 1] == 0x22):
+        return None
+    j = i
+    if j < len(src) and src[j] == ord("b"):
+        j += 1
+    if j >= len(src) or src[j] != ord("r"):
+        return None
+    j += 1
+    hashes = 0
+    while j < len(src) and src[j] == ord("#"):
+        hashes += 1
+        j += 1
+    if j < len(src) and src[j] == 0x22:
+        return (hashes, j + 1 - i)
+    return None
+
+
+CODE, LINE_COMMENT, BLOCK_COMMENT, STR, RAW_STR = range(5)
+
+
+def mask(src):
+    code, comment = [bytearray()], [bytearray()]
+    state, depth, hashes = CODE, 0, 0
+    i = 0
+    n = len(src)
+    while i < n:
+        b = src[i]
+        if b == 0x0A:  # \n
+            if state == LINE_COMMENT:
+                state = CODE
+            code.append(bytearray())
+            comment.append(bytearray())
+            i += 1
+            continue
+        if state == CODE:
+            if b == ord("/") and i + 1 < n and src[i + 1] == ord("/"):
+                state = LINE_COMMENT
+                i += 2
+            elif b == ord("/") and i + 1 < n and src[i + 1] == ord("*"):
+                state, depth = BLOCK_COMMENT, 1
+                i += 2
+            elif (ro := raw_str_open(src, i)) is not None:
+                hashes = ro[0]
+                state = RAW_STR
+                code[-1] += b" " * ro[1]
+                i += ro[1]
+            elif b == 0x22:  # "
+                state = STR
+                code[-1] += b" "
+                i += 1
+            elif b == ord("'"):
+                if i + 1 < n and src[i + 1] == ord("\\"):
+                    j = i + 3
+                    while j < n and src[j] != ord("'") and src[j] != 0x0A:
+                        j += 1
+                    end = j + 1 if j < n and src[j] == ord("'") else j
+                    code[-1] += b" " * (end - i)
+                    i = end
+                else:
+                    clen = utf8_len(src[i + 1]) if i + 1 < n else 1
+                    if i + 1 + clen < n and src[i + 1 + clen] == ord("'"):
+                        code[-1] += b" " * (clen + 2)
+                        i += clen + 2
+                    else:
+                        code[-1] += b" "
+                        i += 1
+            else:
+                code[-1].append(b)
+                i += 1
+        elif state == LINE_COMMENT:
+            comment[-1].append(b)
+            i += 1
+        elif state == BLOCK_COMMENT:
+            if b == ord("/") and i + 1 < n and src[i + 1] == ord("*"):
+                depth += 1
+                i += 2
+            elif b == ord("*") and i + 1 < n and src[i + 1] == ord("/"):
+                depth -= 1
+                if depth == 0:
+                    state = CODE
+                i += 2
+            else:
+                comment[-1].append(b)
+                i += 1
+        elif state == STR:
+            if b == ord("\\"):
+                if i + 1 < n and src[i + 1] == 0x0A:
+                    i += 1  # leave the newline to the top handler
+                else:
+                    code[-1] += b"  "
+                    i += 2
+            elif b == 0x22:
+                state = CODE
+                code[-1] += b" "
+                i += 1
+            else:
+                code[-1] += b" "
+                i += 1
+        else:  # RAW_STR
+            if b == 0x22 and all(
+                i + k < n and src[i + k] == ord("#") for k in range(1, hashes + 1)
+            ):
+                state = CODE
+                code[-1] += b" " * (1 + hashes)
+                i += 1 + hashes
+            else:
+                code[-1] += b" "
+                i += 1
+    dec = lambda v: [bytes(l).decode("utf-8", "replace") for l in v]
+    return dec(code), dec(comment)
+
+
+def mark_test_scopes(code):
+    out = [False] * len(code)
+    depth = 0
+    awaiting = False
+    test_open = None
+    for idx, line in enumerate(code):
+        started = test_open is not None
+        activated = False
+        if line.strip() == "#[cfg(test)]":
+            awaiting = test_open is None
+        else:
+            for ch in line:
+                if ch == "{":
+                    if awaiting:
+                        test_open = depth
+                        awaiting = False
+                        activated = True
+                    depth += 1
+                elif ch == "}":
+                    depth = max(0, depth - 1)
+                    if test_open is not None and depth <= test_open:
+                        test_open = None
+                elif ch == ";":
+                    if awaiting and test_open is None:
+                        awaiting = False
+        out[idx] = started or activated
+    return out
+
+
+def parse_pragmas(comment_lines, code_lines):
+    """[(line, rule, target, well_formed)] mirroring scan.rs semantics."""
+    pragmas = []
+    pending = []
+    for idx, comment in enumerate(comment_lines):
+        number = idx + 1
+        before = len(pragmas)
+        at = 0
+        while (pos := comment.find("lint:allow(", at)) != -1:
+            rest = comment[pos + len("lint:allow(") :]
+            at = pos + len("lint:allow(")
+            close = rest.find(")")
+            if close == -1:
+                pragmas.append([number, "", None, False])
+                continue
+            rule = rest[:close].strip()
+            after = rest[close + 1 :]
+            ok = rule in RULES and after.startswith(":") and after[1:].strip() != ""
+            pragmas.append([number, rule, None, ok])
+        has_code = code_lines[idx].strip() != ""
+        if has_code:
+            for p in pending:
+                pragmas[p][2] = number
+            pending = []
+            for p in range(before, len(pragmas)):
+                pragmas[p][2] = number
+        else:
+            pending.extend(range(before, len(pragmas)))
+    return pragmas
+
+
+def count_bounded(code, pat):
+    n, i = 0, 0
+    while True:
+        j = code.find(pat, i)
+        if j == -1:
+            return n
+        left_ok = j == 0 or not is_ident(ord(code[j - 1]))
+        after = j + len(pat)
+        right_ok = after >= len(code) or not is_ident(ord(code[after]))
+        if left_ok and right_ok:
+            n += 1
+            i = j + len(pat)
+        else:
+            i = j + 1
+
+
+def count_spawn_calls(code):
+    n, i = 0, 0
+    pat = "spawn"
+    while True:
+        j = code.find(pat, i)
+        if j == -1:
+            return n
+        ok_l = j == 0 or not is_ident(ord(code[j - 1]))
+        after = j + len(pat)
+        ok_r = after >= len(code) or not is_ident(ord(code[after]))
+        if ok_l and ok_r:
+            l = j
+            while l > 0 and code[l - 1] == " ":
+                l -= 1
+            called_on = l > 0 and (code[l - 1] == "." or code[max(0, l - 2) : l] == "::")
+            r = after
+            while r < len(code) and code[r] == " ":
+                r += 1
+            invoked = r < len(code) and code[r] == "("
+            if called_on and invoked:
+                n += 1
+            i = j + len(pat)
+        else:
+            i = j + 1
+
+
+def match_count(rule, code):
+    if rule == "D01":
+        return sum(count_bounded(code, p) for p in ["HashMap", "HashSet"])
+    if rule == "D02":
+        return sum(
+            count_bounded(code, p)
+            for p in ["Instant::now", "SystemTime::now", "UNIX_EPOCH"]
+        )
+    if rule == "D03":
+        pats = [
+            "thread_rng",
+            "from_entropy",
+            "OsRng",
+            "StdRng",
+            "SmallRng",
+            "getrandom",
+            "RandomState",
+            "DefaultHasher",
+        ]
+        return sum(count_bounded(code, p) for p in pats)
+    if rule == "D04":
+        return count_spawn_calls(code)
+    if rule == "D05":
+        pats = [".sum::<f32>(", ".sum::<f64>(", ".product::<f32>(", ".product::<f64>("]
+        return sum(code.count(p) for p in pats)
+    if rule == "D06":
+        return count_bounded(code, "unsafe")
+    if rule == "D07":
+        return code.count(".unwrap()") + code.count(".expect(")
+    raise AssertionError(rule)
+
+
+def lint_file(rel, src):
+    code, comment = mask(src)
+    in_test = mark_test_scopes(code)
+    pragmas = parse_pragmas(comment, code)
+    counts = {}
+    for rule, meta in RULES.items():
+        if rel in meta["exempt"]:
+            continue
+        if meta["src_only"] and not rel.startswith("rust/src/"):
+            continue
+        for idx, line in enumerate(code):
+            if meta["skip_test"] and in_test[idx]:
+                continue
+            hits = match_count(rule, line)
+            if hits == 0:
+                continue
+            if rule == "D06":
+                if "SAFETY:" in comment[idx] or (idx > 0 and "SAFETY:" in comment[idx - 1]):
+                    continue
+            if any(p[3] and p[1] == rule and p[2] == idx + 1 for p in pragmas):
+                continue
+            counts.setdefault(rule, []).append((idx + 1, hits))
+    return counts
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[2]
+    files = []
+    for r in ROOTS:
+        d = root / r
+        if d.is_dir():
+            files += [p.relative_to(root).as_posix() for p in d.rglob("*.rs")]
+    files.sort()
+
+    per_rule = {}
+    hard = []
+    for rel in files:
+        counts = lint_file(rel, (root / rel).read_bytes())
+        for rule, sites in counts.items():
+            total = sum(h for _, h in sites)
+            if rule == "D07":
+                per_rule.setdefault(rule, {})[rel] = total
+            else:
+                for line, hits in sites:
+                    hard.append(f"{rel}:{line}: {rule} x{hits}")
+
+    if hard:
+        print("D01-D06 must be zero before a baseline can be cut:", file=sys.stderr)
+        for h in hard:
+            print(f"  {h}", file=sys.stderr)
+        sys.exit(1)
+
+    out = ['{\n  "version": 1,\n  "rules": {']
+    rules_sorted = sorted((r, f) for r, f in per_rule.items() if f)
+    for ri, (rule, by_file) in enumerate(rules_sorted):
+        out.append("\n" if ri == 0 else ",\n")
+        out.append(f'    "{rule}": {{')
+        for fi, (rel, count) in enumerate(sorted(by_file.items())):
+            out.append("\n" if fi == 0 else ",\n")
+            out.append(f'      "{rel}": {count}')
+        out.append("\n    }")
+    out.append("}\n}\n" if not rules_sorted else "\n  }\n}\n")
+    text = "".join(out)
+    target = root / "xtask" / "lint-baseline.json"
+    target.write_text(text)
+    n_files = len(per_rule.get("D07", {}))
+    n_sites = sum(per_rule.get("D07", {}).values())
+    print(f"wrote {target}: D07 over {n_files} files, {n_sites} sites; {len(files)} files scanned")
+
+
+if __name__ == "__main__":
+    main()
