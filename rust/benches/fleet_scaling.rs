@@ -1,0 +1,131 @@
+//! Bench: gossip-step scaling to 10⁵-node fleets — the headline curve
+//! of the persistent-pool executor (DESIGN.md §13, ROADMAP
+//! "Million-node fleets").
+//!
+//! For each topology kind (ring, sym-exp) and fleet size n this target
+//! measures ns/iter of one full partial-averaging round under three
+//! executors over the SAME chunk geometry:
+//!
+//!   * `serial` — the plain sequential loop (the floor),
+//!   * `spawn`  — the PR-1 spawn-per-phase reference path (scoped
+//!     threads created and joined every phase),
+//!   * `pool`   — the persistent worker pool (epoch handoff, no thread
+//!     churn).
+//!
+//! Before timing, every size cross-checks all three paths bitwise
+//! (parallel == serial is the repo's determinism contract, and the
+//! bench doubles as a pin on it at fleet scale). The run *asserts* the
+//! pool does not lose to spawn-per-phase at n ≥ 4096 — thread-creation
+//! overhead is exactly what capped the old executor near n ≈ 1024 — so
+//! `cargo bench --bench fleet_scaling` is a perf regression check, not
+//! just a report. A per-size arena-warmed `rebuild` case rides along
+//! (the elastic-churn path must stay O(edges) with no reallocation).
+//!
+//! Run: `cargo bench --bench fleet_scaling -- --json out.json`
+//! (`DECENTLAM_BENCH_FAST=1` shrinks to n ∈ {256, 4096} — the per-PR
+//! scale-smoke tier; the full curve up to n = 65536 runs nightly).
+
+use decentlam::coordinator::NodeExecutor;
+use decentlam::optim::{partial_average_all, partial_average_all_par};
+use decentlam::topology::{Kind, SparseWeights, Topology};
+use decentlam::util::bench::{opaque, Bench};
+use decentlam::util::cli::Args;
+
+/// Per-node parameter dimension: big enough that a row's gather spans
+/// several MIX_BLOCK tiles, small enough that n = 65536 fits in RAM
+/// (two f32 buffers ≈ 67 MB).
+const D: usize = 128;
+
+/// Deterministic publish buffers (no RNG needed — the bench pins
+/// timing and bitwise identity, not statistics).
+fn fill_src(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..D).map(|k| ((i * 31 + k * 7) % 97) as f32 * 0.03125 - 1.5).collect())
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut bench = Bench::new();
+    let fast = std::env::var("DECENTLAM_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast { &[256, 4096] } else { &[256, 1024, 4096, 16384, 65536] };
+
+    // One pool for the whole run (it persists across phases — that is
+    // the point); the spawn reference gets the same thread budget.
+    let pool = NodeExecutor::new(0);
+    let spawn = NodeExecutor::spawn_per_phase(pool.threads());
+    let serial = NodeExecutor::serial();
+    println!("fleet_scaling: {} threads, d={D}, sizes {sizes:?}", pool.threads());
+
+    for kind in [Kind::Ring, Kind::SymExp] {
+        for &n in sizes {
+            let topo = Topology::build(kind, n);
+            let sw = SparseWeights::metropolis_hastings(&topo);
+            let src = fill_src(n);
+            let mut dst = vec![vec![0.0f32; D]; n];
+
+            // Bitwise identity gate before any timing: pool == spawn ==
+            // serial, element for element.
+            let mut reference = vec![vec![0.0f32; D]; n];
+            partial_average_all(&sw, &src, &mut reference);
+            for (name, exec) in [("pool", &pool), ("spawn", &spawn), ("serial", &serial)] {
+                partial_average_all_par(&sw, &src, &mut dst, exec);
+                let same = dst
+                    .iter()
+                    .zip(&reference)
+                    .all(|(a, b)| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+                assert!(same, "{name} diverged from serial on {} n={n}", kind.name());
+            }
+
+            let label = |mode: &str| format!("fleet_scaling {} n={n} {mode}", kind.name());
+            let t_serial = bench
+                .case_items(&label("serial"), n as f64, || {
+                    partial_average_all(&sw, &src, &mut dst);
+                    opaque(&dst);
+                })
+                .median_ns;
+            let t_spawn = bench
+                .case_items(&label("spawn"), n as f64, || {
+                    partial_average_all_par(&sw, &src, &mut dst, &spawn);
+                    opaque(&dst);
+                })
+                .median_ns;
+            let t_pool = bench
+                .case_items(&label("pool"), n as f64, || {
+                    partial_average_all_par(&sw, &src, &mut dst, &pool);
+                    opaque(&dst);
+                })
+                .median_ns;
+
+            // The elastic-churn rebuild path, arenas warmed: stays in
+            // the trajectory so a reallocation regression shows up as
+            // ns/iter, not just an allocator stat.
+            let mut scratch = SparseWeights::default();
+            scratch.rebuild_metropolis(&topo);
+            bench.case(&label("rebuild"), || {
+                scratch.rebuild_metropolis(&topo);
+                opaque(scratch.nnz());
+            });
+
+            println!(
+                "  {} n={n}: serial/pool {:.2}x, spawn/pool {:.2}x\n",
+                kind.name(),
+                t_serial / t_pool,
+                t_spawn / t_pool,
+            );
+            // The headline assertion: at fleet scale the persistent
+            // pool must not lose to per-phase spawning. 10% band
+            // absorbs timer noise on runners where both paths
+            // degenerate to the same inline-serial code (threads=1).
+            if n >= 4096 {
+                assert!(
+                    t_pool <= t_spawn * 1.10,
+                    "persistent pool lost to spawn-per-phase on {} at n={n}: \
+                     pool {t_pool:.0} ns !<= spawn {t_spawn:.0} ns (+10% band)",
+                    kind.name()
+                );
+            }
+        }
+    }
+    bench.write_json_arg(&args).expect("--json write failed");
+}

@@ -77,7 +77,7 @@ fn main() {
                 &format!("sparse exchange n={n} ({}T)", exec.threads()),
                 (n * d) as f64,
                 || {
-                    partial_average_all_par(&sw, &src, &mut dst, exec);
+                    partial_average_all_par(&sw, &src, &mut dst, &exec);
                     opaque(&dst);
                 },
             )

@@ -500,7 +500,7 @@ impl CodecState {
     /// Encode one round's publish buffers into the wire view and return
     /// it. Fans out per node over `exec`; every node draws from its own
     /// (seed, step, node, slot) stream, so parallel == serial bitwise.
-    pub fn encode_round(&mut self, src: &[Vec<f32>], exec: NodeExecutor) -> &[Vec<f32>] {
+    pub fn encode_round(&mut self, src: &[Vec<f32>], exec: &NodeExecutor) -> &[Vec<f32>] {
         assert_eq!(src.len(), self.n, "publish rows != node count");
         let slot = self.slot;
         self.slot += 1;
@@ -905,7 +905,7 @@ mod tests {
                 }
             }
             state.begin_step(step);
-            state.encode_round(&src, NodeExecutor::serial());
+            state.encode_round(&src, &NodeExecutor::serial());
             for node in 0..2 {
                 let norm = state.residual_norm(0, node);
                 assert!(norm <= 64f64.sqrt() * 0.02, "step {step}: residual norm {norm}");
@@ -928,8 +928,8 @@ mod tests {
         for step in 0..3 {
             a.begin_step(step);
             b.begin_step(step);
-            let wa = a.encode_round(&src, NodeExecutor::serial()).to_vec();
-            let wb = b.encode_round(&src, NodeExecutor::new(4)).to_vec();
+            let wa = a.encode_round(&src, &NodeExecutor::serial()).to_vec();
+            let wb = b.encode_round(&src, &NodeExecutor::new(4)).to_vec();
             assert_eq!(wa, wb, "step {step}: parallel encode diverged");
         }
     }
@@ -939,9 +939,9 @@ mod tests {
         let spec = CodecSpec::parse("topk,k=0.25", 1).unwrap();
         let mut state = CodecState::new(&spec, 1, 4);
         state.begin_step(0);
-        state.encode_round(&[vec![1.0, 0.1, 0.0, 0.0]], NodeExecutor::serial());
+        state.encode_round(&[vec![1.0, 0.1, 0.0, 0.0]], &NodeExecutor::serial());
         let slot0 = state.residual_norm(0, 0);
-        state.encode_round(&[vec![0.0, 0.0, 1.0, 0.3]], NodeExecutor::serial());
+        state.encode_round(&[vec![0.0, 0.0, 1.0, 0.3]], &NodeExecutor::serial());
         let slot1 = state.residual_norm(1, 0);
         assert!((slot0 - 0.1).abs() < 1e-7, "slot 0 residual {slot0}");
         assert!((slot1 - 0.3).abs() < 1e-7, "slot 1 residual {slot1}");
@@ -957,7 +957,7 @@ mod tests {
         // Nodes 0..3 encode; node 1's residual ends up nonzero.
         state.encode_round(
             &[vec![1.0, 0.0, 0.0, 0.0], vec![1.0, 0.5, 0.0, 0.0], vec![1.0, 0.25, 0.0, 0.0]],
-            NodeExecutor::serial(),
+            &NodeExecutor::serial(),
         );
         let r1 = state.residual_norm(0, 1);
         assert!((r1 - 0.5).abs() < 1e-7);
@@ -977,7 +977,7 @@ mod tests {
         let mut src = vec![0.0f32; 16];
         rng.normal_fill(&mut src, 1.0);
         state.begin_step(2);
-        state.encode_round(&[src.clone(), src.clone()], NodeExecutor::serial());
+        state.encode_round(&[src.clone(), src.clone()], &NodeExecutor::serial());
         let before = state.residual_norm(0, 0);
         let (mut a, mut b) = (vec![0.0f32; 16], vec![0.0f32; 16]);
         state.reconstruct(3, 7, &src, &mut a);

@@ -90,31 +90,67 @@ pub trait CommEngine: Sync {
     }
 }
 
+/// Fixed inner-tile width of the blocked mix kernel, in f32 lanes:
+/// 128 floats = 512 B — one tile of `out` spans a handful of cache
+/// lines and an integer number of AVX2/AVX-512/NEON vectors, so the
+/// autovectorizer gets clean fixed-trip inner loops while the `out`
+/// tile stays resident across every term of the row instead of being
+/// streamed through memory once per neighbor.
+pub const MIX_BLOCK: usize = 128;
+
+/// `x[t..e]` clamped to `x`'s length — reproduces `zip` truncation on
+/// a tile, so the blocked kernel keeps the reference kernel's exact
+/// behavior when a source vector is shorter than `out`.
+#[inline]
+fn tile(x: &[f32], t: usize, e: usize) -> &[f32] {
+    let len = x.len();
+    &x[t.min(len)..e.min(len)]
+}
+
 /// out = Σ_t w_t · src[j_t] over one sparse row — the shared kernel of
-/// every engine's exchange. Allocation-free (the step loop's hot path):
-/// terms are fused pairwise straight off the row slice, mirroring
-/// `math::weighted_sum_into`'s destination-traffic halving.
+/// every engine's exchange. Allocation-free (the step loop's hot path).
+///
+/// The kernel is *blocked* (DESIGN.md §13): the outer loop walks `out`
+/// in fixed [`MIX_BLOCK`]-float tiles, and the inner loops apply every
+/// row term — the leading scale, then the remaining neighbors fused
+/// pairwise as in `math::weighted_sum_into` — to that one tile before
+/// moving on. Blocking changes only *which element is touched when*,
+/// never the per-element arithmetic: every `out[k]` still sees exactly
+/// `w0·x0[k]`, then `+= wa·a[k] + wb·b[k]` per pair left to right,
+/// then `+= w·x[k]` for an odd trailing neighbor — the identical
+/// left-to-right accumulation order as the pre-blocking kernel, so
+/// results are bitwise stable (pinned by `blocked_mix_row_is_bitwise_
+/// identical_to_reference` below).
 pub fn mix_row(row: &[RowEntry], src: &[Vec<f32>], out: &mut [f32]) {
-    match row {
-        [] => out.iter_mut().for_each(|v| *v = 0.0),
-        [(j0, w0), rest @ ..] => {
-            for (o, &x) in out.iter_mut().zip(&src[*j0 as usize]) {
-                *o = w0 * x;
-            }
-            let mut pairs = rest.chunks_exact(2);
-            for pair in &mut pairs {
-                let (ja, wa) = pair[0];
-                let (jb, wb) = pair[1];
-                let xa = &src[ja as usize];
-                let xb = &src[jb as usize];
-                for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
-                    *o += wa * a + wb * b;
-                }
-            }
-            if let [(j, w)] = pairs.remainder() {
-                math::axpy(out, *w, &src[*j as usize]);
+    let ((j0, w0), rest) = match row {
+        [] => {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            return;
+        }
+        [first, rest @ ..] => (*first, rest),
+    };
+    let x0 = &src[j0 as usize];
+    let d = out.len();
+    let mut t = 0;
+    while t < d {
+        let e = (t + MIX_BLOCK).min(d);
+        for (o, &x) in out[t..e].iter_mut().zip(tile(x0, t, e)) {
+            *o = w0 * x;
+        }
+        let mut pairs = rest.chunks_exact(2);
+        for pair in &mut pairs {
+            let (ja, wa) = pair[0];
+            let (jb, wb) = pair[1];
+            let xa = tile(&src[ja as usize], t, e);
+            let xb = tile(&src[jb as usize], t, e);
+            for ((o, &a), &b) in out[t..e].iter_mut().zip(xa).zip(xb) {
+                *o += wa * a + wb * b;
             }
         }
+        if let [(j, w)] = pairs.remainder() {
+            math::axpy(&mut out[t..e], *w, tile(&src[*j as usize], t, e));
+        }
+        t = e;
     }
 }
 
@@ -133,6 +169,63 @@ mod tests {
         assert_eq!(e.max_degree(), 2);
         assert!(e.row_sum_error() < 1e-6);
         assert!((e.self_weight(0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    /// The pre-blocking kernel, verbatim: full-width sweeps per term,
+    /// pairwise fusion, axpy remainder. The blocked kernel must match
+    /// it bit for bit — blocking may only re-tile the traversal, never
+    /// change any element's accumulation sequence.
+    fn reference_mix_row(row: &[RowEntry], src: &[Vec<f32>], out: &mut [f32]) {
+        match row {
+            [] => out.iter_mut().for_each(|v| *v = 0.0),
+            [(j0, w0), rest @ ..] => {
+                for (o, &x) in out.iter_mut().zip(&src[*j0 as usize]) {
+                    *o = w0 * x;
+                }
+                let mut pairs = rest.chunks_exact(2);
+                for pair in &mut pairs {
+                    let (ja, wa) = pair[0];
+                    let (jb, wb) = pair[1];
+                    let xa = &src[ja as usize];
+                    let xb = &src[jb as usize];
+                    for ((o, &a), &b) in out.iter_mut().zip(xa).zip(xb) {
+                        *o += wa * a + wb * b;
+                    }
+                }
+                if let [(j, w)] = pairs.remainder() {
+                    math::axpy(out, *w, &src[*j as usize]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_mix_row_is_bitwise_identical_to_reference() {
+        use crate::util::rng::Pcg64;
+        // Row lengths 0..=7 cover: empty, scale-only, exact pairs and
+        // odd remainders; d values straddle the MIX_BLOCK boundary.
+        for d in [0usize, 1, 5, 127, 128, 129, 300, 1024] {
+            let mut rng = Pcg64::seeded(0x9e37 ^ d as u64);
+            let mut src: Vec<Vec<f32>> = vec![vec![0.0; d]; 8];
+            for v in &mut src {
+                rng.normal_fill(v, 1.0);
+            }
+            for terms in 0..=7usize {
+                let mut wbuf = vec![0.0f32; terms];
+                rng.normal_fill(&mut wbuf, 0.5);
+                let row: Vec<RowEntry> =
+                    (0..terms).map(|t| (t as u32, wbuf[t])).collect();
+                let mut blocked = vec![f32::NAN; d];
+                let mut reference = vec![f32::NAN; d];
+                mix_row(&row, &src, &mut blocked);
+                reference_mix_row(&row, &src, &mut reference);
+                let same = blocked
+                    .iter()
+                    .zip(&reference)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "d={d} terms={terms}: blocked kernel diverged");
+            }
+        }
     }
 
     #[test]

@@ -1,49 +1,373 @@
-//! Parallel node executor: chunked scoped-thread fan-out over nodes for
-//! the gradient, exchange and update phases (DESIGN.md §4).
+//! Parallel node executor: contiguous-block fan-out over nodes for the
+//! gradient, exchange and update phases (DESIGN.md §4, §13).
 //!
 //! Each helper partitions one (or several, zipped) `&mut` slices into
-//! contiguous blocks — at most one block per worker — and runs the
-//! closure on every element inside `std::thread::scope`. Per-node work
-//! is independent and the arithmetic is identical to the sequential
-//! order (no cross-thread reductions), so results are bitwise equal to
-//! a serial run; the trainer's `threads == 1` path and the tests rely
-//! on that.
+//! contiguous blocks — at most one block per lane — and runs the
+//! closure on every element. Per-node work is independent and the
+//! arithmetic is identical to the sequential order (no cross-lane
+//! reductions), so results are bitwise equal to a serial run; the
+//! trainer's `threads == 1` path and the tests rely on that.
 //!
-//! The executor is a trivially-copyable handle (just a thread count):
-//! threads are spawned per phase, which measures well up to n ≈ 1024
-//! nodes given each phase does O(d) work per node — a persistent pool
-//! is an upgrade documented in DESIGN.md §Open.
+//! Two execution strategies share one chunk geometry ([`PhasePlan`],
+//! computed once per phase — never re-derived per block):
+//!
+//! * **Persistent pool** (the default, [`NodeExecutor::new`]) —
+//!   `threads - 1` long-lived workers created lazily on the first
+//!   parallel phase and shared by every clone of the handle. A phase
+//!   is an epoch handoff: the caller publishes a type-erased closure
+//!   under a mutex, bumps the epoch, runs block 0 itself, and blocks
+//!   on a condvar barrier until every worker checked in. No threads
+//!   are created or destroyed per phase, which is what lets fleets of
+//!   10⁴–10⁵ nodes amortize the fan-out (the PR-1 spawn-per-phase
+//!   path stopped scaling near n ≈ 1024).
+//! * **Spawn-per-phase** ([`NodeExecutor::spawn_per_phase`]) — the
+//!   PR-1 reference path: scoped threads spawned per phase, one per
+//!   block. Kept for `benches/fleet_scaling.rs` (the pool must beat
+//!   it at n ≥ 4096) and the bitwise-identity pins in
+//!   `tests/executor_pool.rs`.
+//!
+//! A panic inside any lane is caught at the lane boundary, the barrier
+//! still completes (every worker checks in), and the panic resurfaces
+//! on the calling thread — a panicking chunk can never deadlock the
+//! pool or leave a worker reading a dead closure.
 
-/// Thread-count policy for fan-out over nodes.
-#[derive(Debug, Clone, Copy)]
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Mutex guard that survives a poisoned lock: pool state is a set of
+/// plain counters, valid at every instant, and panics propagate via
+/// the explicit `panicked` flag rather than lock poisoning.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Condvar wait with the same poison-recovery rule as [`lock`].
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Type-erased pointer to a phase closure (`Fn(lane)`), valid from the
+/// epoch publish until every lane of that epoch has checked in.
+type Task = *const (dyn Fn(usize) + Sync);
+
+/// The job slot content, nameable so it can cross the `Mutex`.
+struct Job(Task);
+
+// SAFETY: the raw pointer is only dereferenced between an epoch's
+// publish and its final check-in, a window during which `run_phase`
+// keeps the pointee alive on the calling thread's stack; the pointee
+// is `Sync`, so shared calls from several workers are sound.
+unsafe impl Send for Job {}
+
+/// Shared worker-pool state behind one mutex.
+struct PoolState {
+    /// Phase counter: workers run exactly one job per epoch bump.
+    epoch: u64,
+    /// The current phase closure (present iff a phase is in flight).
+    job: Option<Job>,
+    /// Workers that have not yet checked in for the current epoch.
+    active: usize,
+    /// Some lane's chunk panicked this epoch.
+    panicked: bool,
+    /// Pool is shutting down (handle dropped); workers exit.
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between phases.
+    work_cv: Condvar,
+    /// The caller parks here until every worker checked in.
+    done_cv: Condvar,
+}
+
+/// The persistent worker pool: `workers` long-lived threads plus the
+/// calling thread make `workers + 1` lanes per phase.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+    /// Serializes whole phases: concurrent `run_phase` calls on clones
+    /// of one handle queue up instead of corrupting the job slot.
+    phase_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<PoolShared>, lane: usize) {
+    let mut seen: u64 = 0;
+    loop {
+        let task = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = wait(&shared.work_cv, st);
+            }
+            seen = st.epoch;
+            // The job is installed before the epoch bump and cleared
+            // only after `active` hits zero, so it is present here; the
+            // `None` arm keeps the barrier sound regardless.
+            st.job.as_ref().map(|j| j.0)
+        };
+        let ok = match task {
+            Some(t) => {
+                // SAFETY: `t` points at the phase closure, which
+                // `run_phase` keeps alive until this lane's check-in
+                // below; lanes touch disjoint index blocks.
+                let f = unsafe { &*t };
+                catch_unwind(AssertUnwindSafe(|| f(lane))).is_ok()
+            }
+            None => true,
+        };
+        let mut st = lock(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..=workers)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared, lane))
+            })
+            .collect();
+        WorkerPool { shared, workers, phase_lock: Mutex::new(()), handles }
+    }
+
+    /// One epoch handoff: run `task(lane)` on lanes `0..=workers` —
+    /// lane 0 inline on the caller, the rest on the pool threads — and
+    /// return only after every lane checked in. A panic on any lane
+    /// resurfaces here after the barrier, never before (workers hold
+    /// raw views into the caller's data until they check in).
+    fn run_phase(&self, task: &(dyn Fn(usize) + Sync)) {
+        let _phase = lock(&self.phase_lock);
+        {
+            let mut st = lock(&self.shared.state);
+            debug_assert!(st.job.is_none() && st.active == 0, "phases never nest");
+            // SAFETY: lifetime erasure only — the pointee lives on this
+            // stack frame, and this function does not return (or
+            // unwind) past the barrier below, so no worker can observe
+            // it after the borrow ends.
+            let erased: Task =
+                unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), Task>(task) };
+            st.job = Some(Job(erased));
+            st.epoch += 1;
+            st.active = self.workers;
+            st.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        let caller = catch_unwind(AssertUnwindSafe(|| task(0)));
+        let worker_panicked = {
+            let mut st = lock(&self.shared.state);
+            while st.active > 0 {
+                st = wait(&self.shared.done_cv, st);
+            }
+            st.job = None;
+            st.panicked
+        };
+        match caller {
+            Err(payload) => resume_unwind(payload),
+            Ok(()) if worker_panicked => {
+                panic!("NodeExecutor worker panicked during a parallel phase")
+            }
+            Ok(()) => {}
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        lock(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            // Worker bodies catch panics around the task; a join error
+            // here would mean the runtime killed the thread — nothing
+            // useful left to do with it during teardown.
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw base pointer smuggled into a phase closure; lanes only ever
+/// index disjoint blocks of the underlying slice.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+
+// SAFETY: a lane dereferences only indices inside its own block and
+// blocks partition the slice (see `dispatch`), so `&mut` aliasing
+// across lanes is impossible; `T: Send` makes moving element access to
+// another thread sound.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Execution strategy behind a [`NodeExecutor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Persistent worker pool (the default for `threads > 1`).
+    Pool,
+    /// PR-1 reference path: scoped threads spawned every phase.
+    SpawnPerPhase,
+}
+
+/// One phase's chunk geometry: block `b` covers
+/// `[b·chunk, min((b+1)·chunk, n))`. Computed once per phase (the PR-9
+/// fix — previously re-derived from `n` on every internal call) and
+/// shared by the serial, spawn-per-phase and pool paths, so chunk
+/// boundaries — and therefore results — cannot diverge between them.
+/// `tests/executor_pool.rs` pins the boundaries for every n ≤ 4096.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhasePlan {
+    /// Total items in the phase.
+    pub n: usize,
+    /// Items per contiguous block.
+    pub chunk: usize,
+    /// Number of blocks (= lanes that actually run work).
+    pub blocks: usize,
+}
+
+/// Thread-count policy + execution strategy for fan-out over nodes.
+/// Cheap to clone: clones share the same lazily-created pool.
+#[derive(Clone)]
 pub struct NodeExecutor {
     threads: usize,
+    mode: Mode,
+    /// Lazily created persistent pool, shared by every clone; `None`
+    /// when `threads == 1` or in spawn-per-phase mode.
+    pool: Option<Arc<OnceLock<WorkerPool>>>,
+}
+
+impl std::fmt::Debug for NodeExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NodeExecutor")
+            .field("threads", &self.threads)
+            .field("mode", &self.mode)
+            .field("pool_started", &self.pool_workers().is_some())
+            .finish()
+    }
 }
 
 impl NodeExecutor {
     /// Sequential executor (the default in unit tests).
     pub fn serial() -> NodeExecutor {
-        NodeExecutor { threads: 1 }
+        NodeExecutor { threads: 1, mode: Mode::Pool, pool: None }
     }
 
-    /// `threads == 0` means one worker per available hardware thread.
+    /// `threads == 0` means one lane per available hardware thread.
+    /// The persistent pool (if any) starts on the first parallel phase.
     pub fn new(threads: usize) -> NodeExecutor {
+        NodeExecutor::with_mode(threads, Mode::Pool)
+    }
+
+    /// The PR-1 spawn-per-phase strategy: scoped threads created and
+    /// joined every phase. Identical results to [`NodeExecutor::new`]
+    /// (same [`PhasePlan`], same per-item bodies) at strictly worse
+    /// fan-out cost — kept as the reference the pool is benchmarked
+    /// and property-tested against.
+    pub fn spawn_per_phase(threads: usize) -> NodeExecutor {
+        NodeExecutor::with_mode(threads, Mode::SpawnPerPhase)
+    }
+
+    fn with_mode(threads: usize, mode: Mode) -> NodeExecutor {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
         } else {
             threads
         };
-        NodeExecutor { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let pool =
+            (threads > 1 && mode == Mode::Pool).then(|| Arc::new(OnceLock::new()));
+        NodeExecutor { threads, mode, pool }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Block size so that `n` items spread over at most `threads` blocks.
-    fn chunk_for(&self, n: usize) -> usize {
+    /// Persistent worker threads actually spawned: `Some(threads - 1)`
+    /// once the pool started, `None` before the first parallel phase
+    /// and always in serial / spawn-per-phase modes. The count never
+    /// depends on the fleet size n — `tests/executor_pool.rs` pins it
+    /// across elastic resizes.
+    pub fn pool_workers(&self) -> Option<usize> {
+        self.pool.as_ref().and_then(|cell| cell.get()).map(|p| p.workers)
+    }
+
+    /// Chunk geometry so that `n` items spread over at most `threads`
+    /// contiguous blocks — computed ONCE per phase.
+    pub fn phase_plan(&self, n: usize) -> PhasePlan {
         let workers = self.threads.min(n).max(1);
-        (n + workers - 1) / workers
+        let chunk = (n + workers - 1) / workers;
+        let blocks = if n == 0 { 0 } else { (n + chunk - 1) / chunk };
+        PhasePlan { n, chunk, blocks }
+    }
+
+    /// Fan `body(start, end)` out over the plan's contiguous blocks.
+    /// All `for_each` variants and both execution strategies route
+    /// through this single geometry, which is what makes parallel
+    /// results bitwise identical to serial: blocks partition `0..n` in
+    /// order and bodies visit indices ascending within a block.
+    fn dispatch(&self, plan: PhasePlan, body: &(dyn Fn(usize, usize) + Sync)) {
+        let PhasePlan { n, chunk, blocks } = plan;
+        if n == 0 {
+            return;
+        }
+        if blocks <= 1 {
+            body(0, n);
+            return;
+        }
+        match self.mode {
+            Mode::SpawnPerPhase => {
+                std::thread::scope(|scope| {
+                    for b in 0..blocks {
+                        let start = b * chunk;
+                        let end = (start + chunk).min(n);
+                        scope.spawn(move || body(start, end));
+                    }
+                });
+            }
+            Mode::Pool => match &self.pool {
+                Some(cell) => {
+                    let pool = cell.get_or_init(|| WorkerPool::new(self.threads - 1));
+                    pool.run_phase(&|lane| {
+                        if lane < blocks {
+                            let start = lane * chunk;
+                            let end = (start + chunk).min(n);
+                            body(start, end);
+                        }
+                    });
+                }
+                // threads == 1 never reaches here (blocks <= 1 above);
+                // degrade to serial rather than trust that invariant.
+                None => body(0, n),
+            },
+        }
     }
 
     /// Run `f(i, &mut items[i])` for every index, fanned out over
@@ -53,27 +377,18 @@ impl NodeExecutor {
         T: Send,
         F: Fn(usize, &mut T) + Sync,
     {
-        let n = items.len();
-        if n == 0 {
-            return;
-        }
-        let chunk = self.chunk_for(n);
-        if chunk >= n {
-            for (i, item) in items.iter_mut().enumerate() {
+        let plan = self.phase_plan(items.len());
+        let base = SendPtr(items.as_mut_ptr());
+        let body = |start: usize, end: usize| {
+            for i in start..end {
+                // SAFETY: blocks partition `0..n` disjointly (dispatch
+                // geometry) and `i < items.len()`, so no two lanes
+                // alias an element; the slice outlives the phase.
+                let item = unsafe { &mut *base.0.add(i) };
                 f(i, item);
             }
-            return;
-        }
-        let f = &f;
-        std::thread::scope(|scope| {
-            for (b, block) in items.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || {
-                    for (k, item) in block.iter_mut().enumerate() {
-                        f(b * chunk + k, item);
-                    }
-                });
-            }
-        });
+        };
+        self.dispatch(plan, &body);
     }
 
     /// Run `f(i, &mut a[i], &mut b[i])` for every index (equal-length
@@ -86,26 +401,17 @@ impl NodeExecutor {
     {
         let n = a.len();
         assert_eq!(n, b.len(), "zipped slices must have equal length");
-        if n == 0 {
-            return;
-        }
-        let chunk = self.chunk_for(n);
-        if chunk >= n {
-            for (i, (ai, bi)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+        let plan = self.phase_plan(n);
+        let (pa, pb) = (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()));
+        let body = |start: usize, end: usize| {
+            for i in start..end {
+                // SAFETY: as in `for_each_mut` — disjoint blocks over
+                // equal-length slices, `i < n` for both.
+                let (ai, bi) = unsafe { (&mut *pa.0.add(i), &mut *pb.0.add(i)) };
                 f(i, ai, bi);
             }
-            return;
-        }
-        let f = &f;
-        std::thread::scope(|scope| {
-            for (blk, (ba, bb)) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)).enumerate() {
-                scope.spawn(move || {
-                    for (k, (ai, bi)) in ba.iter_mut().zip(bb.iter_mut()).enumerate() {
-                        f(blk * chunk + k, ai, bi);
-                    }
-                });
-            }
-        });
+        };
+        self.dispatch(plan, &body);
     }
 
     /// Three-way zipped variant (gradient phase: engines, gradient
@@ -120,33 +426,19 @@ impl NodeExecutor {
         let n = a.len();
         assert_eq!(n, b.len(), "zipped slices must have equal length");
         assert_eq!(n, c.len(), "zipped slices must have equal length");
-        if n == 0 {
-            return;
-        }
-        let chunk = self.chunk_for(n);
-        if chunk >= n {
-            for i in 0..n {
-                f(i, &mut a[i], &mut b[i], &mut c[i]);
+        let plan = self.phase_plan(n);
+        let (pa, pb, pc) =
+            (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()), SendPtr(c.as_mut_ptr()));
+        let body = |start: usize, end: usize| {
+            for i in start..end {
+                // SAFETY: as in `for_each_mut` — disjoint blocks over
+                // equal-length slices, `i < n` for all three.
+                let (ai, bi, ci) =
+                    unsafe { (&mut *pa.0.add(i), &mut *pb.0.add(i), &mut *pc.0.add(i)) };
+                f(i, ai, bi, ci);
             }
-            return;
-        }
-        let f = &f;
-        std::thread::scope(|scope| {
-            for (blk, ((ba, bb), bc)) in a
-                .chunks_mut(chunk)
-                .zip(b.chunks_mut(chunk))
-                .zip(c.chunks_mut(chunk))
-                .enumerate()
-            {
-                scope.spawn(move || {
-                    for (k, ((ai, bi), ci)) in
-                        ba.iter_mut().zip(bb.iter_mut()).zip(bc.iter_mut()).enumerate()
-                    {
-                        f(blk * chunk + k, ai, bi, ci);
-                    }
-                });
-            }
-        });
+        };
+        self.dispatch(plan, &body);
     }
 }
 
@@ -154,17 +446,22 @@ impl NodeExecutor {
 mod tests {
     use super::*;
 
+    fn executors(threads: usize) -> [NodeExecutor; 2] {
+        [NodeExecutor::new(threads), NodeExecutor::spawn_per_phase(threads)]
+    }
+
     #[test]
     fn indices_cover_every_item_exactly_once() {
         for threads in [1usize, 2, 3, 8, 64] {
-            for n in [0usize, 1, 2, 7, 64, 101] {
-                let exec = NodeExecutor::new(threads);
-                let mut hits = vec![0u32; n];
-                exec.for_each_mut(&mut hits, |i, h| {
-                    *h += 1 + i as u32;
-                });
-                for (i, h) in hits.iter().enumerate() {
-                    assert_eq!(*h, 1 + i as u32, "threads={threads} n={n} i={i}");
+            for exec in executors(threads) {
+                for n in [0usize, 1, 2, 7, 64, 101] {
+                    let mut hits = vec![0u32; n];
+                    exec.for_each_mut(&mut hits, |i, h| {
+                        *h += 1 + i as u32;
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(*h, 1 + i as u32, "threads={threads} n={n} i={i}");
+                    }
                 }
             }
         }
@@ -172,32 +469,51 @@ mod tests {
 
     #[test]
     fn pair_and_triple_stay_aligned() {
-        let exec = NodeExecutor::new(4);
-        let n = 37;
-        let mut a: Vec<usize> = (0..n).collect();
-        let mut b = vec![0usize; n];
-        exec.for_each_pair_mut(&mut a, &mut b, |i, ai, bi| {
-            *bi = *ai * 2 + i;
-        });
-        assert!(b.iter().enumerate().all(|(i, &v)| v == i * 3));
+        for exec in executors(4) {
+            let n = 37;
+            let mut a: Vec<usize> = (0..n).collect();
+            let mut b = vec![0usize; n];
+            exec.for_each_pair_mut(&mut a, &mut b, |i, ai, bi| {
+                *bi = *ai * 2 + i;
+            });
+            assert!(b.iter().enumerate().all(|(i, &v)| v == i * 3));
 
-        let mut c = vec![0usize; n];
-        exec.for_each_triple_mut(&mut a, &mut b, &mut c, |i, ai, bi, ci| {
-            *ci = *ai + *bi + i;
-        });
-        assert!(c.iter().enumerate().all(|(i, &v)| v == i * 5));
+            let mut c = vec![0usize; n];
+            exec.for_each_triple_mut(&mut a, &mut b, &mut c, |i, ai, bi, ci| {
+                *ci = *ai + *bi + i;
+            });
+            assert!(c.iter().enumerate().all(|(i, &v)| v == i * 5));
+        }
     }
 
     #[test]
     fn parallel_matches_serial_output() {
         let mut serial: Vec<f32> = (0..1000).map(|i| i as f32).collect();
-        let mut par = serial.clone();
         let work = |_i: usize, v: &mut f32| {
             *v = (*v).sqrt() * 3.0 + 1.0;
         };
         NodeExecutor::serial().for_each_mut(&mut serial, work);
-        NodeExecutor::new(7).for_each_mut(&mut par, work);
-        assert_eq!(serial, par, "parallel execution must be bitwise identical");
+        for exec in executors(7) {
+            let mut par: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+            // Two consecutive phases through the same executor: the
+            // pool must hand off cleanly across epochs.
+            exec.for_each_mut(&mut par, work);
+            exec.for_each_mut(&mut par, |_i, v| *v += 0.0);
+            assert_eq!(serial, par, "parallel execution must be bitwise identical");
+        }
+    }
+
+    #[test]
+    fn pool_starts_lazily_and_is_shared_by_clones() {
+        let exec = NodeExecutor::new(3);
+        assert_eq!(exec.pool_workers(), None, "no threads before the first phase");
+        let clone = exec.clone();
+        let mut v = vec![0u8; 64];
+        clone.for_each_mut(&mut v, |_i, x| *x = 1);
+        assert_eq!(exec.pool_workers(), Some(2), "clones share one pool");
+        assert_eq!(clone.pool_workers(), Some(2));
+        assert_eq!(NodeExecutor::serial().pool_workers(), None);
+        assert_eq!(NodeExecutor::spawn_per_phase(3).pool_workers(), None);
     }
 
     #[test]

@@ -236,6 +236,15 @@ impl Trainer {
         if cfg.positive_definite {
             comm.make_lazy();
         }
+        // Elastic runs rebuild the weights on every membership resize:
+        // warm the CSR arenas at the roster's nmax once, so the
+        // `apply_churn` rebuilds never reallocate. Churn requires a
+        // static kind (cfg.validate), whose nnz = n + 2·edges is
+        // monotone in n — the nmax realization is the high-water mark.
+        if elastic.is_some() {
+            let edges = Topology::at_step(kind, capacity, cfg.seed, 0).num_edges();
+            comm.reserve_for(capacity, capacity + 2 * edges);
+        }
         let optimizer = optim::build(&cfg.optimizer, cfg.slowmo_period, cfg.slowmo_beta)?;
         let mut faults = match cfg.faults {
             None => None,
@@ -353,9 +362,13 @@ impl Trainer {
         let states = (0..n)
             .map(|_| NodeState::new(workload.init.clone(), optimizer.aux_count()))
             .collect();
+        // One persistent pool per trainer (started lazily on the first
+        // parallel phase); `update_exec` clones the handle — clones
+        // share the pool — or stays serial when phases are too small to
+        // amortize even a pool handoff.
         let exec = NodeExecutor::new(cfg.threads);
         let update_exec = if n * d >= PARALLEL_UPDATE_MIN_ITEMS {
-            exec
+            exec.clone()
         } else {
             NodeExecutor::serial()
         };
@@ -518,7 +531,7 @@ impl Trainer {
             wire_bytes_per_iter(self.optimizer.comm_pattern(), &CommStats::of_engine(comm), self.payload_bytes());
         let ctx = RoundCtx {
             comm,
-            exec: self.update_exec,
+            exec: self.update_exec.clone(),
             lr,
             beta: self.cfg.momentum as f32,
             step: k,

@@ -215,7 +215,7 @@ pub fn partial_average_all_par(
     comm: &dyn CommEngine,
     src: &[Vec<f32>],
     dst: &mut [Vec<f32>],
-    exec: NodeExecutor,
+    exec: &NodeExecutor,
 ) {
     exec.for_each_mut(dst, |i, row| comm.mix_node(i, src, row));
 }
@@ -243,16 +243,16 @@ pub fn gossip_exchange(ctx: &RoundCtx, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
             if state.is_identity() {
                 drop(state);
                 ctx.comm.begin_exchange(src);
-                partial_average_all_par(ctx.comm, src, dst, ctx.exec);
+                partial_average_all_par(ctx.comm, src, dst, &ctx.exec);
             } else {
-                let wire = state.encode_round(src, ctx.exec);
+                let wire = state.encode_round(src, &ctx.exec);
                 ctx.comm.begin_exchange(wire);
-                partial_average_all_par(ctx.comm, wire, dst, ctx.exec);
+                partial_average_all_par(ctx.comm, wire, dst, &ctx.exec);
             }
         }
         None => {
             ctx.comm.begin_exchange(src);
-            partial_average_all_par(ctx.comm, src, dst, ctx.exec);
+            partial_average_all_par(ctx.comm, src, dst, &ctx.exec);
         }
     }
 }

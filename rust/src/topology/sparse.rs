@@ -38,9 +38,11 @@ impl SparseWeights {
 
     /// Rebuild in place for a new topology realization — the per-step
     /// path for time-varying topologies (one-peer exponential,
-    /// bipartite random match). Reuses the allocations and rewrites
-    /// all neighbor lists in O(n + edges); it never touches (let alone
-    /// rebuilds) an n×n matrix. There is no incremental per-row
+    /// bipartite random match) and for elastic-resize churn. Reuses
+    /// the allocations and rewrites all neighbor lists in O(n +
+    /// edges); it never touches (let alone rebuilds) an n×n matrix,
+    /// and after a [`Self::reserve_for`] warmup at the fleet's maximum
+    /// size it never allocates either. There is no incremental per-row
     /// diffing — for these graphs every row changes each step anyway.
     pub fn rebuild_metropolis(&mut self, topo: &Topology) {
         let n = topo.n;
@@ -93,6 +95,32 @@ impl SparseWeights {
     /// Stored entries (diagnostic; n + 2·edges).
     pub fn nnz(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Pre-size the arenas for the largest realization this engine
+    /// will ever hold: `n` nodes and `nnz` entries (`n + 2·edges` for
+    /// Metropolis–Hastings rows). The elastic trainer calls this once
+    /// at construction with the churn roster's `nmax`, after which
+    /// [`Self::rebuild_metropolis`] never reallocates — resizes under
+    /// `apply_churn` rewrite the high-water-marked arenas in place
+    /// (`tests/executor_pool.rs` pins the capacities across churn).
+    pub fn reserve_for(&mut self, n: usize, nnz: usize) {
+        let rows = n + 1;
+        // `reserve_exact` takes *additional* capacity beyond len; the
+        // guards make the call a no-op when the high-water mark is
+        // already high enough, so repeated reservations never thrash.
+        if self.row_ptr.capacity() < rows {
+            self.row_ptr.reserve_exact(rows - self.row_ptr.len());
+        }
+        if self.entries.capacity() < nnz {
+            self.entries.reserve_exact(nnz - self.entries.len());
+        }
+    }
+
+    /// Current arena capacities `(row_ptr, entries)` — lets tests
+    /// assert rebuilds are allocation-free after warmup.
+    pub fn arena_capacity(&self) -> (usize, usize) {
+        (self.row_ptr.capacity(), self.entries.capacity())
     }
 }
 
@@ -151,6 +179,26 @@ mod tests {
             sw.rebuild_metropolis(&topo);
             agree(&sw, &topo);
             assert!(sw.row_sum_error() < 1e-6, "step {step}");
+        }
+    }
+
+    #[test]
+    fn reserve_for_pins_capacity_across_oscillating_rebuilds() {
+        let nmax = 24usize;
+        for kind in [Kind::Ring, Kind::SymExp] {
+            let edges_max = Topology::build(kind, nmax).num_edges();
+            let mut sw = SparseWeights::default();
+            sw.reserve_for(nmax, nmax + 2 * edges_max);
+            let warm = sw.arena_capacity();
+            assert!(warm.0 >= nmax + 1 && warm.1 >= nmax + 2 * edges_max);
+            // Elastic churn oscillates n <= nmax; every rebuild must
+            // run inside the warmed arenas (no reallocation).
+            for n in [4usize, nmax, 7, 16, 3, nmax, 12] {
+                let topo = Topology::build(kind, n);
+                sw.rebuild_metropolis(&topo);
+                agree(&sw, &topo);
+                assert_eq!(sw.arena_capacity(), warm, "{kind:?} n={n} reallocated");
+            }
         }
     }
 

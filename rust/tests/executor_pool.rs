@@ -1,0 +1,241 @@
+//! Persistent worker-pool property suite (DESIGN.md §13).
+//!
+//! The pool replaces spawn-per-phase threading in the executor; its
+//! contract is that this is invisible everywhere except wall-clock:
+//!
+//! * pool == spawn-per-phase == serial, bitwise, for every optimizer
+//!   and for fleet-scale gossip (n = 4096 per PR, n = 65536 nightly);
+//! * the worker count is a function of `threads` alone — never of the
+//!   fleet size, which elastic churn resizes under the pool's feet;
+//! * `rebuild_metropolis` never reallocates after the trainer's
+//!   `reserve_for` warmup at nmax;
+//! * a panic inside any lane propagates to the caller instead of
+//!   deadlocking the epoch barrier, and the pool stays usable after;
+//! * chunk boundaries come from ONE per-phase plan, pinned here for
+//!   every n ≤ 4096 so the geometry (and thus bitwise results) can
+//!   never drift from the pre-pool executor.
+//!
+//! Every test name contains `parallel`, so the nightly ThreadSanitizer
+//! job runs this whole suite.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use decentlam::coordinator::{NodeExecutor, Trainer};
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::mlp;
+use decentlam::optim::{
+    self, partial_average_all_par, NodeState, RoundCtx, Scratch,
+};
+use decentlam::topology::{metropolis_hastings, Kind, SparseWeights, Topology};
+use decentlam::util::config::Config;
+use decentlam::util::rng::Pcg64;
+
+/// Drive `rounds` optimizer rounds through `exec` and return the final
+/// model bits of every node. Gradients are drawn from per-(step, node)
+/// seeded streams, so every executor sees identical inputs.
+fn run_rounds(name: &str, exec: &NodeExecutor, rounds: usize) -> Vec<u32> {
+    let (n, d) = (24usize, 33usize);
+    let wm = metropolis_hastings(&Topology::at_step(Kind::SymExp, n, 1, 0));
+    // SlowMo period 3 < rounds, so its all-reduce + reset fires inside
+    // the window for the slowmo optimizer.
+    let mut o = optim::build(name, 3, 0.7).unwrap();
+    let mut states: Vec<NodeState> = (0..n)
+        .map(|i| {
+            let mut x0 = vec![0.0f32; d];
+            Pcg64::seeded(7 + i as u64).normal_fill(&mut x0, 1.0);
+            NodeState::new(x0, o.aux_count())
+        })
+        .collect();
+    let mut scratch = Scratch::new(n, d);
+    let mut grads = vec![vec![0.0f32; d]; n];
+    for step in 0..rounds {
+        for (i, g) in grads.iter_mut().enumerate() {
+            Pcg64::seeded(1000 + step as u64 * 100 + i as u64).normal_fill(g, 0.5);
+        }
+        let ctx = RoundCtx {
+            exec: exec.clone(),
+            ..RoundCtx::new(&wm, 0.05, 0.9, step, false)
+        };
+        o.round(&mut states, &grads, &ctx, &mut scratch);
+    }
+    states.iter().flat_map(|s| s.x.iter().map(|v| v.to_bits())).collect()
+}
+
+#[test]
+fn parallel_pool_matches_spawn_and_serial_across_all_optimizers() {
+    for name in optim::ALL.iter().chain([&"dsgd"]) {
+        let serial = run_rounds(name, &NodeExecutor::serial(), 4);
+        let spawn = run_rounds(name, &NodeExecutor::spawn_per_phase(4), 4);
+        let pool = run_rounds(name, &NodeExecutor::new(4), 4);
+        assert_eq!(serial, spawn, "{name}: spawn-per-phase diverged from serial");
+        assert_eq!(serial, pool, "{name}: persistent pool diverged from serial");
+    }
+}
+
+#[test]
+fn parallel_phase_plan_chunk_boundaries_pinned_for_every_n() {
+    // The pre-pool executor derived `chunk = ceil(n / min(threads, n))`
+    // and cut blocks at [b·chunk, min((b+1)·chunk, n)). The plan (now
+    // computed once per phase) must reproduce exactly that geometry for
+    // every n — different boundaries would reorder nothing arithmetic-
+    // wise per element, but this pin makes any drift loud anyway.
+    for threads in [1usize, 2, 3, 4, 7, 8, 64] {
+        let exec = NodeExecutor::new(threads);
+        for n in 1usize..=4096 {
+            let plan = exec.phase_plan(n);
+            let workers = threads.min(n).max(1);
+            let chunk = (n + workers - 1) / workers;
+            assert_eq!(plan.n, n);
+            assert_eq!(plan.chunk, chunk, "threads={threads} n={n}");
+            assert_eq!(plan.blocks, (n + chunk - 1) / chunk, "threads={threads} n={n}");
+            assert!(plan.blocks <= threads, "threads={threads} n={n}: too many blocks");
+            // Blocks partition 0..n: contiguous, in order, non-empty.
+            let mut covered = 0usize;
+            for b in 0..plan.blocks {
+                let start = b * plan.chunk;
+                let end = (start + plan.chunk).min(n);
+                assert_eq!(start, covered, "threads={threads} n={n} block {b}: gap");
+                assert!(end > start, "threads={threads} n={n} block {b}: empty");
+                covered = end;
+            }
+            assert_eq!(covered, n, "threads={threads} n={n}: blocks do not cover 0..n");
+        }
+    }
+}
+
+#[test]
+fn parallel_pool_worker_count_independent_of_fleet_size() {
+    let exec = NodeExecutor::new(4);
+    assert_eq!(exec.pool_workers(), None, "pool must start lazily");
+    let clone = exec.clone();
+    // Phases over wildly different n: the pool is created once with
+    // threads-1 workers and never resized — elastic churn changes n
+    // every few steps and must not touch thread count.
+    for n in [64usize, 1000, 3, 4096, 1] {
+        let mut v = vec![1.0f32; n];
+        clone.for_each_mut(&mut v, |i, x| *x += i as f32);
+        assert_eq!(exec.pool_workers(), Some(3), "after phase over n={n}");
+        assert_eq!(clone.pool_workers(), Some(3), "clone must share the pool");
+    }
+}
+
+#[test]
+fn parallel_panic_in_worker_propagates_without_deadlock() {
+    let exec = NodeExecutor::new(4);
+    // n=100, threads=4 → chunk 25: i==57 lands on a pool worker's lane,
+    // i==7 on the caller's own lane 0. Both must surface as a panic on
+    // the calling thread — and the pool must stay usable afterwards.
+    for bad in [57usize, 7] {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut v = vec![0u8; 100];
+            exec.for_each_mut(&mut v, |i, _x| {
+                assert!(i != bad, "injected failure at {i}");
+            });
+        }));
+        assert!(result.is_err(), "panic at i={bad} must propagate to the caller");
+        let mut v = vec![0u32; 100];
+        exec.for_each_mut(&mut v, |i, x| *x = i as u32 + 1);
+        assert!(
+            v.iter().enumerate().all(|(i, &x)| x == i as u32 + 1),
+            "pool must survive a panicking phase (bad={bad})"
+        );
+    }
+}
+
+fn churn_cfg(threads: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = "decentlam".into();
+    cfg.nodes = 4;
+    cfg.steps = 12;
+    cfg.total_batch = 4 * 16;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.02;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.topology = "ring".into();
+    cfg.seed = 3;
+    cfg.threads = threads;
+    cfg.apply_kv("churn", "join=0.2,leave=0.2,nmin=2,nmax=6,seed=8").unwrap();
+    cfg
+}
+
+fn churn_workload(cfg: &Config) -> decentlam::grad::Workload {
+    // One shard per stable id (nmax = 6).
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes: 6,
+        samples_per_node: 64,
+        eval_samples: 64,
+        dirichlet_alpha: 0.5,
+        seed: 3,
+        ..Default::default()
+    });
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, cfg.micro_batch, 3)
+}
+
+#[test]
+fn parallel_pool_survives_churn_and_rebuilds_without_reallocating() {
+    // Pooled and serial trainers must agree bitwise through elastic
+    // resizes, and the CSR arenas — warmed at nmax in Trainer::new —
+    // must never grow while churn oscillates the fleet.
+    let cfg_par = churn_cfg(4);
+    let cfg_ser = churn_cfg(1);
+    let mut par = Trainer::new(cfg_par.clone(), churn_workload(&cfg_par)).unwrap();
+    let mut ser = Trainer::new(cfg_ser.clone(), churn_workload(&cfg_ser)).unwrap();
+    let warm = par.comm.arena_capacity();
+    for k in 0..cfg_par.steps {
+        let (lp, ls) = (par.step(k), ser.step(k));
+        assert_eq!(lp.to_bits(), ls.to_bits(), "step {k}: pooled loss diverged");
+        assert_eq!(
+            par.comm.arena_capacity(),
+            warm,
+            "step {k}: rebuild_metropolis reallocated after warmup"
+        );
+    }
+    let a: Vec<u32> = par.average_model().iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = ser.average_model().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "final model diverged under churn");
+}
+
+/// `steps` gossip+update iterations at fleet scale: one partial
+/// average through `exec`, then a deterministic per-node update, also
+/// through `exec`. Returns the final bits of every node.
+fn fleet_gossip(kind: Kind, n: usize, d: usize, steps: usize, exec: &NodeExecutor) -> Vec<u32> {
+    let sw = SparseWeights::metropolis_hastings(&Topology::build(kind, n));
+    let mut x: Vec<Vec<f32>> = (0..n)
+        .map(|i| (0..d).map(|k| ((i * 13 + k * 5) % 31) as f32 * 0.0625 - 1.0).collect())
+        .collect();
+    let mut mixed = vec![vec![0.0f32; d]; n];
+    for step in 0..steps {
+        partial_average_all_par(&sw, &x, &mut mixed, exec);
+        let decay = 1.0 - 1.0 / (step + 2) as f32;
+        exec.for_each_pair_mut(&mut x, &mut mixed, |i, xi, mi| {
+            for (a, &m) in xi.iter_mut().zip(mi.iter()) {
+                *a = m * decay + (i % 7) as f32 * 1e-3;
+            }
+        });
+    }
+    x.iter().flat_map(|r| r.iter().map(|v| v.to_bits())).collect()
+}
+
+#[test]
+fn fleet_gossip_parallel_pool_matches_spawn_bitwise_ring_n4096() {
+    let (n, d, steps) = (4096usize, 16usize, 20usize);
+    let serial = fleet_gossip(Kind::Ring, n, d, steps, &NodeExecutor::serial());
+    let spawn = fleet_gossip(Kind::Ring, n, d, steps, &NodeExecutor::spawn_per_phase(4));
+    let pool = fleet_gossip(Kind::Ring, n, d, steps, &NodeExecutor::new(4));
+    assert_eq!(serial, spawn, "spawn-per-phase diverged at n={n}");
+    assert_eq!(serial, pool, "persistent pool diverged at n={n}");
+}
+
+#[test]
+#[ignore = "fleet-scale sweep (n=65536); nightly --include-ignored tier"]
+fn fleet_gossip_parallel_pool_matches_spawn_bitwise_n65536() {
+    let (n, d, steps) = (65536usize, 8usize, 3usize);
+    for kind in [Kind::Ring, Kind::SymExp] {
+        let serial = fleet_gossip(kind, n, d, steps, &NodeExecutor::serial());
+        let spawn = fleet_gossip(kind, n, d, steps, &NodeExecutor::spawn_per_phase(8));
+        let pool = fleet_gossip(kind, n, d, steps, &NodeExecutor::new(8));
+        assert_eq!(serial, spawn, "{kind:?}: spawn-per-phase diverged at n={n}");
+        assert_eq!(serial, pool, "{kind:?}: persistent pool diverged at n={n}");
+    }
+}

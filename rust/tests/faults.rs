@@ -186,7 +186,7 @@ fn prop_parallel_mixing_bitwise_matches_serial_under_faults() {
             let mut serial = vec![vec![0.0f32; d]; n];
             let mut parallel = vec![vec![0.0f32; d]; n];
             partial_average_all(&f, src, &mut serial);
-            partial_average_all_par(&f, src, &mut parallel, NodeExecutor::new(*threads));
+            partial_average_all_par(&f, src, &mut parallel, &NodeExecutor::new(*threads));
             if serial != parallel {
                 return Err("parallel faulty mixing differs from serial".into());
             }

@@ -314,7 +314,7 @@ fn prop_parallel_exchange_bitwise_matches_serial() {
             let mut serial = vec![vec![0.0f32; d]; n];
             let mut parallel = vec![vec![0.0f32; d]; n];
             partial_average_all(&sw, src, &mut serial);
-            partial_average_all_par(&sw, src, &mut parallel, NodeExecutor::new(*threads));
+            partial_average_all_par(&sw, src, &mut parallel, &NodeExecutor::new(*threads));
             if serial != parallel {
                 return Err("parallel result differs from serial".into());
             }
@@ -409,7 +409,7 @@ fn prop_int8_ef_residual_bounded_over_100_rounds() {
                     *v = (rng.f32() * 2.0 - 1.0) * scale;
                 }
                 state.begin_step(step);
-                state.encode_round(&src, NodeExecutor::serial());
+                state.encode_round(&src, &NodeExecutor::serial());
                 let norm = state.residual_norm(0, 0);
                 if norm > bound {
                     return Err(format!("step {step}: ‖residual‖ = {norm} > {bound}"));
@@ -447,7 +447,7 @@ fn prop_codec_gossip_preserves_mean_within_quantization_error() {
                 let wire: Vec<Vec<f32>> = if state.is_identity() {
                     src.clone()
                 } else {
-                    state.encode_round(src, NodeExecutor::serial()).to_vec()
+                    state.encode_round(src, &NodeExecutor::serial()).to_vec()
                 };
                 partial_average_all(&sw, &wire, &mut dst);
                 let maxabs = src

@@ -1,0 +1,283 @@
+#!/usr/bin/env python3
+"""Perf-trajectory comparator for the CI BENCH artifacts.
+
+The bench harness (`rust/src/util/bench.rs`) dumps one JSON object per
+target, keyed by case name, with `median_ns` as the headline statistic.
+CI merges the per-target dumps into one `BENCH_<PR>.json`, uploads it,
+and on the next run compares the fresh numbers against the previous
+successful main-branch artifact (falling back to the committed
+`BENCH_baseline.json` when no artifact is reachable). Regressions on
+the pinned allowlist warn at >15% and fail at >30% — so a 2x mix-kernel
+slowdown can no longer merge green.
+
+Subcommands:
+  merge OUT IN...            merge bench JSON objects; duplicate case
+                             names are a hard error (the old `jq -s
+                             add` silently let the last file win)
+  compare CURRENT            gate CURRENT against a baseline:
+      --baseline PATH        preferred baseline (may be absent)
+      --fallback PATH        used when --baseline is absent (must exist)
+      --allowlist PATH       case-name substrings under the gate
+                             (default tools/bench_allowlist.txt)
+      --warn PCT --fail PCT  thresholds (default 15 / 30)
+  self-test                  exercise the comparator on synthetic data
+                             (run in CI: proves a >30% regression fails)
+
+Baselines whose `_meta` object carries `"provisional": true` (the
+seeded `BENCH_baseline.json` — numbers typed in, not measured on the CI
+runner) downgrade failures to warnings; the gate arms itself the first
+time a real measured artifact becomes the baseline. Keys starting with
+`_` are metadata, never benchmark cases.
+
+Exit codes: 0 ok (warnings allowed), 1 failed regression or bad input.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def log(msg):
+    print(msg, flush=True)
+
+
+def die(msg):
+    log(f"::error::{msg}")
+    sys.exit(1)
+
+
+def load_json(path):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        die(f"{path}: cannot read bench JSON: {e}")
+    if not isinstance(data, dict):
+        die(f"{path}: bench JSON must be an object keyed by case name")
+    return data
+
+
+def cases_of(data):
+    """Benchmark cases only: `_`-prefixed keys are metadata."""
+    return {k: v for k, v in data.items() if not k.startswith("_")}
+
+
+def median_of(path, name, entry):
+    if not isinstance(entry, dict) or "median_ns" not in entry:
+        die(f"{path}: case {name!r} has no median_ns")
+    value = entry["median_ns"]
+    if not isinstance(value, (int, float)) or value <= 0:
+        die(f"{path}: case {name!r} has non-positive median_ns {value!r}")
+    return float(value)
+
+
+def load_allowlist(path):
+    patterns = []
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if line and not line.startswith("#"):
+                    patterns.append(line)
+    except OSError as e:
+        die(f"{path}: cannot read allowlist: {e}")
+    if not patterns:
+        die(f"{path}: allowlist is empty — the gate would cover nothing")
+    return patterns
+
+
+def allowlisted(name, patterns):
+    return any(p in name for p in patterns)
+
+
+def cmd_merge(args):
+    merged = {}
+    origin = {}
+    for path in args.inputs:
+        for name, entry in load_json(path).items():
+            if name in merged and not name.startswith("_"):
+                die(
+                    f"duplicate bench case {name!r} in {path} "
+                    f"(already defined by {origin[name]}) — case names must be "
+                    f"unique across targets or the trajectory silently forks"
+                )
+            merged[name] = entry
+            origin[name] = path
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(merged, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    log(f"merged {len(cases_of(merged))} cases from {len(args.inputs)} files into {args.out}")
+    return 0
+
+
+def compare_data(current, baseline, patterns, warn_pct, fail_pct, provisional):
+    """Pure comparison; returns (lines, warnings, failures) for testability."""
+    lines, warnings, failures = [], [], []
+    cur = cases_of(current)
+    base = cases_of(baseline)
+    gated = sorted(n for n in cur if allowlisted(n, patterns))
+    for name in gated:
+        if name not in base:
+            lines.append(f"NEW    {name}: no baseline entry (joins the trajectory now)")
+            continue
+        b = median_of("<baseline>", name, base[name])
+        c = median_of("<current>", name, cur[name])
+        delta = (c - b) / b * 100.0
+        tag = "ok"
+        if delta > fail_pct:
+            tag = "FAIL"
+            (warnings if provisional else failures).append(
+                f"{name}: median {b:.0f} -> {c:.0f} ns ({delta:+.1f}% > {fail_pct}%)"
+            )
+        elif delta > warn_pct:
+            tag = "warn"
+            warnings.append(
+                f"{name}: median {b:.0f} -> {c:.0f} ns ({delta:+.1f}% > {warn_pct}%)"
+            )
+        lines.append(f"{tag:<6} {name}: {b:.0f} -> {c:.0f} ns ({delta:+.1f}%)")
+    # Allowlisted coverage that vanished: a deleted case can hide a
+    # regression as effectively as a slow one.
+    for name in sorted(base):
+        if allowlisted(name, patterns) and name not in cur:
+            warnings.append(f"{name}: allowlisted case missing from current run")
+    return lines, warnings, failures
+
+
+def cmd_compare(args):
+    current = load_json(args.current)
+    if os.path.exists(args.baseline):
+        base_path = args.baseline
+        log(f"baseline: {base_path} (previous main-branch artifact)")
+    else:
+        base_path = args.fallback
+        log(f"baseline: {base_path} (fallback — no previous artifact reachable)")
+        if not os.path.exists(base_path):
+            die(f"neither baseline {args.baseline} nor fallback {args.fallback} exists")
+    baseline = load_json(base_path)
+    meta = baseline.get("_meta", {})
+    provisional = isinstance(meta, dict) and bool(meta.get("provisional"))
+    if provisional:
+        log(
+            "::warning::baseline is PROVISIONAL (seeded, not measured on this "
+            "runner): >30% regressions downgrade to warnings until the first "
+            "real main-branch BENCH artifact becomes the baseline"
+        )
+    patterns = load_allowlist(args.allowlist)
+    lines, warnings, failures = compare_data(
+        current, baseline, patterns, args.warn, args.fail, provisional
+    )
+    for line in lines:
+        log(line)
+    if not lines:
+        log("::warning::no allowlisted cases found in the current run")
+    for w in warnings:
+        log(f"::warning::bench regression: {w}")
+    for f in failures:
+        log(f"::error::bench regression: {f}")
+    log(
+        f"compared {len(lines)} allowlisted cases: "
+        f"{len(failures)} failed, {len(warnings)} warned"
+    )
+    return 1 if failures else 0
+
+
+def entry(median):
+    return {"median_ns": median}
+
+
+def cmd_self_test(_args):
+    patterns = ["sparse exchange", "fleet_scaling", " round (n="]
+    base = {
+        "_meta": {"note": "synthetic"},
+        "sparse exchange n=256": entry(1000.0),
+        "fleet_scaling ring n=4096 pool": entry(2000.0),
+        "decentlam round (n=8) d=17226": entry(500.0),
+        "unrelated case": entry(100.0),
+    }
+
+    # 1. A 35% regression on an allowlisted case fails.
+    cur = dict(base)
+    cur["sparse exchange n=256"] = entry(1350.0)
+    _, _, failures = compare_data(cur, base, patterns, 15, 30, False)
+    assert len(failures) == 1 and "sparse exchange n=256" in failures[0], failures
+
+    # 2. A 20% regression warns but does not fail.
+    cur = dict(base)
+    cur["fleet_scaling ring n=4096 pool"] = entry(2400.0)
+    _, warnings, failures = compare_data(cur, base, patterns, 15, 30, False)
+    assert not failures and len(warnings) == 1, (warnings, failures)
+
+    # 3. A 35% regression on a NON-allowlisted case passes clean.
+    cur = dict(base)
+    cur["unrelated case"] = entry(135.0)
+    _, warnings, failures = compare_data(cur, base, patterns, 15, 30, False)
+    assert not failures and not warnings, (warnings, failures)
+
+    # 4. Provisional baseline downgrades the failure to a warning.
+    cur = dict(base)
+    cur["sparse exchange n=256"] = entry(1350.0)
+    _, warnings, failures = compare_data(cur, base, patterns, 15, 30, True)
+    assert not failures and len(warnings) == 1, (warnings, failures)
+
+    # 5. An improvement is quiet.
+    cur = dict(base)
+    cur["sparse exchange n=256"] = entry(400.0)
+    _, warnings, failures = compare_data(cur, base, patterns, 15, 30, False)
+    assert not failures and not warnings, (warnings, failures)
+
+    # 6. A vanished allowlisted case warns (coverage loss).
+    cur = dict(base)
+    del cur["decentlam round (n=8) d=17226"]
+    _, warnings, failures = compare_data(cur, base, patterns, 15, 30, False)
+    assert not failures and any("missing" in w for w in warnings), (warnings, failures)
+
+    # 7. Metadata keys are never compared as cases.
+    lines, _, _ = compare_data(base, base, ["_meta"], 15, 30, False)
+    assert not lines, lines
+
+    # 8. merge rejects duplicate case names across inputs.
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        a, b = os.path.join(tmp, "a.json"), os.path.join(tmp, "b.json")
+        for path in (a, b):
+            with open(path, "w", encoding="utf-8") as fh:
+                json.dump({"dup case": entry(1.0)}, fh)
+        out = os.path.join(tmp, "out.json")
+        rc = os.spawnl(
+            os.P_WAIT, sys.executable, sys.executable, __file__, "merge", out, a, b
+        )
+        assert rc != 0, "merge must reject duplicate case names"
+
+    log("self-test: all comparator checks passed (incl. >30% synthetic failure)")
+    return 0
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_merge = sub.add_parser("merge", help="merge bench JSON files")
+    p_merge.add_argument("out")
+    p_merge.add_argument("inputs", nargs="+")
+    p_merge.set_defaults(func=cmd_merge)
+
+    p_cmp = sub.add_parser("compare", help="gate current medians against a baseline")
+    p_cmp.add_argument("current")
+    p_cmp.add_argument("--baseline", required=True)
+    p_cmp.add_argument("--fallback", required=True)
+    p_cmp.add_argument("--allowlist", default="tools/bench_allowlist.txt")
+    p_cmp.add_argument("--warn", type=float, default=15.0)
+    p_cmp.add_argument("--fail", type=float, default=30.0)
+    p_cmp.set_defaults(func=cmd_compare)
+
+    p_st = sub.add_parser("self-test", help="synthetic comparator checks")
+    p_st.set_defaults(func=cmd_self_test)
+
+    args = parser.parse_args()
+    sys.exit(args.func(args))
+
+
+if __name__ == "__main__":
+    main()
