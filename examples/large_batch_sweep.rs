@@ -1,65 +1,200 @@
-//! Large-batch sweep (the paper's intro motivation): hold the number of
-//! optimization steps fixed, grow the total batch, and watch the
-//! momentum-amplified inconsistency bias separate DmSGD from DecentLaM
-//! while PmSGD pays the all-reduce in (modeled) wall-clock.
+//! Large-batch sweep (the paper's intro motivation), now measured
+//! rather than modeled: hold the number of optimization steps fixed,
+//! grow the total batch (and with it the linearly-scaled learning
+//! rate), and read the momentum-bias proxy straight off the telemetry
+//! stream. DmSGD's bias grows ~γ² with the scaled rate; DecentLaM's
+//! local correction keeps the γ²-normalized bias flat; momentum-free
+//! dsgd sits at f32-rounding level throughout.
+//!
+//! Every run tees its stream to disk and replays it — the replayed
+//! `metrics` lines must match the trainer's in-memory log bit for bit
+//! (the same check `decentlam profile` relies on).
 //!
 //! ```bash
-//! cargo run --release --example large_batch_sweep -- --steps 250
+//! cargo run --release --example large_batch_sweep -- --steps 150
+//! cargo run --release --example large_batch_sweep -- --smoke   # CI gates
 //! ```
 
-use decentlam::comm::{CommCost, CommStats, LinkSpec, PayloadBytes};
+use std::path::PathBuf;
+
 use decentlam::coordinator::Trainer;
-use decentlam::experiments::{mlp_workload_named, protocol_config, synth_imagenet};
-use decentlam::topology::{Kind, Topology};
+use decentlam::experiments::{mlp_workload_named, synth_imagenet};
+use decentlam::telemetry::replay_path;
 use decentlam::util::cli::Args;
-use decentlam::util::table::{pct, sig, Table};
+use decentlam::util::config::Config;
+use decentlam::util::math;
+use decentlam::util::table::{sig, Table};
+
+fn sweep_cfg(method: &str, batch: usize, steps: usize, nodes: usize) -> anyhow::Result<Config> {
+    let mut cfg = Config::default();
+    for (k, v) in [
+        ("nodes", nodes.to_string()),
+        ("topology", "ring".into()),
+        ("optimizer", method.into()),
+        ("model", "mlp-xs".into()),
+        ("steps", steps.to_string()),
+        ("total-batch", batch.to_string()),
+        ("micro-batch", "32".into()),
+        // γ_ref chosen so the scaled rate stays convergent at 16x:
+        // γ ∈ {0.005, 0.02, 0.08} across the batch grid — a clean
+        // 1:16:256 spread in γ², which is what the bias tracks.
+        ("lr", "0.005".into()),
+        ("linear-scaling", "true".into()),
+        ("lr-ref-batch", "256".into()),
+        ("max-lr-scale", "16".into()),
+        ("momentum", "0.9".into()),
+        ("schedule", "constant".into()),
+        ("eval-every", steps.to_string()),
+        ("seed", "1".into()),
+        ("metrics", "every=1".into()),
+    ] {
+        cfg.apply_kv(k, &v)?;
+    }
+    Ok(cfg)
+}
+
+struct Cell {
+    method: &'static str,
+    batch: usize,
+    scaled_lr: f64,
+    bias: f64,
+    bias_norm: f64,
+    final_loss: f64,
+}
+
+fn run_cell(
+    method: &'static str,
+    batch: usize,
+    steps: usize,
+    nodes: usize,
+) -> anyhow::Result<Cell> {
+    let stream: PathBuf = std::env::temp_dir().join(format!(
+        "decentlam_sweep_{}_{method}_{batch}.jsonl",
+        std::process::id()
+    ));
+    let mut cfg = sweep_cfg(method, batch, steps, nodes)?;
+    cfg.apply_kv("telemetry", &stream.to_string_lossy())?;
+    let scaled_lr = cfg.scaled_lr();
+
+    let data = synth_imagenet(nodes, 1);
+    let wl = mlp_workload_named("mlp-xs", data, cfg.micro_batch, cfg.seed)?;
+    let mut t = Trainer::new(cfg, wl)?;
+    let report = t.run();
+    anyhow::ensure!(t.telemetry_error().is_none(), "telemetry stream went inert");
+
+    // Gate 1 (always on): the offline replay of the stream must carry
+    // exactly the metrics the trainer computed — bit for bit.
+    let r = replay_path(&stream)?;
+    anyhow::ensure!(
+        r.metrics == t.metrics_log(),
+        "{method}@{batch}: replayed metrics diverge from the live log"
+    );
+    std::fs::remove_file(&stream).ok();
+
+    // Steady-state bias: mean proxy over the last ≤10 metric steps
+    // (the early transient, before momentum saturates, is not the
+    // paper's quantity).
+    let log = t.metrics_log();
+    let tail = &log[log.len().saturating_sub(10)..];
+    anyhow::ensure!(!tail.is_empty(), "{method}@{batch}: no metrics collected");
+    let bias = math::sum_f64(tail.iter().map(|m| m.bias_proxy)) / tail.len() as f64;
+    anyhow::ensure!(bias.is_finite(), "{method}@{batch}: diverged (bias {bias})");
+
+    Ok(Cell {
+        method,
+        batch,
+        scaled_lr,
+        bias,
+        bias_norm: bias / (scaled_lr * scaled_lr),
+        final_loss: report.losses.last().copied().unwrap_or(f64::NAN),
+    })
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let steps = args.get_usize("steps", 250)?;
-    let nodes = args.get_usize("nodes", 8)?;
+    let smoke = args.get_bool("smoke");
+    let steps = if smoke { 40 } else { args.get_usize("steps", 150)? };
+    let nodes = args.get_usize("nodes", 16)?;
     let batches = [256usize, 1024, 4096];
-    let methods = ["pmsgd", "dmsgd", "decentlam"];
+    let methods = ["dsgd", "dmsgd", "decentlam"];
 
-    let cost = CommCost::new(LinkSpec::tcp_10gbps());
-    let stats = CommStats::of_topology(&Topology::build(Kind::SymExp, nodes));
-    let bytes = PayloadBytes::uniform(25.5e6 * 4.0); // ResNet-50-sized fp32 payload
-
+    let mut cells: Vec<Cell> = Vec::new();
     let mut table = Table::new(
-        "large-batch sweep — accuracy and modeled per-iter wall time (10 Gbps)",
-        &["method", "batch", "val acc", "train loss", "comm ms/iter", "wall ms/iter"],
+        "large-batch sweep — steady-state momentum-bias proxy (ring, linear LR scaling)",
+        &["method", "batch", "scaled lr", "bias proxy", "bias / γ²", "final loss"],
     );
     for &batch in &batches {
         for method in methods {
-            let data = synth_imagenet(nodes, 1);
-            let mut cfg = protocol_config(method, batch, steps, nodes);
-            cfg.seed = 1;
-            let wl = mlp_workload_named("mlp-s", data, cfg.micro_batch, 1)?;
-            let mut t = Trainer::new(cfg, wl)?;
-            let report = t.run();
-            let comm_s = cost.per_iter_comm_s(t.comm_pattern(), &stats, bytes);
-            let per_gpu = batch as f64 / (nodes * 8) as f64;
-            let compute_s = per_gpu / 250.0;
-            let wall_s = cost.per_iter_wall_s(compute_s, comm_s);
+            let c = run_cell(method, batch, steps, nodes)?;
             table.row(vec![
-                method.into(),
-                batch.to_string(),
-                pct(report.final_accuracy),
-                sig(*report.losses.last().unwrap(), 4),
-                sig(comm_s * 1e3, 3),
-                sig(wall_s * 1e3, 3),
+                c.method.into(),
+                c.batch.to_string(),
+                sig(c.scaled_lr, 3),
+                format!("{:.3e}", c.bias),
+                format!("{:.3e}", c.bias_norm),
+                sig(c.final_loss, 4),
             ]);
+            cells.push(c);
         }
     }
     println!("{}", table.render());
     println!(
-        "shape check: DmSGD acc drops fastest with batch; DecentLaM holds; \
-         PmSGD pays ~{}x the comm of partial averaging.",
-        sig(
-            cost.allreduce_s(nodes, bytes.allreduce)
-                / cost.neighbor_exchange_s(&stats, bytes.neighbor),
-            2
-        )
+        "shape check: dsgd ~0 (momentum-free); dmsgd bias grows with batch \
+         (γ²-amplified momentum inconsistency); decentlam's bias/γ² stays flat."
     );
+
+    if smoke {
+        let get = |method: &str, batch: usize| {
+            cells.iter().find(|c| c.method == method && c.batch == batch)
+        };
+        let top = *batches.last().unwrap_or(&0);
+
+        // Gate 2: momentum-free dsgd is bias-free up to rounding —
+        // negligible against dmsgd at the largest batch.
+        let (dsgd, dmsgd_top) = match (get("dsgd", top), get("dmsgd", top)) {
+            (Some(a), Some(b)) => (a.bias, b.bias),
+            _ => anyhow::bail!("smoke: missing sweep cells"),
+        };
+        anyhow::ensure!(
+            dsgd <= 1e-6 * dmsgd_top,
+            "smoke: dsgd bias {dsgd:.3e} not negligible vs dmsgd {dmsgd_top:.3e}"
+        );
+
+        // Gate 3: dmsgd's bias strictly grows with batch size — the
+        // paper's Fig. 1 phenomenon.
+        for w in batches.windows(2) {
+            let (lo, hi) = match (get("dmsgd", w[0]), get("dmsgd", w[1])) {
+                (Some(a), Some(b)) => (a.bias, b.bias),
+                _ => anyhow::bail!("smoke: missing dmsgd cells"),
+            };
+            anyhow::ensure!(
+                hi > lo,
+                "smoke: dmsgd bias did not grow {} -> {} ({lo:.3e} -> {hi:.3e})",
+                w[0],
+                w[1]
+            );
+        }
+
+        // Gate 4: decentlam's γ²-normalized bias is batch-independent
+        // (no momentum amplification left once the γ² scaling is
+        // divided out).
+        let norms: Vec<f64> = batches
+            .iter()
+            .filter_map(|&b| get("decentlam", b).map(|c| c.bias_norm))
+            .collect();
+        anyhow::ensure!(norms.len() == batches.len(), "smoke: missing decentlam cells");
+        let (min, max) = norms
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        anyhow::ensure!(
+            max / min < 10.0,
+            "smoke: decentlam normalized bias not flat ({min:.3e}..{max:.3e})"
+        );
+
+        println!(
+            "smoke gates passed: dsgd ≈ 0, dmsgd grows with batch, \
+             decentlam bias/γ² flat within 10x; all streams replayed bit-exact"
+        );
+    }
     Ok(())
 }

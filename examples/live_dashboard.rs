@@ -1,0 +1,157 @@
+//! Live terminal dashboard over a telemetry stream (DESIGN.md §14):
+//! point it at the JSONL file a training run is teeing with
+//! `--telemetry run.jsonl` and it re-replays the file on a fixed poll
+//! cadence, rendering run progress, the momentum-bias trajectory, and
+//! the phase profile as they stream in. The replay layer's torn-tail
+//! tolerance is what makes this safe against a mid-line writer: a
+//! partial final line is dropped, never a parse error.
+//!
+//! ```bash
+//! # terminal 1: any run with a telemetry tee
+//! cargo run --release -- train --nodes 8 --steps 400 \
+//!     --telemetry /tmp/run.jsonl,flush=1 --metrics every=5 --profile every=20
+//! # terminal 2: watch it
+//! cargo run --release --example live_dashboard -- /tmp/run.jsonl
+//! # one-shot render (CI smoke): no follow loop, no screen clearing
+//! cargo run --release --example live_dashboard -- /tmp/run.jsonl --snapshot
+//! ```
+//!
+//! The dashboard is a pure *reader*: it never touches the stream file
+//! beyond `read_to_string`, and exits when the `run-end` envelope
+//! arrives (or immediately with `--snapshot`).
+
+use decentlam::telemetry::{Event, Replay};
+use decentlam::util::cli::Args;
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Log-scaled sparkline over the positive values; zeros render as the
+/// lowest bar, non-finite values (a diverged run) as `!`.
+fn sparkline(values: &[f64]) -> String {
+    let pos: Vec<f64> = values.iter().copied().filter(|v| v.is_finite() && *v > 0.0).collect();
+    let (lo, hi) = pos
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    values
+        .iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                '!'
+            } else if v <= 0.0 || pos.is_empty() {
+                SPARK[0]
+            } else if hi <= lo {
+                SPARK[SPARK.len() / 2]
+            } else {
+                let t = (v.ln() - lo.ln()) / (hi.ln() - lo.ln());
+                SPARK[((t * (SPARK.len() - 1) as f64).round() as usize).min(SPARK.len() - 1)]
+            }
+        })
+        .collect()
+}
+
+fn render(path: &str, r: &Replay) {
+    let status = if r.complete {
+        "complete"
+    } else if r.truncated {
+        "running (torn tail dropped)"
+    } else {
+        "running"
+    };
+    println!("== {path} — {} stream, {status}, {} events", r.version, r.events);
+
+    let steps = r.report.losses.len();
+    let last_loss = r.report.losses.last().copied().unwrap_or(f64::NAN);
+    println!(
+        "run:     {steps} steps | loss {last_loss:.6} | {:.0} wire B/iter{}",
+        r.report.wire_bytes_per_iter,
+        if r.complete {
+            format!(" | final acc {:.4}", r.report.final_accuracy)
+        } else {
+            String::new()
+        }
+    );
+
+    match r.metrics.last() {
+        Some(m) => {
+            println!(
+                "metrics: step {} | bias proxy {:.3e} | momentum disagreement {:.3e}",
+                m.step, m.bias_proxy, m.momentum_disagreement
+            );
+            println!(
+                "         consensus p50 {:.3e}  p95 {:.3e}  max {:.3e}",
+                m.consensus_p50, m.consensus_p95, m.consensus_max
+            );
+            let tail: Vec<f64> = r
+                .metrics
+                .iter()
+                .rev()
+                .take(48)
+                .rev()
+                .map(|m| m.bias_proxy)
+                .collect();
+            println!("bias:    {} (last {} observations, log scale)", sparkline(&tail), tail.len());
+        }
+        None => println!("metrics: none yet (run with --metrics every=K)"),
+    }
+
+    match &r.last_timing {
+        Some(Event::Timing {
+            step, grad_ns, encode_ns, exchange_ns, update_ns, lane_busy_ns, ..
+        }) => {
+            let total = (grad_ns + encode_ns + exchange_ns + update_ns).max(1);
+            let pct = |ns: u64| 100.0 * ns as f64 / total as f64;
+            println!(
+                "timing:  step {step} | grad {:.1}% | encode {:.1}% | exchange {:.1}% | \
+                 update {:.1}% (cumulative)",
+                pct(*grad_ns),
+                pct(*encode_ns),
+                pct(*exchange_ns),
+                pct(*update_ns)
+            );
+            let busiest = lane_busy_ns.iter().copied().max().unwrap_or(0).max(1);
+            let lanes: Vec<String> = lane_busy_ns
+                .iter()
+                .map(|&ns| format!("{:.0}%", 100.0 * ns as f64 / busiest as f64))
+                .collect();
+            println!("lanes:   [{}] busy vs busiest", lanes.join(" "));
+        }
+        _ => println!("timing:  none (run with --profile)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let path = match args.positional.first() {
+        Some(p) => p.clone(),
+        None => anyhow::bail!(
+            "usage: live_dashboard RUN.jsonl [--snapshot] [--poll-ms N] (a --telemetry stream)"
+        ),
+    };
+    let snapshot = args.get_bool("snapshot");
+    let poll_ms = args.get_usize("poll-ms", 250)?;
+
+    loop {
+        // Mid-write reads are fine: only the torn tail line can be
+        // incomplete, and the replay layer drops it. A missing or
+        // not-yet-started file is a "waiting" state, not an error —
+        // the run may simply not have opened its sink yet.
+        let parsed = std::fs::read_to_string(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| decentlam::telemetry::replay_str(&text));
+        if !snapshot {
+            // Clear + home, repaint in place.
+            print!("\x1b[2J\x1b[H");
+        }
+        match parsed {
+            Ok(r) => {
+                render(&path, &r);
+                if r.complete || snapshot {
+                    return Ok(());
+                }
+            }
+            Err(e) if snapshot => return Err(e.context(format!("snapshot of {path}"))),
+            Err(e) => println!("== {path} — waiting for a stream ({e:#})"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(poll_ms as u64));
+    }
+}

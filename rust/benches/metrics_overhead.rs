@@ -1,0 +1,64 @@
+//! Bench: observability cost on the training step. The `metrics-off`
+//! rows ARE today's hot path — `--metrics`/`--profile` default to 0 and
+//! every collector is behind a cadence gate, so metrics-off step time
+//! must track `end_to_end_step` (the CI perf gate holds the off row to
+//! the same trajectory bounds). The `on` rows price the collector
+//! itself: an x-snapshot + two nominal mixes + canonical reductions per
+//! metric step, and the profiler's WallTimer/atomics per phase.
+//!
+//! Run: `cargo bench --bench metrics_overhead`
+
+use decentlam::coordinator::Trainer;
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::experiments::mlp_workload_named;
+use decentlam::util::bench::Bench;
+use decentlam::util::cli::Args;
+use decentlam::util::config::{Config, LrSchedule};
+
+fn data(nodes: usize) -> ClassificationData {
+    ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 512,
+        eval_samples: 64,
+        dirichlet_alpha: 0.3,
+        seed: 1,
+        ..Default::default()
+    })
+}
+
+fn cfg_for(metrics_every: usize, profile_every: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = "dmsgd".into();
+    cfg.nodes = 8;
+    cfg.total_batch = 512;
+    cfg.micro_batch = 64;
+    cfg.lr = 0.01;
+    cfg.linear_scaling = false;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.steps = 1;
+    cfg.threads = 0;
+    cfg.metrics_every = metrics_every;
+    cfg.profile_every = profile_every;
+    cfg
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut bench = Bench::new();
+
+    for &(metrics, profile, label) in &[
+        (0usize, 0usize, "metrics_overhead off"),
+        (1, 0, "metrics_overhead metrics every=1"),
+        (0, 1, "metrics_overhead profile every=1"),
+        (1, 1, "metrics_overhead both every=1"),
+    ] {
+        let wl = mlp_workload_named("mlp-s", data(8), 64, 1).unwrap();
+        let mut t = Trainer::new(cfg_for(metrics, profile), wl).unwrap();
+        let mut k = 0usize;
+        bench.case(&format!("{label} (dmsgd n=8 batch=512)"), || {
+            t.step(k);
+            k += 1;
+        });
+    }
+    bench.write_json_arg(&args).expect("--json write failed");
+}

@@ -261,6 +261,11 @@ pub struct NodeExecutor {
     /// Lazily created persistent pool, shared by every clone; `None`
     /// when `threads == 1` or in spawn-per-phase mode.
     pool: Option<Arc<OnceLock<WorkerPool>>>,
+    /// Per-lane busy-time meter the profiler attaches (`--profile`);
+    /// `None` (the default) keeps dispatch free of clock reads. Shared
+    /// by clones, so the trainer's grad/exchange/update executors all
+    /// accumulate into one view.
+    meter: Option<Arc<crate::util::bench::LaneMeter>>,
 }
 
 impl std::fmt::Debug for NodeExecutor {
@@ -276,7 +281,7 @@ impl std::fmt::Debug for NodeExecutor {
 impl NodeExecutor {
     /// Sequential executor (the default in unit tests).
     pub fn serial() -> NodeExecutor {
-        NodeExecutor { threads: 1, mode: Mode::Pool, pool: None }
+        NodeExecutor { threads: 1, mode: Mode::Pool, pool: None, meter: None }
     }
 
     /// `threads == 0` means one lane per available hardware thread.
@@ -303,7 +308,16 @@ impl NodeExecutor {
         let threads = threads.max(1);
         let pool =
             (threads > 1 && mode == Mode::Pool).then(|| Arc::new(OnceLock::new()));
-        NodeExecutor { threads, mode, pool }
+        NodeExecutor { threads, mode, pool, meter: None }
+    }
+
+    /// Attach a per-lane busy-time meter: every dispatched block is
+    /// timed and charged to its lane. Timing never changes which
+    /// indices a lane visits, so results stay bitwise identical to the
+    /// unmetered executor.
+    pub fn with_meter(mut self, meter: Arc<crate::util::bench::LaneMeter>) -> NodeExecutor {
+        self.meter = Some(meter);
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -338,8 +352,19 @@ impl NodeExecutor {
         if n == 0 {
             return;
         }
+        // Metered wrapper around the block body: times the block and
+        // charges it to the executing lane. With no meter attached this
+        // is a plain call — zero clock reads on the unprofiled path.
+        let run = |lane: usize, start: usize, end: usize| match &self.meter {
+            Some(m) => {
+                let t = crate::util::bench::WallTimer::start();
+                body(start, end);
+                m.add(lane, t.elapsed_ns());
+            }
+            None => body(start, end),
+        };
         if blocks <= 1 {
-            body(0, n);
+            run(0, 0, n);
             return;
         }
         match self.mode {
@@ -348,7 +373,8 @@ impl NodeExecutor {
                     for b in 0..blocks {
                         let start = b * chunk;
                         let end = (start + chunk).min(n);
-                        scope.spawn(move || body(start, end));
+                        let run = &run;
+                        scope.spawn(move || run(b, start, end));
                     }
                 });
             }
@@ -359,13 +385,13 @@ impl NodeExecutor {
                         if lane < blocks {
                             let start = lane * chunk;
                             let end = (start + chunk).min(n);
-                            body(start, end);
+                            run(lane, start, end);
                         }
                     });
                 }
                 // threads == 1 never reaches here (blocks <= 1 above);
                 // degrade to serial rather than trust that invariant.
-                None => body(0, n),
+                None => run(0, 0, n),
             },
         }
     }
@@ -514,6 +540,20 @@ mod tests {
         assert_eq!(clone.pool_workers(), Some(2));
         assert_eq!(NodeExecutor::serial().pool_workers(), None);
         assert_eq!(NodeExecutor::spawn_per_phase(3).pool_workers(), None);
+    }
+
+    #[test]
+    fn meter_charges_lanes_without_changing_results() {
+        let meter = Arc::new(crate::util::bench::LaneMeter::new(3));
+        let exec = NodeExecutor::new(3).with_meter(Arc::clone(&meter));
+        let mut a: Vec<f32> = (0..50_000).map(|i| i as f32).collect();
+        exec.for_each_mut(&mut a, |_i, v| *v = v.sqrt() * 3.0 + 1.0);
+        let mut b: Vec<f32> = (0..50_000).map(|i| i as f32).collect();
+        NodeExecutor::serial().for_each_mut(&mut b, |_i, v| *v = v.sqrt() * 3.0 + 1.0);
+        assert_eq!(a, b, "metering must not perturb results");
+        let busy = meter.snapshot();
+        assert_eq!(busy.len(), 3);
+        assert!(busy.iter().sum::<u64>() > 0, "blocks were timed: {busy:?}");
     }
 
     #[test]

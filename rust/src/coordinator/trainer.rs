@@ -62,7 +62,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -76,7 +76,7 @@ use crate::grad::{NodeGrad, Workload};
 use crate::optim::{self, NodeState, Optimizer, RoundCtx, Scratch};
 use crate::sim::clock::{simulate_barrier, simulate_gossip, AsyncReport};
 use crate::sim::{FaultPlan, FaultSpec, FaultStats, FaultyEngine};
-use crate::telemetry::{Event, TelemetrySink};
+use crate::telemetry::{Event, StepMetrics, TelemetrySink};
 use crate::topology::{metropolis_hastings, Kind, SparseWeights, Topology, WeightMatrix};
 use crate::util::bench;
 use crate::util::config::Config;
@@ -174,6 +174,15 @@ pub struct Trainer {
     /// unset the step loop is bitwise identical to the pre-telemetry
     /// trainer (DESIGN.md §11).
     telemetry: Option<TelemetrySink>,
+    /// Run-profile metrics collected at the `--metrics every=K` cadence
+    /// (DESIGN.md §14), in step order — what the stream's `metrics`
+    /// lines carry, kept in memory for in-process consumers (the
+    /// large-batch sweep gates). Empty when metrics are off.
+    metrics_log: Vec<StepMetrics>,
+    /// Wall-clock phase profiler (None = off; `--profile every=K`).
+    /// Strictly observability: timings flow into `timing` events only,
+    /// which replay parses but excludes from equality (DESIGN.md §14).
+    profiler: Option<Profiler>,
 }
 
 /// Elastic-membership state: the seeded event schedule, the live
@@ -182,6 +191,75 @@ struct Elastic {
     plan: ChurnPlan,
     roster: Roster,
     stats: ChurnStats,
+}
+
+/// Wall-clock phase profiler state behind `--profile every=K`
+/// (DESIGN.md §14). The trainer times the gradient phase and the whole
+/// optimizer round itself; [`optim::gossip_exchange`] splits the round
+/// into encode/exchange spans via the shared [`bench::PhaseClock`], and
+/// the metered executors charge per-lane busy time to the shared
+/// [`bench::LaneMeter`]. The update phase is the round's remainder.
+/// Phase index order everywhere: grad, encode, exchange, update.
+struct Profiler {
+    every: usize,
+    clock: bench::PhaseClock,
+    meter: Arc<bench::LaneMeter>,
+    /// Cumulative per-phase wall nanoseconds.
+    totals: [u64; 4],
+    /// Per-phase log2(ns) duration histograms over the observed steps
+    /// (deterministic bucket edges; the counts are wall-clock noise,
+    /// which is why `timing` events never enter replay equality).
+    hists: [BTreeMap<i32, usize>; 4],
+    /// Clock totals at the previous observation, for per-step deltas.
+    seen: (u64, u64),
+}
+
+impl Profiler {
+    fn new(every: usize, lanes: usize) -> Profiler {
+        Profiler {
+            every,
+            clock: bench::PhaseClock::new(),
+            meter: Arc::new(bench::LaneMeter::new(lanes)),
+            totals: [0; 4],
+            hists: Default::default(),
+            seen: (0, 0),
+        }
+    }
+
+    /// Fold one step in: grad and whole-round wall time measured by the
+    /// trainer, encode/exchange as this step's phase-clock deltas,
+    /// update as the round's remainder.
+    fn observe(&mut self, grad_ns: u64, round_ns: u64) {
+        let (enc, exch) = self.clock.totals();
+        let enc_d = enc.saturating_sub(self.seen.0);
+        let exch_d = exch.saturating_sub(self.seen.1);
+        self.seen = (enc, exch);
+        let upd_d = round_ns.saturating_sub(enc_d + exch_d);
+        for (slot, ns) in [(0, grad_ns), (1, enc_d), (2, exch_d), (3, upd_d)] {
+            self.totals[slot] += ns;
+            *self.hists[slot].entry(bench::log2_ns_bucket(ns)).or_insert(0) += 1;
+        }
+    }
+
+    fn due(&self, k: usize) -> bool {
+        self.every > 0 && k % self.every == 0
+    }
+
+    fn to_event(&self, step: usize) -> Event {
+        let hist = |m: &BTreeMap<i32, usize>| m.iter().map(|(&b, &c)| (b, c)).collect();
+        Event::Timing {
+            step,
+            grad_ns: self.totals[0],
+            encode_ns: self.totals[1],
+            exchange_ns: self.totals[2],
+            update_ns: self.totals[3],
+            grad_hist: hist(&self.hists[0]),
+            encode_hist: hist(&self.hists[1]),
+            exchange_hist: hist(&self.hists[2]),
+            update_hist: hist(&self.hists[3]),
+            lane_busy_ns: self.meter.snapshot(),
+        }
+    }
 }
 
 /// Below this many touched f32s per phase (n·d), the exchange/update
@@ -365,12 +443,22 @@ impl Trainer {
         // One persistent pool per trainer (started lazily on the first
         // parallel phase); `update_exec` clones the handle — clones
         // share the pool — or stays serial when phases are too small to
-        // amortize even a pool handoff.
-        let exec = NodeExecutor::new(cfg.threads);
+        // amortize even a pool handoff. With `--profile` on, both
+        // executors share the profiler's lane meter (a serial update
+        // path charges lane 0).
+        let mut exec = NodeExecutor::new(cfg.threads);
+        let profiler =
+            (cfg.profile_every > 0).then(|| Profiler::new(cfg.profile_every, exec.threads()));
+        if let Some(p) = &profiler {
+            exec = exec.with_meter(Arc::clone(&p.meter));
+        }
         let update_exec = if n * d >= PARALLEL_UPDATE_MIN_ITEMS {
             exec.clone()
         } else {
-            NodeExecutor::serial()
+            match &profiler {
+                Some(p) => NodeExecutor::serial().with_meter(Arc::clone(&p.meter)),
+                None => NodeExecutor::serial(),
+            }
         };
         let mut t = Trainer {
             cfg,
@@ -396,6 +484,8 @@ impl Trainer {
             wire_bytes_total: 0.0,
             wire_steps: 0,
             telemetry: None,
+            metrics_log: Vec::new(),
+            profiler,
         };
         // Telemetry stream (DESIGN.md §11): open the sink and write the
         // run envelope up front, so even a crashed run leaves a stream
@@ -403,8 +493,8 @@ impl Trainer {
         // the user asked for a stream and no work is lost yet; runtime
         // IO errors later never abort training (sink goes inert).
         if let Some(path) = t.cfg.telemetry.clone() {
-            let sink = TelemetrySink::create(Path::new(&path))?;
-            sink.emit(&Event::RunStart { manifest: t.manifest_json() });
+            let sink = TelemetrySink::create_with_flush(Path::new(&path), t.cfg.telemetry_flush)?;
+            sink.emit(&Event::run_start(t.manifest_json()));
             if let Some(ar) = &t.async_report {
                 sink.emit(&Event::Async {
                     steps: ar.step_done_s.len(),
@@ -478,6 +568,7 @@ impl Trainer {
         // --- gradient phase (executor-chunked over nodes) ---
         // Active engines occupy the first m slots in dense order (the
         // `engine_ids` invariant); parked shards never compute.
+        let t_grad = self.profiler.as_ref().map(|_| bench::WallTimer::start());
         let loss = {
             let states = &self.states;
             self.exec.for_each_triple_mut(
@@ -490,6 +581,13 @@ impl Trainer {
             );
             math::mean_f64(&self.losses)
         };
+        let grad_ns = t_grad.map(|t| t.elapsed_ns()).unwrap_or(0);
+        // Snapshot the parameters entering the round only on metric
+        // steps — the bias proxy compares the realized round against
+        // the bias-free W-mixed update of this view (DESIGN.md §14).
+        let x_before: Option<Vec<Vec<f32>>> = (self.cfg.metrics_every > 0
+            && k % self.cfg.metrics_every == 0)
+            .then(|| self.states.iter().map(|s| s.x.clone()).collect());
         // --- exchange + update phase ---
         if self.kind.time_varying() {
             self.rebuild_topology(self.cfg.nodes, k);
@@ -542,8 +640,11 @@ impl Trainer {
             time_varying: self.kind.time_varying() || faults_active || self.churned,
             layer_ranges: &self.workload.layer_ranges,
             codec: self.codec.as_ref(),
+            clock: self.profiler.as_ref().map(|p| &p.clock),
         };
+        let t_round = self.profiler.as_ref().map(|_| bench::WallTimer::start());
         self.optimizer.round(&mut self.states, &self.grads, &ctx, &mut self.scratch);
+        let round_ns = t_round.map(|t| t.elapsed_ns()).unwrap_or(0);
         if let Some(f) = &mut self.faults {
             if f.needs_publish_cache() {
                 // What went on the wire this round is next round's
@@ -566,6 +667,13 @@ impl Trainer {
         }
         self.wire_bytes_total += step_wire;
         self.wire_steps += 1;
+        // Run-profile metrics (DESIGN.md §14): canonical reductions over
+        // the post-round states, mixed through the NOMINAL weights (see
+        // telemetry::metrics docs) — bitwise rerun-identical and
+        // independent of `--threads`.
+        let step_metrics = x_before.map(|xb| {
+            crate::telemetry::metrics::collect(k, &xb, &self.states, &self.grads, &self.comm, lr)
+        });
         if let Some(sink) = &self.telemetry {
             if let (Some(before), Some(f)) = (fault_before, &self.faults) {
                 let now = *f.stats();
@@ -596,6 +704,20 @@ impl Trainer {
                 consensus: self.consensus_distance(),
                 wire_bytes: step_wire,
             });
+            if let Some(m) = &step_metrics {
+                sink.emit(&m.to_event());
+            }
+        }
+        if let Some(m) = step_metrics {
+            self.metrics_log.push(m);
+        }
+        if let Some(p) = &mut self.profiler {
+            p.observe(grad_ns, round_ns);
+            if p.due(k) {
+                if let Some(sink) = &self.telemetry {
+                    sink.emit(&p.to_event(k));
+                }
+            }
         }
         self.next_step = k + 1;
         loss
@@ -1084,6 +1206,14 @@ impl Trainer {
     /// (None = no stream, or a healthy one).
     pub fn telemetry_error(&self) -> Option<String> {
         self.telemetry.as_ref().and_then(|s| s.error())
+    }
+
+    /// Run-profile metrics collected at the `--metrics every=K` cadence,
+    /// in step order (empty when metrics are off). Exactly what the
+    /// stream's `metrics` lines carry — the large-batch sweep gates
+    /// pin live-vs-replayed equality on this.
+    pub fn metrics_log(&self) -> &[StepMetrics] {
+        &self.metrics_log
     }
 
     /// Run the full schedule (or, after [`Trainer::restore`], the

@@ -259,6 +259,13 @@ fn dispatch(args: &Args) -> Result<()> {
             let r = decentlam::telemetry::replay_path(std::path::Path::new(path))?;
             print_replay(&r);
         }
+        "profile" => {
+            let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+                anyhow::anyhow!("usage: decentlam profile RUN.jsonl (a --telemetry stream)")
+            })?;
+            let r = decentlam::telemetry::replay_path(std::path::Path::new(path))?;
+            print_profile(&r);
+        }
         "run-scenarios" => {
             let dir = args.positional.get(1).map(|s| s.as_str()).unwrap_or("scenarios");
             let opts = decentlam::scenario::RunOpts {
@@ -295,6 +302,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  train        one training run (all Config flags apply; --telemetry RUN.jsonl\n               \
                  streams typed step/eval/fault/churn events, DESIGN.md §11)\n  \
                  replay FILE  reconstruct a run summary from a --telemetry stream offline\n  \
+                 profile FILE aggregate a stream into a run-profile report (bias\n               \
+                 trajectory from `metrics` lines, wire breakdown, phase timings\n               \
+                 from `timing` lines; DESIGN.md §14)\n  \
                  run-scenarios [DIR]   run the scenario corpus (--tier smoke|full|all,\n               \
                  --filter SUBSTR, --json FILE, --pin, --telemetry DIR tees + verifies\n               \
                  per-scenario streams)\n  \
@@ -307,7 +317,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  --faults drop=0.1,straggle=0.05,seed=7,\n  \
                  --codec int8,ef=true,seed=7 (fp32|fp16|int8|topk,k=0.05),\n  \
                  --async tau=2,spread=4,jitter=0.2,seed=7,\n  \
-                 --churn join=0.02,leave=0.02,nmin=8,nmax=64,seed=7"
+                 --churn join=0.02,leave=0.02,nmin=8,nmax=64,seed=7,\n  \
+                 --telemetry RUN.jsonl[,flush=K] (stream events; flush cadence K),\n  \
+                 --metrics every=K (stream deterministic `metrics` lines),\n  \
+                 --profile [every=K] (stream wall-clock `timing` lines)"
             );
         }
     }
@@ -484,6 +497,91 @@ fn print_replay(r: &decentlam::telemetry::Replay) {
     }
     if !r.checkpoints.is_empty() {
         println!("checkpoints at steps {:?}", r.checkpoints);
+    }
+}
+
+/// Deterministic run-profile report aggregated from a telemetry stream
+/// (the `profile` subcommand; DESIGN.md §14). A pure function of the
+/// stream bytes: the bias trajectory and wire breakdown reproduce the
+/// live run's numbers bit for bit, and the timing section reprints the
+/// stream's own last `timing` line (wall-clock noise lives in the file,
+/// not in this aggregation).
+fn print_profile(r: &decentlam::telemetry::Replay) {
+    let rep = &r.report;
+    println!(
+        "profile: {} stream, {} events, {} steps{}{}",
+        r.version,
+        r.events,
+        rep.steps,
+        if r.complete { "" } else { " — INCOMPLETE (no run-end)" },
+        if r.truncated { ", truncated tail dropped" } else { "" }
+    );
+    println!(
+        "wire: {:.0} B total, {:.0} B/iter (realized)",
+        rep.wire_bytes_total, rep.wire_bytes_per_iter
+    );
+    if r.metrics.is_empty() {
+        println!("metrics: none (run without --metrics every=K)");
+    } else {
+        println!("metrics: {} lines", r.metrics.len());
+        println!(
+            "{:>8}  {:>13}  {:>13}  {:>13}  {:>13}  {:>13}",
+            "step", "cons-p50", "cons-p95", "cons-max", "mom-disagree", "bias-proxy"
+        );
+        for m in &r.metrics {
+            println!(
+                "{:>8}  {:>13.6e}  {:>13.6e}  {:>13.6e}  {:>13.6e}  {:>13.6e}",
+                m.step,
+                m.consensus_p50,
+                m.consensus_p95,
+                m.consensus_max,
+                m.momentum_disagreement,
+                m.bias_proxy
+            );
+        }
+        let (first, last) = (&r.metrics[0], &r.metrics[r.metrics.len() - 1]);
+        if first.bias_proxy > 0.0 {
+            println!(
+                "bias trajectory: {:.6e} -> {:.6e} ({:.2}x over {} observations)",
+                first.bias_proxy,
+                last.bias_proxy,
+                last.bias_proxy / first.bias_proxy,
+                r.metrics.len()
+            );
+        }
+    }
+    match &r.last_timing {
+        Some(decentlam::telemetry::Event::Timing {
+            step,
+            grad_ns,
+            encode_ns,
+            exchange_ns,
+            update_ns,
+            lane_busy_ns,
+            ..
+        }) => {
+            let total = grad_ns + encode_ns + exchange_ns + update_ns;
+            println!(
+                "timing: {} lines; cumulative through step {} \
+                 (wall-clock — excluded from replay equality)",
+                r.timing_events, step
+            );
+            for (name, ns) in [
+                ("grad", *grad_ns),
+                ("encode", *encode_ns),
+                ("exchange", *exchange_ns),
+                ("update", *update_ns),
+            ] {
+                let pct = if total > 0 { 100.0 * ns as f64 / total as f64 } else { 0.0 };
+                println!("  {name:>8}: {:>14} ns  ({pct:5.1}%)", ns);
+            }
+            let busiest = lane_busy_ns.iter().copied().max().unwrap_or(0);
+            for (lane, &busy) in lane_busy_ns.iter().enumerate() {
+                let frac = if busiest > 0 { busy as f64 / busiest as f64 } else { 0.0 };
+                println!("  lane {lane:>3}: {busy:>14} ns busy ({:5.1}% of busiest)", 100.0 * frac);
+            }
+        }
+        _ => println!("timing: none (run without --profile)"),
     }
 }
 

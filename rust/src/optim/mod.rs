@@ -96,6 +96,11 @@ pub struct RoundCtx<'a> {
     /// across the executor's threads; [`gossip_exchange`] locks it once
     /// per exchange.
     pub codec: Option<&'a Mutex<CodecState>>,
+    /// Phase clock the profiler attaches when `--profile` is on (None =
+    /// unprofiled). [`gossip_exchange`] splits its wall time into
+    /// encode/exchange spans; timing is observability only and never
+    /// feeds back into the arithmetic (DESIGN.md §14).
+    pub clock: Option<&'a crate::util::bench::PhaseClock>,
 }
 
 impl<'a> RoundCtx<'a> {
@@ -117,6 +122,7 @@ impl<'a> RoundCtx<'a> {
             time_varying,
             layer_ranges: &[],
             codec: None,
+            clock: None,
         }
     }
 }
@@ -237,23 +243,32 @@ pub fn partial_average_all_par(
 /// (encoded wire bytes under a lossy codec, so staleness composes with
 /// compression); plain engines ignore it.
 pub fn gossip_exchange(ctx: &RoundCtx, src: &[Vec<f32>], dst: &mut [Vec<f32>]) {
+    // Timed spans only exist when a profiler clock is attached, so the
+    // unprofiled path takes zero clock reads.
+    let exchange = |wire: &[Vec<f32>], dst: &mut [Vec<f32>]| {
+        let t = ctx.clock.map(|_| crate::util::bench::WallTimer::start());
+        ctx.comm.begin_exchange(wire);
+        partial_average_all_par(ctx.comm, wire, dst, &ctx.exec);
+        if let (Some(clock), Some(t)) = (ctx.clock, t) {
+            clock.add_exchange(t.elapsed_ns());
+        }
+    };
     match ctx.codec {
         Some(codec) => {
             let mut state = codec.lock().unwrap();
             if state.is_identity() {
                 drop(state);
-                ctx.comm.begin_exchange(src);
-                partial_average_all_par(ctx.comm, src, dst, &ctx.exec);
+                exchange(src, dst);
             } else {
+                let t = ctx.clock.map(|_| crate::util::bench::WallTimer::start());
                 let wire = state.encode_round(src, &ctx.exec);
-                ctx.comm.begin_exchange(wire);
-                partial_average_all_par(ctx.comm, wire, dst, &ctx.exec);
+                if let (Some(clock), Some(t)) = (ctx.clock, t) {
+                    clock.add_encode(t.elapsed_ns());
+                }
+                exchange(wire, dst);
             }
         }
-        None => {
-            ctx.comm.begin_exchange(src);
-            partial_average_all_par(ctx.comm, src, dst, &ctx.exec);
-        }
+        None => exchange(src, dst),
     }
 }
 

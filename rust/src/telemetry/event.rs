@@ -1,4 +1,4 @@
-//! The typed telemetry event schema (DESIGN.md §11).
+//! The typed telemetry event schema (DESIGN.md §11, §14).
 //!
 //! One event = one compact JSON object = one stream line. Keys are
 //! emitted in sorted order (the [`Value::obj`] BTreeMap), numbers print
@@ -10,32 +10,43 @@
 //! Parsing is fail-closed like every other manifest reader in this
 //! repo: unknown event names, unknown fields and type mismatches are
 //! hard errors naming the path. Version pinning lives on the
-//! `run-start` envelope: readers reject any stream whose version is not
-//! [`STREAM_VERSION`].
+//! `run-start` envelope: readers accept exactly
+//! [`ACCEPTED_STREAM_VERSIONS`] (the current [`STREAM_VERSION`] and the
+//! committed legacy `DLTEL01`) and reject everything else. The parsed
+//! version is preserved in the variant, so re-serializing a legacy
+//! stream stays byte-identical.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::util::json::{Cursor, Value};
 
-use super::STREAM_VERSION;
+use super::{ACCEPTED_STREAM_VERSIONS, STREAM_VERSION, STREAM_VERSION_LEGACY};
 
 /// One telemetry event. Field units and emission rules:
 ///
 /// * ordering within a step: `churn` (roster change at the top of the
 ///   step) → `fault` (this step's realizations, omitted when nothing
-///   was realized) → `step`;
+///   was realized) → `step` → `metrics` (cadence-gated) → `timing`
+///   (cadence-gated, profiled runs only);
 /// * `eval` mirrors the trainer's report rule exactly: `accuracy` only
 ///   when finite, `eval-loss` only when the evaluator provides one, no
 ///   event when neither exists;
 /// * `async` is emitted once, right after `run-start`, when the run
 ///   executes against the discrete-event clock sim;
+/// * `metrics` lines are deterministic (bitwise rerun-identical and
+///   par == serial); `timing` lines carry wall-clock measurements and
+///   are the ONE event class excluded from two-run byte-identity and
+///   from [`super::Replay::matches_report`];
 /// * `run-end` closes the stream — its totals must equal the sum of the
 ///   per-step values (the replay parser verifies this bit for bit).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// Stream envelope: the run manifest as its compact-JSON string
-    /// (byte-identical to `TrainReport.manifest`).
-    RunStart { manifest: String },
+    /// Stream envelope: the schema version this stream was written
+    /// under plus the run manifest as its compact-JSON string
+    /// (byte-identical to `TrainReport.manifest`). Build new streams
+    /// with [`Event::run_start`]; parsing preserves whichever accepted
+    /// version the stream declares.
+    RunStart { version: String, manifest: String },
     /// Timing + staleness summary of an `--async` run.
     Async {
         steps: usize,
@@ -68,6 +79,46 @@ pub enum Event {
     Churn { step: usize, joins: Vec<u32>, leaves: Vec<u32>, nodes: usize },
     /// A checkpoint written at this step cursor.
     Checkpoint { step: usize },
+    /// Cadence-gated run-profile metrics (`--metrics every=K`,
+    /// DESIGN.md §14): per-node consensus dispersion ‖x_i − x̄‖² as
+    /// p50/p95/max plus a sparse exponent-bucket histogram, momentum
+    /// disagreement (1/n)Σ‖m_i − m̄‖², and the momentum-bias proxy
+    /// (dispersion of the realized update's deviation from the
+    /// bias-free W-mixed update). Deterministic: computed with
+    /// `util::math` canonical reductions, so these lines are bitwise
+    /// rerun-identical and par == serial. `DLTEL02`-only.
+    Metrics {
+        step: usize,
+        consensus_p50: f64,
+        consensus_p95: f64,
+        consensus_max: f64,
+        /// Sparse histogram of per-node ‖x_i − x̄‖²: `(bucket, count)`
+        /// where bucket is the value's raw IEEE-754 exponent
+        /// (zero/subnormal → −1023), ascending.
+        consensus_hist: Vec<(i32, usize)>,
+        momentum_disagreement: f64,
+        bias_proxy: f64,
+    },
+    /// Cadence-gated wall-clock phase profile (`--profile [every=K]`,
+    /// DESIGN.md §14): cumulative per-phase nanoseconds, per-phase
+    /// log2-ns histograms of per-step durations (`(bucket, count)`
+    /// with bucket = number of bits in the ns value, 0 for 0 ns), and
+    /// cumulative per-lane executor busy nanoseconds. The one
+    /// NON-deterministic event class: replay parses it but excludes it
+    /// from `matches_report`, and byte-identity checks strip these
+    /// lines first ([`super::strip_timing`]). `DLTEL02`-only.
+    Timing {
+        step: usize,
+        grad_ns: u64,
+        encode_ns: u64,
+        exchange_ns: u64,
+        update_ns: u64,
+        grad_hist: Vec<(i32, usize)>,
+        encode_hist: Vec<(i32, usize)>,
+        exchange_hist: Vec<(i32, usize)>,
+        update_hist: Vec<(i32, usize)>,
+        lane_busy_ns: Vec<u64>,
+    },
     /// Stream close: the run's final metrics and wire-byte total.
     RunEnd { steps: usize, final_accuracy: f64, final_consensus: f64, wire_bytes_total: f64 },
 }
@@ -83,6 +134,11 @@ fn num(x: f64) -> Value {
 }
 
 fn count(x: usize) -> Value {
+    Value::Num(x as f64)
+}
+
+/// Nanosecond counters: exact in f64 up to 2⁵³ ns (≈104 days).
+fn nanos(x: u64) -> Value {
     Value::Num(x as f64)
 }
 
@@ -108,7 +164,51 @@ fn id_arr(ids: &[u32]) -> Value {
     Value::Arr(ids.iter().map(|&i| Value::Num(i as f64)).collect())
 }
 
+/// Sparse histogram wire form: an array of `[bucket, count]` pairs.
+fn hist_arr(h: &[(i32, usize)]) -> Value {
+    Value::Arr(
+        h.iter()
+            .map(|&(b, n)| Value::Arr(vec![Value::Num(b as f64), Value::Num(n as f64)]))
+            .collect(),
+    )
+}
+
+fn hist(c: &Cursor) -> Result<Vec<(i32, usize)>> {
+    c.items()?
+        .iter()
+        .map(|pair| {
+            let it = pair.items()?;
+            ensure!(
+                it.len() == 2,
+                "{}: histogram entry must be a [bucket, count] pair",
+                pair.path()
+            );
+            let b = it[0].as_f64()?;
+            ensure!(
+                b.fract() == 0.0 && (-2048.0..=2048.0).contains(&b),
+                "{}: histogram bucket must be a small integer",
+                it[0].path()
+            );
+            Ok((b as i32, it[1].as_usize()?))
+        })
+        .collect()
+}
+
+fn nanos_arr(ns: &[u64]) -> Value {
+    Value::Arr(ns.iter().map(|&x| nanos(x)).collect())
+}
+
+fn nanos_vec(c: &Cursor) -> Result<Vec<u64>> {
+    c.items()?.iter().map(|x| x.as_u64()).collect()
+}
+
 impl Event {
+    /// The `run-start` envelope for a NEW stream: stamps the current
+    /// [`STREAM_VERSION`].
+    pub fn run_start(manifest: String) -> Event {
+        Event::RunStart { version: STREAM_VERSION.to_string(), manifest }
+    }
+
     /// The event's wire name (the `event` discriminator field).
     pub fn name(&self) -> &'static str {
         match self {
@@ -119,6 +219,8 @@ impl Event {
             Event::Fault { .. } => "fault",
             Event::Churn { .. } => "churn",
             Event::Checkpoint { .. } => "checkpoint",
+            Event::Metrics { .. } => "metrics",
+            Event::Timing { .. } => "timing",
             Event::RunEnd { .. } => "run-end",
         }
     }
@@ -127,8 +229,8 @@ impl Event {
     pub fn to_value(&self) -> Value {
         let mut pairs = vec![("event", Value::Str(self.name().to_string()))];
         match self {
-            Event::RunStart { manifest } => {
-                pairs.push(("version", Value::Str(STREAM_VERSION.to_string())));
+            Event::RunStart { version, manifest } => {
+                pairs.push(("version", Value::Str(version.clone())));
                 pairs.push(("manifest", Value::Str(manifest.clone())));
             }
             Event::Async {
@@ -190,6 +292,46 @@ impl Event {
             Event::Checkpoint { step } => {
                 pairs.push(("step", count(*step)));
             }
+            Event::Metrics {
+                step,
+                consensus_p50,
+                consensus_p95,
+                consensus_max,
+                consensus_hist,
+                momentum_disagreement,
+                bias_proxy,
+            } => {
+                pairs.push(("step", count(*step)));
+                pairs.push(("consensus-p50", num(*consensus_p50)));
+                pairs.push(("consensus-p95", num(*consensus_p95)));
+                pairs.push(("consensus-max", num(*consensus_max)));
+                pairs.push(("consensus-hist", hist_arr(consensus_hist)));
+                pairs.push(("momentum-disagreement", num(*momentum_disagreement)));
+                pairs.push(("bias-proxy", num(*bias_proxy)));
+            }
+            Event::Timing {
+                step,
+                grad_ns,
+                encode_ns,
+                exchange_ns,
+                update_ns,
+                grad_hist,
+                encode_hist,
+                exchange_hist,
+                update_hist,
+                lane_busy_ns,
+            } => {
+                pairs.push(("step", count(*step)));
+                pairs.push(("grad-ns", nanos(*grad_ns)));
+                pairs.push(("encode-ns", nanos(*encode_ns)));
+                pairs.push(("exchange-ns", nanos(*exchange_ns)));
+                pairs.push(("update-ns", nanos(*update_ns)));
+                pairs.push(("grad-hist", hist_arr(grad_hist)));
+                pairs.push(("encode-hist", hist_arr(encode_hist)));
+                pairs.push(("exchange-hist", hist_arr(exchange_hist)));
+                pairs.push(("update-hist", hist_arr(update_hist)));
+                pairs.push(("lane-busy-ns", nanos_arr(lane_busy_ns)));
+            }
             Event::RunEnd { steps, final_accuracy, final_consensus, wire_bytes_total } => {
                 pairs.push(("steps", count(*steps)));
                 pairs.push(("final-accuracy", num(*final_accuracy)));
@@ -213,14 +355,17 @@ impl Event {
             "run-start" => {
                 c.deny_unknown(&["event", "version", "manifest"])?;
                 let version = c.get("version")?.as_str()?;
-                if version != STREAM_VERSION {
+                if !ACCEPTED_STREAM_VERSIONS.contains(&version) {
                     bail!(
                         "{}: unsupported stream version `{version}` \
-                         (this build reads {STREAM_VERSION})",
+                         (this build reads {STREAM_VERSION_LEGACY}/{STREAM_VERSION})",
                         c.path()
                     );
                 }
-                Ok(Event::RunStart { manifest: c.get("manifest")?.as_str()?.to_string() })
+                Ok(Event::RunStart {
+                    version: version.to_string(),
+                    manifest: c.get("manifest")?.as_str()?.to_string(),
+                })
             }
             "async" => {
                 c.deny_unknown(&[
@@ -296,6 +441,54 @@ impl Event {
                 c.deny_unknown(&["event", "step"])?;
                 Ok(Event::Checkpoint { step: c.get("step")?.as_usize()? })
             }
+            "metrics" => {
+                c.deny_unknown(&[
+                    "event",
+                    "step",
+                    "consensus-p50",
+                    "consensus-p95",
+                    "consensus-max",
+                    "consensus-hist",
+                    "momentum-disagreement",
+                    "bias-proxy",
+                ])?;
+                Ok(Event::Metrics {
+                    step: c.get("step")?.as_usize()?,
+                    consensus_p50: f64_or_null(&c.get("consensus-p50")?)?,
+                    consensus_p95: f64_or_null(&c.get("consensus-p95")?)?,
+                    consensus_max: f64_or_null(&c.get("consensus-max")?)?,
+                    consensus_hist: hist(&c.get("consensus-hist")?)?,
+                    momentum_disagreement: f64_or_null(&c.get("momentum-disagreement")?)?,
+                    bias_proxy: f64_or_null(&c.get("bias-proxy")?)?,
+                })
+            }
+            "timing" => {
+                c.deny_unknown(&[
+                    "event",
+                    "step",
+                    "grad-ns",
+                    "encode-ns",
+                    "exchange-ns",
+                    "update-ns",
+                    "grad-hist",
+                    "encode-hist",
+                    "exchange-hist",
+                    "update-hist",
+                    "lane-busy-ns",
+                ])?;
+                Ok(Event::Timing {
+                    step: c.get("step")?.as_usize()?,
+                    grad_ns: c.get("grad-ns")?.as_u64()?,
+                    encode_ns: c.get("encode-ns")?.as_u64()?,
+                    exchange_ns: c.get("exchange-ns")?.as_u64()?,
+                    update_ns: c.get("update-ns")?.as_u64()?,
+                    grad_hist: hist(&c.get("grad-hist")?)?,
+                    encode_hist: hist(&c.get("encode-hist")?)?,
+                    exchange_hist: hist(&c.get("exchange-hist")?)?,
+                    update_hist: hist(&c.get("update-hist")?)?,
+                    lane_busy_ns: nanos_vec(&c.get("lane-busy-ns")?)?,
+                })
+            }
             "run-end" => {
                 c.deny_unknown(&[
                     "event",
@@ -328,7 +521,7 @@ mod tests {
 
     fn samples() -> Vec<Event> {
         vec![
-            Event::RunStart { manifest: r#"{"config":{"nodes":4}}"#.to_string() },
+            Event::run_start(r#"{"config":{"nodes":4}}"#.to_string()),
             Event::Async {
                 steps: 12,
                 makespan_s: 3.25,
@@ -352,6 +545,27 @@ mod tests {
             },
             Event::Churn { step: 5, joins: vec![9], leaves: vec![2, 3], nodes: 7 },
             Event::Checkpoint { step: 6 },
+            Event::Metrics {
+                step: 10,
+                consensus_p50: 3.5e-7,
+                consensus_p95: 1.25e-6,
+                consensus_max: 2.5e-6,
+                consensus_hist: vec![(-1023, 1), (-22, 2), (-20, 1)],
+                momentum_disagreement: 4.75e-5,
+                bias_proxy: 1.5e-8,
+            },
+            Event::Timing {
+                step: 10,
+                grad_ns: 1_250_000,
+                encode_ns: 0,
+                exchange_ns: 310_000,
+                update_ns: 94_000,
+                grad_hist: vec![(17, 9), (18, 2)],
+                encode_hist: vec![(0, 11)],
+                exchange_hist: vec![(15, 11)],
+                update_hist: vec![(13, 10), (14, 1)],
+                lane_busy_ns: vec![840_000, 822_000, 0],
+            },
             Event::RunEnd {
                 steps: 12,
                 final_accuracy: 0.875,
@@ -409,14 +623,42 @@ mod tests {
     }
 
     #[test]
+    fn malformed_histograms_are_hard_errors() {
+        let good = Event::Metrics {
+            step: 0,
+            consensus_p50: 1.0,
+            consensus_p95: 1.0,
+            consensus_max: 1.0,
+            consensus_hist: vec![(-3, 2)],
+            momentum_disagreement: 0.0,
+            bias_proxy: 0.0,
+        }
+        .to_line();
+        // A [bucket] singleton instead of a [bucket, count] pair.
+        let bad = good.replace("[-3,2]", "[-3]");
+        assert!(Event::parse_line(&bad).is_err(), "{bad}");
+        // A fractional bucket index.
+        let bad = good.replace("[-3,2]", "[-3.5,2]");
+        assert!(Event::parse_line(&bad).is_err(), "{bad}");
+    }
+
+    #[test]
     fn version_mismatch_is_rejected() {
-        let line = Event::RunStart { manifest: "{}".into() }
-            .to_line()
-            .replace("DLTEL01", "DLTEL99");
+        let line = Event::run_start("{}".into()).to_line().replace("DLTEL02", "DLTEL99");
         let e = format!("{:#}", Event::parse_line(&line).unwrap_err());
         assert_eq!(
             e,
-            "event: unsupported stream version `DLTEL99` (this build reads DLTEL01)"
+            "event: unsupported stream version `DLTEL99` (this build reads DLTEL01/DLTEL02)"
         );
+    }
+
+    #[test]
+    fn legacy_version_still_parses_and_round_trips() {
+        let line = Event::run_start("{}".into()).to_line().replace("DLTEL02", "DLTEL01");
+        let ev = Event::parse_line(&line).unwrap();
+        let Event::RunStart { version, .. } = &ev else { panic!("wrong variant") };
+        assert_eq!(version, "DLTEL01");
+        // Re-serializing a legacy line preserves its declared version.
+        assert_eq!(ev.to_line(), line);
     }
 }

@@ -1,0 +1,258 @@
+//! Cadence-gated run-profile metrics (DESIGN.md §14): the paper's
+//! Section-3 quantities as a deterministic stream event.
+//!
+//! [`collect`] runs on the trainer thread at `--metrics every=K` steps
+//! and computes three statistics over the post-round node states:
+//!
+//! 1. **Per-node consensus dispersion** — `d_i = ‖x_i − x̄‖²` for every
+//!    node, reported as nearest-rank p50/p95/max plus a sparse
+//!    exponent-bucket histogram (bucket = the raw IEEE-754 exponent of
+//!    `d_i`; zeros and subnormals land in −1023). `Step.consensus`
+//!    already carries the mean; the dispersion view is what shows a
+//!    straggling node hiding inside a healthy average.
+//! 2. **Momentum disagreement** — `(1/n) Σ ‖m_i − m̄‖²`. The paper's
+//!    analysis pins the DmSGD inconsistency bias to exactly this
+//!    quantity being amplified through `(I − W)`.
+//! 3. **Momentum-bias proxy** — the dispersion of
+//!    `b_i = (x_i⁺ − mix_i(x)) + γ · mix_i(g)`: how far each node's
+//!    realized round deviates from the bias-free W-mixed SGD update
+//!    `mix_i(x) − γ·mix_i(g)`. Exact algebra per optimizer (fault-free,
+//!    up to f32 rounding): `dsgd` publishes `x − γg`, so `b_i ≈ 0` —
+//!    the proxy is *zero for momentum-free methods*, which is what
+//!    earns it the name. DmSGD gives `b_i = −γβ·mix_i(m)` (dispersion
+//!    `γ²β²·disp(mix(m))` — the momentum-amplified, γ²-scaled bias the
+//!    paper analyzes), DecentLaM `b_i ≈ −γβ·m_i` (its *local*
+//!    correction, no `(I−W)` amplification of the history).
+//!
+//! Both mixes go through the **nominal** weights (the trainer's
+//! `SparseWeights`), never the fault wrapper: a fault engine's
+//! `mix_node` may substitute cached stale *publishes* for `src[j]`,
+//! which would silently blend parameters into a gradient mix. Under
+//! injected faults the realized-vs-nominal gap therefore shows up in
+//! the proxy too — that is observed inconsistency, not an artifact.
+//!
+//! Determinism: everything reduces through `util::math` canonical
+//! reductions on the trainer thread, and the inputs (states, grads)
+//! are already bitwise par == serial — so `metrics` lines are bitwise
+//! rerun-identical and independent of `--threads`.
+
+use std::collections::BTreeMap;
+
+use crate::comm::engine::CommEngine;
+use crate::optim::NodeState;
+use crate::util::math;
+
+use super::Event;
+
+/// One step's run-profile metrics (the payload of [`Event::Metrics`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub consensus_p50: f64,
+    pub consensus_p95: f64,
+    pub consensus_max: f64,
+    pub consensus_hist: Vec<(i32, usize)>,
+    pub momentum_disagreement: f64,
+    pub bias_proxy: f64,
+}
+
+impl StepMetrics {
+    pub fn to_event(&self) -> Event {
+        Event::Metrics {
+            step: self.step,
+            consensus_p50: self.consensus_p50,
+            consensus_p95: self.consensus_p95,
+            consensus_max: self.consensus_max,
+            consensus_hist: self.consensus_hist.clone(),
+            momentum_disagreement: self.momentum_disagreement,
+            bias_proxy: self.bias_proxy,
+        }
+    }
+}
+
+/// The value's raw IEEE-754 exponent: the fixed histogram bucket for
+/// non-negative dispersion values. Zeros and subnormals share −1023;
+/// NaN/∞ (a diverged run) land in 1024.
+pub fn exponent_bucket(x: f64) -> i32 {
+    ((x.to_bits() >> 52) & 0x7ff) as i32 - 1023
+}
+
+/// Sparse ascending histogram over [`exponent_bucket`]s.
+pub fn exponent_hist(values: &[f64]) -> Vec<(i32, usize)> {
+    let mut hist: BTreeMap<i32, usize> = BTreeMap::new();
+    for &v in values {
+        *hist.entry(exponent_bucket(v)).or_insert(0) += 1;
+    }
+    hist.into_iter().collect()
+}
+
+/// Nearest-rank percentile (q in (0, 1]) over a `total_cmp`-sorted
+/// copy — the textbook deterministic definition, no interpolation.
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Compute one step's metrics from the round's before/after view.
+///
+/// * `x_before` — every node's parameters entering the round (the
+///   trainer snapshots them only on metric steps);
+/// * `states` — post-round node states (`x` and `m`);
+/// * `grads` — this step's per-node accumulated gradients;
+/// * `comm` — the NOMINAL mixing weights (see module docs);
+/// * `lr` — γ at this step (schedule already applied).
+pub fn collect(
+    step: usize,
+    x_before: &[Vec<f32>],
+    states: &[NodeState],
+    grads: &[Vec<f32>],
+    comm: &dyn CommEngine,
+    lr: f32,
+) -> StepMetrics {
+    let n = states.len();
+    if n == 0 {
+        return StepMetrics {
+            step,
+            consensus_p50: f64::NAN,
+            consensus_p95: f64::NAN,
+            consensus_max: f64::NAN,
+            consensus_hist: Vec::new(),
+            momentum_disagreement: f64::NAN,
+            bias_proxy: f64::NAN,
+        };
+    }
+    let d = states[0].x.len();
+
+    // 1. Per-node consensus dispersion around the network average.
+    let xrefs: Vec<&[f32]> = states.iter().map(|s| s.x.as_slice()).collect();
+    let xbar = math::mean_of(&xrefs);
+    let disp: Vec<f64> = states.iter().map(|s| math::dist2(&s.x, &xbar)).collect();
+
+    // 2. Momentum disagreement around the average momentum.
+    let mrefs: Vec<&[f32]> = states.iter().map(|s| s.m.as_slice()).collect();
+    let mbar = math::mean_of(&mrefs);
+    let momentum_disagreement =
+        math::sum_f64(states.iter().map(|s| math::dist2(&s.m, &mbar))) / n as f64;
+
+    // 3. Momentum-bias proxy: b_i = (x_i⁺ − mix_i(x)) + γ·mix_i(g).
+    let mut mixx = vec![0.0f32; d];
+    let mut mixg = vec![0.0f32; d];
+    let mut b: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for i in 0..n {
+        comm.mix_node(i, x_before, &mut mixx);
+        comm.mix_node(i, grads, &mut mixg);
+        b.push((0..d).map(|t| (states[i].x[t] - mixx[t]) + lr * mixg[t]).collect());
+    }
+    let brefs: Vec<&[f32]> = b.iter().map(|r| r.as_slice()).collect();
+    let bbar = math::mean_of(&brefs);
+    let bias_proxy = math::sum_f64(b.iter().map(|bi| math::dist2(bi, &bbar))) / n as f64;
+
+    StepMetrics {
+        step,
+        consensus_p50: percentile(&disp, 0.50),
+        consensus_p95: percentile(&disp, 0.95),
+        consensus_max: percentile(&disp, 1.0),
+        consensus_hist: exponent_hist(&disp),
+        momentum_disagreement,
+        bias_proxy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{metropolis_hastings, Kind, Topology};
+
+    #[test]
+    fn exponent_buckets_are_the_raw_exponent() {
+        assert_eq!(exponent_bucket(1.0), 0);
+        assert_eq!(exponent_bucket(0.5), -1);
+        assert_eq!(exponent_bucket(4.0), 2);
+        assert_eq!(exponent_bucket(7.9), 2);
+        assert_eq!(exponent_bucket(0.0), -1023);
+        assert_eq!(exponent_bucket(f64::MIN_POSITIVE / 2.0), -1023);
+        assert_eq!(exponent_bucket(f64::NAN), 1024);
+        let h = exponent_hist(&[1.0, 1.5, 0.5, 0.0]);
+        assert_eq!(h, vec![(-1023, 1), (-1, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 0.95), 5.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    /// A hand-simulated momentum-free round (dsgd: publish x − γg, mix)
+    /// must land the bias proxy at f32-rounding scale, while equal
+    /// momenta give exactly zero disagreement.
+    #[test]
+    fn bias_proxy_is_rounding_level_for_momentum_free_rounds() {
+        let n = 4;
+        let d = 8;
+        let wm = metropolis_hastings(&Topology::build(Kind::Ring, n));
+        let lr = 0.1f32;
+        let x_before: Vec<Vec<f32>> =
+            (0..n).map(|i| (0..d).map(|t| (i * d + t) as f32 * 0.01).collect()).collect();
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|i| (0..d).map(|t| ((i + t) % 3) as f32 * 0.2 - 0.1).collect()).collect();
+        let publish: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..d).map(|t| x_before[i][t] - lr * grads[i][t]).collect())
+            .collect();
+        let mut states: Vec<NodeState> =
+            x_before.iter().map(|x| NodeState::new(x.clone(), 0)).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            wm.mix_node(i, &publish, &mut st.x);
+            st.m = vec![0.25; d];
+        }
+        let m = collect(3, &x_before, &states, &grads, &wm, lr);
+        assert_eq!(m.step, 3);
+        assert!(m.bias_proxy < 1e-12, "dsgd-style round must be bias-free: {}", m.bias_proxy);
+        assert_eq!(m.momentum_disagreement, 0.0);
+        assert!(m.consensus_max >= m.consensus_p95 && m.consensus_p95 >= m.consensus_p50);
+        let total: usize = m.consensus_hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, n);
+    }
+
+    /// Injecting a per-node momentum correction of size γβ·m_i (the
+    /// DmSGD shape) moves the proxy to exactly γ²β²·disp(mix(m)).
+    #[test]
+    fn bias_proxy_scales_with_lr_squared() {
+        let n = 4;
+        let d = 6;
+        let wm = metropolis_hastings(&Topology::build(Kind::Ring, n));
+        let beta = 0.9f32;
+        let x_before: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32 * 0.1; d]).collect();
+        let grads: Vec<Vec<f32>> = (0..n).map(|i| vec![0.05 * (i as f32 - 1.5); d]).collect();
+        let momenta: Vec<Vec<f32>> = (0..n).map(|i| vec![0.3 * i as f32; d]).collect();
+        let proxy_at = |lr: f32| {
+            // DmSGD: publish x − γ(βm + g), mix.
+            let publish: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    (0..d)
+                        .map(|t| x_before[i][t] - lr * (beta * momenta[i][t] + grads[i][t]))
+                        .collect()
+                })
+                .collect();
+            let mut states: Vec<NodeState> =
+                x_before.iter().map(|x| NodeState::new(x.clone(), 0)).collect();
+            for (i, st) in states.iter_mut().enumerate() {
+                wm.mix_node(i, &publish, &mut st.x);
+            }
+            collect(0, &x_before, &states, &grads, &wm, lr).bias_proxy
+        };
+        let b1 = proxy_at(0.1);
+        let b2 = proxy_at(0.2);
+        assert!(b1 > 0.0);
+        let ratio = b2 / b1;
+        assert!((ratio - 4.0).abs() < 0.05, "expected ~4x from 2x lr, got {ratio}");
+    }
+}

@@ -1,46 +1,70 @@
-//! Streaming telemetry bus + offline replay (DESIGN.md §11).
+//! Streaming telemetry bus + offline replay (DESIGN.md §11, §14).
 //!
 //! Long large-batch runs are exactly where momentum-incurred
 //! inconsistency bias accumulates (the paper's core finding), yet a
 //! [`crate::coordinator::TrainReport`] is only visible at the end of a
 //! run. This module streams every signal the trainer produces — per-step
 //! losses, learning rate, consensus distance, realized wire bytes,
-//! fault/churn/staleness realizations, eval points, checkpoints — as a
-//! typed, versioned (`"DLTEL01"`) JSONL event stream:
+//! fault/churn/staleness realizations, eval points, checkpoints, and
+//! (cadence-gated) run-profile observability — as a typed, versioned
+//! (`"DLTEL02"`) JSONL event stream:
 //!
 //! * [`event::Event`] — the typed schema: `run-start` / `run-end`
 //!   envelopes carrying the run manifest, `step`, `eval`, `fault`,
-//!   `churn`, `async` and `checkpoint` events, one compact JSON object
-//!   per line with deterministically sorted keys (two identical runs
-//!   produce byte-identical streams);
+//!   `churn`, `async` and `checkpoint` events, plus two observability
+//!   classes introduced by `DLTEL02`: `metrics` (deterministic
+//!   consensus/momentum-bias statistics, see [`metrics`]) and `timing`
+//!   (wall-clock phase profile — parsed but excluded from replay
+//!   equality). One compact JSON object per line with deterministically
+//!   sorted keys (two identical runs produce byte-identical streams,
+//!   once `timing` lines are stripped);
+//! * [`metrics`] — the cadence-gated collector behind `--metrics
+//!   every=K`: per-node consensus dispersion histograms, momentum
+//!   disagreement, and the paper's momentum-bias proxy, all reduced
+//!   through `util::math` so metrics lines are bitwise replayable and
+//!   par == serial;
 //! * [`sink::TelemetrySink`] — a buffered file writer behind a mutex,
 //!   off the step loop's hot path; IO errors never abort training (the
 //!   first one is recorded and the stream simply truncates, which is
-//!   exactly what the replay side tolerates);
+//!   exactly what the replay side tolerates). Flushes every
+//!   `flush_every` events (default 64, `--telemetry out.jsonl,flush=K`)
+//!   so a live dashboard can tail the file;
 //! * [`replay::Replay`] — the tolerant line-oriented offline parser: a
 //!   truncated final line (a crashed or still-running writer) is
 //!   skipped, while schema violations mid-stream are hard errors naming
 //!   the line. Replaying a complete stream reconstructs the run's
 //!   summary — losses, evals, final metrics, wire bytes — exactly
 //!   ([`replay::Replay::matches_report`] pins bit-level equality
-//!   against the live report).
+//!   against the live report; `metrics`/`timing` lines never enter it).
 //!
 //! The trainer emits only when `Config::telemetry` is set
 //! (`--telemetry out.jsonl`); with it unset the trainer is bitwise
 //! identical to the pre-telemetry code path. The sink path is
 //! observability plumbing, not run identity: it never enters the run
-//! manifest, sha digests or snapshots.
+//! manifest, sha digests or snapshots, and neither does the metrics or
+//! profiling cadence.
 
 pub mod event;
+pub mod metrics;
 pub mod replay;
 pub mod sink;
 
-/// Stream schema version, carried by every `run-start` event. Readers
-/// reject every other version — a schema change is a stream-format
-/// migration, not a quiet reinterpretation (same rule as the scenario
-/// registry's `DLSCEN01`).
-pub const STREAM_VERSION: &str = "DLTEL01";
+/// Stream schema version written by this build, carried by every
+/// `run-start` event. A schema change is a stream-format migration, not
+/// a quiet reinterpretation (same rule as the scenario registry's
+/// `DLSCEN01`).
+pub const STREAM_VERSION: &str = "DLTEL02";
+
+/// The previous stream version. Committed `DLTEL01` streams stay
+/// readable forever: replay dispatches on the `run-start` version and
+/// only rejects event classes the declared version cannot carry
+/// (`metrics`/`timing` inside a `DLTEL01` stream are hard errors).
+pub const STREAM_VERSION_LEGACY: &str = "DLTEL01";
+
+/// Every version this build's readers accept.
+pub const ACCEPTED_STREAM_VERSIONS: [&str; 2] = [STREAM_VERSION_LEGACY, STREAM_VERSION];
 
 pub use event::Event;
-pub use replay::{replay_path, replay_str, Replay};
+pub use metrics::StepMetrics;
+pub use replay::{replay_path, replay_str, strip_timing, Replay};
 pub use sink::TelemetrySink;

@@ -1,5 +1,5 @@
 //! Offline replay: reconstruct a run summary from its JSONL stream
-//! (DESIGN.md §11).
+//! (DESIGN.md §11, §14).
 //!
 //! The parser is line-oriented and deliberately asymmetric about
 //! failure:
@@ -18,8 +18,15 @@
 //! Internal consistency is checked, not assumed: step events must be
 //! contiguous, `run-start` must come first and `run-end` last, and the
 //! `run-end` wire-byte total must equal the sum of the per-step values
-//! bit for bit. [`Replay::matches_report`] then pins the reconstruction
-//! against a live [`TrainReport`] at bit-level equality.
+//! bit for bit. Replay is **version-dispatched** on the `run-start`
+//! envelope: committed `DLTEL01` streams parse exactly as before, while
+//! the `DLTEL02` observability classes (`metrics`, `timing`) are hard
+//! errors inside a stream that declares the legacy version.
+//! [`Replay::matches_report`] then pins the reconstruction against a
+//! live [`TrainReport`] at bit-level equality — `metrics` and `timing`
+//! lines are collected alongside but NEVER enter that comparison (the
+//! `timing` class is wall-clock and non-deterministic by nature; use
+//! [`strip_timing`] before any two-run byte compare).
 
 use std::path::Path;
 
@@ -28,15 +35,18 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::TrainReport;
 use crate::sim::FaultStats;
 
-use super::Event;
+use super::{Event, StepMetrics, STREAM_VERSION_LEGACY};
 
 /// A run summary reconstructed purely from a telemetry stream.
 #[derive(Debug, Clone, Default)]
 pub struct Replay {
     /// The reconstructed summary. `grad_seconds` / `update_seconds`
     /// stay zero: wall-clock timings are non-deterministic and are
-    /// deliberately not streamed.
+    /// deliberately not streamed into the replay report (a profiled
+    /// run's `timing` events live in [`Replay::last_timing`] instead).
     pub report: TrainReport,
+    /// The stream's declared schema version (from `run-start`).
+    pub version: String,
     /// True iff the stream reached its `run-end` envelope.
     pub complete: bool,
     /// True iff a truncated (newline-less) final line was dropped.
@@ -53,6 +63,14 @@ pub struct Replay {
     pub checkpoints: Vec<usize>,
     /// The `async` summary line verbatim, when the run was async.
     pub async_event: Option<Event>,
+    /// Every `metrics` event in stream order — the deterministic
+    /// bias/dispersion trajectory (`--metrics every=K` runs).
+    pub metrics: Vec<StepMetrics>,
+    /// Number of `timing` events parsed (profiled runs).
+    pub timing_events: usize,
+    /// The last `timing` event verbatim: phase counters are cumulative,
+    /// so the final one is the run's whole profile.
+    pub last_timing: Option<Event>,
 }
 
 /// Bit-exact f64 comparison that treats NaN as equal to NaN — the
@@ -62,10 +80,30 @@ fn same(a: f64, b: f64) -> bool {
     a == b || (a.is_nan() && b.is_nan())
 }
 
+/// Drop every complete `timing` line from a stream, byte-preserving
+/// everything else — the canonical compare for two-run byte-identity of
+/// profiled runs (`timing` is the one event class allowed to differ).
+/// A torn (newline-less) tail passes through untouched.
+pub fn strip_timing(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut rest = text;
+    while let Some(pos) = rest.find('\n') {
+        let line = &rest[..=pos];
+        if !line.contains("\"event\":\"timing\"") {
+            out.push_str(line);
+        }
+        rest = &rest[pos + 1..];
+    }
+    out.push_str(rest);
+    out
+}
+
 impl Replay {
     /// Verify this reconstruction against the live report of the same
     /// run: manifest bytes, every loss/eval sample, final metrics, step
     /// and wire-byte totals — all at bit-level (NaN-tolerant) equality.
+    /// `metrics` and `timing` events are deliberately outside this
+    /// contract: they never enter the [`TrainReport`].
     pub fn matches_report(&self, live: &TrainReport) -> Result<()> {
         if !self.complete {
             bail!("replayed stream is incomplete (no run-end); cannot certify against a report");
@@ -164,11 +202,12 @@ pub fn replay_str(text: &str) -> Result<Replay> {
         }
         out.events += 1;
         match ev {
-            Event::RunStart { manifest } => {
+            Event::RunStart { version, manifest } => {
                 if started {
                     bail!("telemetry line {}: duplicate run-start", i + 1);
                 }
                 started = true;
+                out.version = version;
                 out.report.manifest = manifest;
             }
             Event::Async { .. } => {
@@ -220,6 +259,43 @@ pub fn replay_str(text: &str) -> Result<Replay> {
             }
             Event::Churn { .. } => out.churn_events += 1,
             Event::Checkpoint { step } => out.checkpoints.push(step),
+            Event::Metrics {
+                step,
+                consensus_p50,
+                consensus_p95,
+                consensus_max,
+                consensus_hist,
+                momentum_disagreement,
+                bias_proxy,
+            } => {
+                if out.version == STREAM_VERSION_LEGACY {
+                    bail!(
+                        "telemetry line {}: `metrics` events require DLTEL02 \
+                         (stream declares {STREAM_VERSION_LEGACY})",
+                        i + 1
+                    );
+                }
+                out.metrics.push(StepMetrics {
+                    step,
+                    consensus_p50,
+                    consensus_p95,
+                    consensus_max,
+                    consensus_hist,
+                    momentum_disagreement,
+                    bias_proxy,
+                });
+            }
+            Event::Timing { .. } => {
+                if out.version == STREAM_VERSION_LEGACY {
+                    bail!(
+                        "telemetry line {}: `timing` events require DLTEL02 \
+                         (stream declares {STREAM_VERSION_LEGACY})",
+                        i + 1
+                    );
+                }
+                out.timing_events += 1;
+                out.last_timing = Some(ev);
+            }
             Event::RunEnd { steps, final_accuracy, final_consensus, wire_bytes_total } => {
                 if wire_bytes_total.to_bits() != wire_sum.to_bits() {
                     bail!(
@@ -269,7 +345,7 @@ mod tests {
 
     fn full_run() -> Vec<Event> {
         vec![
-            Event::RunStart { manifest: r#"{"config":{"nodes":4}}"#.to_string() },
+            Event::run_start(r#"{"config":{"nodes":4}}"#.to_string()),
             Event::Step { step: 0, loss: 2.5, lr: 0.05, consensus: 0.0, wire_bytes: 100.0 },
             Event::Fault {
                 step: 1,
@@ -295,11 +371,39 @@ mod tests {
         ]
     }
 
+    fn sample_metrics(step: usize) -> Event {
+        Event::Metrics {
+            step,
+            consensus_p50: 1e-7,
+            consensus_p95: 2e-7,
+            consensus_max: 4e-7,
+            consensus_hist: vec![(-24, 3), (-22, 1)],
+            momentum_disagreement: 3e-5,
+            bias_proxy: 5e-9,
+        }
+    }
+
+    fn sample_timing(step: usize) -> Event {
+        Event::Timing {
+            step,
+            grad_ns: 1000,
+            encode_ns: 0,
+            exchange_ns: 200,
+            update_ns: 50,
+            grad_hist: vec![(10, 1)],
+            encode_hist: vec![(0, 1)],
+            exchange_hist: vec![(8, 1)],
+            update_hist: vec![(6, 1)],
+            lane_busy_ns: vec![900, 880],
+        }
+    }
+
     #[test]
     fn complete_stream_reconstructs_the_summary() {
         let r = replay_str(&stream(&full_run())).unwrap();
         assert!(r.complete && !r.truncated);
         assert_eq!(r.events, 9);
+        assert_eq!(r.version, "DLTEL02");
         assert_eq!(r.report.manifest, r#"{"config":{"nodes":4}}"#);
         assert_eq!(r.report.losses, vec![2.5, 2.25, 2.0]);
         assert_eq!(r.report.evals, vec![(2, 0.5)]);
@@ -314,6 +418,7 @@ mod tests {
         assert_eq!(r.churn_events, 1);
         assert_eq!(r.checkpoints, vec![3]);
         assert!(r.async_event.is_none());
+        assert!(r.metrics.is_empty() && r.timing_events == 0);
     }
 
     #[test]
@@ -369,7 +474,7 @@ mod tests {
     #[test]
     fn nan_losses_survive_the_round_trip() {
         let evs = vec![
-            Event::RunStart { manifest: "{}".to_string() },
+            Event::run_start("{}".to_string()),
             Event::Step { step: 0, loss: f64::NAN, lr: 0.1, consensus: 0.0, wire_bytes: 0.0 },
         ];
         let r = replay_str(&stream(&evs)).unwrap();
@@ -390,5 +495,55 @@ mod tests {
         let partial = replay_str(&text).unwrap();
         let e = format!("{:#}", partial.matches_report(&r.report).unwrap_err());
         assert!(e.contains("incomplete"), "{e}");
+    }
+
+    #[test]
+    fn metrics_and_timing_ride_along_without_entering_the_report() {
+        let mut evs = full_run();
+        evs.insert(2, sample_metrics(0));
+        evs.insert(3, sample_timing(0));
+        evs.insert(8, sample_metrics(2));
+        let r = replay_str(&stream(&evs)).unwrap();
+        assert!(r.complete);
+        assert_eq!(r.metrics.len(), 2);
+        assert_eq!((r.metrics[0].step, r.metrics[1].step), (0, 2));
+        assert_eq!(r.metrics[0].consensus_hist, vec![(-24, 3), (-22, 1)]);
+        assert_eq!(r.timing_events, 1);
+        assert!(matches!(r.last_timing, Some(Event::Timing { .. })));
+        // The observability classes never touch the report contract:
+        // the same report matches with and without them in the stream.
+        let plain = replay_str(&stream(&full_run())).unwrap();
+        r.matches_report(&plain.report).unwrap();
+    }
+
+    #[test]
+    fn legacy_streams_cannot_carry_observability_events() {
+        let legacy_start =
+            Event::run_start("{}".to_string()).to_line().replace("DLTEL02", "DLTEL01");
+        let mut text = format!("{legacy_start}\n");
+        text.push_str(&sample_metrics(0).to_line());
+        text.push('\n');
+        let e = format!("{:#}", replay_str(&text).unwrap_err());
+        assert!(e.contains("`metrics` events require DLTEL02"), "{e}");
+
+        let mut text = format!("{legacy_start}\n");
+        text.push_str(&sample_timing(0).to_line());
+        text.push('\n');
+        let e = format!("{:#}", replay_str(&text).unwrap_err());
+        assert!(e.contains("`timing` events require DLTEL02"), "{e}");
+    }
+
+    #[test]
+    fn strip_timing_removes_exactly_the_timing_lines() {
+        let mut evs = full_run();
+        evs.insert(2, sample_timing(0));
+        evs.insert(5, sample_timing(1));
+        let with = stream(&evs);
+        let without = stream(&full_run());
+        assert_eq!(strip_timing(&with), without);
+        // Idempotent on clean streams, and a torn tail passes through.
+        assert_eq!(strip_timing(&without), without);
+        let torn = format!("{without}{{\"event\":\"tim");
+        assert!(strip_timing(&torn).ends_with("{\"event\":\"tim"));
     }
 }

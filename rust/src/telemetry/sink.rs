@@ -5,12 +5,19 @@
 //! 1. **Off the hot path.** Lines go through a [`BufWriter`] (64 KiB)
 //!    so a `step` event is a format + memcpy, not a syscall; the OS
 //!    sees large sequential writes at buffer-flush boundaries.
-//! 2. **Never abort training.** Telemetry is observability, not run
+//! 2. **Tail-able.** A 64 KiB buffer alone can lag a live dashboard by
+//!    minutes on small runs, so the sink also flushes every
+//!    `flush_every` events (default [`DEFAULT_FLUSH_EVERY`],
+//!    `--telemetry out.jsonl,flush=K`; 0 disables the cadence) on top
+//!    of the existing run-end/checkpoint/drop flushes. Flush cadence
+//!    changes WHEN bytes reach the OS, never which bytes — the stream
+//!    is byte-identical at any `flush_every`.
+//! 3. **Never abort training.** Telemetry is observability, not run
 //!    state: an IO error after creation is recorded (first one wins)
 //!    and further emits become no-ops. The stream simply truncates —
 //!    which is exactly the shape the replay parser tolerates — and the
 //!    caller can surface [`TelemetrySink::error`] at end of run.
-//! 3. **Deterministic bytes.** The sink writes [`Event::to_line`]
+//! 4. **Deterministic bytes.** The sink writes [`Event::to_line`]
 //!    output verbatim plus `\n`; all canonicalization (sorted keys,
 //!    shortest-round-trip numbers) lives in the event layer, so two
 //!    identical runs produce byte-identical files.
@@ -22,16 +29,25 @@
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{Context, Result};
 
 use super::Event;
 
+/// Default event-count flush cadence: frequent enough that a dashboard
+/// tailing the file sees a small run progress, rare enough that the
+/// BufWriter still batches syscalls.
+pub const DEFAULT_FLUSH_EVERY: usize = 64;
+
 struct SinkInner {
     w: BufWriter<File>,
     /// First IO error, if any; once set the sink is inert.
     error: Option<String>,
+    /// Flush after this many emits (0 = only explicit/drop flushes).
+    flush_every: usize,
+    /// Emits since the last flush of any kind.
+    since_flush: usize,
 }
 
 /// A shared handle to one telemetry stream. Interior mutability via a
@@ -41,10 +57,27 @@ pub struct TelemetrySink {
     out: Mutex<SinkInner>,
 }
 
+/// Telemetry must keep working after a panicking thread poisons the
+/// mutex — the guarded state is a plain writer whose invariants hold
+/// between operations, so recovering the inner value is sound (same
+/// idiom as the executor's pool lock).
+fn lock(m: &Mutex<SinkInner>) -> MutexGuard<'_, SinkInner> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 impl TelemetrySink {
-    /// Create (truncate) the stream file, creating parent directories
-    /// as needed.
+    /// Create (truncate) the stream file with the default flush
+    /// cadence, creating parent directories as needed.
     pub fn create(path: &Path) -> Result<TelemetrySink> {
+        TelemetrySink::create_with_flush(path, DEFAULT_FLUSH_EVERY)
+    }
+
+    /// [`TelemetrySink::create`] with an explicit event-count flush
+    /// cadence (`--telemetry out.jsonl,flush=K`; 0 disables it).
+    pub fn create_with_flush(path: &Path, flush_every: usize) -> Result<TelemetrySink> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)
@@ -54,7 +87,12 @@ impl TelemetrySink {
         let f = File::create(path)
             .with_context(|| format!("creating telemetry stream {}", path.display()))?;
         Ok(TelemetrySink {
-            out: Mutex::new(SinkInner { w: BufWriter::with_capacity(64 * 1024, f), error: None }),
+            out: Mutex::new(SinkInner {
+                w: BufWriter::with_capacity(64 * 1024, f),
+                error: None,
+                flush_every,
+                since_flush: 0,
+            }),
         })
     }
 
@@ -62,7 +100,7 @@ impl TelemetrySink {
     /// recorded and the sink goes inert — training never aborts over
     /// telemetry.
     pub fn emit(&self, ev: &Event) {
-        let mut inner = self.out.lock().expect("telemetry sink poisoned");
+        let mut inner = lock(&self.out);
         if inner.error.is_some() {
             return;
         }
@@ -70,15 +108,24 @@ impl TelemetrySink {
         line.push('\n');
         if let Err(e) = inner.w.write_all(line.as_bytes()) {
             inner.error = Some(format!("telemetry write failed: {e}"));
+            return;
+        }
+        inner.since_flush += 1;
+        if inner.flush_every > 0 && inner.since_flush >= inner.flush_every {
+            inner.since_flush = 0;
+            if let Err(e) = inner.w.flush() {
+                inner.error = Some(format!("telemetry flush failed: {e}"));
+            }
         }
     }
 
     /// Flush buffered lines to the OS (end of run, after a checkpoint).
     pub fn flush(&self) {
-        let mut inner = self.out.lock().expect("telemetry sink poisoned");
+        let mut inner = lock(&self.out);
         if inner.error.is_some() {
             return;
         }
+        inner.since_flush = 0;
         if let Err(e) = inner.w.flush() {
             inner.error = Some(format!("telemetry flush failed: {e}"));
         }
@@ -86,7 +133,7 @@ impl TelemetrySink {
 
     /// The first IO error, if the stream went inert mid-run.
     pub fn error(&self) -> Option<String> {
-        self.out.lock().expect("telemetry sink poisoned").error.clone()
+        lock(&self.out).error.clone()
     }
 }
 
@@ -144,5 +191,52 @@ mod tests {
         let err = TelemetrySink::create(&blocker.join("run.jsonl")).unwrap_err();
         assert!(format!("{err:#}").contains("telemetry"), "{err:#}");
         std::fs::remove_file(&blocker).unwrap();
+    }
+
+    #[test]
+    fn flush_cadence_never_changes_stream_bytes() {
+        // The same event sequence through flush_every ∈ {0, 1, 3,
+        // default} must land byte-identical files — cadence is about
+        // WHEN bytes reach the OS, never which bytes.
+        let events: Vec<Event> = (0..10)
+            .map(|k| Event::Step {
+                step: k,
+                loss: 2.0 - k as f64 * 0.125,
+                lr: 0.05,
+                consensus: 1e-7,
+                wire_bytes: 64.0,
+            })
+            .collect();
+        let mut streams = Vec::new();
+        for (tag, every) in
+            [("f0", Some(0)), ("f1", Some(1)), ("f3", Some(3)), ("fdefault", None)]
+        {
+            let path = tmp(&format!("cadence_{tag}.jsonl"));
+            let sink = match every {
+                Some(k) => TelemetrySink::create_with_flush(&path, k).unwrap(),
+                None => TelemetrySink::create(&path).unwrap(),
+            };
+            for ev in &events {
+                sink.emit(ev);
+            }
+            drop(sink);
+            streams.push(std::fs::read(&path).unwrap());
+            std::fs::remove_file(&path).unwrap();
+        }
+        assert!(streams.windows(2).all(|w| w[0] == w[1]));
+        assert!(!streams[0].is_empty());
+    }
+
+    #[test]
+    fn eager_flush_makes_lines_visible_before_drop() {
+        // flush_every=1: a reader tailing the live file sees each line
+        // as soon as it is emitted — the live-dashboard contract.
+        let path = tmp("eager.jsonl");
+        let sink = TelemetrySink::create_with_flush(&path, 1).unwrap();
+        sink.emit(&Event::Checkpoint { step: 7 });
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with("\"step\":7}\n"), "{text:?}");
+        drop(sink);
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -222,6 +222,88 @@ impl WallTimer {
         self.t0 = Instant::now();
         s
     }
+
+    /// Whole nanoseconds since construction (saturating at u64::MAX —
+    /// ~584 years, i.e. never in practice).
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Deterministic log2 duration bucket: the number of significant bits
+/// in the ns value (0 ns → bucket 0, 1 ns → 1, 1–2 µs → 11, ...). The
+/// `timing` event histograms (DESIGN.md §14) use exactly this mapping —
+/// 65 possible buckets cover the whole u64 range with no float math.
+pub fn log2_ns_bucket(ns: u64) -> i32 {
+    (u64::BITS - ns.leading_zeros()) as i32
+}
+
+/// Cross-thread per-phase nanosecond accumulators for the run profiler
+/// (`--profile`, DESIGN.md §14). Lives in this module because it is
+/// wall-clock plumbing behind the D02 fence: [`gossip-exchange`'s
+/// encode/exchange spans](crate::optim::gossip_exchange) add into it
+/// through `RoundCtx`, and the trainer reads before/after deltas to
+/// attribute the remainder of a round to the update phase. Relaxed
+/// atomics: counters are monotone sums read only between rounds.
+///
+/// Profiling is observability-only — values recorded here feed the
+/// non-deterministic `timing` event class and nothing else.
+#[derive(Debug, Default)]
+pub struct PhaseClock {
+    encode_ns: std::sync::atomic::AtomicU64,
+    exchange_ns: std::sync::atomic::AtomicU64,
+}
+
+impl PhaseClock {
+    pub fn new() -> PhaseClock {
+        PhaseClock::default()
+    }
+
+    pub fn add_encode(&self, ns: u64) {
+        self.encode_ns.fetch_add(ns, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn add_exchange(&self, ns: u64) {
+        self.exchange_ns.fetch_add(ns, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Cumulative (encode, exchange) nanoseconds.
+    pub fn totals(&self) -> (u64, u64) {
+        (
+            self.encode_ns.load(std::sync::atomic::Ordering::Relaxed),
+            self.exchange_ns.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+}
+
+/// Per-lane busy-time meter for the node executor (`--profile`,
+/// DESIGN.md §14): every executor dispatch wraps its block body in a
+/// [`WallTimer`] span and adds the duration to that lane's counter, so
+/// the `timing` event can report how evenly phase work spreads across
+/// pool lanes. Lane 0 doubles as the serial/inline lane.
+#[derive(Debug)]
+pub struct LaneMeter {
+    lanes: Vec<std::sync::atomic::AtomicU64>,
+}
+
+impl LaneMeter {
+    pub fn new(lanes: usize) -> LaneMeter {
+        LaneMeter {
+            lanes: (0..lanes.max(1)).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Add a busy span to `lane` (clamped into range so a dispatch can
+    /// never index out of bounds, whatever the block count).
+    pub fn add(&self, lane: usize, ns: u64) {
+        let i = lane.min(self.lanes.len() - 1);
+        self.lanes[i].fetch_add(ns, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Cumulative busy nanoseconds per lane.
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.load(std::sync::atomic::Ordering::Relaxed)).collect()
+    }
 }
 
 /// Minimal JSON string escaping (case names are ASCII identifiers plus
@@ -298,6 +380,35 @@ mod tests {
         let s = t.restart();
         assert!(s >= b);
         assert!(t.elapsed_s() < s + 60.0);
+    }
+
+    #[test]
+    fn log2_buckets_cover_the_range() {
+        assert_eq!(log2_ns_bucket(0), 0);
+        assert_eq!(log2_ns_bucket(1), 1);
+        assert_eq!(log2_ns_bucket(2), 2);
+        assert_eq!(log2_ns_bucket(3), 2);
+        assert_eq!(log2_ns_bucket(1024), 11);
+        assert_eq!(log2_ns_bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn phase_clock_and_lane_meter_accumulate() {
+        let c = PhaseClock::new();
+        c.add_encode(5);
+        c.add_encode(7);
+        c.add_exchange(100);
+        assert_eq!(c.totals(), (12, 100));
+
+        let m = LaneMeter::new(3);
+        m.add(0, 10);
+        m.add(2, 30);
+        m.add(99, 1); // out-of-range lanes clamp to the last
+        assert_eq!(m.snapshot(), vec![10, 0, 31]);
+        // Zero lanes still yields one usable lane.
+        let m = LaneMeter::new(0);
+        m.add(0, 4);
+        assert_eq!(m.snapshot(), vec![4]);
     }
 
     #[test]

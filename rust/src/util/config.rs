@@ -143,6 +143,18 @@ pub struct Config {
     /// manifests, sha digests and snapshots stay byte-identical with
     /// telemetry on or off (DESIGN.md §11).
     pub telemetry: Option<String>,
+    /// Telemetry flush cadence in events (`--telemetry out.jsonl,flush=K`;
+    /// 0 = only end-of-run/drop flushes). CLI-only, like `telemetry`:
+    /// when bytes reach the OS is not run identity (DESIGN.md §11).
+    pub telemetry_flush: usize,
+    /// Emit a `metrics` event every K steps (`--metrics every=K` or
+    /// `--metrics K`; 0 = off). CLI-only: the metrics cadence never
+    /// enters manifests or digests (DESIGN.md §14).
+    pub metrics_every: usize,
+    /// Emit a `timing` event every K steps (`--profile` = every step,
+    /// `--profile every=K`; 0 = off). CLI-only, and `timing` lines are
+    /// excluded from replay equality entirely (DESIGN.md §14).
+    pub profile_every: usize,
 }
 
 impl Default for Config {
@@ -174,6 +186,9 @@ impl Default for Config {
             async_mode: None,
             churn: None,
             telemetry: None,
+            telemetry_flush: crate::telemetry::sink::DEFAULT_FLUSH_EVERY,
+            metrics_every: 0,
+            profile_every: 0,
         }
     }
 }
@@ -258,9 +273,22 @@ impl Config {
             "churn" => self.churn = opt_spec(v, ChurnSpec::parse)?,
             // Observability plumbing, not run identity: settable from
             // the CLI but never serialized into manifests (empty clears).
-            "telemetry" => {
-                self.telemetry = if v.trim().is_empty() { None } else { Some(v.to_string()) }
-            }
+            // `--telemetry out.jsonl,flush=K` sets the flush cadence too.
+            "telemetry" => match v.split_once(",flush=") {
+                Some((path, flush)) => {
+                    let flush: usize =
+                        flush.parse().with_context(|| format!("flush cadence `{flush}`"))?;
+                    self.telemetry =
+                        if path.trim().is_empty() { None } else { Some(path.to_string()) };
+                    self.telemetry_flush = flush;
+                }
+                None => {
+                    self.telemetry =
+                        if v.trim().is_empty() { None } else { Some(v.to_string()) }
+                }
+            },
+            "metrics" => self.metrics_every = cadence(v)?,
+            "profile" => self.profile_every = cadence(v)?,
             "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" => {} // consumed elsewhere
             other => bail!("unknown config key `{other}`"),
         }
@@ -432,7 +460,8 @@ impl Config {
                     cfg.churn =
                         opt_spec(x.as_str()?, ChurnSpec::parse).with_context(|| x.path().to_string())?
                 }
-                "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" | "telemetry" => {
+                "config" | "out" | "csv" | "quick" | "bw-gbps" | "fast" | "telemetry"
+                | "metrics" | "profile" => {
                     bail!("{}: `{key}` is a CLI-only flag, not a config field", c.path());
                 }
                 other => bail!("{}: unknown config key `{other}`", c.path()),
@@ -459,6 +488,21 @@ impl Config {
         };
         cfg.apply_args(args)?;
         Ok(cfg)
+    }
+}
+
+/// Parse an every-K observability cadence: `every=K` or a bare `K`,
+/// with the bare-flag forms `true` (every step) and `false`/empty (off)
+/// so `--metrics` / `--profile` work without a value.
+fn cadence(v: &str) -> Result<usize> {
+    let v = v.trim();
+    match v {
+        "" | "false" => Ok(0),
+        "true" => Ok(1),
+        _ => {
+            let k = v.strip_prefix("every=").unwrap_or(v);
+            k.parse().with_context(|| format!("cadence `{v}` (expected every=K or K)"))
+        }
     }
 }
 
@@ -720,6 +764,48 @@ mod tests {
         assert_eq!(e, "config: `telemetry` is a CLI-only flag, not a config field");
         off.apply_kv("telemetry", "x.jsonl").unwrap();
         assert_ne!(off, Config::default(), "field still participates in Eq");
+    }
+
+    #[test]
+    fn telemetry_flush_suffix_parses_and_stays_cli_only() {
+        let mut c = Config::default();
+        assert_eq!(c.telemetry_flush, crate::telemetry::sink::DEFAULT_FLUSH_EVERY);
+        c.apply_kv("telemetry", "out.jsonl,flush=1").unwrap();
+        assert_eq!(c.telemetry.as_deref(), Some("out.jsonl"));
+        assert_eq!(c.telemetry_flush, 1);
+        c.apply_kv("telemetry", "out.jsonl,flush=0").unwrap();
+        assert_eq!(c.telemetry_flush, 0);
+        assert!(c.apply_kv("telemetry", "out.jsonl,flush=sometimes").is_err());
+        // Flush cadence never reaches the manifest either.
+        assert_eq!(c.to_manifest().to_string(), Config::default().to_manifest().to_string());
+    }
+
+    #[test]
+    fn observability_cadences_are_cli_only_and_never_reach_the_manifest() {
+        let mut c = Config::default();
+        assert_eq!((c.metrics_every, c.profile_every), (0, 0));
+        c.apply_kv("metrics", "every=5").unwrap();
+        assert_eq!(c.metrics_every, 5);
+        c.apply_kv("metrics", "3").unwrap();
+        assert_eq!(c.metrics_every, 3);
+        c.apply_kv("profile", "true").unwrap(); // bare --profile
+        assert_eq!(c.profile_every, 1);
+        c.apply_kv("profile", "every=10").unwrap();
+        assert_eq!(c.profile_every, 10);
+        c.apply_kv("profile", "false").unwrap();
+        assert_eq!(c.profile_every, 0);
+        assert!(c.apply_kv("metrics", "every=sometimes").is_err());
+        // Run identity is unchanged with metrics/profiling on.
+        c.apply_kv("metrics", "1").unwrap();
+        c.apply_kv("profile", "1").unwrap();
+        assert_eq!(c.to_manifest().to_string(), Config::default().to_manifest().to_string());
+        // And manifests must not smuggle the cadences back in.
+        for key in ["metrics", "profile"] {
+            let v = Value::parse(&format!(r#"{{"{key}": "1"}}"#)).unwrap();
+            let e =
+                format!("{:#}", Config::from_manifest(&Cursor::root(&v, "config")).unwrap_err());
+            assert_eq!(e, format!("config: `{key}` is a CLI-only flag, not a config field"));
+        }
     }
 
     #[test]

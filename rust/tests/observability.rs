@@ -1,0 +1,222 @@
+//! Run-profile observability properties (DESIGN.md §14):
+//!
+//! 1. `metrics` lines are deterministic — bitwise rerun-identical and
+//!    parallel == serial — across the full optimizer roster;
+//! 2. collection never perturbs the run: a metrics-on stream minus its
+//!    `metrics` lines is byte-identical to the metrics-off stream, and
+//!    the trajectories match bit for bit;
+//! 3. profiled runs stay byte-identical after [`strip_timing`] (the
+//!    `timing` class is the ONE nondeterministic event), and replay
+//!    still certifies the report;
+//! 4. the sink's flush cadence is invisible in the bytes;
+//! 5. the committed `DLTEL01` golden stream parses forever, round-trips
+//!    byte for byte, and rejects the DLTEL02-only observability events.
+
+use std::path::{Path, PathBuf};
+
+use decentlam::coordinator::{TrainReport, Trainer};
+use decentlam::data::synth::{ClassificationData, SynthSpec};
+use decentlam::grad::{mlp, Workload};
+use decentlam::optim;
+use decentlam::telemetry::{replay_path, replay_str, strip_timing, Event};
+use decentlam::util::config::{Config, LrSchedule};
+
+fn workload(nodes: usize, seed: u64) -> Workload {
+    let data = ClassificationData::generate(&SynthSpec {
+        nodes,
+        samples_per_node: 96,
+        eval_samples: 128,
+        dirichlet_alpha: 0.3,
+        seed,
+        ..Default::default()
+    });
+    mlp::workload(mlp::MlpArch::family("mlp-xs").unwrap(), data, 16, seed)
+}
+
+fn base_cfg(optimizer: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.optimizer = optimizer.into();
+    cfg.nodes = 4;
+    cfg.steps = 6;
+    cfg.total_batch = 64;
+    cfg.micro_batch = 16;
+    cfg.lr = 0.05;
+    cfg.linear_scaling = false;
+    cfg.momentum = 0.9;
+    cfg.schedule = LrSchedule::Constant;
+    cfg.topology = "ring".into();
+    cfg.eval_every = 3;
+    cfg.threads = 1;
+    cfg.seed = 7;
+    cfg
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("decentlam_obs_{}_{name}", std::process::id()))
+}
+
+fn run_streamed(cfg: &Config, path: &Path) -> TrainReport {
+    let mut cfg = cfg.clone();
+    cfg.telemetry = Some(path.to_string_lossy().into_owned());
+    let mut t = Trainer::new(cfg, workload(4, 7)).unwrap();
+    let report = t.run();
+    assert!(t.telemetry_error().is_none(), "sink went inert: {:?}", t.telemetry_error());
+    report
+}
+
+/// The canonical wire form of a trainer's in-memory metrics log — the
+/// bitwise object of comparison (struct `PartialEq` would treat NaN as
+/// unequal to itself; the wire line maps it to `null`).
+fn metrics_lines(t: &Trainer) -> Vec<String> {
+    t.metrics_log().iter().map(|m| m.to_event().to_line()).collect()
+}
+
+#[test]
+fn metrics_are_rerun_identical_and_par_eq_serial_across_all_optimizers() {
+    for name in optim::ALL.iter().chain([&"dsgd"]) {
+        let mut cfg = base_cfg(name);
+        cfg.metrics_every = 2;
+        let run = |threads: usize| {
+            let mut cfg = cfg.clone();
+            cfg.threads = threads;
+            let mut t = Trainer::new(cfg, workload(4, 7)).unwrap();
+            t.run();
+            metrics_lines(&t)
+        };
+        let serial = run(1);
+        assert_eq!(serial.len(), 3, "{name}: cadence every=2 over 6 steps");
+        assert_eq!(serial, run(1), "{name}: rerun changed metrics bytes");
+        assert_eq!(serial, run(0), "{name}: threading changed metrics bytes");
+    }
+}
+
+#[test]
+fn metrics_collection_never_perturbs_the_run() {
+    let cfg = base_cfg("dmsgd");
+    let off_path = tmp("perturb_off.jsonl");
+    let on_path = tmp("perturb_on.jsonl");
+
+    let off = run_streamed(&cfg, &off_path);
+    let mut on_cfg = cfg.clone();
+    on_cfg.metrics_every = 1;
+    on_cfg.telemetry = Some(on_path.to_string_lossy().into_owned());
+    let mut t = Trainer::new(on_cfg, workload(4, 7)).unwrap();
+    let on = t.run();
+
+    let bits = |ls: &[f64]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&on.losses), bits(&off.losses), "metrics collection moved the trajectory");
+    assert_eq!(on.manifest, off.manifest, "metrics_every leaked into the manifest");
+
+    // The on-stream minus its `metrics` lines IS the off-stream.
+    let on_text = std::fs::read_to_string(&on_path).unwrap();
+    let without: String =
+        on_text.lines().filter(|l| !l.contains("\"event\":\"metrics\"")).fold(
+            String::new(),
+            |mut acc, l| {
+                acc.push_str(l);
+                acc.push('\n');
+                acc
+            },
+        );
+    assert_eq!(without, std::fs::read_to_string(&off_path).unwrap());
+
+    // And the stream's metrics ARE the trainer's in-memory log.
+    let r = replay_path(&on_path).unwrap();
+    assert_eq!(r.metrics.len(), cfg.steps);
+    assert_eq!(
+        r.metrics.iter().map(|m| m.to_event().to_line()).collect::<Vec<_>>(),
+        metrics_lines(&t)
+    );
+    std::fs::remove_file(&off_path).unwrap();
+    std::fs::remove_file(&on_path).unwrap();
+}
+
+#[test]
+fn profiled_streams_strip_to_byte_identity() {
+    let mut cfg = base_cfg("decentlam");
+    cfg.threads = 0; // profiled pool path: lane meters live
+    cfg.metrics_every = 3;
+    cfg.profile_every = 2;
+    let a = tmp("profiled_a.jsonl");
+    let b = tmp("profiled_b.jsonl");
+    let live = run_streamed(&cfg, &a);
+    run_streamed(&cfg, &b);
+
+    let (ta, tb) = (std::fs::read_to_string(&a).unwrap(), std::fs::read_to_string(&b).unwrap());
+    // `timing` is the one event class allowed to differ between runs.
+    assert_ne!(strip_timing(&ta), ta, "no timing lines were streamed");
+    assert_eq!(strip_timing(&ta), strip_timing(&tb), "profiled runs differ beyond timing");
+
+    let r = replay_path(&a).unwrap();
+    assert_eq!(r.version, "DLTEL02", "new streams must declare DLTEL02");
+    assert!(r.complete);
+    assert_eq!(r.timing_events, 3, "cadence every=2 over 6 steps");
+    let Some(Event::Timing { grad_ns, lane_busy_ns, .. }) = &r.last_timing else {
+        panic!("missing final timing event");
+    };
+    assert!(*grad_ns > 0, "grad phase never measured");
+    assert!(!lane_busy_ns.is_empty() && lane_busy_ns.iter().sum::<u64>() > 0);
+    assert_eq!(r.metrics.len(), 2, "metrics cadence every=3 over 6 steps");
+    // Wall-clock riders never enter the report contract.
+    r.matches_report(&live).unwrap();
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+#[test]
+fn flush_cadence_is_invisible_in_the_bytes() {
+    let mut cfg = base_cfg("decentlam");
+    cfg.metrics_every = 2;
+    let a = tmp("flush_default.jsonl");
+    let b = tmp("flush_one.jsonl");
+    run_streamed(&cfg, &a);
+    let mut eager = cfg.clone();
+    eager.apply_kv("telemetry", &format!("{},flush=1", b.to_string_lossy())).unwrap();
+    let mut t = Trainer::new(eager, workload(4, 7)).unwrap();
+    t.run();
+    assert!(t.telemetry_error().is_none());
+    assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    std::fs::remove_file(&a).unwrap();
+    std::fs::remove_file(&b).unwrap();
+}
+
+#[test]
+fn golden_dltel01_stream_parses_forever() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/dltel01_golden.jsonl");
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // Every committed line round-trips byte for byte — including the
+    // run-start, whose parsed version is preserved on re-serialize.
+    for line in text.lines() {
+        let ev = Event::parse_line(line).unwrap_or_else(|e| panic!("{line}: {e:#}"));
+        assert_eq!(ev.to_line(), line, "non-canonical golden line");
+    }
+
+    let r = replay_str(&text).unwrap();
+    assert_eq!(r.version, "DLTEL01");
+    assert!(r.complete && !r.truncated);
+    assert_eq!(r.report.losses, vec![2.5, 2.25]);
+    assert_eq!(r.report.evals, vec![(2, 0.5)]);
+    assert_eq!(r.report.wire_bytes_total, 200.0);
+    assert_eq!(r.churn_events, 1);
+    assert_eq!(r.checkpoints, vec![2]);
+    let f = r.fault_totals.unwrap();
+    assert_eq!(f.realized_edges + f.masked_edges, f.nominal_edges);
+    assert!(r.metrics.is_empty() && r.timing_events == 0);
+
+    // A legacy stream cannot smuggle the DLTEL02-only event classes.
+    let metrics_line = Event::Metrics {
+        step: 1,
+        consensus_p50: 0.25,
+        consensus_p95: 0.25,
+        consensus_max: 0.25,
+        consensus_hist: vec![(-2, 2)],
+        momentum_disagreement: 0.0,
+        bias_proxy: 0.0,
+    }
+    .to_line();
+    let end = text.rfind("{\"event\":\"run-end\"").unwrap();
+    let smuggled = format!("{}{metrics_line}\n{}", &text[..end], &text[end..]);
+    let e = format!("{:#}", replay_str(&smuggled).unwrap_err());
+    assert!(e.contains("`metrics` events require DLTEL02"), "{e}");
+}
